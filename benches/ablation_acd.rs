@@ -1,0 +1,65 @@
+//! Ablation A/B: sweep the paper's narrowing parameters —
+//! `a` (intensity top-k), `c` (resource-efficiency top-k), `d` (pattern
+//! budget) — and report solution quality vs. simulated compile-hours.
+//! This is the paper's core trade-off: measured patterns are 3-hour
+//! compiles, so every extra candidate costs real wall-clock.
+
+use flopt::apps;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+
+fn main() {
+    for app in [&apps::TDFIR, &apps::MRIQ] {
+        let analysis = analyze_app(app, false).expect("analysis");
+        println!("=== {} ===", app.name);
+
+        println!("--- sweep a (intensity top-k), c=3, d=4 ---");
+        println!("{:>3} {:>10} {:>10} {:>14}", "a", "speedup", "patterns", "compile-h");
+        for a in 1..=8 {
+            let cfg = SearchConfig { a_intensity: a, ..Default::default() };
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let t = search_with_analysis(app, &analysis, &env, &cfg).expect("search");
+            println!(
+                "{:>3} {:>9.2}x {:>10} {:>14.1}",
+                a,
+                t.speedup(),
+                t.patterns_measured(),
+                t.compile_hours
+            );
+        }
+
+        println!("--- sweep c (efficiency top-k), a=5, d=4 ---");
+        println!("{:>3} {:>10} {:>10} {:>14}", "c", "speedup", "patterns", "compile-h");
+        for c in 1..=5 {
+            let cfg = SearchConfig { c_efficiency: c, ..Default::default() };
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let t = search_with_analysis(app, &analysis, &env, &cfg).expect("search");
+            println!(
+                "{:>3} {:>9.2}x {:>10} {:>14.1}",
+                c,
+                t.speedup(),
+                t.patterns_measured(),
+                t.compile_hours
+            );
+        }
+
+        println!("--- sweep d (pattern budget), a=5, c=3 ---");
+        println!("{:>3} {:>10} {:>10} {:>14}", "d", "speedup", "patterns", "compile-h");
+        for d in 1..=8 {
+            let cfg = SearchConfig { d_patterns: d, ..Default::default() };
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let t = search_with_analysis(app, &analysis, &env, &cfg).expect("search");
+            println!(
+                "{:>3} {:>9.2}x {:>10} {:>14.1}",
+                d,
+                t.speedup(),
+                t.patterns_measured(),
+                t.compile_hours
+            );
+        }
+        println!();
+    }
+}

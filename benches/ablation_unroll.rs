@@ -1,0 +1,51 @@
+//! Ablation C: the unroll factor `b`.  The paper pins b=1 ("to isolate
+//! the plain OpenCL offload effect; unrolling and multi-instancing
+//! usually help the more resources they use").  This sweep quantifies
+//! that: datapath resources scale with b, fmax derates with pressure,
+//! and past the device cap the compile fails early.
+
+use flopt::apps;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+use flopt::hls;
+
+fn main() {
+    for app in [&apps::TDFIR, &apps::MRIQ] {
+        let analysis = analyze_app(app, false).expect("analysis");
+        // the app's hot loop (outermost loop of the bound function)
+        let hot = {
+            let f = app.binding.as_ref().unwrap().function;
+            analysis
+                .loops
+                .iter()
+                .find(|l| l.info.function == f && l.info.depth == 0)
+                .expect("hot loop")
+        };
+
+        println!("=== {} — hot loop {} vs unroll b ===", app.name, hot.info.id);
+        println!(
+            "{:>4} {:>10} {:>8} {:>10} {:>12} {:>10}",
+            "b", "util", "DSPs", "fmax MHz", "fits", "speedup"
+        );
+        for b in [1usize, 2, 4, 8, 16, 32] {
+            let rep = hls::precompile(&analysis.program, hot, b, &ARRIA10_GX);
+            let fits = ARRIA10_GX.fits(&rep.resources);
+            let cfg = SearchConfig { b_unroll: b, ..Default::default() };
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let t = search_with_analysis(app, &analysis, &env, &cfg).expect("search");
+            println!(
+                "{:>4} {:>10.3} {:>8.0} {:>10.0} {:>12} {:>9.2}x",
+                b,
+                rep.utilization,
+                rep.resources.dsps,
+                rep.fmax_hz / 1e6,
+                fits,
+                t.speedup()
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: regenerate the §5.2 automation-time observation — one full
+//! FPGA compile ≈ 3 h, four patterns ≈ half a day — plus a compile-farm
+//! lane sweep (an extension ablation: the paper compiles on one machine).
+
+use flopt::apps;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::offload_search;
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+use flopt::util::bench::fmt_sim_hours;
+
+fn main() {
+    println!("=== §5.2 automation time (simulated, paper: ~3 h/compile, ~half a day total) ===\n");
+    println!(
+        "{:<8} {:>10} {:>16} {:>16} {:>18}",
+        "app", "patterns", "makespan", "compile-lane-h", "per-compile avg"
+    );
+    for app in [&apps::TDFIR, &apps::MRIQ] {
+        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let t = offload_search(app, &env, false).expect("search");
+        let n = t.patterns_measured();
+        println!(
+            "{:<8} {:>10} {:>16} {:>16} {:>18}",
+            app.name,
+            n,
+            fmt_sim_hours(t.sim_hours),
+            fmt_sim_hours(t.compile_hours),
+            fmt_sim_hours(t.compile_hours / n as f64)
+        );
+        let per = t.compile_hours / (n as f64);
+        assert!(per > 2.0 && per < 4.0, "per-compile must be ~3 h, got {per}");
+    }
+
+    println!("\n=== extension: compile-farm lanes (paper uses 1) ===");
+    println!("{:<8} {:>6} {:>16}", "app", "lanes", "makespan");
+    for app in [&apps::TDFIR, &apps::MRIQ] {
+        for lanes in [1usize, 2, 4] {
+            let cfg = SearchConfig { compile_parallelism: lanes, ..Default::default() };
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg);
+            let t = offload_search(app, &env, false).expect("search");
+            println!("{:<8} {:>6} {:>16}", app.name, lanes, fmt_sim_hours(t.sim_hours));
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate **Fig 4** — performance improvement of the proposed
+//! FPGA auto-offload over all-CPU, for both paper applications at full
+//! paper scale.  Also times the L3 search itself (wall clock).
+
+use flopt::apps;
+use flopt::config::{fig3_table, SearchConfig};
+use flopt::coordinator::pipeline::offload_search;
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+use flopt::util::bench::{fmt_s, time_it};
+
+fn main() {
+    println!("=== Fig 3: evaluation environment (models calibrated to) ===");
+    println!("{}", fig3_table());
+
+    println!("=== Fig 4: performance improvement of the proposed method ===");
+    println!(
+        "{:<46} {:>8} {:>10}",
+        "Application", "paper", "this repo"
+    );
+    let mut rows = Vec::new();
+    for (app, paper, label) in [
+        (&apps::TDFIR, 4.0, "Time domain finite impulse response filter"),
+        (&apps::MRIQ, 7.1, "MRI-Q"),
+    ] {
+        let run = || {
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+            offload_search(app, &env, false).expect("search")
+        };
+        let trace = run();
+        println!("{:<46} {:>7.1}x {:>9.2}x", label, paper, trace.speedup());
+        rows.push((app, label, run));
+    }
+
+    println!("\n=== search wall-clock (L3 hot path, full scale) ===");
+    for (_, label, run) in rows {
+        let t = time_it(3, run);
+        println!("{:<46} median {}", label, fmt_s(t.median_s));
+    }
+}

@@ -1,0 +1,87 @@
+//! L3 hot-path microbenchmarks (the §Perf working set): parse, loop
+//! analysis, dynamic profiling, intensity ranking, HLS pre-compile,
+//! whole search, and PJRT artifact execution latency.
+//!
+//! Run before/after optimization work; EXPERIMENTS.md §Perf records the
+//! iteration log.
+
+use flopt::apps;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+use flopt::runtime::{default_artifact_dir, Runtime};
+use flopt::util::bench::{fmt_s, time_it};
+use flopt::{cparse, hls, intensity, interp, ir};
+
+fn main() {
+    let app = &apps::TDFIR;
+
+    let t = time_it(20, || cparse::parse(app.source).unwrap());
+    println!("parse tdfir (36 loops):            {:>12}", fmt_s(t.median_s));
+
+    let program = cparse::parse(app.source).unwrap();
+    let t = time_it(20, || ir::analyze(&program));
+    println!("loop+dep analysis:                 {:>12}", fmt_s(t.median_s));
+
+    let t = time_it(5, || {
+        let mut it = app.interp(&program, true);
+        it.run_main().unwrap();
+        it.into_profile()
+    });
+    println!("profile (test scale):              {:>12}", fmt_s(t.median_s));
+
+    let t = time_it(3, || {
+        let mut it = app.interp(&program, false);
+        it.run_main().unwrap();
+        it.into_profile()
+    });
+    println!("profile (full scale, 4096x128):    {:>12}", fmt_s(t.median_s));
+
+    let loops = ir::analyze(&program);
+    let profile = {
+        let mut it = app.interp(&program, false);
+        it.run_main().unwrap();
+        it.into_profile()
+    };
+    let ints = intensity::analyze(&loops, &profile);
+    let t = time_it(100, || intensity::top_a(&ints, &loops, 5));
+    println!("intensity ranking:                 {:>12}", fmt_s(t.median_s));
+
+    let hot = loops.iter().find(|l| l.info.id.0 == 8).unwrap();
+    let t = time_it(50, || hls::precompile(&program, hot, 1, &ARRIA10_GX));
+    println!("HLS pre-compile (hot loop):        {:>12}", fmt_s(t.median_s));
+
+    let analysis = analyze_app(app, false).unwrap();
+    let cfg = SearchConfig::default();
+    let t = time_it(10, || {
+        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+        search_with_analysis(app, &analysis, &env, &cfg).unwrap()
+    });
+    println!("search (post-analysis, full):      {:>12}", fmt_s(t.median_s));
+
+    let t = time_it(3, || {
+        let mut it = interp::Interp::new(&program);
+        it.run_main().unwrap()
+    });
+    println!("interpreter end-to-end run:        {:>12}", fmt_s(t.median_s));
+
+    // PJRT path (needs `make artifacts`)
+    match Runtime::load(default_artifact_dir()) {
+        Ok(rt) => {
+            let spec = rt.spec("tdfir_fpga").unwrap().clone();
+            let inputs: Vec<Vec<f32>> = spec
+                .input_shapes
+                .iter()
+                .map(|s| vec![0.5f32; s.iter().product()])
+                .collect();
+            // first call compiles the HLO
+            let t = time_it(1, || rt.execute_f32("tdfir_fpga", &inputs).unwrap());
+            println!("PJRT first-call (incl. compile):   {:>12}", fmt_s(t.median_s));
+            let t = time_it(20, || rt.execute_f32("tdfir_fpga", &inputs).unwrap());
+            println!("PJRT steady-state execute:         {:>12}", fmt_s(t.median_s));
+        }
+        Err(_) => println!("PJRT benches skipped (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,41 @@
+//! Quickstart: point the coordinator at an application and get an offload
+//! decision.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use flopt::apps;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::offload_search;
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+
+fn main() -> flopt::Result<()> {
+    // 1. pick an app from the registry (or bring your own — see
+    //    examples/custom_app.rs)
+    let app = &apps::HISTOGRAM;
+    println!("app: {} — {}\n", app.name, app.description);
+
+    // 2. a verification environment: the FPGA board model, the CPU
+    //    baseline model, and the paper's search parameters (a=5, b=1,
+    //    c=3, d=4)
+    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+
+    // 3. run the paper's Steps 1-3: analyze, narrow, generate OpenCL,
+    //    compile + measure patterns, select the fastest
+    let trace = offload_search(app, &env, /*test_scale=*/ true)?;
+    println!("{}", trace.render());
+
+    // 4. the solution pattern's generated OpenCL kernel
+    if let Some(best) = &trace.best {
+        let code = trace
+            .opencl
+            .iter()
+            .find(|c| c.pattern == best.pattern)
+            .expect("solution has OpenCL");
+        println!("--- solution kernel ---\n{}", code.cl_source());
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+"""AOT entry point: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/load_hlo/gen_hlo.py.
+
+Run once at build time (``make artifacts``); emits one ``<name>.hlo.txt``
+per model variant plus ``manifest.json`` describing the I/O signatures the
+Rust runtime binds against.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# AOT shapes: HPEC tdfir set-1 scale (N samples, T taps) and a Parboil
+# MRI-Q "small"-shaped problem (X voxels, K k-space samples).  The Rust
+# runtime feeds exactly these shapes; tests in python/tests sweep other
+# shapes through the kernels directly.
+TDFIR_N = 4096
+TDFIR_T = 128
+MRIQ_X = 2048
+MRIQ_K = 512
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, "float32")
+
+
+def specs():
+    """name -> (fn, example_args) for every artifact."""
+    tdfir_args = (_f32(TDFIR_N), _f32(TDFIR_N), _f32(TDFIR_T), _f32(TDFIR_T))
+    mriq_args = (
+        _f32(MRIQ_X), _f32(MRIQ_X), _f32(MRIQ_X),
+        _f32(MRIQ_K), _f32(MRIQ_K), _f32(MRIQ_K),
+        _f32(MRIQ_K), _f32(MRIQ_K),
+    )
+    return {
+        "tdfir_fpga": (model.tdfir_fpga, tdfir_args),
+        "tdfir_cpu": (model.tdfir_cpu, tdfir_args),
+        "mriq_fpga": (model.mriq_fpga, mriq_args),
+        "mriq_cpu": (model.mriq_cpu, mriq_args),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, example_args) in specs().items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        n_out = len(fn(*[jax.numpy.zeros(a.shape, a.dtype) for a in example_args]))
+        manifest[name] = {
+            "file": fname,
+            "inputs": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for a in example_args],
+            "num_outputs": n_out,
+        }
+        print(f"wrote {fname}: {len(text)} chars, "
+              f"{len(example_args)} inputs, {n_out} outputs")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

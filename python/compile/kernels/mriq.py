@@ -1,0 +1,105 @@
+"""L1 Pallas kernels: MRI-Q (Parboil) — ComputePhiMag and ComputeQ.
+
+FPGA→TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's OpenCL
+ComputeQ kernel caches the k-space trajectory (kx/ky/kz/phiMag — a few KB)
+in FPGA local memory and pipelines the per-voxel sin/cos accumulation.
+Here the k-space arrays are kept VMEM-resident across the whole grid
+(BlockSpec index_map pins them to block 0) while voxels are tiled in
+``BLOCK``-sized chunks; the accumulation becomes a (BLOCK, K) outer-product
+of trig evaluations reduced over K — the FPGA's K-deep pipeline re-expressed
+as a vectorized reduction.
+
+``interpret=True`` is mandatory: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TWO_PI = 6.283185307179586
+
+# Voxels per grid step.  With K=512 k-space samples the (BLOCK, K) trig
+# intermediate is 128*512*4 B = 256 KiB per array — comfortably inside the
+# 4 MiB VMEM budget even with cos+sin live simultaneously.
+BLOCK = 128
+
+
+def _phimag_kernel(phi_r_ref, phi_i_ref, mag_ref):
+    """ComputePhiMag: elementwise |phi|^2 over one block."""
+    pr = phi_r_ref[...]
+    pi = phi_i_ref[...]
+    mag_ref[...] = pr * pr + pi * pi
+
+
+def phimag(phi_r, phi_i, *, block=BLOCK):
+    """Squared magnitude of the coil sensitivity, blockwise."""
+    k = phi_r.shape[0]
+    block = min(block, k)
+    pad = -k % block
+    pr = jnp.pad(phi_r, (0, pad))
+    pi = jnp.pad(phi_i, (0, pad))
+    out = pl.pallas_call(
+        _phimag_kernel,
+        grid=((k + pad) // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k + pad,), phi_r.dtype),
+        interpret=True,
+    )(pr, pi)
+    return out[:k]
+
+
+def _computeq_kernel(x_ref, y_ref, z_ref, kx_ref, ky_ref, kz_ref, mag_ref,
+                     qr_ref, qi_ref):
+    """ComputeQ over one voxel block with the k-space table resident."""
+    xv = x_ref[...]
+    yv = y_ref[...]
+    zv = z_ref[...]
+    exp_arg = TWO_PI * (
+        xv[:, None] * kx_ref[...][None, :]
+        + yv[:, None] * ky_ref[...][None, :]
+        + zv[:, None] * kz_ref[...][None, :]
+    )
+    mag = mag_ref[...][None, :]
+    qr_ref[...] = jnp.sum(mag * jnp.cos(exp_arg), axis=1)
+    qi_ref[...] = jnp.sum(mag * jnp.sin(exp_arg), axis=1)
+
+
+def computeq(x, y, z, kx, ky, kz, phi_mag, *, block=BLOCK):
+    """Per-voxel Q accumulation over all k-space samples.
+
+    Args:
+      x, y, z: (X,) float32 voxel coordinates.
+      kx, ky, kz: (K,) float32 k-space trajectory.
+      phi_mag: (K,) float32 from :func:`phimag`.
+    Returns:
+      (q_r, q_i): (X,) float32, matching ``ref.mriq_ref``.
+    """
+    nx = x.shape[0]
+    block = min(block, nx)
+    pad = -nx % block
+    xp = jnp.pad(x, (0, pad))
+    yp = jnp.pad(y, (0, pad))
+    zp = jnp.pad(z, (0, pad))
+    out_shape = jax.ShapeDtypeStruct((nx + pad,), x.dtype)
+    k_spec = pl.BlockSpec(kx.shape, lambda i: (0,))  # k-space table resident
+    v_spec = pl.BlockSpec((block,), lambda i: (i,))
+    qr, qi = pl.pallas_call(
+        _computeq_kernel,
+        grid=((nx + pad) // block,),
+        in_specs=[v_spec, v_spec, v_spec, k_spec, k_spec, k_spec, k_spec],
+        out_specs=[v_spec, v_spec],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(xp, yp, zp, kx, ky, kz, phi_mag)
+    return qr[:nx], qi[:nx]
+
+
+def mriq(x, y, z, kx, ky, kz, phi_r, phi_i, *, block=BLOCK):
+    """Full MRI-Q: ComputePhiMag then ComputeQ (both Pallas kernels)."""
+    mag = phimag(phi_r, phi_i)
+    return computeq(x, y, z, kx, ky, kz, mag, block=block)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must match these to float32 tolerance on every shape/dtype the
+hypothesis sweep generates (python/tests/).
+
+The two computations are the hot loops the paper offloads to FPGA:
+
+* ``tdfir`` — HPEC-challenge time-domain finite impulse response filter:
+  complex causal FIR, ``y[n] = sum_k h[k] * x[n-k]`` (zero-padded history).
+* ``mriq`` — Parboil MRI-Q: ComputePhiMag (``|phi|^2`` per k-space sample)
+  followed by ComputeQ (per-voxel sin/cos accumulation over k-space).
+"""
+
+import jax.numpy as jnp
+
+TWO_PI = 6.283185307179586
+
+
+def tdfir_ref(xr, xi, hr, hi):
+    """Complex causal FIR via explicit convolution.
+
+    Args:
+      xr, xi: (N,) float32 — real/imag input samples.
+      hr, hi: (T,) float32 — real/imag filter taps.
+    Returns:
+      (yr, yi): (N,) float32 — y[n] = sum_{k<T} h[k] * x[n-k], x[<0] = 0.
+    """
+    n = xr.shape[0]
+    # jnp.convolve(full) gives length N+T-1; the causal output is the first N.
+    yr = (jnp.convolve(xr, hr) - jnp.convolve(xi, hi))[:n]
+    yi = (jnp.convolve(xr, hi) + jnp.convolve(xi, hr))[:n]
+    return yr.astype(xr.dtype), yi.astype(xr.dtype)
+
+
+def phimag_ref(phi_r, phi_i):
+    """ComputePhiMag: squared magnitude of the k-space coil sensitivity."""
+    return phi_r * phi_r + phi_i * phi_i
+
+
+def mriq_ref(x, y, z, kx, ky, kz, phi_r, phi_i):
+    """MRI-Q ComputePhiMag + ComputeQ.
+
+    Args:
+      x, y, z: (X,) float32 — voxel coordinates.
+      kx, ky, kz: (K,) float32 — k-space trajectory.
+      phi_r, phi_i: (K,) float32 — coil sensitivity at each k-space sample.
+    Returns:
+      (q_r, q_i): (X,) float32 —
+        q[v] = sum_k phiMag[k] * exp(i * 2*pi * (kx[k]x[v]+ky[k]y[v]+kz[k]z[v]))
+    """
+    phi_mag = phimag_ref(phi_r, phi_i)
+    exp_arg = TWO_PI * (
+        x[:, None] * kx[None, :]
+        + y[:, None] * ky[None, :]
+        + z[:, None] * kz[None, :]
+    )
+    q_r = jnp.sum(phi_mag[None, :] * jnp.cos(exp_arg), axis=1)
+    q_i = jnp.sum(phi_mag[None, :] * jnp.sin(exp_arg), axis=1)
+    return q_r.astype(x.dtype), q_i.astype(x.dtype)

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: time-domain FIR filter (HPEC tdfir), complex f32.
+
+FPGA→TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's OpenCL
+kernel keeps the tap array and a shift-register window of the input in FPGA
+*local memory* and streams one output sample per clock through a MAC
+pipeline.  Here the same locality insight becomes VMEM blocking: each grid
+step owns one output block of ``BLOCK`` samples; the padded input stays
+resident (it is small) and the tap loop is a ``fori_loop`` whose body does a
+*vector* multiply-accumulate over the whole block — the block dimension is
+what the FPGA unrolled in time, re-expressed as a VPU-wide vector op.
+
+``interpret=True`` is mandatory: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output samples computed per grid step.  256 f32 lanes keeps the working
+# set (window + accumulators) well under the 4 MiB VMEM budget noted in
+# DESIGN.md §Perf while still amortizing the tap-loop overhead.
+BLOCK = 256
+
+
+def _tdfir_kernel(taps, block, xr_ref, xi_ref, hr_ref, hi_ref, yr_ref, yi_ref):
+    """One output block of the complex FIR.
+
+    ``xr_ref/xi_ref`` hold the zero-padded input (length N + taps - 1); the
+    window for output index ``n = i*block + j`` and tap ``k`` is
+    ``xp[i*block + j + (taps-1) - k]``.
+    """
+    i = pl.program_id(0)
+    zero = jnp.zeros((block,), dtype=yr_ref.dtype)
+
+    def tap_body(k, acc):
+        acc_r, acc_i = acc
+        start = i * block + (taps - 1) - k
+        wr = xr_ref[pl.dslice(start, block)]
+        wi = xi_ref[pl.dslice(start, block)]
+        hr = hr_ref[pl.dslice(k, 1)][0]
+        hi = hi_ref[pl.dslice(k, 1)][0]
+        # Complex MAC: (wr + i*wi) * (hr + i*hi)
+        return (acc_r + wr * hr - wi * hi, acc_i + wr * hi + wi * hr)
+
+    acc_r, acc_i = jax.lax.fori_loop(0, taps, tap_body, (zero, zero))
+    yr_ref[...] = acc_r
+    yi_ref[...] = acc_i
+
+
+def tdfir(xr, xi, hr, hi, *, block=BLOCK):
+    """Complex causal FIR via the Pallas kernel.
+
+    Args:
+      xr, xi: (N,) float32 input samples (N need not be a block multiple).
+      hr, hi: (T,) float32 filter taps.
+    Returns:
+      (yr, yi): (N,) float32, matching ``ref.tdfir_ref``.
+    """
+    n = xr.shape[0]
+    taps = hr.shape[0]
+    block = min(block, n)
+    n_pad = -n % block  # round N up to a block multiple
+    grid = (n + n_pad) // block
+    # Zero-pad: (taps-1) history samples in front, block alignment at back.
+    xr_p = jnp.pad(xr, (taps - 1, n_pad))
+    xi_p = jnp.pad(xi, (taps - 1, n_pad))
+
+    out_shape = jax.ShapeDtypeStruct((n + n_pad,), xr.dtype)
+    kernel = functools.partial(_tdfir_kernel, taps, block)
+    yr, yi = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(xr_p.shape, lambda i: (0,)),  # padded input resident
+            pl.BlockSpec(xi_p.shape, lambda i: (0,)),
+            pl.BlockSpec(hr.shape, lambda i: (0,)),  # taps resident (small)
+            pl.BlockSpec(hi.shape, lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[out_shape, out_shape],
+        interpret=True,
+    )(xr_p, xi_p, hr, hi)
+    return yr[:n], yi[:n]

@@ -1,0 +1,51 @@
+"""L2: whole-application JAX compute graphs for the two paper workloads.
+
+Each workload exists in two variants that ``aot.py`` lowers to separate HLO
+artifacts:
+
+* ``*_fpga`` — calls the L1 Pallas kernels (the "FPGA bitstream" equivalent
+  in the reproduction: the Rust verification environment executes this
+  artifact for offloaded-loop numerics).
+* ``*_cpu`` — pure-jnp reference graph (ref.py oracles) used by the Rust
+  integration tests to cross-check the FPGA variant end to end.
+
+Python never runs on the request path: these functions are traced once by
+``aot.py`` and shipped as HLO text.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import mriq as mriq_kernels
+from compile.kernels import ref
+from compile.kernels import tdfir as tdfir_kernel
+
+
+def tdfir_fpga(xr, xi, hr, hi):
+    """TDFIR with the FIR hot loop on the Pallas kernel."""
+    yr, yi = tdfir_kernel.tdfir(xr, xi, hr, hi)
+    return (yr, yi)
+
+
+def tdfir_cpu(xr, xi, hr, hi):
+    """TDFIR all-CPU reference graph."""
+    yr, yi = ref.tdfir_ref(xr, xi, hr, hi)
+    return (yr, yi)
+
+
+def mriq_fpga(x, y, z, kx, ky, kz, phi_r, phi_i):
+    """MRI-Q with both hot loops (PhiMag, ComputeQ) on Pallas kernels."""
+    qr, qi = mriq_kernels.mriq(x, y, z, kx, ky, kz, phi_r, phi_i)
+    return (qr, qi)
+
+
+def mriq_cpu(x, y, z, kx, ky, kz, phi_r, phi_i):
+    """MRI-Q all-CPU reference graph."""
+    qr, qi = ref.mriq_ref(x, y, z, kx, ky, kz, phi_r, phi_i)
+    return (qr, qi)
+
+
+def tdfir_energy(yr, yi):
+    """Output energy — the sample-app "verification" reduction the paper's
+    benchmark prints; kept in the graph library so the Rust side can fold
+    outputs without reimplementing the reduction."""
+    return (jnp.sum(yr * yr + yi * yi),)

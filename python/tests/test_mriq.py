@@ -1,0 +1,97 @@
+"""Pallas MRI-Q kernels vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mriq as mk
+from compile.kernels import ref
+
+
+def _rand(rng, n, lo=-1.0, hi=1.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=n).astype(np.float32))
+
+
+def _problem(nx, k, seed):
+    rng = np.random.default_rng(seed)
+    return (
+        _rand(rng, nx), _rand(rng, nx), _rand(rng, nx),
+        _rand(rng, k), _rand(rng, k), _rand(rng, k),
+        _rand(rng, k), _rand(rng, k),
+    )
+
+
+def _check(nx, k, block=mk.BLOCK, seed=0, tol=2e-2):
+    args = _problem(nx, k, seed)
+    qr, qi = mk.mriq(*args, block=block)
+    er, ei = ref.mriq_ref(*args)
+    # Accumulation over K trig terms: absolute tolerance scales with K.
+    atol = tol * np.sqrt(k)
+    np.testing.assert_allclose(qr, er, rtol=1e-3, atol=atol)
+    np.testing.assert_allclose(qi, ei, rtol=1e-3, atol=atol)
+
+
+def test_aot_shape():
+    """The exact shape aot.py lowers."""
+    _check(2048, 512)
+
+
+def test_phimag_matches_ref():
+    rng = np.random.default_rng(0)
+    pr, pi = _rand(rng, 500), _rand(rng, 500)
+    got = mk.phimag(pr, pi)
+    np.testing.assert_allclose(got, ref.phimag_ref(pr, pi), rtol=1e-6)
+
+
+def test_phimag_nonnegative():
+    rng = np.random.default_rng(1)
+    pr, pi = _rand(rng, 333), _rand(rng, 333)
+    assert np.all(np.asarray(mk.phimag(pr, pi)) >= 0.0)
+
+
+def test_single_voxel():
+    _check(1, 16)
+
+
+def test_single_ksample():
+    _check(64, 1)
+
+
+def test_non_block_multiple():
+    _check(200, 33, block=64)
+
+
+def test_zero_phi_gives_zero_q():
+    """phi == 0 => phiMag == 0 => Q == 0 regardless of trajectory."""
+    rng = np.random.default_rng(2)
+    x, y, z = _rand(rng, 50), _rand(rng, 50), _rand(rng, 50)
+    kx, ky, kz = _rand(rng, 20), _rand(rng, 20), _rand(rng, 20)
+    zero = jnp.zeros((20,), jnp.float32)
+    qr, qi = mk.mriq(x, y, z, kx, ky, kz, zero, zero)
+    np.testing.assert_allclose(qr, np.zeros(50), atol=1e-7)
+    np.testing.assert_allclose(qi, np.zeros(50), atol=1e-7)
+
+
+def test_origin_voxel_sums_phimag():
+    """At (0,0,0): expArg == 0, so Qr == sum(phiMag), Qi == 0."""
+    rng = np.random.default_rng(3)
+    k = 40
+    kx, ky, kz = _rand(rng, k), _rand(rng, k), _rand(rng, k)
+    pr, pi = _rand(rng, k), _rand(rng, k)
+    zero = jnp.zeros((1,), jnp.float32)
+    qr, qi = mk.mriq(zero, zero, zero, kx, ky, kz, pr, pi)
+    np.testing.assert_allclose(qr[0], float(jnp.sum(pr * pr + pi * pi)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(qi[0], 0.0, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nx=st.integers(min_value=1, max_value=300),
+    k=st.integers(min_value=1, max_value=128),
+    block=st.sampled_from([16, 64, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_shapes(nx, k, block, seed):
+    """Shape sweep: kernels match the oracle for arbitrary (X, K, block)."""
+    _check(nx, k, block=block, seed=seed)

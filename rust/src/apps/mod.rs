@@ -1,0 +1,260 @@
+//! Application corpus: the paper's two evaluation applications (tdfir,
+//! MRI-Q) as MiniC sources with the paper's exact loop counts, plus three
+//! extra sample apps for the examples and the analysis tests.
+//!
+//! Each [`App`] may carry an [`ArtifactBinding`]: when the offload search
+//! selects the bound hot loop, the verification environment executes the
+//! loop's computation through the matching PJRT artifact (the L1 Pallas
+//! kernel lowered by `python/compile/aot.py`) and cross-checks numerics
+//! against the interpreter — the reproduction's stand-in for "runs on the
+//! actual FPGA and produces the same answer".
+
+use crate::cparse::{self, Program};
+use crate::interp::{Interp, Value};
+
+/// Binding of an app's hot loop to an AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactBinding {
+    /// function whose outermost loop is the bound hot loop
+    pub function: &'static str,
+    /// artifact name in `artifacts/manifest.json` (FPGA variant)
+    pub artifact: &'static str,
+    /// all-CPU reference artifact (cross-check)
+    pub cpu_artifact: &'static str,
+    /// global arrays feeding the artifact inputs, with lengths
+    pub inputs: &'static [(&'static str, usize)],
+    /// global arrays the artifact outputs correspond to
+    pub outputs: &'static [(&'static str, usize)],
+}
+
+/// One registered application.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub source: &'static str,
+    /// loop count the paper reports (None for the extra apps)
+    pub paper_loop_count: Option<usize>,
+    pub binding: Option<ArtifactBinding>,
+    /// global scalar overrides that shrink the problem for fast tests
+    pub test_scale: &'static [(&'static str, i64)],
+    /// array holding the app's verification outputs
+    pub stats_array: &'static str,
+}
+
+impl App {
+    /// Parse the app's source.
+    pub fn parse(&self) -> Program {
+        cparse::parse(self.source).unwrap_or_else(|e| {
+            panic!("embedded app `{}` must parse: {e}", self.name)
+        })
+    }
+
+    /// Fresh interpreter, optionally at test scale.
+    pub fn interp<'p>(&self, program: &'p Program, test_scale: bool) -> Interp<'p> {
+        let mut it = Interp::new(program);
+        if test_scale {
+            for (name, v) in self.test_scale {
+                it.set_global(name, Value::Int(*v));
+            }
+        }
+        it
+    }
+}
+
+/// tdfir — time-domain FIR filter (HPEC Challenge), paper app #1.
+pub const TDFIR: App = App {
+    name: "tdfir",
+    description: "Time-domain finite impulse response filter (HPEC Challenge)",
+    source: include_str!("minic/tdfir.mc"),
+    paper_loop_count: Some(36),
+    binding: Some(ArtifactBinding {
+        function: "fir_filter",
+        artifact: "tdfir_fpga",
+        cpu_artifact: "tdfir_cpu",
+        inputs: &[("xr", 4096), ("xi", 4096), ("hr", 128), ("hi", 128)],
+        outputs: &[("yr", 4096), ("yi", 4096)],
+    }),
+    test_scale: &[("N", 512), ("T", 32), ("NP", 543), ("HALF", 256)],
+    stats_array: "stats_out",
+};
+
+/// MRI-Q — Parboil MRI reconstruction Q-matrix, paper app #2.
+pub const MRIQ: App = App {
+    name: "mriq",
+    description: "MRI-Q non-Cartesian reconstruction (Parboil)",
+    source: include_str!("minic/mriq.mc"),
+    paper_loop_count: Some(16),
+    binding: Some(ArtifactBinding {
+        function: "compute_q",
+        artifact: "mriq_fpga",
+        cpu_artifact: "mriq_cpu",
+        inputs: &[
+            ("xx", 2048), ("xy", 2048), ("xz", 2048),
+            ("kx", 512), ("ky", 512), ("kz", 512),
+            ("phir", 512), ("phii", 512),
+        ],
+        outputs: &[("qr", 2048), ("qi", 2048)],
+    }),
+    test_scale: &[("X", 256), ("K", 64)],
+    stats_array: "stats_out",
+};
+
+/// Extra sample app: dense matmul.
+pub const MATMUL: App = App {
+    name: "matmul",
+    description: "Dense single-precision matrix multiply",
+    source: include_str!("minic/matmul.mc"),
+    paper_loop_count: None,
+    binding: None,
+    test_scale: &[("N", 32)],
+    stats_array: "stats_out",
+};
+
+/// Extra sample app: 2-D Laplace stencil.
+pub const LAPLACE2D: App = App {
+    name: "laplace2d",
+    description: "2-D Laplace stencil (Jacobi sweeps)",
+    source: include_str!("minic/laplace2d.mc"),
+    paper_loop_count: None,
+    binding: None,
+    test_scale: &[("W", 32), ("ITERS", 4)],
+    stats_array: "stats_out",
+};
+
+/// Extra sample app: histogram pipeline.
+pub const HISTOGRAM: App = App {
+    name: "histogram",
+    description: "Histogram + pointwise transform pipeline",
+    source: include_str!("minic/histogram.mc"),
+    paper_loop_count: None,
+    binding: None,
+    test_scale: &[("N", 1024)],
+    stats_array: "stats_out",
+};
+
+/// All registered apps.
+pub fn all() -> Vec<&'static App> {
+    vec![&TDFIR, &MRIQ, &MATMUL, &LAPLACE2D, &HISTOGRAM]
+}
+
+/// Look up an app by name.
+pub fn by_name(name: &str) -> Option<&'static App> {
+    all().into_iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir;
+
+    #[test]
+    fn all_apps_parse() {
+        for app in all() {
+            let p = app.parse();
+            assert!(!p.functions.is_empty(), "{}", app.name);
+            assert!(p.function("main").is_some(), "{} needs main()", app.name);
+        }
+    }
+
+    #[test]
+    fn paper_loop_counts_match() {
+        // §5.1.2: "ループ文数 (時間領域有限インパルス応答フィルタは 36.
+        // MRI-Q は 16.)"
+        assert_eq!(TDFIR.parse().loop_count(), 36);
+        assert_eq!(MRIQ.parse().loop_count(), 16);
+    }
+
+    #[test]
+    fn hot_loops_are_offloadable() {
+        for app in [&TDFIR, &MRIQ] {
+            let p = app.parse();
+            let loops = ir::analyze(&p);
+            let func = app.binding.as_ref().unwrap().function;
+            let hot = loops
+                .iter()
+                .find(|l| l.info.function == func && l.info.depth == 0)
+                .unwrap_or_else(|| panic!("{}: no outer loop in {func}", app.name));
+            assert!(
+                hot.deps.offloadable,
+                "{}: hot loop rejected: {:?}",
+                app.name, hot.deps.reject_reason
+            );
+        }
+    }
+
+    #[test]
+    fn apps_run_at_test_scale() {
+        for app in all() {
+            let p = app.parse();
+            let mut it = app.interp(&p, true);
+            it.run_main()
+                .unwrap_or_else(|e| panic!("{} failed: {e}", app.name));
+            let stats = it.read_array(app.stats_array).unwrap();
+            assert!(
+                stats.iter().any(|v| *v != 0.0),
+                "{}: stats must be non-trivial",
+                app.name
+            );
+        }
+    }
+
+    #[test]
+    fn tdfir_hot_loop_ids_documented() {
+        let p = TDFIR.parse();
+        let loops = ir::analyze(&p);
+        let fir_outer = loops
+            .iter()
+            .find(|l| l.info.function == "fir_filter" && l.info.depth == 0)
+            .unwrap();
+        assert_eq!(fir_outer.info.id.0, 8, "header comment says L8/L9");
+    }
+
+    #[test]
+    fn mriq_hot_loop_ids_documented() {
+        let p = MRIQ.parse();
+        let loops = ir::analyze(&p);
+        let q_outer = loops
+            .iter()
+            .find(|l| l.info.function == "compute_q" && l.info.depth == 0)
+            .unwrap();
+        assert_eq!(q_outer.info.id.0, 6, "header comment says L6/L7");
+        let phimag = loops
+            .iter()
+            .find(|l| l.info.function == "compute_phimag")
+            .unwrap();
+        assert_eq!(phimag.info.id.0, 4);
+        assert!(phimag.deps.offloadable);
+    }
+
+    #[test]
+    fn histogram_fill_not_offloadable() {
+        let p = HISTOGRAM.parse();
+        let loops = ir::analyze(&p);
+        let fill = loops
+            .iter()
+            .find(|l| l.info.function == "build_hist" && l.info.id.0 == 3)
+            .unwrap();
+        assert!(!fill.deps.offloadable, "data-dependent writes must reject");
+    }
+
+    #[test]
+    fn laplace_sweep_not_offloadable_but_grid_is() {
+        let p = LAPLACE2D.parse();
+        let loops = ir::analyze(&p);
+        let sweep = loops
+            .iter()
+            .find(|l| l.info.function == "jacobi" && l.info.depth == 0)
+            .unwrap();
+        assert!(!sweep.deps.offloadable, "ping-pong sweep carries deps");
+        let grid = loops
+            .iter()
+            .find(|l| l.info.function == "jacobi" && l.info.depth == 1)
+            .unwrap();
+        assert!(
+            grid.deps.offloadable,
+            "grid nest rejected: {:?}",
+            grid.deps.reject_reason
+        );
+    }
+}

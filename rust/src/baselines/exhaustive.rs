@@ -1,0 +1,70 @@
+//! Exhaustive baseline: compile + measure **every** non-empty subset of
+//! the candidate pool.  Optimal by construction, but the compile-hour
+//! bill is exponential — the upper bound the paper's narrowing avoids.
+
+use crate::coordinator::pipeline::AppAnalysis;
+use crate::coordinator::verify_env::VerifyEnv;
+use crate::opencl::OffloadPattern;
+
+use super::{candidate_pool, reports_for, BaselineOutcome};
+
+/// Cap on the pool size (2^n subsets — keep the simulation bounded).
+pub const MAX_POOL: usize = 12;
+
+pub fn search(analysis: &AppAnalysis, env: &VerifyEnv<'_>) -> BaselineOutcome {
+    let mut pool = candidate_pool(analysis);
+    pool.truncate(MAX_POOL);
+    let reports = reports_for(analysis, env, &pool, 1);
+
+    let mut best = None;
+    let mut evaluations = 0usize;
+    for mask in 1u32..(1u32 << pool.len()) {
+        let loops: Vec<_> = pool
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask & (1 << i) != 0)
+            .map(|(_, id)| *id)
+            .collect();
+        let pat = OffloadPattern::of(loops);
+        let m = env.measure_pattern(analysis, &reports, &pat);
+        evaluations += 1;
+        if m.compiled
+            && best
+                .as_ref()
+                .map(|b: &crate::coordinator::verify_env::PatternMeasurement| {
+                    m.speedup > b.speedup
+                })
+                .unwrap_or(true)
+        {
+            best = Some(m);
+        }
+    }
+
+    BaselineOutcome {
+        method: "exhaustive",
+        best,
+        evaluations,
+        sim_hours: env.clock.total_hours(),
+        compile_hours: env.clock.compile_lane_seconds() / 3600.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::config::SearchConfig;
+    use crate::coordinator::pipeline::analyze_app;
+    use crate::cpu::XEON_3104;
+    use crate::fpga::ARRIA10_GX;
+
+    #[test]
+    fn exhaustive_is_optimal_but_expensive() {
+        let analysis = analyze_app(&apps::HISTOGRAM, true).unwrap();
+        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let out = search(&analysis, &env);
+        assert!(out.evaluations >= 3);
+        // every evaluation is a ~3h compile
+        assert!(out.compile_hours > 2.0 * out.evaluations as f64);
+    }
+}

@@ -1,0 +1,183 @@
+//! GA baseline: the GPU method of [Yamato 2018] transplanted to FPGA.
+//!
+//! Chromosome = offload bitmask over the candidate pool; fitness = the
+//! measured speedup of the pattern — which, on an FPGA, costs a full
+//! ≈3-hour compile **per evaluation**.  A modest GA (population 8,
+//! 5 generations) therefore burns days of compile time; the bench
+//! regenerates that comparison.
+
+use std::collections::HashMap;
+
+use crate::coordinator::pipeline::AppAnalysis;
+use crate::coordinator::verify_env::{PatternMeasurement, VerifyEnv};
+use crate::cparse::ast::LoopId;
+use crate::opencl::OffloadPattern;
+use crate::util::rng::Rng;
+
+use super::{candidate_pool, reports_for, BaselineOutcome};
+
+/// GA parameters (defaults follow the GPU paper's modest settings).
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_p: f64,
+    pub mutation_p: f64,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        Self { population: 8, generations: 5, crossover_p: 0.9, mutation_p: 0.05, seed: 1 }
+    }
+}
+
+type Genome = Vec<bool>;
+
+fn genome_pattern(genome: &Genome, pool: &[LoopId]) -> OffloadPattern {
+    OffloadPattern::of(
+        genome
+            .iter()
+            .zip(pool)
+            .filter(|(g, _)| **g)
+            .map(|(_, id)| *id)
+            .collect(),
+    )
+}
+
+/// Run the GA search.  Every distinct evaluated pattern costs one
+/// simulated full compile (cached across generations, as a real harness
+/// would cache bitstreams).
+pub fn search(
+    analysis: &AppAnalysis,
+    env: &VerifyEnv<'_>,
+    cfg: &GaConfig,
+) -> BaselineOutcome {
+    let pool = candidate_pool(analysis);
+    let reports = reports_for(analysis, env, &pool, 1);
+    let mut rng = Rng::new(cfg.seed);
+    let n = pool.len();
+
+    let mut cache: HashMap<OffloadPattern, PatternMeasurement> = HashMap::new();
+    let mut evaluations = 0usize;
+    let eval = |pat: &OffloadPattern,
+                    cache: &mut HashMap<OffloadPattern, PatternMeasurement>,
+                    evaluations: &mut usize|
+     -> PatternMeasurement {
+        if let Some(m) = cache.get(pat) {
+            return m.clone();
+        }
+        let m = if pat.loops.is_empty() {
+            // empty genome = all-CPU: free, speedup 1
+            PatternMeasurement {
+                pattern: pat.clone(),
+                utilization: env.device.bsp_frac,
+                compiled: true,
+                compile_sim_s: 0.0,
+                time_s: env.cpu_baseline_s(analysis),
+                speedup: 1.0,
+                kernels: Vec::new(),
+            }
+        } else {
+            *evaluations += 1;
+            env.measure_pattern(analysis, &reports, pat)
+        };
+        cache.insert(pat.clone(), m.clone());
+        m
+    };
+
+    // init population: random genomes biased sparse (FPGA space is small)
+    let mut pop: Vec<Genome> = (0..cfg.population)
+        .map(|_| (0..n).map(|_| rng.bool(0.3)).collect())
+        .collect();
+
+    let mut best: Option<PatternMeasurement> = None;
+    for _gen in 0..cfg.generations {
+        // evaluate
+        let scored: Vec<(f64, Genome)> = pop
+            .iter()
+            .map(|g| {
+                let m = eval(&genome_pattern(g, &pool), &mut cache, &mut evaluations);
+                let fit = if m.compiled { m.speedup } else { 0.0 };
+                if best.as_ref().map(|b| m.speedup > b.speedup).unwrap_or(true) && m.compiled {
+                    best = Some(m.clone());
+                }
+                (fit, g.clone())
+            })
+            .collect();
+
+        // tournament selection + crossover + mutation
+        let mut next = Vec::with_capacity(cfg.population);
+        // elitism: keep the best genome
+        if let Some((_, g)) = scored
+            .iter()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        {
+            next.push(g.clone());
+        }
+        while next.len() < cfg.population {
+            let pick = |rng: &mut Rng| -> &Genome {
+                let a = &scored[rng.below(scored.len() as u64) as usize];
+                let b = &scored[rng.below(scored.len() as u64) as usize];
+                if a.0 >= b.0 { &a.1 } else { &b.1 }
+            };
+            let pa = pick(&mut rng).clone();
+            let pb = pick(&mut rng).clone();
+            let mut child = if n > 1 && rng.bool(cfg.crossover_p) {
+                let cut = 1 + rng.below((n - 1) as u64) as usize;
+                let mut c = pa[..cut].to_vec();
+                c.extend_from_slice(&pb[cut..]);
+                c
+            } else {
+                pa
+            };
+            for bit in child.iter_mut() {
+                if rng.bool(cfg.mutation_p) {
+                    *bit = !*bit;
+                }
+            }
+            next.push(child);
+        }
+        pop = next;
+    }
+
+    BaselineOutcome {
+        method: "ga",
+        best,
+        evaluations,
+        sim_hours: env.clock.total_hours(),
+        compile_hours: env.clock.compile_lane_seconds() / 3600.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::config::SearchConfig;
+    use crate::coordinator::pipeline::analyze_app;
+    use crate::cpu::XEON_3104;
+    use crate::fpga::ARRIA10_GX;
+
+    #[test]
+    fn ga_finds_an_improving_pattern_but_burns_compile_hours() {
+        let analysis = analyze_app(&apps::MRIQ, true).unwrap();
+        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let out = search(&analysis, &env, &GaConfig::default());
+        assert!(out.speedup() > 1.0, "GA should find the hot loop eventually");
+        // the whole point: GA needs far more compiles than the proposed d=4
+        assert!(out.evaluations > 4, "evaluations {}", out.evaluations);
+        assert!(out.compile_hours > 12.0, "compile hours {}", out.compile_hours);
+    }
+
+    #[test]
+    fn ga_is_deterministic_per_seed() {
+        let analysis = analyze_app(&apps::HISTOGRAM, true).unwrap();
+        let run = |seed| {
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+            let out = search(&analysis, &env, &GaConfig { seed, ..Default::default() });
+            (out.evaluations, out.speedup())
+        };
+        assert_eq!(run(7), run(7));
+    }
+}

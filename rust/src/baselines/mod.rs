@@ -1,0 +1,68 @@
+//! Baseline search strategies the paper argues against (§3.2): the
+//! GA-driven measurement loop that works for GPUs ([Yamato 2018]) is
+//! infeasible on FPGAs because every fitness evaluation is an hours-long
+//! compile.  These baselines make that argument quantitative
+//! (`benches/search_methods.rs`).
+//!
+//! * [`ga`] — genetic algorithm over offload bitmasks, each evaluation a
+//!   simulated full compile + measurement;
+//! * [`exhaustive`] — every subset of the offloadable candidates;
+//! * [`naive`] — offload *all* offloadable loops at once.
+
+pub mod exhaustive;
+pub mod ga;
+pub mod naive;
+
+use std::collections::HashMap;
+
+use crate::coordinator::pipeline::AppAnalysis;
+use crate::coordinator::verify_env::{PatternMeasurement, VerifyEnv};
+use crate::cparse::ast::LoopId;
+use crate::hls::{self, HlsReport};
+use crate::intensity;
+
+/// Outcome of a baseline search.
+#[derive(Debug)]
+pub struct BaselineOutcome {
+    pub method: &'static str,
+    pub best: Option<PatternMeasurement>,
+    /// patterns compiled+measured
+    pub evaluations: usize,
+    /// simulated wall-clock hours the search took
+    pub sim_hours: f64,
+    pub compile_hours: f64,
+}
+
+impl BaselineOutcome {
+    pub fn speedup(&self) -> f64 {
+        self.best.as_ref().map(|b| b.speedup).unwrap_or(1.0)
+    }
+}
+
+/// The candidate set every baseline draws from: outermost offloadable
+/// loops (same pool the proposed method ranks).
+pub fn candidate_pool(analysis: &AppAnalysis) -> Vec<LoopId> {
+    intensity::top_a(&analysis.intensities, &analysis.loops, usize::MAX)
+        .into_iter()
+        .map(|l| l.id)
+        .collect()
+}
+
+/// Pre-compile reports for a set of loops (cached per loop).
+pub fn reports_for(
+    analysis: &AppAnalysis,
+    env: &VerifyEnv<'_>,
+    ids: &[LoopId],
+    unroll: usize,
+) -> HashMap<LoopId, HlsReport> {
+    ids.iter()
+        .map(|id| {
+            let la = analysis
+                .loops
+                .iter()
+                .find(|l| l.info.id == *id)
+                .expect("known loop");
+            (*id, hls::precompile(&analysis.program, la, unroll, env.device))
+        })
+        .collect()
+}

@@ -1,0 +1,61 @@
+//! Naive baseline: offload every offloadable loop in one pattern — what a
+//! "parallelize everything" compiler flag would do.  Usually loses to the
+//! narrowed search: cold loops pay PCIe transfer + kernel-launch overhead
+//! for no gain, and the combined design may blow the resource cap.
+
+use crate::coordinator::pipeline::AppAnalysis;
+use crate::coordinator::verify_env::VerifyEnv;
+use crate::opencl::OffloadPattern;
+
+use super::{candidate_pool, reports_for, BaselineOutcome};
+
+pub fn search(analysis: &AppAnalysis, env: &VerifyEnv<'_>) -> BaselineOutcome {
+    let pool = candidate_pool(analysis);
+    let reports = reports_for(analysis, env, &pool, 1);
+    let pat = OffloadPattern::of(pool);
+    let best = if pat.loops.is_empty() {
+        None
+    } else {
+        Some(env.measure_pattern(analysis, &reports, &pat))
+    };
+    BaselineOutcome {
+        method: "naive-all",
+        best: best.filter(|m| m.compiled),
+        evaluations: 1,
+        sim_hours: env.clock.total_hours(),
+        compile_hours: env.clock.compile_lane_seconds() / 3600.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::config::SearchConfig;
+    use crate::coordinator::pipeline::{analyze_app, search_with_analysis};
+    use crate::cpu::XEON_3104;
+    use crate::fpga::ARRIA10_GX;
+
+    #[test]
+    fn naive_all_is_no_better_than_proposed() {
+        let analysis = analyze_app(&apps::TDFIR, true).unwrap();
+        let naive_env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let naive = search(&analysis, &naive_env);
+
+        let prop_env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let proposed = search_with_analysis(
+            &apps::TDFIR,
+            &analysis,
+            &prop_env,
+            &SearchConfig::default(),
+        )
+        .unwrap();
+
+        assert!(
+            proposed.speedup() >= naive.speedup() * 0.99,
+            "proposed {:.2} vs naive {:.2}",
+            proposed.speedup(),
+            naive.speedup()
+        );
+    }
+}

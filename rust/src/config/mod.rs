@@ -1,0 +1,127 @@
+//! Search configuration and testbed presets (paper §5.1, Fig 3).
+
+use std::fmt;
+
+/// The paper's narrowing / search parameters (§5.1.2 evaluation conditions).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Step-2 cut: keep top-`a` loops by arithmetic intensity (paper: 5).
+    pub a_intensity: usize,
+    /// Loop-unroll factor applied when generating OpenCL (paper: 1 —
+    /// "検証では OpenCL での FPGA オフロードした効果だけ確認する").
+    pub b_unroll: usize,
+    /// Step-3 cut: keep top-`c` loops by resource efficiency (paper: 3).
+    pub c_efficiency: usize,
+    /// Max offload patterns actually compiled+measured (paper: 4).
+    pub d_patterns: usize,
+    /// Reject patterns whose combined resource fraction exceeds this
+    /// (paper: "上限値に納まらない場合は、その組合せパターンは作らない").
+    pub resource_cap: f64,
+    /// Verification-environment compile lanes.  The paper compiles
+    /// sequentially on one machine (≈3 h per pattern, ~half a day for 4).
+    pub compile_parallelism: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            a_intensity: 5,
+            b_unroll: 1,
+            c_efficiency: 3,
+            d_patterns: 4,
+            resource_cap: 0.85,
+            compile_parallelism: 1,
+        }
+    }
+}
+
+/// One machine row of the paper's Fig 3 environment table.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub name: &'static str,
+    pub hardware: &'static str,
+    pub cpu: &'static str,
+    pub ram: &'static str,
+    pub fpga: &'static str,
+    pub os: &'static str,
+    pub accel_stack: &'static str,
+}
+
+/// The paper's Fig 3 testbed (what our simulators are calibrated to).
+pub const FIG3_TESTBED: &[Machine] = &[
+    Machine {
+        name: "Verification machine",
+        hardware: "Dell PowerEdge R740",
+        cpu: "Intel Xeon Bronze 3104 (6C/1.7GHz)",
+        ram: "32GB RDIMM DDR4-2666 x2",
+        fpga: "Intel PAC with Intel Arria10 GX FPGA",
+        os: "CentOS 7.4",
+        accel_stack: "Intel Acceleration Stack 1.2",
+    },
+    Machine {
+        name: "Running environment",
+        hardware: "Dell PowerEdge R740",
+        cpu: "Intel Xeon Bronze 3104 (6C/1.7GHz)",
+        ram: "32GB RDIMM DDR4-2666 x2",
+        fpga: "Intel PAC with Intel Arria10 GX FPGA",
+        os: "CentOS 7.4",
+        accel_stack: "Intel Acceleration Stack 1.2",
+    },
+    Machine {
+        name: "Client",
+        hardware: "HP ProBook 470 G3",
+        cpu: "Intel Core i5-6200U @2.3GHz",
+        ram: "8GB",
+        fpga: "-",
+        os: "Windows 7 Professional",
+        accel_stack: "-",
+    },
+];
+
+impl fmt::Display for Machine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{:<22} | {:<22} | {:<34} | {:<8} | {:<38} | {:<10} | {}",
+            self.name, self.hardware, self.cpu, self.ram, self.fpga, self.os,
+            self.accel_stack
+        )
+    }
+}
+
+/// Render the Fig 3 table.
+pub fn fig3_table() -> String {
+    let mut out = String::from(
+        "Name                   | Hardware               | CPU                                | RAM      | FPGA                                   | OS         | Accel stack\n",
+    );
+    out.push_str(&"-".repeat(150));
+    out.push('\n');
+    for m in FIG3_TESTBED {
+        out.push_str(&m.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let c = SearchConfig::default();
+        assert_eq!(
+            (c.a_intensity, c.b_unroll, c.c_efficiency, c.d_patterns),
+            (5, 1, 3, 4),
+            "must match the paper's §5.1.2 evaluation conditions"
+        );
+        assert_eq!(c.compile_parallelism, 1, "paper compiles sequentially");
+    }
+
+    #[test]
+    fn fig3_has_three_machines() {
+        assert_eq!(FIG3_TESTBED.len(), 3);
+        assert!(fig3_table().contains("Arria10"));
+        assert!(fig3_table().contains("Client"));
+    }
+}

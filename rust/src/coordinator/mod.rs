@@ -1,0 +1,18 @@
+//! L3 coordinator — the paper's contribution (環境適応処理 Steps 1–3 for
+//! FPGA): narrow the loop candidates with arithmetic intensity and
+//! resource efficiency, generate OpenCL offload patterns, compile and
+//! measure only a handful on the verification environment, and pick the
+//! fastest.
+//!
+//! * [`pipeline`] — the end-to-end search ([`pipeline::offload_search`]);
+//! * [`verify_env`] — the verification environment: simulated compile
+//!   farm + performance measurement + PJRT numerics cross-check;
+//! * [`patterns`] — round-1/round-2 offload-pattern construction.
+
+pub mod adapt;
+pub mod patterns;
+pub mod pipeline;
+pub mod verify_env;
+
+pub use pipeline::{analyze_app, offload_search, AppAnalysis, CandidateReport, SearchTrace};
+pub use verify_env::{NumericsCheck, PatternMeasurement, VerifyEnv};

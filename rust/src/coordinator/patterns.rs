@@ -1,0 +1,188 @@
+//! Offload-pattern construction (paper §3.3 / §4).
+//!
+//! Round 1: one pattern per surviving single loop ("まず、選択された単
+//! ループ文に対してパターンを作って…性能測定する").
+//!
+//! Round 2: combinations of the loops whose single-loop patterns beat the
+//! CPU ("高速化できる単ループ文に対してはその組み合わせのパターンも2回目
+//! に作り"), skipping combinations whose summed resources blow the cap
+//! ("上限値に納まらない場合は、その組合せパターンは作らない"), within the
+//! remaining measurement budget `d − |round 1|`.
+
+use std::collections::HashMap;
+
+use crate::cparse::ast::LoopId;
+use crate::fpga::device::Device;
+use crate::hls::{combined_utilization, HlsReport};
+use crate::opencl::OffloadPattern;
+
+use super::verify_env::PatternMeasurement;
+
+/// Round-1 patterns: singles, in ranking order.
+pub fn round1(top_c: &[LoopId]) -> Vec<OffloadPattern> {
+    top_c.iter().map(|l| OffloadPattern::single(*l)).collect()
+}
+
+/// Round-2 patterns: combinations of improving loops.
+pub fn round2(
+    round1_results: &[PatternMeasurement],
+    reports: &HashMap<LoopId, HlsReport>,
+    device: &Device,
+    resource_cap: f64,
+    budget: usize,
+) -> Vec<OffloadPattern> {
+    // loops whose single pattern compiled and beat the CPU, best first
+    let mut improving: Vec<(&PatternMeasurement, LoopId)> = round1_results
+        .iter()
+        .filter(|m| m.compiled && m.speedup > 1.0 && m.pattern.loops.len() == 1)
+        .map(|m| (m, m.pattern.loops[0]))
+        .collect();
+    improving.sort_by(|a, b| b.0.speedup.partial_cmp(&a.0.speedup).unwrap());
+    let ids: Vec<LoopId> = improving.iter().map(|(_, id)| *id).collect();
+
+    // candidate combinations: larger subsets first within each size tier,
+    // pairs before triples etc. in greedy best-speedup order
+    let mut combos: Vec<(f64, OffloadPattern)> = Vec::new();
+    let n = ids.len();
+    for size in 2..=n {
+        for subset in subsets_of_size(&ids, size) {
+            // estimated gain: sum of measured individual gains
+            let est: f64 = improving
+                .iter()
+                .filter(|(_, id)| subset.contains(id))
+                .map(|(m, _)| m.speedup - 1.0)
+                .sum();
+            combos.push((est, OffloadPattern::of(subset)));
+        }
+    }
+    combos.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut out = Vec::new();
+    for (_, pat) in combos {
+        if out.len() >= budget {
+            break;
+        }
+        let refs: Vec<&HlsReport> = pat
+            .loops
+            .iter()
+            .filter_map(|l| reports.get(l))
+            .collect();
+        if refs.len() != pat.loops.len() {
+            continue;
+        }
+        if combined_utilization(&refs, device) > resource_cap {
+            continue; // paper: over-cap combinations are never built
+        }
+        out.push(pat);
+    }
+    out
+}
+
+fn subsets_of_size(ids: &[LoopId], size: usize) -> Vec<Vec<LoopId>> {
+    let mut out = Vec::new();
+    let n = ids.len();
+    if size > n {
+        return out;
+    }
+    // small n (≤ ~8): bitmask enumeration is fine
+    for mask in 1u32..(1 << n) {
+        if mask.count_ones() as usize == size {
+            out.push(
+                (0..n)
+                    .filter(|i| mask & (1 << i) != 0)
+                    .map(|i| ids[i])
+                    .collect(),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opencl::OffloadPattern;
+
+    fn meas(id: u32, speedup: f64, compiled: bool) -> PatternMeasurement {
+        PatternMeasurement {
+            pattern: OffloadPattern::single(LoopId(id)),
+            utilization: 0.3,
+            compiled,
+            compile_sim_s: 3.0 * 3600.0,
+            time_s: 1.0 / speedup.max(1e-9),
+            speedup,
+            kernels: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn round1_is_one_pattern_per_loop() {
+        let pats = round1(&[LoopId(1), LoopId(5)]);
+        assert_eq!(pats.len(), 2);
+        assert_eq!(pats[0].label(), "L1");
+        assert_eq!(pats[1].label(), "L5");
+    }
+
+    #[test]
+    fn round2_combines_improving_loops() {
+        let r1 = vec![meas(1, 3.0, true), meas(3, 1.5, true), meas(5, 0.8, true)];
+        let reports = fake_reports(&[1, 3, 5]);
+        let pats = round2(&r1, &reports, &crate::fpga::ARRIA10_GX, 0.85, 4);
+        // L5 did not improve: only the L1+L3 pair remains
+        assert_eq!(pats, vec![OffloadPattern::of(vec![LoopId(1), LoopId(3)])]);
+    }
+
+    #[test]
+    fn round2_respects_budget() {
+        let r1 = vec![meas(1, 3.0, true), meas(3, 2.0, true), meas(5, 1.5, true)];
+        let reports = fake_reports(&[1, 3, 5]);
+        let pats = round2(&r1, &reports, &crate::fpga::ARRIA10_GX, 0.85, 1);
+        assert_eq!(pats.len(), 1);
+        // all three improved: their full combination has the largest
+        // estimated gain and wins the single remaining slot
+        assert_eq!(
+            pats[0],
+            OffloadPattern::of(vec![LoopId(1), LoopId(3), LoopId(5)])
+        );
+    }
+
+    #[test]
+    fn round2_skips_failed_compiles() {
+        let r1 = vec![meas(1, 3.0, false), meas(3, 2.0, true)];
+        let reports = fake_reports(&[1, 3]);
+        let pats = round2(&r1, &reports, &crate::fpga::ARRIA10_GX, 0.85, 4);
+        assert!(pats.is_empty(), "only one improving loop => no combos");
+    }
+
+    #[test]
+    fn round2_enforces_resource_cap() {
+        let r1 = vec![meas(1, 3.0, true), meas(3, 2.0, true)];
+        let mut reports = fake_reports(&[1, 3]);
+        // inflate L3's resources so the pair blows the cap
+        if let Some(r) = reports.get_mut(&LoopId(3)) {
+            r.resources.alms = crate::fpga::ARRIA10_GX.total.alms * 0.9;
+        }
+        let pats = round2(&r1, &reports, &crate::fpga::ARRIA10_GX, 0.85, 4);
+        assert!(pats.is_empty());
+    }
+
+    fn fake_reports(ids: &[u32]) -> HashMap<LoopId, HlsReport> {
+        use crate::cparse::parse;
+        use crate::ir;
+        // a real small kernel report, duplicated under several ids
+        let p = parse(
+            "void f(float a[], int n) { int i; \
+             for (i = 0; i < n; i++) { a[i] = a[i] * 2.0; } }",
+        )
+        .unwrap();
+        let loops = ir::analyze(&p);
+        let base = crate::hls::precompile(&p, &loops[0], 1, &crate::fpga::ARRIA10_GX);
+        ids.iter()
+            .map(|id| {
+                let mut r = base.clone();
+                r.loop_id = LoopId(*id);
+                (LoopId(*id), r)
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,209 @@
+//! Verification environment (検証環境): compiles offload patterns on the
+//! simulated compile farm, measures the sample application under each
+//! pattern, and cross-checks offloaded numerics through the PJRT
+//! artifacts.
+//!
+//! Performance model of one measurement (the paper runs the app's
+//! built-in sample benchmark):
+//!
+//! ```text
+//! t(pattern) = t_cpu(all) − Σ_{L∈pattern} t_cpu(L) + Σ_{L∈pattern} t_fpga(L)
+//! ```
+//!
+//! with `t_fpga` from the pipelined-execution model (kernel + PCIe).  The
+//! compile farm schedules 3-hour simulated compiles over
+//! `compile_parallelism` lanes (paper: 1).
+
+use std::collections::HashMap;
+
+use crate::apps::App;
+use crate::config::SearchConfig;
+use crate::cparse::ast::LoopId;
+use crate::cpu::CpuModel;
+use crate::fpga::device::Device;
+use crate::fpga::{pnr, timing};
+use crate::hls::HlsReport;
+use crate::metrics::SimClock;
+use crate::opencl::OffloadPattern;
+use crate::runtime::Runtime;
+
+use super::pipeline::AppAnalysis;
+
+/// Result of compiling + measuring one offload pattern.
+#[derive(Debug, Clone)]
+pub struct PatternMeasurement {
+    pub pattern: OffloadPattern,
+    /// combined device utilization (incl. BSP)
+    pub utilization: f64,
+    /// did the simulated full compile produce a bitstream?
+    pub compiled: bool,
+    /// simulated compile seconds charged to the farm
+    pub compile_sim_s: f64,
+    /// measured wall-clock of the sample app under this pattern (model)
+    pub time_s: f64,
+    /// speedup vs. the all-CPU run (the paper's Fig-4 metric)
+    pub speedup: f64,
+    /// per-kernel FPGA breakdown
+    pub kernels: Vec<timing::KernelExec>,
+}
+
+/// Outcome of the PJRT numerics cross-check for a bound hot loop.
+#[derive(Debug, Clone)]
+pub struct NumericsCheck {
+    pub artifact: String,
+    /// max |fpga − cpu-interpreter| over all output elements
+    pub max_abs_err: f64,
+    /// max |fpga − cpu-artifact| (pallas vs pure-jnp via PJRT)
+    pub max_abs_err_vs_cpu_artifact: f64,
+    pub elements: usize,
+    pub passed: bool,
+}
+
+/// The verification environment.
+pub struct VerifyEnv<'a> {
+    pub device: &'a Device,
+    pub cpu: &'a CpuModel,
+    pub clock: SimClock,
+    cfg: SearchConfig,
+}
+
+impl<'a> VerifyEnv<'a> {
+    pub fn new(device: &'a Device, cpu: &'a CpuModel, cfg: SearchConfig) -> Self {
+        let clock = SimClock::new(cfg.compile_parallelism.max(1));
+        Self { device, cpu, clock, cfg }
+    }
+
+    pub fn config(&self) -> &SearchConfig {
+        &self.cfg
+    }
+
+    /// All-CPU baseline time of the sample app (model).
+    pub fn cpu_baseline_s(&self, analysis: &AppAnalysis) -> f64 {
+        self.cpu.program_time_s(&analysis.profile)
+    }
+
+    /// Compile + measure one pattern.  `reports` must contain an
+    /// [`HlsReport`] for every loop in the pattern.
+    pub fn measure_pattern(
+        &self,
+        analysis: &AppAnalysis,
+        reports: &HashMap<LoopId, HlsReport>,
+        pattern: &OffloadPattern,
+    ) -> PatternMeasurement {
+        let refs: Vec<&HlsReport> = pattern
+            .loops
+            .iter()
+            .map(|l| reports.get(l).expect("pattern loop has a pre-compile report"))
+            .collect();
+        let utilization = crate::hls::combined_utilization(&refs, self.device);
+
+        // full compile on the farm (3-hour scale)
+        let outcome = pnr::full_compile(&refs, self.device, &pattern.label());
+        let compile_sim_s = outcome.sim_seconds();
+        self.clock
+            .schedule_compile(&format!("compile {}", pattern.label()), compile_sim_s);
+
+        let cpu_total = self.cpu_baseline_s(analysis);
+        if !outcome.is_ok() {
+            // no bitstream: the pattern cannot be measured
+            return PatternMeasurement {
+                pattern: pattern.clone(),
+                utilization,
+                compiled: false,
+                compile_sim_s,
+                time_s: f64::INFINITY,
+                speedup: 0.0,
+                kernels: Vec::new(),
+            };
+        }
+
+        // measurement: run the sample benchmark once on the verification
+        // machine (simulated time = the modeled app run)
+        let mut kernels = Vec::new();
+        let mut offloaded_cpu = 0.0;
+        for l in &pattern.loops {
+            let rep = reports.get(l).unwrap();
+            kernels.push(timing::kernel_time_s(
+                &analysis.loops,
+                &analysis.profile,
+                rep,
+                self.device,
+            ));
+            if let Some(lp) = analysis.profile.loop_profile(*l) {
+                offloaded_cpu += self.cpu.loop_time_s(lp);
+            }
+        }
+        let fpga_s = timing::pattern_fpga_time_s(&kernels);
+        let time_s = (cpu_total - offloaded_cpu).max(0.0) + fpga_s;
+        self.clock
+            .advance_serial(&format!("measure {}", pattern.label()), time_s);
+
+        PatternMeasurement {
+            pattern: pattern.clone(),
+            utilization,
+            compiled: true,
+            compile_sim_s,
+            time_s,
+            speedup: cpu_total / time_s,
+            kernels,
+        }
+    }
+
+    /// Cross-check the app's bound hot loop through the PJRT artifacts.
+    ///
+    /// Runs the app at **full scale** in the interpreter (the all-CPU
+    /// reference), feeds the recorded inputs to both the FPGA (pallas)
+    /// and CPU (pure-jnp) artifacts, and compares outputs.
+    pub fn check_numerics(&self, app: &App, runtime: &Runtime) -> crate::Result<NumericsCheck> {
+        let binding = app
+            .binding
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("app `{}` has no artifact binding", app.name))?;
+
+        let program = app.parse();
+        let mut interp = app.interp(&program, false);
+        interp
+            .run_main()
+            .map_err(|e| anyhow::anyhow!("interpreter: {e}"))?;
+
+        let mut inputs = Vec::new();
+        for (arr, len) in binding.inputs {
+            let data = interp
+                .read_array(arr)
+                .map_err(|e| anyhow::anyhow!("input `{arr}`: {e}"))?;
+            anyhow::ensure!(data.len() >= *len, "input `{arr}` too short");
+            inputs.push(data[..*len].iter().map(|v| *v as f32).collect::<Vec<f32>>());
+        }
+
+        let fpga_out = runtime.execute_f32(binding.artifact, &inputs)?;
+        let cpu_out = runtime.execute_f32(binding.cpu_artifact, &inputs)?;
+
+        let mut max_err = 0.0f64;
+        let mut max_err_vs_cpu = 0.0f64;
+        let mut elements = 0usize;
+        for (i, (arr, len)) in binding.outputs.iter().enumerate() {
+            let reference = interp
+                .read_array(arr)
+                .map_err(|e| anyhow::anyhow!("output `{arr}`: {e}"))?;
+            let got = &fpga_out[i];
+            let cpu_got = &cpu_out[i];
+            anyhow::ensure!(got.len() == *len, "output `{arr}` length mismatch");
+            for k in 0..*len {
+                let err = (got[k] as f64 - reference[k]).abs();
+                max_err = max_err.max(err);
+                let errc = (got[k] as f64 - cpu_got[k] as f64).abs();
+                max_err_vs_cpu = max_err_vs_cpu.max(errc);
+            }
+            elements += len;
+        }
+        // tolerance: f32 accumulation over ≤512-term reductions
+        let tol = 5e-2;
+        Ok(NumericsCheck {
+            artifact: binding.artifact.to_string(),
+            max_abs_err: max_err,
+            max_abs_err_vs_cpu_artifact: max_err_vs_cpu,
+            elements,
+            passed: max_err < tol && max_err_vs_cpu < tol,
+        })
+    }
+}

@@ -1,0 +1,264 @@
+//! MiniC abstract syntax tree.
+//!
+//! Loop statements carry a [`LoopId`] assigned in source order by the
+//! parser; every later stage (profiling, intensity ranking, OpenCL
+//! generation, pattern search) refers to loops by this id, exactly like
+//! the paper's "loop statement number".
+
+use super::error::Pos;
+
+/// Stable, source-ordered identifier of a loop statement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LoopId(pub u32);
+
+impl std::fmt::Display for LoopId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}", self.0)
+    }
+}
+
+/// Scalar and array types of the MiniC subset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Type {
+    Void,
+    Int,
+    Float,
+    Double,
+    /// 1-D array; `None` length for array parameters (`float a[]`).
+    Array(Box<Type>, Option<usize>),
+}
+
+impl Type {
+    /// Size in bytes of one element (arrays: of the element type).
+    pub fn elem_bytes(&self) -> u64 {
+        match self {
+            Type::Void => 0,
+            Type::Int => 4,
+            Type::Float => 4,
+            Type::Double => 8,
+            Type::Array(t, _) => t.elem_bytes(),
+        }
+    }
+
+    pub fn is_float(&self) -> bool {
+        matches!(self, Type::Float | Type::Double)
+    }
+
+    pub fn is_array(&self) -> bool {
+        matches!(self, Type::Array(..))
+    }
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add, Sub, Mul, Div, Mod,
+    Lt, Le, Gt, Ge, Eq, Ne,
+    And, Or,
+}
+
+impl BinOp {
+    pub fn is_arith(self) -> bool {
+        matches!(self, BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Mod)
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Compound-assignment operators (plain `=` is `Assign`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignOp {
+    Assign,
+    AddAssign,
+    SubAssign,
+    MulAssign,
+    DivAssign,
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    IntLit(i64),
+    FloatLit(f64),
+    Var(String),
+    /// `name[index]`
+    Index(String, Box<Expr>),
+    Unary(UnOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    Call(String, Vec<Expr>),
+}
+
+impl Expr {
+    /// Walk the expression tree, calling `f` on every node.
+    pub fn walk(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Index(_, e) | Expr::Unary(_, e) => e.walk(f),
+            Expr::Binary(_, a, b) => {
+                a.walk(f);
+                b.walk(f);
+            }
+            Expr::Call(_, args) => {
+                for a in args {
+                    a.walk(f);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Assignment target: scalar variable or array element.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LValue {
+    Var(String),
+    Index(String, Box<Expr>),
+}
+
+impl LValue {
+    pub fn name(&self) -> &str {
+        match self {
+            LValue::Var(n) | LValue::Index(n, _) => n,
+        }
+    }
+}
+
+/// A variable declaration (local or global).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decl {
+    pub ty: Type,
+    pub name: String,
+    pub init: Option<Expr>,
+    pub pos: Pos,
+}
+
+/// Canonical `for` header: `for (var = init; var < limit; var += step)`.
+/// Kept alongside the generic exprs so the analyses can recognize
+/// canonical counted loops without re-pattern-matching.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForHeader {
+    pub init: Option<Box<Stmt>>,
+    pub cond: Option<Expr>,
+    pub step: Option<Box<Stmt>>,
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    Decl(Decl),
+    Assign {
+        target: LValue,
+        op: AssignOp,
+        value: Expr,
+        pos: Pos,
+    },
+    If {
+        cond: Expr,
+        then_branch: Vec<Stmt>,
+        else_branch: Vec<Stmt>,
+        pos: Pos,
+    },
+    For {
+        id: LoopId,
+        header: ForHeader,
+        body: Vec<Stmt>,
+        pos: Pos,
+    },
+    While {
+        id: LoopId,
+        cond: Expr,
+        body: Vec<Stmt>,
+        pos: Pos,
+    },
+    Return(Option<Expr>, Pos),
+    /// Bare expression statement (usually a call).
+    Expr(Expr, Pos),
+    Block(Vec<Stmt>),
+}
+
+impl Stmt {
+    /// Walk this statement and all nested statements.
+    pub fn walk(&self, f: &mut impl FnMut(&Stmt)) {
+        f(self);
+        match self {
+            Stmt::If { then_branch, else_branch, .. } => {
+                for s in then_branch.iter().chain(else_branch) {
+                    s.walk(f);
+                }
+            }
+            Stmt::For { header, body, .. } => {
+                if let Some(s) = &header.init {
+                    s.walk(f);
+                }
+                if let Some(s) = &header.step {
+                    s.walk(f);
+                }
+                for s in body {
+                    s.walk(f);
+                }
+            }
+            Stmt::While { body, .. } => {
+                for s in body {
+                    s.walk(f);
+                }
+            }
+            Stmt::Block(body) => {
+                for s in body {
+                    s.walk(f);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Function parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub ty: Type,
+    pub name: String,
+}
+
+/// Function definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Function {
+    pub ret: Type,
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+    pub pos: Pos,
+}
+
+/// A parsed translation unit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    pub globals: Vec<Decl>,
+    pub functions: Vec<Function>,
+}
+
+impl Program {
+    pub fn function(&self, name: &str) -> Option<&Function> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+
+    /// Total number of loop statements (for/while) in the program —
+    /// the paper reports this per application (tdfir: 36, MRI-Q: 16).
+    pub fn loop_count(&self) -> usize {
+        let mut n = 0;
+        for func in &self.functions {
+            for s in &func.body {
+                s.walk(&mut |s| {
+                    if matches!(s, Stmt::For { .. } | Stmt::While { .. }) {
+                        n += 1;
+                    }
+                });
+            }
+        }
+        n
+    }
+}

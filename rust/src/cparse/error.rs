@@ -1,0 +1,38 @@
+//! Parse / lex error type with source position, mirroring what a Clang
+//! diagnostic would carry.
+
+use std::fmt;
+
+/// Line/column position in the source (1-based, like compiler diagnostics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Pos {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl fmt::Display for Pos {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// Error produced by the lexer or parser.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub pos: Pos,
+    pub message: String,
+}
+
+impl ParseError {
+    pub fn new(pos: Pos, message: impl Into<String>) -> Self {
+        Self { pos, message: message.into() }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error at {}: {}", self.pos, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}

@@ -1,0 +1,314 @@
+//! Hand-written MiniC lexer with line/column tracking.
+//!
+//! Handles `//` and `/* */` comments, integer and floating literals
+//! (including exponent forms and the trailing `f` suffix C sources use),
+//! all MiniC operators, and keywords.
+
+use super::error::{ParseError, Pos};
+
+/// Token kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    // literals / identifiers
+    Int(i64),
+    Float(f64),
+    Ident(String),
+    // keywords
+    KwVoid, KwInt, KwFloat, KwDouble, KwIf, KwElse, KwFor, KwWhile,
+    KwReturn, KwConst,
+    // punctuation
+    LParen, RParen, LBrace, RBrace, LBracket, RBracket,
+    Comma, Semi,
+    // operators
+    Plus, Minus, Star, Slash, Percent,
+    PlusPlus, MinusMinus,
+    Assign, PlusAssign, MinusAssign, StarAssign, SlashAssign,
+    Lt, Le, Gt, Ge, EqEq, Ne,
+    AndAnd, OrOr, Bang,
+    Eof,
+}
+
+/// A token with its source position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub pos: Pos,
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Self {
+        Self { src: src.as_bytes(), i: 0, line: 1, col: 1 }
+    }
+
+    fn pos(&self) -> Pos {
+        Pos { line: self.line, col: self.col }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.i).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.src.get(self.i + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.i += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn skip_trivia(&mut self) -> Result<(), ParseError> {
+        loop {
+            match (self.peek(), self.peek2()) {
+                (Some(c), _) if c.is_ascii_whitespace() => {
+                    self.bump();
+                }
+                (Some(b'/'), Some(b'/')) => {
+                    while let Some(c) = self.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                (Some(b'/'), Some(b'*')) => {
+                    let start = self.pos();
+                    self.bump();
+                    self.bump();
+                    loop {
+                        match (self.peek(), self.peek2()) {
+                            (Some(b'*'), Some(b'/')) => {
+                                self.bump();
+                                self.bump();
+                                break;
+                            }
+                            (Some(_), _) => {
+                                self.bump();
+                            }
+                            (None, _) => {
+                                return Err(ParseError::new(start, "unterminated block comment"));
+                            }
+                        }
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn lex_number(&mut self) -> Result<Tok, ParseError> {
+        let start_pos = self.pos();
+        let start = self.i;
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() {
+                self.bump();
+            } else if c == b'.' && !is_float {
+                is_float = true;
+                self.bump();
+            } else if (c == b'e' || c == b'E')
+                && self.i > start
+                && self
+                    .peek2()
+                    .map(|n| n.is_ascii_digit() || n == b'+' || n == b'-')
+                    .unwrap_or(false)
+            {
+                is_float = true;
+                self.bump(); // e
+                self.bump(); // sign or first digit
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.src[start..self.i]).unwrap();
+        // C float suffix
+        if matches!(self.peek(), Some(b'f') | Some(b'F')) {
+            is_float = true;
+            self.bump();
+        }
+        if is_float {
+            text.parse::<f64>()
+                .map(Tok::Float)
+                .map_err(|_| ParseError::new(start_pos, format!("bad float literal `{text}`")))
+        } else {
+            text.parse::<i64>()
+                .map(Tok::Int)
+                .map_err(|_| ParseError::new(start_pos, format!("bad int literal `{text}`")))
+        }
+    }
+
+    fn lex_ident(&mut self) -> Tok {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || c == b'_' {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.src[start..self.i]).unwrap();
+        match text {
+            "void" => Tok::KwVoid,
+            "int" => Tok::KwInt,
+            "float" => Tok::KwFloat,
+            "double" => Tok::KwDouble,
+            "if" => Tok::KwIf,
+            "else" => Tok::KwElse,
+            "for" => Tok::KwFor,
+            "while" => Tok::KwWhile,
+            "return" => Tok::KwReturn,
+            "const" => Tok::KwConst,
+            _ => Tok::Ident(text.to_string()),
+        }
+    }
+
+    fn next_token(&mut self) -> Result<Token, ParseError> {
+        self.skip_trivia()?;
+        let pos = self.pos();
+        let Some(c) = self.peek() else {
+            return Ok(Token { tok: Tok::Eof, pos });
+        };
+        let tok = match c {
+            b'0'..=b'9' => self.lex_number()?,
+            b'.' if self.peek2().map(|n| n.is_ascii_digit()).unwrap_or(false) => {
+                self.lex_number()?
+            }
+            b'a'..=b'z' | b'A'..=b'Z' | b'_' => self.lex_ident(),
+            _ => {
+                self.bump();
+                match (c, self.peek()) {
+                    (b'(', _) => Tok::LParen,
+                    (b')', _) => Tok::RParen,
+                    (b'{', _) => Tok::LBrace,
+                    (b'}', _) => Tok::RBrace,
+                    (b'[', _) => Tok::LBracket,
+                    (b']', _) => Tok::RBracket,
+                    (b',', _) => Tok::Comma,
+                    (b';', _) => Tok::Semi,
+                    (b'%', _) => Tok::Percent,
+                    (b'+', Some(b'+')) => { self.bump(); Tok::PlusPlus }
+                    (b'+', Some(b'=')) => { self.bump(); Tok::PlusAssign }
+                    (b'+', _) => Tok::Plus,
+                    (b'-', Some(b'-')) => { self.bump(); Tok::MinusMinus }
+                    (b'-', Some(b'=')) => { self.bump(); Tok::MinusAssign }
+                    (b'-', _) => Tok::Minus,
+                    (b'*', Some(b'=')) => { self.bump(); Tok::StarAssign }
+                    (b'*', _) => Tok::Star,
+                    (b'/', Some(b'=')) => { self.bump(); Tok::SlashAssign }
+                    (b'/', _) => Tok::Slash,
+                    (b'=', Some(b'=')) => { self.bump(); Tok::EqEq }
+                    (b'=', _) => Tok::Assign,
+                    (b'<', Some(b'=')) => { self.bump(); Tok::Le }
+                    (b'<', _) => Tok::Lt,
+                    (b'>', Some(b'=')) => { self.bump(); Tok::Ge }
+                    (b'>', _) => Tok::Gt,
+                    (b'!', Some(b'=')) => { self.bump(); Tok::Ne }
+                    (b'!', _) => Tok::Bang,
+                    (b'&', Some(b'&')) => { self.bump(); Tok::AndAnd }
+                    (b'|', Some(b'|')) => { self.bump(); Tok::OrOr }
+                    _ => {
+                        return Err(ParseError::new(
+                            pos,
+                            format!("unexpected character `{}`", c as char),
+                        ))
+                    }
+                }
+            }
+        };
+        Ok(Token { tok, pos })
+    }
+}
+
+/// Lex a full source string into tokens (terminated by a single `Eof`).
+pub fn lex(source: &str) -> Result<Vec<Token>, ParseError> {
+    let mut lx = Lexer::new(source);
+    let mut out = Vec::new();
+    loop {
+        let t = lx.next_token()?;
+        let done = t.tok == Tok::Eof;
+        out.push(t);
+        if done {
+            return Ok(out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lex_basic_tokens() {
+        assert_eq!(
+            kinds("for (i = 0; i < n; i++)"),
+            vec![
+                Tok::KwFor, Tok::LParen, Tok::Ident("i".into()), Tok::Assign,
+                Tok::Int(0), Tok::Semi, Tok::Ident("i".into()), Tok::Lt,
+                Tok::Ident("n".into()), Tok::Semi, Tok::Ident("i".into()),
+                Tok::PlusPlus, Tok::RParen, Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_float_forms() {
+        assert_eq!(kinds("1.5 2e3 4.0f .25 7f"),
+            vec![Tok::Float(1.5), Tok::Float(2000.0), Tok::Float(4.0),
+                 Tok::Float(0.25), Tok::Float(7.0), Tok::Eof]);
+    }
+
+    #[test]
+    fn lex_comments() {
+        assert_eq!(
+            kinds("a // line\n /* block\n comment */ b"),
+            vec![Tok::Ident("a".into()), Tok::Ident("b".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn lex_compound_ops() {
+        assert_eq!(
+            kinds("+= -= *= /= == != <= >= && || ++ --"),
+            vec![Tok::PlusAssign, Tok::MinusAssign, Tok::StarAssign,
+                 Tok::SlashAssign, Tok::EqEq, Tok::Ne, Tok::Le, Tok::Ge,
+                 Tok::AndAnd, Tok::OrOr, Tok::PlusPlus, Tok::MinusMinus,
+                 Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn lex_tracks_positions() {
+        let toks = lex("a\n  b").unwrap();
+        assert_eq!(toks[0].pos.line, 1);
+        assert_eq!(toks[1].pos.line, 2);
+        assert_eq!(toks[1].pos.col, 3);
+    }
+
+    #[test]
+    fn lex_unterminated_comment_errors() {
+        assert!(lex("/* nope").is_err());
+    }
+
+    #[test]
+    fn lex_bad_char_errors() {
+        assert!(lex("a @ b").is_err());
+    }
+}

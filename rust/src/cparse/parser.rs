@@ -1,0 +1,625 @@
+//! Recursive-descent parser for MiniC with precedence-climbing expressions.
+//!
+//! Loop statements are numbered in source order ([`LoopId`]) as they are
+//! parsed — the id space later stages (intensity ranking, OpenCL
+//! generation, the pattern search) operate in.
+
+use super::ast::*;
+use super::error::{ParseError, Pos};
+use super::lexer::{Tok, Token};
+
+pub struct Parser {
+    toks: Vec<Token>,
+    i: usize,
+    next_loop: u32,
+}
+
+impl Parser {
+    pub fn new(toks: Vec<Token>) -> Self {
+        Self { toks, i: 0, next_loop: 0 }
+    }
+
+    fn peek(&self) -> &Tok {
+        &self.toks[self.i].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.i + 1).min(self.toks.len() - 1)].tok
+    }
+
+    fn pos(&self) -> Pos {
+        self.toks[self.i].pos
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.i].tok.clone();
+        if self.i + 1 < self.toks.len() {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok, what: &str) -> Result<(), ParseError> {
+        if self.peek() == want {
+            self.bump();
+            Ok(())
+        } else {
+            Err(ParseError::new(
+                self.pos(),
+                format!("expected {what}, found {:?}", self.peek()),
+            ))
+        }
+    }
+
+    fn expect_ident(&mut self, what: &str) -> Result<String, ParseError> {
+        match self.peek().clone() {
+            Tok::Ident(n) => {
+                self.bump();
+                Ok(n)
+            }
+            other => Err(ParseError::new(
+                self.pos(),
+                format!("expected {what}, found {other:?}"),
+            )),
+        }
+    }
+
+    fn fresh_loop_id(&mut self) -> LoopId {
+        let id = LoopId(self.next_loop);
+        self.next_loop += 1;
+        id
+    }
+
+    // ---- program ---------------------------------------------------------
+
+    pub fn parse_program(mut self) -> Result<Program, ParseError> {
+        let mut prog = Program::default();
+        while *self.peek() != Tok::Eof {
+            // `const` prefix on globals is accepted and ignored (MiniC has
+            // no mutation of globals outside main anyway).
+            if *self.peek() == Tok::KwConst {
+                self.bump();
+            }
+            let ty = self.parse_type()?;
+            let pos = self.pos();
+            let name = self.expect_ident("identifier")?;
+            if *self.peek() == Tok::LParen {
+                prog.functions.push(self.parse_function_rest(ty, name, pos)?);
+            } else {
+                prog.globals.push(self.parse_decl_rest(ty, name, pos)?);
+            }
+        }
+        Ok(prog)
+    }
+
+    fn parse_type(&mut self) -> Result<Type, ParseError> {
+        let base = match self.peek() {
+            Tok::KwVoid => Type::Void,
+            Tok::KwInt => Type::Int,
+            Tok::KwFloat => Type::Float,
+            Tok::KwDouble => Type::Double,
+            other => {
+                return Err(ParseError::new(
+                    self.pos(),
+                    format!("expected type, found {other:?}"),
+                ))
+            }
+        };
+        self.bump();
+        Ok(base)
+    }
+
+    fn parse_function_rest(
+        &mut self,
+        ret: Type,
+        name: String,
+        pos: Pos,
+    ) -> Result<Function, ParseError> {
+        self.expect(&Tok::LParen, "`(`")?;
+        let mut params = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                let ty = self.parse_type()?;
+                let pname = self.expect_ident("parameter name")?;
+                let ty = if *self.peek() == Tok::LBracket {
+                    self.bump();
+                    let len = if let Tok::Int(n) = self.peek() {
+                        let n = *n as usize;
+                        self.bump();
+                        Some(n)
+                    } else {
+                        None
+                    };
+                    self.expect(&Tok::RBracket, "`]`")?;
+                    Type::Array(Box::new(ty), len)
+                } else {
+                    ty
+                };
+                params.push(Param { ty, name: pname });
+                if *self.peek() == Tok::Comma {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.expect(&Tok::RParen, "`)`")?;
+        let body = self.parse_block()?;
+        Ok(Function { ret, name, params, body, pos })
+    }
+
+    /// Declaration after `type name` has been consumed.
+    fn parse_decl_rest(&mut self, ty: Type, name: String, pos: Pos) -> Result<Decl, ParseError> {
+        let ty = if *self.peek() == Tok::LBracket {
+            self.bump();
+            let len = match self.peek() {
+                Tok::Int(n) => {
+                    let n = *n as usize;
+                    self.bump();
+                    Some(n)
+                }
+                _ => None,
+            };
+            self.expect(&Tok::RBracket, "array length")?;
+            Type::Array(Box::new(ty), len)
+        } else {
+            ty
+        };
+        let init = if *self.peek() == Tok::Assign {
+            self.bump();
+            Some(self.parse_expr()?)
+        } else {
+            None
+        };
+        self.expect(&Tok::Semi, "`;`")?;
+        Ok(Decl { ty, name, init, pos })
+    }
+
+    // ---- statements ------------------------------------------------------
+
+    fn parse_block(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        self.expect(&Tok::LBrace, "`{`")?;
+        let mut out = Vec::new();
+        while *self.peek() != Tok::RBrace {
+            if *self.peek() == Tok::Eof {
+                return Err(ParseError::new(self.pos(), "unexpected EOF in block"));
+            }
+            out.push(self.parse_stmt()?);
+        }
+        self.bump(); // }
+        Ok(out)
+    }
+
+    fn parse_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let pos = self.pos();
+        match self.peek().clone() {
+            Tok::LBrace => Ok(Stmt::Block(self.parse_block()?)),
+            Tok::KwConst => {
+                self.bump();
+                self.parse_stmt()
+            }
+            Tok::KwInt | Tok::KwFloat | Tok::KwDouble => {
+                let ty = self.parse_type()?;
+                let name = self.expect_ident("variable name")?;
+                Ok(Stmt::Decl(self.parse_decl_rest(ty, name, pos)?))
+            }
+            Tok::KwIf => self.parse_if(),
+            Tok::KwFor => self.parse_for(),
+            Tok::KwWhile => self.parse_while(),
+            Tok::KwReturn => {
+                self.bump();
+                let e = if *self.peek() == Tok::Semi {
+                    None
+                } else {
+                    Some(self.parse_expr()?)
+                };
+                self.expect(&Tok::Semi, "`;`")?;
+                Ok(Stmt::Return(e, pos))
+            }
+            _ => {
+                let s = self.parse_simple_stmt()?;
+                self.expect(&Tok::Semi, "`;`")?;
+                Ok(s)
+            }
+        }
+    }
+
+    /// Assignment / increment / expression statement *without* the
+    /// trailing semicolon (shared by statement position and for-headers).
+    fn parse_simple_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let pos = self.pos();
+        if let Tok::Ident(name) = self.peek().clone() {
+            // lookahead for assignment forms
+            match self.peek2().clone() {
+                Tok::Assign | Tok::PlusAssign | Tok::MinusAssign
+                | Tok::StarAssign | Tok::SlashAssign => {
+                    self.bump();
+                    let op = self.assign_op()?;
+                    let value = self.parse_expr()?;
+                    return Ok(Stmt::Assign {
+                        target: LValue::Var(name),
+                        op,
+                        value,
+                        pos,
+                    });
+                }
+                Tok::PlusPlus | Tok::MinusMinus => {
+                    self.bump();
+                    let op = if self.bump() == Tok::PlusPlus {
+                        AssignOp::AddAssign
+                    } else {
+                        AssignOp::SubAssign
+                    };
+                    return Ok(Stmt::Assign {
+                        target: LValue::Var(name),
+                        op,
+                        value: Expr::IntLit(1),
+                        pos,
+                    });
+                }
+                Tok::LBracket => {
+                    // could be `a[i] = ...` or an expression; parse the
+                    // index then decide.
+                    let save = self.i;
+                    self.bump(); // ident
+                    self.bump(); // [
+                    let idx = self.parse_expr()?;
+                    self.expect(&Tok::RBracket, "`]`")?;
+                    match self.peek() {
+                        Tok::Assign | Tok::PlusAssign | Tok::MinusAssign
+                        | Tok::StarAssign | Tok::SlashAssign => {
+                            let op = self.assign_op()?;
+                            let value = self.parse_expr()?;
+                            return Ok(Stmt::Assign {
+                                target: LValue::Index(name, Box::new(idx)),
+                                op,
+                                value,
+                                pos,
+                            });
+                        }
+                        _ => {
+                            self.i = save;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // `++i` prefix form
+        if matches!(self.peek(), Tok::PlusPlus | Tok::MinusMinus) {
+            let inc = self.bump() == Tok::PlusPlus;
+            let name = self.expect_ident("variable after ++/--")?;
+            return Ok(Stmt::Assign {
+                target: LValue::Var(name),
+                op: if inc { AssignOp::AddAssign } else { AssignOp::SubAssign },
+                value: Expr::IntLit(1),
+                pos,
+            });
+        }
+        let e = self.parse_expr()?;
+        Ok(Stmt::Expr(e, pos))
+    }
+
+    fn assign_op(&mut self) -> Result<AssignOp, ParseError> {
+        let op = match self.peek() {
+            Tok::Assign => AssignOp::Assign,
+            Tok::PlusAssign => AssignOp::AddAssign,
+            Tok::MinusAssign => AssignOp::SubAssign,
+            Tok::StarAssign => AssignOp::MulAssign,
+            Tok::SlashAssign => AssignOp::DivAssign,
+            other => {
+                return Err(ParseError::new(
+                    self.pos(),
+                    format!("expected assignment operator, found {other:?}"),
+                ))
+            }
+        };
+        self.bump();
+        Ok(op)
+    }
+
+    fn parse_if(&mut self) -> Result<Stmt, ParseError> {
+        let pos = self.pos();
+        self.bump(); // if
+        self.expect(&Tok::LParen, "`(`")?;
+        let cond = self.parse_expr()?;
+        self.expect(&Tok::RParen, "`)`")?;
+        let then_branch = self.parse_stmt_or_block()?;
+        let else_branch = if *self.peek() == Tok::KwElse {
+            self.bump();
+            self.parse_stmt_or_block()?
+        } else {
+            Vec::new()
+        };
+        Ok(Stmt::If { cond, then_branch, else_branch, pos })
+    }
+
+    fn parse_stmt_or_block(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        if *self.peek() == Tok::LBrace {
+            self.parse_block()
+        } else {
+            Ok(vec![self.parse_stmt()?])
+        }
+    }
+
+    fn parse_for(&mut self) -> Result<Stmt, ParseError> {
+        let pos = self.pos();
+        self.bump(); // for
+        let id = self.fresh_loop_id();
+        self.expect(&Tok::LParen, "`(`")?;
+        // init: declaration, simple statement, or empty
+        let init = if *self.peek() == Tok::Semi {
+            self.bump();
+            None
+        } else if matches!(self.peek(), Tok::KwInt | Tok::KwFloat | Tok::KwDouble) {
+            let dpos = self.pos();
+            let ty = self.parse_type()?;
+            let name = self.expect_ident("variable name")?;
+            let d = self.parse_decl_rest(ty, name, dpos)?; // consumes `;`
+            Some(Box::new(Stmt::Decl(d)))
+        } else {
+            let s = self.parse_simple_stmt()?;
+            self.expect(&Tok::Semi, "`;` in for-header")?;
+            Some(Box::new(s))
+        };
+        let cond = if *self.peek() == Tok::Semi {
+            None
+        } else {
+            Some(self.parse_expr()?)
+        };
+        self.expect(&Tok::Semi, "`;` in for-header")?;
+        let step = if *self.peek() == Tok::RParen {
+            None
+        } else {
+            Some(Box::new(self.parse_simple_stmt()?))
+        };
+        self.expect(&Tok::RParen, "`)`")?;
+        let body = self.parse_stmt_or_block()?;
+        Ok(Stmt::For { id, header: ForHeader { init, cond, step }, body, pos })
+    }
+
+    fn parse_while(&mut self) -> Result<Stmt, ParseError> {
+        let pos = self.pos();
+        self.bump(); // while
+        let id = self.fresh_loop_id();
+        self.expect(&Tok::LParen, "`(`")?;
+        let cond = self.parse_expr()?;
+        self.expect(&Tok::RParen, "`)`")?;
+        let body = self.parse_stmt_or_block()?;
+        Ok(Stmt::While { id, cond, body, pos })
+    }
+
+    // ---- expressions (precedence climbing) --------------------------------
+
+    pub fn parse_expr(&mut self) -> Result<Expr, ParseError> {
+        self.parse_bin(0)
+    }
+
+    fn bin_op(tok: &Tok) -> Option<(BinOp, u8)> {
+        // (op, binding power); higher binds tighter
+        Some(match tok {
+            Tok::OrOr => (BinOp::Or, 1),
+            Tok::AndAnd => (BinOp::And, 2),
+            Tok::EqEq => (BinOp::Eq, 3),
+            Tok::Ne => (BinOp::Ne, 3),
+            Tok::Lt => (BinOp::Lt, 4),
+            Tok::Le => (BinOp::Le, 4),
+            Tok::Gt => (BinOp::Gt, 4),
+            Tok::Ge => (BinOp::Ge, 4),
+            Tok::Plus => (BinOp::Add, 5),
+            Tok::Minus => (BinOp::Sub, 5),
+            Tok::Star => (BinOp::Mul, 6),
+            Tok::Slash => (BinOp::Div, 6),
+            Tok::Percent => (BinOp::Mod, 6),
+            _ => return None,
+        })
+    }
+
+    fn parse_bin(&mut self, min_bp: u8) -> Result<Expr, ParseError> {
+        let mut lhs = self.parse_unary()?;
+        while let Some((op, bp)) = Self::bin_op(self.peek()) {
+            if bp < min_bp {
+                break;
+            }
+            self.bump();
+            let rhs = self.parse_bin(bp + 1)?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn parse_unary(&mut self) -> Result<Expr, ParseError> {
+        match self.peek() {
+            Tok::Minus => {
+                self.bump();
+                Ok(Expr::Unary(UnOp::Neg, Box::new(self.parse_unary()?)))
+            }
+            Tok::Bang => {
+                self.bump();
+                Ok(Expr::Unary(UnOp::Not, Box::new(self.parse_unary()?)))
+            }
+            _ => self.parse_postfix(),
+        }
+    }
+
+    fn parse_postfix(&mut self) -> Result<Expr, ParseError> {
+        match self.peek().clone() {
+            Tok::Int(n) => {
+                self.bump();
+                Ok(Expr::IntLit(n))
+            }
+            Tok::Float(v) => {
+                self.bump();
+                Ok(Expr::FloatLit(v))
+            }
+            Tok::LParen => {
+                self.bump();
+                let e = self.parse_expr()?;
+                self.expect(&Tok::RParen, "`)`")?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                self.bump();
+                match self.peek() {
+                    Tok::LParen => {
+                        self.bump();
+                        let mut args = Vec::new();
+                        if *self.peek() != Tok::RParen {
+                            loop {
+                                args.push(self.parse_expr()?);
+                                if *self.peek() == Tok::Comma {
+                                    self.bump();
+                                } else {
+                                    break;
+                                }
+                            }
+                        }
+                        self.expect(&Tok::RParen, "`)`")?;
+                        Ok(Expr::Call(name, args))
+                    }
+                    Tok::LBracket => {
+                        self.bump();
+                        let idx = self.parse_expr()?;
+                        self.expect(&Tok::RBracket, "`]`")?;
+                        Ok(Expr::Index(name, Box::new(idx)))
+                    }
+                    _ => Ok(Expr::Var(name)),
+                }
+            }
+            other => Err(ParseError::new(
+                self.pos(),
+                format!("expected expression, found {other:?}"),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    fn expr(src: &str) -> Expr {
+        let toks = super::super::lexer::lex(src).unwrap();
+        Parser::new(toks).parse_expr().unwrap()
+    }
+
+    #[test]
+    fn precedence_mul_over_add() {
+        assert_eq!(
+            expr("a + b * c"),
+            Expr::Binary(
+                BinOp::Add,
+                Box::new(Expr::Var("a".into())),
+                Box::new(Expr::Binary(
+                    BinOp::Mul,
+                    Box::new(Expr::Var("b".into())),
+                    Box::new(Expr::Var("c".into())),
+                )),
+            )
+        );
+    }
+
+    #[test]
+    fn parens_override_precedence() {
+        assert_eq!(
+            expr("(a + b) * c"),
+            Expr::Binary(
+                BinOp::Mul,
+                Box::new(Expr::Binary(
+                    BinOp::Add,
+                    Box::new(Expr::Var("a".into())),
+                    Box::new(Expr::Var("b".into())),
+                )),
+                Box::new(Expr::Var("c".into())),
+            )
+        );
+    }
+
+    #[test]
+    fn comparison_binds_looser_than_arith() {
+        assert_eq!(
+            expr("i < n + 1"),
+            Expr::Binary(
+                BinOp::Lt,
+                Box::new(Expr::Var("i".into())),
+                Box::new(Expr::Binary(
+                    BinOp::Add,
+                    Box::new(Expr::Var("n".into())),
+                    Box::new(Expr::IntLit(1)),
+                )),
+            )
+        );
+    }
+
+    #[test]
+    fn parse_full_function_with_nested_loops() {
+        let src = r#"
+            void matmul(float a[], float b[], float c[], int n) {
+                int i;
+                int j;
+                int k;
+                for (i = 0; i < n; i++) {
+                    for (j = 0; j < n; j++) {
+                        float acc;
+                        acc = 0.0;
+                        for (k = 0; k < n; k++) {
+                            acc += a[i * n + k] * b[k * n + j];
+                        }
+                        c[i * n + j] = acc;
+                    }
+                }
+            }
+        "#;
+        let p = parse(src).unwrap();
+        assert_eq!(p.loop_count(), 3);
+    }
+
+    #[test]
+    fn parse_if_else_and_while() {
+        let src = r#"
+            int f(int x) {
+                int y;
+                y = 0;
+                while (x > 0) {
+                    if (x % 2 == 0) { y += 1; } else y -= 1;
+                    x = x - 1;
+                }
+                return y;
+            }
+        "#;
+        let p = parse(src).unwrap();
+        assert_eq!(p.loop_count(), 1);
+    }
+
+    #[test]
+    fn parse_for_with_decl_init() {
+        let p = parse("void f(int n) { for (int i = 0; i < n; ++i) { } }").unwrap();
+        assert_eq!(p.loop_count(), 1);
+    }
+
+    #[test]
+    fn parse_globals() {
+        let p = parse("const int N = 64; float buf[128]; void main() { }").unwrap();
+        assert_eq!(p.globals.len(), 2);
+        assert_eq!(p.globals[0].init, Some(Expr::IntLit(64)));
+        assert!(p.globals[1].ty.is_array());
+    }
+
+    #[test]
+    fn parse_call_statement() {
+        let p = parse("void main() { init(1, 2.0); }").unwrap();
+        assert!(matches!(p.functions[0].body[0], Stmt::Expr(Expr::Call(..), _)));
+    }
+
+    #[test]
+    fn error_on_missing_semicolon() {
+        assert!(parse("void f() { int x x = 1; }").is_err());
+    }
+
+    #[test]
+    fn error_has_position() {
+        let e = parse("void f() {\n  int x @ 1;\n}").unwrap_err();
+        assert_eq!(e.pos.line, 2);
+    }
+}

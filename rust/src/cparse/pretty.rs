@@ -1,0 +1,277 @@
+//! Pretty-printer: AST → C-syntax text.
+//!
+//! Used by the OpenCL generator ([`crate::opencl`]) to re-emit loop bodies
+//! inside generated kernels, and by diagnostics.  Output re-parses to the
+//! same AST (round-trip property-tested in `rust/tests/`).
+
+use super::ast::*;
+
+/// Render a type in declaration position (arrays handled by the caller).
+pub fn type_str(ty: &Type) -> String {
+    match ty {
+        Type::Void => "void".into(),
+        Type::Int => "int".into(),
+        Type::Float => "float".into(),
+        Type::Double => "double".into(),
+        Type::Array(t, _) => type_str(t),
+    }
+}
+
+/// Render an expression.
+pub fn expr(e: &Expr) -> String {
+    match e {
+        Expr::IntLit(n) => n.to_string(),
+        Expr::FloatLit(v) => {
+            // keep floats recognizably floating-point on re-parse
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                format!("{v:.1}")
+            } else {
+                format!("{v}")
+            }
+        }
+        Expr::Var(n) => n.clone(),
+        Expr::Index(n, i) => format!("{n}[{}]", expr(i)),
+        Expr::Unary(op, a) => {
+            let o = match op {
+                UnOp::Neg => "-",
+                UnOp::Not => "!",
+            };
+            format!("{o}({})", expr(a))
+        }
+        Expr::Binary(op, a, b) => {
+            let o = match op {
+                BinOp::Add => "+",
+                BinOp::Sub => "-",
+                BinOp::Mul => "*",
+                BinOp::Div => "/",
+                BinOp::Mod => "%",
+                BinOp::Lt => "<",
+                BinOp::Le => "<=",
+                BinOp::Gt => ">",
+                BinOp::Ge => ">=",
+                BinOp::Eq => "==",
+                BinOp::Ne => "!=",
+                BinOp::And => "&&",
+                BinOp::Or => "||",
+            };
+            format!("({} {o} {})", expr(a), expr(b))
+        }
+        Expr::Call(f, args) => {
+            let a: Vec<_> = args.iter().map(expr).collect();
+            format!("{f}({})", a.join(", "))
+        }
+    }
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("    ");
+    }
+}
+
+/// Render a statement at the given indent depth.
+pub fn stmt(s: &Stmt, depth: usize, out: &mut String) {
+    match s {
+        Stmt::Decl(d) => {
+            indent(out, depth);
+            match &d.ty {
+                Type::Array(t, len) => {
+                    let l = len.map(|n| n.to_string()).unwrap_or_default();
+                    out.push_str(&format!("{} {}[{}];\n", type_str(t), d.name, l));
+                }
+                t => {
+                    if let Some(init) = &d.init {
+                        out.push_str(&format!("{} {} = {};\n", type_str(t), d.name, expr(init)));
+                    } else {
+                        out.push_str(&format!("{} {};\n", type_str(t), d.name));
+                    }
+                }
+            }
+        }
+        Stmt::Assign { target, op, value, .. } => {
+            indent(out, depth);
+            let t = match target {
+                LValue::Var(n) => n.clone(),
+                LValue::Index(n, i) => format!("{n}[{}]", expr(i)),
+            };
+            let o = match op {
+                AssignOp::Assign => "=",
+                AssignOp::AddAssign => "+=",
+                AssignOp::SubAssign => "-=",
+                AssignOp::MulAssign => "*=",
+                AssignOp::DivAssign => "/=",
+            };
+            out.push_str(&format!("{t} {o} {};\n", expr(value)));
+        }
+        Stmt::If { cond, then_branch, else_branch, .. } => {
+            indent(out, depth);
+            out.push_str(&format!("if ({}) {{\n", expr(cond)));
+            for s in then_branch {
+                stmt(s, depth + 1, out);
+            }
+            indent(out, depth);
+            if else_branch.is_empty() {
+                out.push_str("}\n");
+            } else {
+                out.push_str("} else {\n");
+                for s in else_branch {
+                    stmt(s, depth + 1, out);
+                }
+                indent(out, depth);
+                out.push_str("}\n");
+            }
+        }
+        Stmt::For { header, body, .. } => {
+            indent(out, depth);
+            let init = header
+                .init
+                .as_deref()
+                .map(|s| stmt_inline(s))
+                .unwrap_or_default();
+            let cond = header.cond.as_ref().map(expr).unwrap_or_default();
+            let step = header
+                .step
+                .as_deref()
+                .map(|s| stmt_inline(s))
+                .unwrap_or_default();
+            out.push_str(&format!("for ({init}; {cond}; {step}) {{\n"));
+            for s in body {
+                stmt(s, depth + 1, out);
+            }
+            indent(out, depth);
+            out.push_str("}\n");
+        }
+        Stmt::While { cond, body, .. } => {
+            indent(out, depth);
+            out.push_str(&format!("while ({}) {{\n", expr(cond)));
+            for s in body {
+                stmt(s, depth + 1, out);
+            }
+            indent(out, depth);
+            out.push_str("}\n");
+        }
+        Stmt::Return(e, _) => {
+            indent(out, depth);
+            match e {
+                Some(e) => out.push_str(&format!("return {};\n", expr(e))),
+                None => out.push_str("return;\n"),
+            }
+        }
+        Stmt::Expr(e, _) => {
+            indent(out, depth);
+            out.push_str(&format!("{};\n", expr(e)));
+        }
+        Stmt::Block(body) => {
+            indent(out, depth);
+            out.push_str("{\n");
+            for s in body {
+                stmt(s, depth + 1, out);
+            }
+            indent(out, depth);
+            out.push_str("}\n");
+        }
+    }
+}
+
+/// Render a statement without trailing `;`/newline (for for-headers).
+fn stmt_inline(s: &Stmt) -> String {
+    match s {
+        Stmt::Decl(d) => {
+            let init = d
+                .init
+                .as_ref()
+                .map(|e| format!(" = {}", expr(e)))
+                .unwrap_or_default();
+            format!("{} {}{init}", type_str(&d.ty), d.name)
+        }
+        Stmt::Assign { target, op, value, .. } => {
+            let t = match target {
+                LValue::Var(n) => n.clone(),
+                LValue::Index(n, i) => format!("{n}[{}]", expr(i)),
+            };
+            let o = match op {
+                AssignOp::Assign => "=",
+                AssignOp::AddAssign => "+=",
+                AssignOp::SubAssign => "-=",
+                AssignOp::MulAssign => "*=",
+                AssignOp::DivAssign => "/=",
+            };
+            format!("{t} {o} {}", expr(value))
+        }
+        other => {
+            let mut s = String::new();
+            stmt(other, 0, &mut s);
+            s.trim_end().trim_end_matches(';').to_string()
+        }
+    }
+}
+
+/// Render a whole function definition.
+pub fn function(f: &Function) -> String {
+    let params: Vec<_> = f
+        .params
+        .iter()
+        .map(|p| match &p.ty {
+            Type::Array(t, len) => {
+                let l = len.map(|n| n.to_string()).unwrap_or_default();
+                format!("{} {}[{l}]", type_str(t), p.name)
+            }
+            t => format!("{} {}", type_str(t), p.name),
+        })
+        .collect();
+    let mut out = format!("{} {}({}) {{\n", type_str(&f.ret), f.name, params.join(", "));
+    for s in &f.body {
+        stmt(s, 1, &mut out);
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Render a whole program.
+pub fn program(p: &Program) -> String {
+    let mut out = String::new();
+    for d in &p.globals {
+        stmt(&Stmt::Decl(d.clone()), 0, &mut out);
+    }
+    if !p.globals.is_empty() {
+        out.push('\n');
+    }
+    for f in &p.functions {
+        out.push_str(&function(f));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+
+    #[test]
+    fn roundtrip_simple_program() {
+        let src = r#"
+            float buf[64];
+            void f(float a[], int n) {
+                int i;
+                for (i = 0; i < n; i++) {
+                    if (a[i] > 0.0) { a[i] = a[i] * 2.0; } else { a[i] = 0.0; }
+                }
+            }
+        "#;
+        let p1 = parse(src).unwrap();
+        let printed = program(&p1);
+        let p2 = parse(&printed).unwrap();
+        // loop ids and structure must survive the round trip
+        assert_eq!(p1.loop_count(), p2.loop_count());
+        assert_eq!(p1.globals.len(), p2.globals.len());
+        assert_eq!(program(&p2), printed, "printing must be a fixpoint");
+    }
+
+    #[test]
+    fn float_literals_stay_float() {
+        let p = parse("void f() { float x; x = 2.0; }").unwrap();
+        let printed = program(&p);
+        assert!(printed.contains("2.0"), "got: {printed}");
+    }
+}

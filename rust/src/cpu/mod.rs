@@ -1,0 +1,132 @@
+//! CPU time model — the all-CPU baseline of the paper's speedup ratios.
+//!
+//! The paper's baseline is the unmodified sequential C application on a
+//! Xeon Bronze 3104 (6C/1.7 GHz, no turbo; the app uses one core).  We
+//! model execution time from the dynamic profile's op counters with
+//! per-op cycle costs calibrated to scalar (non-vectorized, `-O2`-like)
+//! x86 (DESIGN.md §6):
+//!
+//! * float add/sub/mul: dependency-chained FP latency dominates in the
+//!   paper's loop bodies (accumulators) — ~2.5 cycles effective;
+//! * libm calls (`sinf`/`cosf`/`sqrtf`): ~8 cycles amortized (glibc
+//!   polynomial kernels, partially pipelined);
+//! * array access: ~1 cycle (L1-resident working sets at these sizes);
+//! * int/branch ops: ~0.5 cycles (superscalar pairing).
+
+use crate::interp::{LoopProfile, Profile};
+
+/// Per-op cycle costs + clock of one CPU.
+#[derive(Debug, Clone)]
+pub struct CpuModel {
+    pub name: &'static str,
+    pub freq_hz: f64,
+    pub cycles_per_flop: f64,
+    pub cycles_per_math_call: f64,
+    pub cycles_per_mem_access: f64,
+    pub cycles_per_int_op: f64,
+    /// loop/call bookkeeping overhead per loop entry
+    pub cycles_per_loop_entry: f64,
+}
+
+/// Xeon Bronze 3104 — the paper's verification/running machine CPU.
+pub const XEON_3104: CpuModel = CpuModel {
+    name: "Intel Xeon Bronze 3104 @ 1.70GHz",
+    freq_hz: 1.7e9,
+    cycles_per_flop: 2.5,
+    cycles_per_math_call: 8.0,
+    cycles_per_mem_access: 1.0,
+    cycles_per_int_op: 0.5,
+    cycles_per_loop_entry: 4.0,
+};
+
+impl CpuModel {
+    fn time_from_counters(
+        &self,
+        flops: u64,
+        math: u64,
+        mem: u64,
+        int_ops: u64,
+        entries: u64,
+    ) -> f64 {
+        let cycles = flops as f64 * self.cycles_per_flop
+            + math as f64 * self.cycles_per_math_call
+            + mem as f64 * self.cycles_per_mem_access
+            + int_ops as f64 * self.cycles_per_int_op
+            + entries as f64 * self.cycles_per_loop_entry;
+        cycles / self.freq_hz
+    }
+
+    /// Modeled time for one loop statement (its whole subtree).
+    pub fn loop_time_s(&self, lp: &LoopProfile) -> f64 {
+        self.time_from_counters(
+            lp.flops,
+            lp.math_calls,
+            lp.mem_reads + lp.mem_writes,
+            lp.int_ops,
+            lp.entries,
+        )
+    }
+
+    /// Modeled time for the whole program run.
+    pub fn program_time_s(&self, p: &Profile) -> f64 {
+        self.time_from_counters(
+            p.total_flops,
+            p.total_math_calls,
+            p.total_mem_reads + p.total_mem_writes,
+            p.total_int_ops,
+            p.loops.values().map(|l| l.entries).sum(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+    use crate::interp;
+
+    #[test]
+    fn flop_heavy_loop_time_scales_with_trips() {
+        let src_small = "float a[100]; void main() { int i; \
+            for (i = 0; i < 100; i++) { a[i] = a[i] * 2.0 + 1.0; } }";
+        let src_big = "float a[100]; void main() { int i; int r; \
+            for (r = 0; r < 10; r++) { \
+              for (i = 0; i < 100; i++) { a[i] = a[i] * 2.0 + 1.0; } } }";
+        let t_small = {
+            let p = parse(src_small).unwrap();
+            XEON_3104.program_time_s(&interp::profile_program(&p).unwrap())
+        };
+        let t_big = {
+            let p = parse(src_big).unwrap();
+            XEON_3104.program_time_s(&interp::profile_program(&p).unwrap())
+        };
+        let ratio = t_big / t_small;
+        assert!((8.0..12.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn math_calls_cost_more_than_flops() {
+        let flop_src = "float a[1000]; void main() { int i; \
+            for (i = 0; i < 1000; i++) { a[i] = a[i] * 1.5; } }";
+        let math_src = "float a[1000]; void main() { int i; \
+            for (i = 0; i < 1000; i++) { a[i] = sin(a[i]); } }";
+        let t = |s: &str| {
+            let p = parse(s).unwrap();
+            XEON_3104.program_time_s(&interp::profile_program(&p).unwrap())
+        };
+        assert!(t(math_src) > 1.5 * t(flop_src));
+    }
+
+    #[test]
+    fn loop_time_below_program_time() {
+        let src = "float a[500]; void main() { int i; \
+            for (i = 0; i < 500; i++) { a[i] = 1.0; } \
+            for (i = 0; i < 500; i++) { a[i] = a[i] + 1.0; } }";
+        let p = parse(src).unwrap();
+        let prof = interp::profile_program(&p).unwrap();
+        let total = XEON_3104.program_time_s(&prof);
+        for lp in prof.loops.values() {
+            assert!(XEON_3104.loop_time_s(lp) < total);
+        }
+    }
+}

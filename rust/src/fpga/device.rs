@@ -1,0 +1,156 @@
+//! FPGA device + board model: Intel PAC with Arria10 GX 1150.
+//!
+//! Resource totals are the public Arria10 GX 1150 numbers; the BSP
+//! (board-support package: PCIe/DDR controllers, the Acceleration Stack's
+//! static region) permanently occupies a fixed fraction, as on the real
+//! PAC card.  Calibration notes in DESIGN.md §6.
+
+/// Absolute resource counts of one FPGA.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Resources {
+    pub alms: f64,
+    pub ffs: f64,
+    pub luts: f64,
+    pub dsps: f64,
+    pub m20ks: f64,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { alms: 0.0, ffs: 0.0, luts: 0.0, dsps: 0.0, m20ks: 0.0 };
+
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            alms: self.alms + o.alms,
+            ffs: self.ffs + o.ffs,
+            luts: self.luts + o.luts,
+            dsps: self.dsps + o.dsps,
+            m20ks: self.m20ks + o.m20ks,
+        }
+    }
+
+    pub fn scale(&self, k: f64) -> Resources {
+        Resources {
+            alms: self.alms * k,
+            ffs: self.ffs * k,
+            luts: self.luts * k,
+            dsps: self.dsps * k,
+            m20ks: self.m20ks * k,
+        }
+    }
+}
+
+/// The FPGA device + board model.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    pub total: Resources,
+    /// fraction of every resource type held by the BSP static region
+    pub bsp_frac: f64,
+    /// OpenCL kernel clock before resource-pressure derating
+    pub base_fmax_hz: f64,
+    /// fmax derating slope vs. logic utilization (DESIGN.md §6)
+    pub fmax_derate: f64,
+    pub min_fmax_hz: f64,
+    /// PCIe Gen3 x8 effective bandwidth
+    pub pcie_bw_bytes_per_s: f64,
+    /// per-DMA fixed latency
+    pub pcie_latency_s: f64,
+}
+
+/// Intel PAC with Intel Arria10 GX 1150 (Acceleration Stack 1.2).
+pub const ARRIA10_GX: Device = Device {
+    name: "Intel PAC with Intel Arria10 GX FPGA",
+    total: Resources {
+        alms: 427_200.0,
+        ffs: 1_708_800.0,
+        luts: 854_400.0,
+        dsps: 1_518.0,
+        m20ks: 2_713.0,
+    },
+    bsp_frac: 0.18,
+    base_fmax_hz: 280.0e6,
+    fmax_derate: 0.25,
+    min_fmax_hz: 120.0e6,
+    pcie_bw_bytes_per_s: 6.0e9,
+    pcie_latency_s: 15.0e-6,
+};
+
+impl Device {
+    /// Utilization fraction of the *whole device* for a kernel using `r`,
+    /// including the BSP static region: the max over resource types.
+    pub fn utilization(&self, r: &Resources) -> f64 {
+        let f = [
+            r.alms / self.total.alms,
+            r.ffs / self.total.ffs,
+            r.luts / self.total.luts,
+            r.dsps / self.total.dsps,
+            r.m20ks / self.total.m20ks,
+        ]
+        .into_iter()
+        .fold(0.0, f64::max);
+        self.bsp_frac + f
+    }
+
+    /// Does the kernel fit at all (hard resource failure if not —
+    /// the paper: "リソース量オーバーの際は早めにエラー")?
+    pub fn fits(&self, r: &Resources) -> bool {
+        self.utilization(r) <= 1.0
+    }
+
+    /// Kernel clock after resource-pressure derating.
+    pub fn fmax_hz(&self, utilization: f64) -> f64 {
+        let f = self.base_fmax_hz * (1.0 - self.fmax_derate * utilization.clamp(0.0, 1.0));
+        f.max(self.min_fmax_hz)
+    }
+
+    /// PCIe transfer time for `bytes` in one direction.
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.pcie_latency_s + bytes as f64 / self.pcie_bw_bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_includes_bsp() {
+        let d = &ARRIA10_GX;
+        assert!((d.utilization(&Resources::ZERO) - 0.18).abs() < 1e-12);
+        let half_dsps = Resources { dsps: d.total.dsps / 2.0, ..Resources::ZERO };
+        assert!((d.utilization(&half_dsps) - 0.68).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fits_rejects_oversized() {
+        let d = &ARRIA10_GX;
+        let too_big = Resources { alms: d.total.alms, ..Resources::ZERO };
+        assert!(!d.fits(&too_big));
+        let ok = Resources { alms: d.total.alms * 0.5, ..Resources::ZERO };
+        assert!(d.fits(&ok));
+    }
+
+    #[test]
+    fn fmax_derates_with_pressure() {
+        let d = &ARRIA10_GX;
+        assert!(d.fmax_hz(0.2) > d.fmax_hz(0.8));
+        assert!(d.fmax_hz(1.0) >= d.min_fmax_hz);
+        assert!(d.fmax_hz(0.0) <= d.base_fmax_hz);
+    }
+
+    #[test]
+    fn transfer_has_latency_floor() {
+        let d = &ARRIA10_GX;
+        assert!(d.transfer_s(0) >= d.pcie_latency_s);
+        // 6 GB at 6 GB/s ≈ 1 s
+        assert!((d.transfer_s(6_000_000_000) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn resource_arithmetic() {
+        let a = Resources { alms: 1.0, ffs: 2.0, luts: 3.0, dsps: 4.0, m20ks: 5.0 };
+        let b = a.scale(2.0);
+        assert_eq!(b.dsps, 8.0);
+        assert_eq!(a.add(&b).alms, 3.0);
+    }
+}

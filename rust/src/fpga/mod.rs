@@ -1,0 +1,14 @@
+//! FPGA board substrate: device model, place-and-route time model, and
+//! the pipelined-execution timing simulator.
+//!
+//! Replaces the paper's Intel PAC (Arria10 GX) + Quartus 17.1 testbed.
+//! DESIGN.md §2 documents why each substitution preserves the behaviour
+//! the search depends on (ranking + speedup shape, not absolute TFLOPs).
+
+pub mod device;
+pub mod pnr;
+pub mod timing;
+
+pub use device::{Device, Resources, ARRIA10_GX};
+pub use pnr::{full_compile, CompileOutcome};
+pub use timing::{kernel_time_s, pattern_fpga_time_s, KernelExec};

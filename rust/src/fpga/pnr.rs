@@ -1,0 +1,131 @@
+//! Place-and-route (full compile) **time model** — the reason the paper's
+//! whole method exists: a full `aoc` + Quartus compile of even a ~100-line
+//! kernel takes ≈3 hours on the authors' machine, so only a handful of
+//! patterns can ever be measured.
+//!
+//! The model: a base fitter time plus a resource-pressure term, with a
+//! small deterministic seed jitter (compiles of different kernels do not
+//! take identical time).  Resource-overflow kernels fail *early* —
+//! "リソース量オーバーの際は早めにエラー" — after only the analysis
+//! front-end; semantically un-mappable kernels fail *late* ("数時間後に
+//! エラー"), which the coordinator must treat as wasted compile hours.
+
+use crate::fpga::device::Device;
+use crate::hls::HlsReport;
+
+/// Result of a simulated full FPGA compile.
+#[derive(Debug, Clone)]
+pub enum CompileOutcome {
+    /// Bitstream produced after `sim_s` seconds of simulated compile time.
+    Ok { sim_s: f64 },
+    /// Resource overflow — detected early (paper: "早めにエラー").
+    ResourceOverflow { sim_s: f64, utilization: f64 },
+}
+
+impl CompileOutcome {
+    pub fn sim_seconds(&self) -> f64 {
+        match self {
+            CompileOutcome::Ok { sim_s } => *sim_s,
+            CompileOutcome::ResourceOverflow { sim_s, .. } => *sim_s,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, CompileOutcome::Ok { .. })
+    }
+}
+
+/// Deterministic per-kernel jitter in `[-1, 1]` from a label hash.
+fn jitter(label: &str) -> f64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in label.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    // map to [-1, 1]
+    (h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+}
+
+/// Base fitter time: ~2.4 h; resource term: up to +2.5 h near full;
+/// jitter: ±20 min.  Typical small kernel ≈ 2.8–3.2 h — the paper's "3 h".
+pub const BASE_COMPILE_S: f64 = 2.4 * 3600.0;
+pub const PRESSURE_COMPILE_S: f64 = 2.5 * 3600.0;
+pub const JITTER_S: f64 = 20.0 * 60.0;
+
+/// Simulate the full compile of a pattern's combined kernels.
+///
+/// `reports` are the pattern's per-kernel pre-compile reports; `label`
+/// seeds the jitter (use the pattern label).
+pub fn full_compile(reports: &[&HlsReport], device: &Device, label: &str) -> CompileOutcome {
+    let total = reports
+        .iter()
+        .fold(crate::fpga::device::Resources::ZERO, |acc, r| acc.add(&r.resources));
+    let utilization = device.utilization(&total);
+
+    if utilization > 1.0 {
+        // early resource error: front-end analysis only (~25 min)
+        return CompileOutcome::ResourceOverflow { sim_s: 25.0 * 60.0, utilization };
+    }
+
+    let sim_s = BASE_COMPILE_S
+        + PRESSURE_COMPILE_S * utilization
+        + JITTER_S * jitter(label);
+    CompileOutcome::Ok { sim_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+    use crate::fpga::device::ARRIA10_GX;
+    use crate::hls;
+    use crate::ir;
+
+    fn report(src: &str, unroll: usize) -> hls::HlsReport {
+        let p = parse(src).unwrap();
+        let loops = ir::analyze(&p);
+        hls::precompile(&p, &loops[0], unroll, &ARRIA10_GX)
+    }
+
+    const MAP: &str = "void f(float a[], float b[], int n) { int i; \
+        for (i = 0; i < n; i++) { a[i] = b[i] * 2.0 + 1.0; } }";
+
+    #[test]
+    fn small_kernel_compiles_in_about_three_hours() {
+        let r = report(MAP, 1);
+        let out = full_compile(&[&r], &ARRIA10_GX, "L0");
+        let hours = out.sim_seconds() / 3600.0;
+        assert!(out.is_ok());
+        assert!((2.5..3.6).contains(&hours), "compile {hours} h");
+    }
+
+    #[test]
+    fn oversized_kernel_fails_early() {
+        // unroll 512 of a trig kernel blows the DSP budget
+        let r = report(
+            "void f(float a[], int n) { int i; \
+             for (i = 0; i < n; i++) { a[i] = sin(a[i]) + cos(a[i]); } }",
+            512,
+        );
+        let out = full_compile(&[&r], &ARRIA10_GX, "L0");
+        assert!(!out.is_ok());
+        // early error: well under an hour, NOT ~3 h
+        assert!(out.sim_seconds() < 3600.0);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        assert_eq!(jitter("L1+L3"), jitter("L1+L3"));
+        for label in ["a", "b", "L0", "L1+L3", "xyz"] {
+            assert!(jitter(label).abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn bigger_patterns_take_longer() {
+        let r = report(MAP, 1);
+        let one = full_compile(&[&r], &ARRIA10_GX, "same");
+        let two = full_compile(&[&r, &r], &ARRIA10_GX, "same");
+        assert!(two.sim_seconds() > one.sim_seconds());
+    }
+}

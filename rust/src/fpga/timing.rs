@@ -1,0 +1,167 @@
+//! Pipelined-execution timing model: how long one offloaded loop runs on
+//! the FPGA, including PCIe transfers.
+//!
+//! Single-work-item model (what our generated OpenCL is): the innermost
+//! loop iterations stream through the pipeline at one iteration per II
+//! cycles; each entry of the offloaded statement pays the pipeline
+//! fill/drain depth.  Transfers follow the generated host program: H2D
+//! for every touched array, D2H for written arrays (footprint bytes).
+
+use crate::cparse::ast::LoopId;
+use crate::hls::HlsReport;
+use crate::interp::Profile;
+use crate::ir::LoopAnalysis;
+
+use super::device::Device;
+
+/// Timing breakdown for one offloaded loop execution.
+#[derive(Debug, Clone)]
+pub struct KernelExec {
+    pub loop_id: LoopId,
+    /// pipeline execution seconds
+    pub kernel_s: f64,
+    pub transfer_in_s: f64,
+    pub transfer_out_s: f64,
+    /// pipelined (innermost) iterations the model charged
+    pub inner_iters: u64,
+}
+
+impl KernelExec {
+    pub fn total_s(&self) -> f64 {
+        self.kernel_s + self.transfer_in_s + self.transfer_out_s
+    }
+}
+
+/// Innermost pipelined iteration count of the loop statement `id`:
+/// the max total-iteration counter over `id` and its descendants.
+pub fn pipelined_iters(loops: &[LoopAnalysis], profile: &Profile, id: LoopId) -> u64 {
+    let mut best = profile.loop_profile(id).map(|l| l.iterations).unwrap_or(0);
+    for la in loops {
+        if is_descendant(loops, id, la.info.id) {
+            if let Some(lp) = profile.loop_profile(la.info.id) {
+                best = best.max(lp.iterations);
+            }
+        }
+    }
+    best
+}
+
+fn is_descendant(loops: &[LoopAnalysis], anc: LoopId, mut cur: LoopId) -> bool {
+    loop {
+        let Some(la) = loops.iter().find(|l| l.info.id == cur) else {
+            return false;
+        };
+        match la.info.parent {
+            Some(p) if p == anc => return true,
+            Some(p) => cur = p,
+            None => return false,
+        }
+    }
+}
+
+/// Model one offloaded loop's FPGA execution.
+pub fn kernel_time_s(
+    loops: &[LoopAnalysis],
+    profile: &Profile,
+    report: &HlsReport,
+    device: &Device,
+) -> KernelExec {
+    let id = report.loop_id;
+    let la = loops
+        .iter()
+        .find(|l| l.info.id == id)
+        .expect("report refers to a known loop");
+    let lp = profile.loop_profile(id).cloned().unwrap_or_default();
+
+    let inner_iters = pipelined_iters(loops, profile, id);
+    // an unroll-b datapath retires b iterations per II cycles
+    let eff_iters = (inner_iters as f64 / report.unroll.max(1) as f64).ceil();
+    let cycles = eff_iters * report.ii as f64 + lp.entries as f64 * report.depth as f64;
+    let kernel_s = cycles / report.fmax_hz;
+
+    // transfers: H2D everything touched, D2H what the kernel writes
+    let mut in_bytes = 0u64;
+    let mut out_bytes = 0u64;
+    for (arr, fp) in &lp.footprints {
+        in_bytes += fp.bytes();
+        if la.refs.array_writes.contains_key(arr) {
+            out_bytes += fp.bytes();
+        }
+    }
+    // one DMA per direction per entry batch — the generated host
+    // transfers once per offloaded-loop invocation region, not per entry
+    let transfer_in_s = if in_bytes > 0 { device.transfer_s(in_bytes) } else { 0.0 };
+    let transfer_out_s = if out_bytes > 0 { device.transfer_s(out_bytes) } else { 0.0 };
+
+    KernelExec { loop_id: id, kernel_s, transfer_in_s, transfer_out_s, inner_iters }
+}
+
+/// Total FPGA-side time of a pattern (kernels run back to back on the
+/// single device; the Acceleration Stack serializes the queue).
+pub fn pattern_fpga_time_s(execs: &[KernelExec]) -> f64 {
+    execs.iter().map(KernelExec::total_s).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+    use crate::fpga::device::ARRIA10_GX;
+    use crate::hls;
+    use crate::interp;
+    use crate::ir;
+
+    fn setup(src: &str, idx: usize) -> (Vec<LoopAnalysis>, Profile, HlsReport) {
+        let p = parse(src).unwrap();
+        let loops = ir::analyze(&p);
+        let prof = interp::profile_program(&p).unwrap();
+        let rep = hls::precompile(&p, &loops[idx], 1, &ARRIA10_GX);
+        (loops, prof, rep)
+    }
+
+    const NEST: &str = "
+        float acc_out[64]; float x[64];
+        void main() {
+            int i;
+            for (i = 0; i < 64; i++) { x[i] = i * 0.5; }
+            for (i = 0; i < 64; i++) {
+                float acc; acc = 0.0;
+                for (int k = 0; k < 100; k++) { acc += x[i] * 0.9; }
+                acc_out[i] = acc;
+            }
+        }";
+
+    #[test]
+    fn pipelined_iters_uses_innermost() {
+        let (loops, prof, _) = setup(NEST, 1);
+        // loop id 1 = outer compute loop, id 2 = inner k loop
+        let iters = pipelined_iters(&loops, &prof, loops[1].info.id);
+        assert_eq!(iters, 64 * 100);
+    }
+
+    #[test]
+    fn kernel_time_scales_with_iters() {
+        let (loops, prof, rep) = setup(NEST, 1);
+        let exec = kernel_time_s(&loops, &prof, &rep, &ARRIA10_GX);
+        assert_eq!(exec.inner_iters, 6400);
+        // II=1 at ~270 MHz: ≈ 6400 cycles ≈ 24 µs plus depth
+        assert!(exec.kernel_s > 1e-5 && exec.kernel_s < 1e-3, "{}", exec.kernel_s);
+    }
+
+    #[test]
+    fn transfers_cover_touched_footprints() {
+        let (loops, prof, rep) = setup(NEST, 1);
+        let exec = kernel_time_s(&loops, &prof, &rep, &ARRIA10_GX);
+        // reads x (256 B) + writes acc_out (256 B)
+        assert!(exec.transfer_in_s >= ARRIA10_GX.pcie_latency_s);
+        assert!(exec.transfer_out_s >= ARRIA10_GX.pcie_latency_s);
+    }
+
+    #[test]
+    fn pattern_time_sums_kernels() {
+        let (loops, prof, rep) = setup(NEST, 1);
+        let e = kernel_time_s(&loops, &prof, &rep, &ARRIA10_GX);
+        let total = pattern_fpga_time_s(&[e.clone(), e.clone()]);
+        assert!((total - 2.0 * e.total_s()).abs() < 1e-12);
+    }
+}

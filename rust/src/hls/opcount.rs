@@ -1,0 +1,302 @@
+//! Static datapath operator counting over a kernel loop body.
+//!
+//! Types are resolved from the program symbol table; an arithmetic node is
+//! a *float* operator if either operand is float-typed.  Counts are per
+//! innermost iteration body — they size the datapath, not the trip count
+//! (which the dynamic profile provides).
+
+use std::collections::HashMap;
+
+use crate::cparse::ast::*;
+use crate::cparse::Program;
+use crate::ir::LoopAnalysis;
+use crate::opencl::kernel::type_env;
+
+/// Datapath operator counts.
+#[derive(Debug, Clone, Default)]
+pub struct OpCounts {
+    pub fadd: u32,
+    pub fmul: u32,
+    pub fdiv: u32,
+    pub trig: u32,
+    pub sqrt: u32,
+    pub exp: u32,
+    pub fmisc: u32,
+    pub int_ops: u32,
+    pub cmps: u32,
+    /// distinct global arrays accessed (→ LSU count)
+    pub arrays: u32,
+    /// `+`-reductions (→ shift registers)
+    pub plus_reductions: u32,
+    pub star_reductions: u32,
+    /// loops in the offloaded nest (→ loop-control logic)
+    pub nest_depth: u32,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u32 {
+        self.fadd + self.fmul + self.fdiv + self.trig + self.sqrt + self.exp
+            + self.fmisc + self.int_ops + self.cmps
+    }
+}
+
+struct Counter<'e> {
+    env: &'e HashMap<String, Type>,
+    c: OpCounts,
+    locals_float: HashMap<String, bool>,
+}
+
+impl<'e> Counter<'e> {
+    fn is_float_expr(&self, e: &Expr) -> bool {
+        match e {
+            Expr::IntLit(_) => false,
+            Expr::FloatLit(_) => true,
+            Expr::Var(n) => self
+                .locals_float
+                .get(n)
+                .copied()
+                .unwrap_or_else(|| self.env.get(n).map(|t| t.is_float()).unwrap_or(false)),
+            Expr::Index(n, _) => self
+                .env
+                .get(n)
+                .map(|t| match t {
+                    Type::Array(e, _) => e.is_float(),
+                    t => t.is_float(),
+                })
+                .unwrap_or(true),
+            Expr::Unary(_, a) => self.is_float_expr(a),
+            Expr::Binary(op, a, b) => {
+                if op.is_arith() {
+                    self.is_float_expr(a) || self.is_float_expr(b)
+                } else {
+                    false // comparisons/logicals yield int
+                }
+            }
+            Expr::Call(f, _) => is_float_builtin(f),
+        }
+    }
+
+    fn count_expr(&mut self, e: &Expr) {
+        match e {
+            Expr::IntLit(_) | Expr::FloatLit(_) | Expr::Var(_) => {}
+            Expr::Index(_, i) => self.count_expr(i),
+            Expr::Unary(op, a) => {
+                self.count_expr(a);
+                match op {
+                    UnOp::Neg if self.is_float_expr(a) => self.c.fmisc += 1,
+                    _ => self.c.int_ops += 1,
+                }
+            }
+            Expr::Binary(op, a, b) => {
+                self.count_expr(a);
+                self.count_expr(b);
+                if op.is_arith() {
+                    if self.is_float_expr(a) || self.is_float_expr(b) {
+                        match op {
+                            BinOp::Add | BinOp::Sub => self.c.fadd += 1,
+                            BinOp::Mul => self.c.fmul += 1,
+                            BinOp::Div | BinOp::Mod => self.c.fdiv += 1,
+                            _ => unreachable!(),
+                        }
+                    } else {
+                        self.c.int_ops += 1;
+                    }
+                } else {
+                    self.c.cmps += 1;
+                }
+            }
+            Expr::Call(f, args) => {
+                for a in args {
+                    self.count_expr(a);
+                }
+                match f.as_str() {
+                    "sin" | "cos" => self.c.trig += 1,
+                    "sqrt" => self.c.sqrt += 1,
+                    "exp" => self.c.exp += 1,
+                    "fabs" | "floor" | "fmin" | "fmax" => self.c.fmisc += 1,
+                    _ => {} // non-builtin: rejected upstream by deps
+                }
+            }
+        }
+    }
+
+    fn count_stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Decl(d) => {
+                self.locals_float.insert(d.name.clone(), d.ty.is_float());
+                if let Some(e) = &d.init {
+                    self.count_expr(e);
+                }
+            }
+            Stmt::Assign { target, op, value, .. } => {
+                self.count_expr(value);
+                if let LValue::Index(_, i) = target {
+                    self.count_expr(i);
+                }
+                if *op != AssignOp::Assign {
+                    // compound assign adds one more ALU op
+                    let lhs_float = match target {
+                        LValue::Var(n) => self
+                            .locals_float
+                            .get(n)
+                            .copied()
+                            .unwrap_or_else(|| {
+                                self.env.get(n).map(|t| t.is_float()).unwrap_or(false)
+                            }),
+                        LValue::Index(n, _) => self
+                            .env
+                            .get(n)
+                            .map(|t| match t {
+                                Type::Array(e, _) => e.is_float(),
+                                t => t.is_float(),
+                            })
+                            .unwrap_or(true),
+                    };
+                    if lhs_float || self.is_float_expr(value) {
+                        match op {
+                            AssignOp::MulAssign => self.c.fmul += 1,
+                            AssignOp::DivAssign => self.c.fdiv += 1,
+                            _ => self.c.fadd += 1,
+                        }
+                    } else {
+                        self.c.int_ops += 1;
+                    }
+                }
+            }
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                self.count_expr(cond);
+                for s in then_branch.iter().chain(else_branch) {
+                    self.count_stmt(s);
+                }
+            }
+            Stmt::For { header, body, .. } => {
+                self.c.nest_depth += 1;
+                // loop bookkeeping: one int add + one compare per level
+                self.c.int_ops += 1;
+                self.c.cmps += 1;
+                if let Some(c) = &header.cond {
+                    self.count_expr(c);
+                }
+                for s in body {
+                    self.count_stmt(s);
+                }
+            }
+            Stmt::While { cond, body, .. } => {
+                self.c.nest_depth += 1;
+                self.count_expr(cond);
+                for s in body {
+                    self.count_stmt(s);
+                }
+            }
+            Stmt::Return(Some(e), _) => self.count_expr(e),
+            Stmt::Return(None, _) => {}
+            Stmt::Expr(e, _) => self.count_expr(e),
+            Stmt::Block(body) => {
+                for s in body {
+                    self.count_stmt(s);
+                }
+            }
+        }
+    }
+}
+
+fn is_float_builtin(name: &str) -> bool {
+    crate::ir::varref::is_builtin(name)
+}
+
+/// Count datapath operators for one offloaded loop.
+pub fn count(program: &Program, la: &LoopAnalysis) -> OpCounts {
+    let env = type_env(program, &la.info.function);
+    let mut counter = Counter { env: &env, c: OpCounts::default(), locals_float: HashMap::new() };
+    // the offloaded loop itself is one nest level
+    counter.c.nest_depth = 1;
+    counter.c.int_ops += 1;
+    counter.c.cmps += 1;
+    for s in &la.info.body {
+        counter.count_stmt(s);
+    }
+    counter.c.arrays = la.refs.arrays().len() as u32;
+    for r in &la.deps.reductions {
+        if r.op == '+' {
+            counter.c.plus_reductions += 1;
+        } else {
+            counter.c.star_reductions += 1;
+        }
+    }
+    counter.c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+    use crate::ir;
+
+    fn ops(src: &str, idx: usize) -> OpCounts {
+        let p = parse(src).unwrap();
+        let loops = ir::analyze(&p);
+        count(&p, &loops[idx])
+    }
+
+    #[test]
+    fn counts_float_ops() {
+        let c = ops(
+            "void f(float a[], float b[], int n) { int i; \
+             for (i = 0; i < n; i++) { a[i] = b[i] * 2.0 + 1.0 - b[i] / 3.0; } }",
+            0,
+        );
+        assert_eq!(c.fmul, 1);
+        assert_eq!(c.fadd, 2); // + and -
+        assert_eq!(c.fdiv, 1);
+        assert_eq!(c.arrays, 2);
+    }
+
+    #[test]
+    fn int_index_math_counted_as_int() {
+        let c = ops(
+            "void f(float c[], int n) { int i; \
+             for (i = 0; i < n; i++) { \
+               for (int j = 0; j < n; j++) { c[i * n + j] = 1.0; } } }",
+            0,
+        );
+        // i*n and +j are int ops; no float arithmetic at all
+        assert!(c.int_ops >= 2);
+        assert_eq!(c.fadd + c.fmul, 0);
+        assert_eq!(c.nest_depth, 2);
+    }
+
+    #[test]
+    fn builtins_classified() {
+        let c = ops(
+            "void f(float a[], int n) { int i; \
+             for (i = 0; i < n; i++) { a[i] = sin(a[i]) + sqrt(fabs(a[i])); } }",
+            0,
+        );
+        assert_eq!(c.trig, 1);
+        assert_eq!(c.sqrt, 1);
+        assert_eq!(c.fmisc, 1);
+    }
+
+    #[test]
+    fn reductions_detected() {
+        let c = ops(
+            "void f(float a[], int n) { int i; float s; s = 0.0; \
+             for (i = 0; i < n; i++) { s += a[i]; } }",
+            0,
+        );
+        assert_eq!(c.plus_reductions, 1);
+        assert_eq!(c.star_reductions, 0);
+    }
+
+    #[test]
+    fn compound_float_assign_counts_accumulate_op() {
+        let c = ops(
+            "void f(float a[], float b[], int n) { int i; float s; s = 0.0; \
+             for (i = 0; i < n; i++) { s += a[i] * b[i]; } }",
+            0,
+        );
+        // one fmul for a*b, one fadd for +=
+        assert_eq!(c.fmul, 1);
+        assert_eq!(c.fadd, 1);
+    }
+}

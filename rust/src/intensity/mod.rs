@@ -1,0 +1,228 @@
+//! Arithmetic-intensity analysis — the paper's Step-2 narrowing signal.
+//!
+//! The paper (§3.3): *"算術強度は、ループ回数やデータ量が多いと増加し、
+//! アクセス数が多いと減少する指標"* — intensity **rises** with trip count
+//! and data volume and **falls** with access count.  We realize that as
+//!
+//! ```text
+//! intensity(loop) = total float work (flops + math calls)
+//!                   ───────────────────────────────────────
+//!                        distinct bytes touched (footprint)
+//! ```
+//!
+//! computed from the dynamic profile ([`crate::interp`]), which plays the
+//! role of PGI 19.4's intensity analysis + gcov trip counts.  A loop that
+//! streams a large array once with heavy math per element scores high; a
+//! memory-shuffling loop scores low.  Ties (and the ranking the paper's
+//! top-`a` cut needs) are broken by absolute float work so that a
+//! 3-iteration loop never outranks the real hot loop.
+
+use crate::cparse::ast::LoopId;
+use crate::interp::Profile;
+use crate::ir::LoopAnalysis;
+
+/// Intensity metrics of one candidate loop.
+#[derive(Debug, Clone)]
+pub struct LoopIntensity {
+    pub id: LoopId,
+    /// enclosing function (diagnostics)
+    pub function: String,
+    pub trips: u64,
+    pub flops: u64,
+    /// distinct bytes touched (min..max index ranges)
+    pub footprint_bytes: u64,
+    /// raw access traffic in bytes
+    pub traffic_bytes: u64,
+    /// flops / footprint — the narrowing key
+    pub intensity: f64,
+    /// whether the dependence tests allow offloading at all
+    pub offloadable: bool,
+}
+
+impl LoopIntensity {
+    /// Ranking key: intensity first, absolute work as tiebreak.
+    fn rank_key(&self) -> (f64, u64) {
+        (self.intensity, self.flops)
+    }
+}
+
+/// Compute intensity for every *offloadable* loop that actually ran.
+///
+/// Non-offloadable loops are included with `offloadable = false` (the
+/// report the paper logs shows them), but [`top_a`] skips them.
+pub fn analyze(loops: &[LoopAnalysis], profile: &Profile) -> Vec<LoopIntensity> {
+    let mut out = Vec::new();
+    for la in loops {
+        let Some(lp) = profile.loop_profile(la.info.id) else {
+            continue; // never executed on the sample workload
+        };
+        let flops = lp.total_flops();
+        let footprint = lp.footprint_bytes();
+        let intensity = if footprint == 0 {
+            0.0
+        } else {
+            flops as f64 / footprint as f64
+        };
+        out.push(LoopIntensity {
+            id: la.info.id,
+            function: la.info.function.clone(),
+            trips: lp.iterations,
+            flops,
+            footprint_bytes: footprint,
+            traffic_bytes: lp.traffic_bytes(),
+            intensity,
+            offloadable: la.deps.offloadable,
+        });
+    }
+    out
+}
+
+/// The paper's first narrowing: keep the top-`a` offloadable loops by
+/// intensity.  Nested loops: when an ancestor and its descendant both
+/// qualify, only the **outermost** offloadable loop stays a candidate —
+/// the paper offloads a loop *statement*, which subsumes everything
+/// nested inside it (and offloading the outer statement avoids paying
+/// pipeline fill + transfer once per outer iteration).
+pub fn top_a(
+    all: &[LoopIntensity],
+    loops: &[LoopAnalysis],
+    a: usize,
+) -> Vec<LoopIntensity> {
+    let offloadable: Vec<&LoopIntensity> = all.iter().filter(|l| l.offloadable).collect();
+    // keep only candidates with no offloadable ancestor candidate
+    let mut cands: Vec<&LoopIntensity> = offloadable
+        .iter()
+        .filter(|c| {
+            !offloadable
+                .iter()
+                .any(|anc| anc.id != c.id && is_ancestor(loops, anc.id, c.id))
+        })
+        .copied()
+        .collect();
+    cands.sort_by(|x, y| {
+        y.rank_key()
+            .partial_cmp(&x.rank_key())
+            .unwrap()
+            .then(x.id.cmp(&y.id))
+    });
+    cands.into_iter().take(a).cloned().collect()
+}
+
+/// Is `anc` an ancestor loop of `desc`?
+fn is_ancestor(loops: &[LoopAnalysis], anc: LoopId, desc: LoopId) -> bool {
+    let mut cur = desc;
+    loop {
+        let Some(la) = loops.iter().find(|l| l.info.id == cur) else {
+            return false;
+        };
+        match la.info.parent {
+            Some(p) if p == anc => return true,
+            Some(p) => cur = p,
+            None => return false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+    use crate::interp;
+    use crate::ir;
+
+    fn pipeline(src: &str) -> (Vec<ir::LoopAnalysis>, Vec<LoopIntensity>) {
+        let p = parse(src).unwrap();
+        let loops = ir::analyze(&p);
+        let prof = interp::profile_program(&p).unwrap();
+        let ints = analyze(&loops, &prof);
+        (loops, ints)
+    }
+
+    const TWO_LOOPS: &str = "
+        float a[1000]; float b[1000];
+        void main() {
+            int i; int r;
+            // hot: 40 math-heavy passes over a (outer loop is sequential —
+            // pass r+1 reads pass r's values — but the inner loop offloads)
+            for (r = 0; r < 40; r++) {
+                for (i = 0; i < 1000; i++) { a[i] = a[i] * 1.5 + 0.5; }
+            }
+            // cold: one cheap pass over b
+            for (i = 0; i < 1000; i++) { b[i] = b[i] + 1.0; }
+        }";
+
+    #[test]
+    fn hot_loop_has_higher_intensity() {
+        let (_, ints) = pipeline(TWO_LOOPS);
+        // inner hot loop is id 1 (outer id 0 is not offloadable)
+        let hot = ints.iter().find(|l| l.id.0 == 1).unwrap();
+        let cold = ints.iter().find(|l| l.id.0 == 2).unwrap();
+        assert!(hot.offloadable && cold.offloadable);
+        assert!(!ints.iter().find(|l| l.id.0 == 0).unwrap().offloadable);
+        assert!(hot.intensity > cold.intensity,
+            "hot {} vs cold {}", hot.intensity, cold.intensity);
+        // 40 entries * 1000 iters * 2 flops / 4000 B footprint = 20 fl/B
+        assert!((hot.intensity - 20.0).abs() < 0.5, "{}", hot.intensity);
+    }
+
+    #[test]
+    fn top_a_skips_non_offloadable_outer() {
+        let (loops, ints) = pipeline(TWO_LOOPS);
+        let top = top_a(&ints, &loops, 5);
+        let ids: Vec<u32> = top.iter().map(|l| l.id.0).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn top_a_truncates() {
+        let (loops, ints) = pipeline(TWO_LOOPS);
+        assert_eq!(top_a(&ints, &loops, 1).len(), 1);
+        assert_eq!(top_a(&ints, &loops, 1)[0].id.0, 1);
+    }
+
+    // NOTE: the inner counter is declared in its own header — were it a
+    // function-scope `int j;`, the conservative scalar-dependence test
+    // would (correctly, conservatively) reject the outer loop.
+    const PARALLEL_NEST: &str = "
+        float c[900];
+        void main() {
+            int i;
+            for (i = 0; i < 30; i++) {
+                for (int j = 0; j < 30; j++) { c[i * 30 + j] = i * 1.0 + j * 2.0; }
+            }
+        }";
+
+    #[test]
+    fn top_a_prefers_outermost_of_parallel_nest() {
+        let (loops, ints) = pipeline(PARALLEL_NEST);
+        let outer = ints.iter().find(|l| l.id.0 == 0).unwrap();
+        assert!(outer.offloadable, "outer parallel loop must qualify");
+        let top = top_a(&ints, &loops, 5);
+        let ids: Vec<u32> = top.iter().map(|l| l.id.0).collect();
+        // outer subsumes inner: only the outermost survives
+        assert_eq!(ids, vec![0]);
+    }
+
+    #[test]
+    fn non_offloadable_excluded_from_top_a() {
+        let (loops, ints) = pipeline(
+            "float a[100];
+             void main() {
+                 int i;
+                 for (i = 1; i < 100; i++) { a[i] = a[i - 1] * 2.0; }
+             }",
+        );
+        assert!(!ints[0].offloadable);
+        assert!(top_a(&ints, &loops, 5).is_empty());
+    }
+
+    #[test]
+    fn unexecuted_loops_skipped() {
+        let (_, ints) = pipeline(
+            "float a[10];
+             void unused(int n) { int i; for (i = 0; i < n; i++) { a[i] = 0.0; } }
+             void main() { a[0] = 1.0; }",
+        );
+        assert!(ints.is_empty());
+    }
+}

@@ -1,0 +1,948 @@
+//! Tree-walking evaluator with profiling hooks.
+//!
+//! Arrays live in an arena and are passed to functions **by reference**
+//! (C array-parameter semantics); scalars are passed by value.  All
+//! numeric storage is `i64`/`f64`; `float` arrays round-trip through `f64`
+//! without loss for the value ranges MiniC apps use.
+
+use std::collections::HashMap;
+
+use crate::cparse::ast::*;
+use crate::cparse::error::Pos;
+
+use super::profile::{Footprint, LoopProfile, Profile};
+
+/// Runtime scalar value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+}
+
+impl Value {
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Value::Int(n) => n as f64,
+            Value::Float(v) => v,
+        }
+    }
+
+    pub fn as_i64(self) -> i64 {
+        match self {
+            Value::Int(n) => n,
+            Value::Float(v) => v as i64,
+        }
+    }
+
+    fn truthy(self) -> bool {
+        match self {
+            Value::Int(n) => n != 0,
+            Value::Float(v) => v != 0.0,
+        }
+    }
+}
+
+/// Interpreter runtime error.
+#[derive(Debug, Clone)]
+pub struct InterpError {
+    pub message: String,
+    pub pos: Option<Pos>,
+}
+
+impl InterpError {
+    fn new(message: impl Into<String>) -> Self {
+        Self { message: message.into(), pos: None }
+    }
+
+    fn at(message: impl Into<String>, pos: Pos) -> Self {
+        Self { message: message.into(), pos: Some(pos) }
+    }
+}
+
+impl std::fmt::Display for InterpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.pos {
+            Some(p) => write!(f, "runtime error at {p}: {}", self.message),
+            None => write!(f, "runtime error: {}", self.message),
+        }
+    }
+}
+
+impl std::error::Error for InterpError {}
+
+#[derive(Debug, Clone)]
+struct ArrayObj {
+    is_float: bool,
+    data: Vec<f64>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Binding {
+    Scalar(Value),
+    Array(usize),
+}
+
+enum Flow {
+    Normal,
+    Return(Option<Value>),
+}
+
+/// Default interpreter step budget — generous for the paper workloads
+/// (tdfir full scale ≈ 5M ops) while still catching runaway loops.
+pub const DEFAULT_MAX_STEPS: u64 = 2_000_000_000;
+
+/// The interpreter. One instance per program run.
+pub struct Interp<'p> {
+    program: &'p Program,
+    arrays: Vec<ArrayObj>,
+    globals: HashMap<String, Binding>,
+    /// local bindings as one spaghetti stack: frames/scopes are just
+    /// truncation marks and names borrow from the AST, so loop
+    /// iterations allocate nothing
+    locals: Vec<(&'p str, Binding)>,
+    /// per-call-frame base offsets into `locals` (lookup boundary)
+    frame_bases: Vec<usize>,
+    overrides: HashMap<String, Value>,
+    // profiling
+    loop_counters: Vec<LoopProfile>,
+    loop_stack: Vec<u32>,
+    totals: Profile,
+    steps: u64,
+    max_steps: u64,
+    globals_ready: bool,
+}
+
+impl<'p> Interp<'p> {
+    pub fn new(program: &'p Program) -> Self {
+        let max_loop = {
+            let mut m = 0u32;
+            for f in &program.functions {
+                for s in &f.body {
+                    s.walk(&mut |s| {
+                        if let Stmt::For { id, .. } | Stmt::While { id, .. } = s {
+                            m = m.max(id.0 + 1);
+                        }
+                    });
+                }
+            }
+            m
+        };
+        Self {
+            program,
+            arrays: Vec::new(),
+            globals: HashMap::new(),
+            locals: Vec::new(),
+            frame_bases: Vec::new(),
+            overrides: HashMap::new(),
+            loop_counters: vec![LoopProfile::default(); max_loop as usize],
+            loop_stack: Vec::new(),
+            totals: Profile::default(),
+            steps: 0,
+            max_steps: DEFAULT_MAX_STEPS,
+            globals_ready: false,
+        }
+    }
+
+    /// Override a global scalar before the run (e.g. shrink a problem-size
+    /// constant for tests: `set_global("N", Value::Int(64))`).
+    pub fn set_global(&mut self, name: &str, value: Value) {
+        self.overrides.insert(name.to_string(), value);
+    }
+
+    pub fn set_max_steps(&mut self, max: u64) {
+        self.max_steps = max;
+    }
+
+    /// Run `main()`.
+    pub fn run_main(&mut self) -> Result<Option<Value>, InterpError> {
+        self.call("main", &[])
+    }
+
+    /// Call a function by name with scalar arguments.
+    pub fn call(&mut self, name: &str, args: &[Value]) -> Result<Option<Value>, InterpError> {
+        self.init_globals()?;
+        let program: &'p Program = self.program;
+        let func = program
+            .function(name)
+            .ok_or_else(|| InterpError::new(format!("no function `{name}`")))?;
+        if func.params.len() != args.len() {
+            return Err(InterpError::new(format!(
+                "`{name}` expects {} args, got {}",
+                func.params.len(),
+                args.len()
+            )));
+        }
+        let bindings: Vec<(&'p str, Binding)> = func
+            .params
+            .iter()
+            .zip(args)
+            .map(|(p, v)| (p.name.as_str(), Binding::Scalar(*v)))
+            .collect();
+        self.call_with_bindings(func, bindings)
+    }
+
+    /// Read a global array's contents (output capture for verification).
+    pub fn read_array(&mut self, name: &str) -> Result<Vec<f64>, InterpError> {
+        self.init_globals()?;
+        match self.globals.get(name) {
+            Some(Binding::Array(h)) => Ok(self.arrays[*h].data.clone()),
+            Some(Binding::Scalar(_)) => {
+                Err(InterpError::new(format!("`{name}` is a scalar, not an array")))
+            }
+            None => Err(InterpError::new(format!("no global `{name}`"))),
+        }
+    }
+
+    /// Read a global scalar.
+    pub fn read_scalar(&mut self, name: &str) -> Result<Value, InterpError> {
+        self.init_globals()?;
+        match self.globals.get(name) {
+            Some(Binding::Scalar(v)) => Ok(*v),
+            _ => Err(InterpError::new(format!("no scalar global `{name}`"))),
+        }
+    }
+
+    /// Finish and extract the dynamic profile.
+    pub fn into_profile(mut self) -> Profile {
+        for (i, lp) in self.loop_counters.into_iter().enumerate() {
+            if lp.entries > 0 {
+                self.totals.loops.insert(LoopId(i as u32), lp);
+            }
+        }
+        self.totals.steps = self.steps;
+        self.totals
+    }
+
+    // ---- internals --------------------------------------------------------
+
+    fn init_globals(&mut self) -> Result<(), InterpError> {
+        if self.globals_ready {
+            return Ok(());
+        }
+        self.globals_ready = true;
+        let program: &'p Program = self.program;
+        for d in &program.globals {
+            let b = self.make_binding(d)?;
+            // apply override after the declared initializer
+            let b = match (self.overrides.get(&d.name), &b) {
+                (Some(v), Binding::Scalar(_)) => Binding::Scalar(*v),
+                _ => b,
+            };
+            self.globals.insert(d.name.clone(), b);
+        }
+        Ok(())
+    }
+
+    fn make_binding(&mut self, d: &'p Decl) -> Result<Binding, InterpError> {
+        match &d.ty {
+            Type::Array(elem, len) => {
+                // array lengths may reference already-bound globals
+                let n = match len {
+                    Some(n) => *n,
+                    None => {
+                        return Err(InterpError::at(
+                            format!("array `{}` needs a length", d.name),
+                            d.pos,
+                        ))
+                    }
+                };
+                let h = self.arrays.len();
+                self.arrays.push(ArrayObj { is_float: elem.is_float(), data: vec![0.0; n] });
+                Ok(Binding::Array(h))
+            }
+            ty => {
+                let v = match &d.init {
+                    Some(e) => self.eval(e)?,
+                    None => Value::Int(0),
+                };
+                let v = if ty.is_float() {
+                    Value::Float(v.as_f64())
+                } else {
+                    Value::Int(v.as_i64())
+                };
+                Ok(Binding::Scalar(v))
+            }
+        }
+    }
+
+    fn call_with_bindings(
+        &mut self,
+        func: &'p Function,
+        bindings: Vec<(&'p str, Binding)>,
+    ) -> Result<Option<Value>, InterpError> {
+        if self.frame_bases.len() > 64 {
+            return Err(InterpError::new("call stack overflow (depth > 64)"));
+        }
+        let base = self.locals.len();
+        self.frame_bases.push(base);
+        for (n, b) in bindings {
+            self.locals.push((n, b));
+        }
+        let mut ret = None;
+        for s in &func.body {
+            if let Flow::Return(v) = self.exec(s)? {
+                ret = v;
+                break;
+            }
+        }
+        self.locals.truncate(base);
+        self.frame_bases.pop();
+        Ok(ret)
+    }
+
+    fn lookup(&self, name: &str) -> Option<Binding> {
+        let base = self.frame_bases.last().copied().unwrap_or(0);
+        for (n, b) in self.locals[base..].iter().rev() {
+            if *n == name {
+                return Some(*b);
+            }
+        }
+        self.globals.get(name).copied()
+    }
+
+    fn bind_local(&mut self, name: &'p str, b: Binding) {
+        self.locals.push((name, b));
+    }
+
+    fn set_scalar(&mut self, name: &str, v: Value, pos: Pos) -> Result<(), InterpError> {
+        let base = self.frame_bases.last().copied().unwrap_or(0);
+        for (n, b) in self.locals[base..].iter_mut().rev() {
+            if *n == name {
+                match b {
+                    Binding::Scalar(old) => {
+                        // preserve declared int-ness
+                        *old = match old {
+                            Value::Int(_) => Value::Int(v.as_i64()),
+                            Value::Float(_) => Value::Float(v.as_f64()),
+                        };
+                        return Ok(());
+                    }
+                    Binding::Array(_) => {
+                        return Err(InterpError::at(
+                            format!("cannot assign to array `{name}`"),
+                            pos,
+                        ))
+                    }
+                }
+            }
+        }
+        if let Some(Binding::Scalar(old)) = self.globals.get_mut(name) {
+            *old = match old {
+                Value::Int(_) => Value::Int(v.as_i64()),
+                Value::Float(_) => Value::Float(v.as_f64()),
+            };
+            return Ok(());
+        }
+        Err(InterpError::at(format!("assignment to undeclared `{name}`"), pos))
+    }
+
+    fn tick(&mut self, pos: Pos) -> Result<(), InterpError> {
+        self.steps += 1;
+        if self.steps > self.max_steps {
+            return Err(InterpError::at(
+                format!("step budget exhausted ({} steps)", self.max_steps),
+                pos,
+            ));
+        }
+        Ok(())
+    }
+
+    // profiling helpers ------------------------------------------------------
+
+    #[inline]
+    fn count_flops(&mut self, n: u64) {
+        self.totals.total_flops += n;
+        for &lid in &self.loop_stack {
+            self.loop_counters[lid as usize].flops += n;
+        }
+    }
+
+    #[inline]
+    fn count_math(&mut self) {
+        self.totals.total_math_calls += 1;
+        for &lid in &self.loop_stack {
+            self.loop_counters[lid as usize].math_calls += 1;
+        }
+    }
+
+    #[inline]
+    fn count_int_ops(&mut self, n: u64) {
+        self.totals.total_int_ops += n;
+        for &lid in &self.loop_stack {
+            self.loop_counters[lid as usize].int_ops += n;
+        }
+    }
+
+    fn count_access(&mut self, array: &str, idx: i64, elem_bytes: u64, write: bool) {
+        if write {
+            self.totals.total_mem_writes += 1;
+        } else {
+            self.totals.total_mem_reads += 1;
+        }
+        for &lid in &self.loop_stack {
+            let lp = &mut self.loop_counters[lid as usize];
+            if write {
+                lp.mem_writes += 1;
+            } else {
+                lp.mem_reads += 1;
+            }
+            // hot path: avoid allocating the key on every access — only
+            // the first touch of an array inside a loop inserts
+            if let Some(fp) = lp.footprints.get_mut(array) {
+                fp.min_idx = fp.min_idx.min(idx);
+                fp.max_idx = fp.max_idx.max(idx);
+                fp.accesses += 1;
+            } else {
+                lp.footprints.insert(
+                    array.to_string(),
+                    Footprint { min_idx: idx, max_idx: idx, elem_bytes, accesses: 1 },
+                );
+            }
+        }
+    }
+
+    // execution --------------------------------------------------------------
+
+    fn exec(&mut self, s: &'p Stmt) -> Result<Flow, InterpError> {
+        match s {
+            Stmt::Decl(d) => {
+                self.tick(d.pos)?;
+                let b = self.make_binding(d)?;
+                self.bind_local(&d.name, b);
+                Ok(Flow::Normal)
+            }
+            Stmt::Assign { target, op, value, pos } => {
+                self.tick(*pos)?;
+                self.exec_assign(target, *op, value, *pos)?;
+                Ok(Flow::Normal)
+            }
+            Stmt::If { cond, then_branch, else_branch, pos } => {
+                self.tick(*pos)?;
+                let c = self.eval(cond)?;
+                let branch = if c.truthy() { then_branch } else { else_branch };
+                self.exec_scoped(branch)
+            }
+            Stmt::For { id, header, body, pos } => {
+                self.tick(*pos)?;
+                self.exec_for(*id, header, body, *pos)
+            }
+            Stmt::While { id, cond, body, pos } => {
+                self.tick(*pos)?;
+                self.exec_while(*id, cond, body, *pos)
+            }
+            Stmt::Return(e, pos) => {
+                self.tick(*pos)?;
+                let v = match e {
+                    Some(e) => Some(self.eval(e)?),
+                    None => None,
+                };
+                Ok(Flow::Return(v))
+            }
+            Stmt::Expr(e, pos) => {
+                self.tick(*pos)?;
+                self.eval(e)?;
+                Ok(Flow::Normal)
+            }
+            Stmt::Block(body) => self.exec_scoped(body),
+        }
+    }
+
+    fn exec_scoped(&mut self, body: &'p [Stmt]) -> Result<Flow, InterpError> {
+        let mark = self.locals.len();
+        let mut flow = Flow::Normal;
+        for s in body {
+            match self.exec(s)? {
+                Flow::Normal => {}
+                r @ Flow::Return(_) => {
+                    flow = r;
+                    break;
+                }
+            }
+        }
+        self.locals.truncate(mark);
+        Ok(flow)
+    }
+
+    fn exec_for(
+        &mut self,
+        id: LoopId,
+        header: &'p ForHeader,
+        body: &'p [Stmt],
+        _pos: Pos,
+    ) -> Result<Flow, InterpError> {
+        self.loop_counters[id.0 as usize].entries += 1;
+        // header scope (for decl-in-init)
+        let mark = self.locals.len();
+        let mut flow = Flow::Normal;
+        if let Some(init) = &header.init {
+            if let Flow::Return(v) = self.exec(init)? {
+                self.locals.truncate(mark);
+                return Ok(Flow::Return(v));
+            }
+        }
+        loop {
+            if let Some(cond) = &header.cond {
+                if !self.eval(cond)?.truthy() {
+                    break;
+                }
+            }
+            self.loop_counters[id.0 as usize].iterations += 1;
+            self.loop_stack.push(id.0);
+            let f = self.exec_scoped(body);
+            self.loop_stack.pop();
+            match f? {
+                Flow::Normal => {}
+                r @ Flow::Return(_) => {
+                    flow = r;
+                    break;
+                }
+            }
+            if let Some(step) = &header.step {
+                self.loop_stack.push(id.0);
+                let f = self.exec(step);
+                self.loop_stack.pop();
+                if let Flow::Return(v) = f? {
+                    flow = Flow::Return(v);
+                    break;
+                }
+            }
+        }
+        self.locals.truncate(mark);
+        Ok(flow)
+    }
+
+    fn exec_while(
+        &mut self,
+        id: LoopId,
+        cond: &'p Expr,
+        body: &'p [Stmt],
+        _pos: Pos,
+    ) -> Result<Flow, InterpError> {
+        self.loop_counters[id.0 as usize].entries += 1;
+        loop {
+            if !self.eval(cond)?.truthy() {
+                return Ok(Flow::Normal);
+            }
+            self.loop_counters[id.0 as usize].iterations += 1;
+            self.loop_stack.push(id.0);
+            let f = self.exec_scoped(body);
+            self.loop_stack.pop();
+            if let r @ Flow::Return(_) = f? {
+                return Ok(r);
+            }
+        }
+    }
+
+    fn exec_assign(
+        &mut self,
+        target: &LValue,
+        op: AssignOp,
+        value: &Expr,
+        pos: Pos,
+    ) -> Result<(), InterpError> {
+        let rhs = self.eval(value)?;
+        match target {
+            LValue::Var(name) => {
+                let new = if op == AssignOp::Assign {
+                    rhs
+                } else {
+                    let old = match self.lookup(name) {
+                        Some(Binding::Scalar(v)) => v,
+                        _ => return Err(InterpError::at(format!("no scalar `{name}`"), pos)),
+                    };
+                    self.apply_compound(old, op, rhs)
+                };
+                self.set_scalar(name, new, pos)
+            }
+            LValue::Index(name, idx) => {
+                let i = self.eval(idx)?.as_i64();
+                let h = match self.lookup(name) {
+                    Some(Binding::Array(h)) => h,
+                    _ => return Err(InterpError::at(format!("no array `{name}`"), pos)),
+                };
+                let (len, is_float) = (self.arrays[h].data.len(), self.arrays[h].is_float);
+                if i < 0 || i as usize >= len {
+                    return Err(InterpError::at(
+                        format!("index {i} out of bounds for `{name}[{len}]`"),
+                        pos,
+                    ));
+                }
+                let elem_bytes = if is_float { 4 } else { 4 };
+                let new = if op == AssignOp::Assign {
+                    rhs
+                } else {
+                    let old = self.arrays[h].data[i as usize];
+                    self.count_access(name, i, elem_bytes, false);
+                    let old = if is_float { Value::Float(old) } else { Value::Int(old as i64) };
+                    self.apply_compound(old, op, rhs)
+                };
+                self.count_access(name, i, elem_bytes, true);
+                self.arrays[h].data[i as usize] = if is_float {
+                    new.as_f64()
+                } else {
+                    new.as_i64() as f64
+                };
+                Ok(())
+            }
+        }
+    }
+
+    fn apply_compound(&mut self, old: Value, op: AssignOp, rhs: Value) -> Value {
+        let bop = match op {
+            AssignOp::AddAssign => BinOp::Add,
+            AssignOp::SubAssign => BinOp::Sub,
+            AssignOp::MulAssign => BinOp::Mul,
+            AssignOp::DivAssign => BinOp::Div,
+            AssignOp::Assign => unreachable!(),
+        };
+        self.apply_bin(bop, old, rhs)
+    }
+
+    fn apply_bin(&mut self, op: BinOp, a: Value, b: Value) -> Value {
+        use BinOp::*;
+        let float = matches!(a, Value::Float(_)) || matches!(b, Value::Float(_));
+        if op.is_arith() {
+            if float {
+                self.count_flops(1);
+                let (x, y) = (a.as_f64(), b.as_f64());
+                Value::Float(match op {
+                    Add => x + y,
+                    Sub => x - y,
+                    Mul => x * y,
+                    Div => x / y,
+                    Mod => x % y,
+                    _ => unreachable!(),
+                })
+            } else {
+                self.count_int_ops(1);
+                let (x, y) = (a.as_i64(), b.as_i64());
+                Value::Int(match op {
+                    Add => x.wrapping_add(y),
+                    Sub => x.wrapping_sub(y),
+                    Mul => x.wrapping_mul(y),
+                    Div => {
+                        if y == 0 { 0 } else { x / y }
+                    }
+                    Mod => {
+                        if y == 0 { 0 } else { x % y }
+                    }
+                    _ => unreachable!(),
+                })
+            }
+        } else {
+            self.count_int_ops(1);
+            let t = if float {
+                let (x, y) = (a.as_f64(), b.as_f64());
+                match op {
+                    Lt => x < y,
+                    Le => x <= y,
+                    Gt => x > y,
+                    Ge => x >= y,
+                    Eq => x == y,
+                    Ne => x != y,
+                    And => a.truthy() && b.truthy(),
+                    Or => a.truthy() || b.truthy(),
+                    _ => unreachable!(),
+                }
+            } else {
+                let (x, y) = (a.as_i64(), b.as_i64());
+                match op {
+                    Lt => x < y,
+                    Le => x <= y,
+                    Gt => x > y,
+                    Ge => x >= y,
+                    Eq => x == y,
+                    Ne => x != y,
+                    And => x != 0 && y != 0,
+                    Or => x != 0 || y != 0,
+                    _ => unreachable!(),
+                }
+            };
+            Value::Int(t as i64)
+        }
+    }
+
+    fn eval(&mut self, e: &Expr) -> Result<Value, InterpError> {
+        match e {
+            Expr::IntLit(n) => Ok(Value::Int(*n)),
+            Expr::FloatLit(v) => Ok(Value::Float(*v)),
+            Expr::Var(name) => match self.lookup(name) {
+                Some(Binding::Scalar(v)) => Ok(v),
+                Some(Binding::Array(_)) => {
+                    Err(InterpError::new(format!("array `{name}` used as scalar")))
+                }
+                None => Err(InterpError::new(format!("undeclared variable `{name}`"))),
+            },
+            Expr::Index(name, idx) => {
+                let i = self.eval(idx)?.as_i64();
+                let h = match self.lookup(name) {
+                    Some(Binding::Array(h)) => h,
+                    _ => return Err(InterpError::new(format!("no array `{name}`"))),
+                };
+                let arr = &self.arrays[h];
+                let len = arr.data.len();
+                if i < 0 || i as usize >= len {
+                    return Err(InterpError::new(format!(
+                        "index {i} out of bounds for `{name}[{len}]`"
+                    )));
+                }
+                let is_float = arr.is_float;
+                let v = arr.data[i as usize];
+                self.count_access(name, i, 4, false);
+                Ok(if is_float { Value::Float(v) } else { Value::Int(v as i64) })
+            }
+            Expr::Unary(op, a) => {
+                let v = self.eval(a)?;
+                match op {
+                    UnOp::Neg => match v {
+                        Value::Int(n) => {
+                            self.count_int_ops(1);
+                            Ok(Value::Int(-n))
+                        }
+                        Value::Float(f) => {
+                            self.count_flops(1);
+                            Ok(Value::Float(-f))
+                        }
+                    },
+                    UnOp::Not => {
+                        self.count_int_ops(1);
+                        Ok(Value::Int(!v.truthy() as i64))
+                    }
+                }
+            }
+            Expr::Binary(op, a, b) => {
+                // short-circuit logical ops
+                if matches!(op, BinOp::And | BinOp::Or) {
+                    let va = self.eval(a)?;
+                    self.count_int_ops(1);
+                    return Ok(match (op, va.truthy()) {
+                        (BinOp::And, false) => Value::Int(0),
+                        (BinOp::Or, true) => Value::Int(1),
+                        _ => Value::Int(self.eval(b)?.truthy() as i64),
+                    });
+                }
+                let va = self.eval(a)?;
+                let vb = self.eval(b)?;
+                Ok(self.apply_bin(*op, va, vb))
+            }
+            Expr::Call(name, args) => self.eval_call(name, args),
+        }
+    }
+
+    fn eval_call(&mut self, name: &str, args: &[Expr]) -> Result<Value, InterpError> {
+        // builtins first
+        if crate::ir::varref::is_builtin(name) {
+            let mut vals = Vec::with_capacity(args.len());
+            for a in args {
+                vals.push(self.eval(a)?.as_f64());
+            }
+            self.count_math();
+            let v = match (name, vals.as_slice()) {
+                ("sin", [x]) => x.sin(),
+                ("cos", [x]) => x.cos(),
+                ("sqrt", [x]) => x.sqrt(),
+                ("fabs", [x]) => x.abs(),
+                ("exp", [x]) => x.exp(),
+                ("floor", [x]) => x.floor(),
+                ("fmin", [x, y]) => x.min(*y),
+                ("fmax", [x, y]) => x.max(*y),
+                _ => {
+                    return Err(InterpError::new(format!(
+                        "builtin `{name}` called with {} args",
+                        vals.len()
+                    )))
+                }
+            };
+            return Ok(Value::Float(v));
+        }
+        let program: &'p Program = self.program;
+        let func = program
+            .function(name)
+            .ok_or_else(|| InterpError::new(format!("no function `{name}`")))?;
+        if func.params.len() != args.len() {
+            return Err(InterpError::new(format!(
+                "`{name}` expects {} args, got {}",
+                func.params.len(),
+                args.len()
+            )));
+        }
+        let mut bindings = Vec::with_capacity(args.len());
+        for (p, a) in func.params.iter().zip(args) {
+            let b = if p.ty.is_array() {
+                // arrays pass by reference: argument must be a bare name
+                match a {
+                    Expr::Var(an) => match self.lookup(an) {
+                        Some(b @ Binding::Array(_)) => b,
+                        _ => {
+                            return Err(InterpError::new(format!(
+                                "`{an}` is not an array (argument to `{name}`)"
+                            )))
+                        }
+                    },
+                    _ => {
+                        return Err(InterpError::new(format!(
+                            "array argument to `{name}` must be a variable"
+                        )))
+                    }
+                }
+            } else {
+                let v = self.eval(a)?;
+                let v = if p.ty.is_float() {
+                    Value::Float(v.as_f64())
+                } else {
+                    Value::Int(v.as_i64())
+                };
+                Binding::Scalar(v)
+            };
+            bindings.push((p.name.as_str(), b));
+        }
+        let ret = self.call_with_bindings(func, bindings)?;
+        Ok(ret.unwrap_or(Value::Int(0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+
+    fn run_owned(src: &str) -> (Profile, Vec<f64>) {
+        let p = parse(src).unwrap();
+        let mut it = Interp::new(&p);
+        it.run_main().unwrap();
+        let out = it.read_array("out").unwrap_or_default();
+        (it.into_profile(), out)
+    }
+
+    #[test]
+    fn arithmetic_and_output() {
+        let (_, out) = run_owned(
+            "float out[4]; void main() { int i; \
+             for (i = 0; i < 4; i++) { out[i] = i * 2.0 + 1.0; } }",
+        );
+        assert_eq!(out, vec![1.0, 3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn trip_counts_recorded() {
+        let (prof, _) = run_owned(
+            "float out[1]; void main() { int i; int j; \
+             for (i = 0; i < 10; i++) { for (j = 0; j < 5; j++) { out[0] += 1.0; } } }",
+        );
+        let l0 = prof.loop_profile(LoopId(0)).unwrap();
+        let l1 = prof.loop_profile(LoopId(1)).unwrap();
+        assert_eq!(l0.entries, 1);
+        assert_eq!(l0.iterations, 10);
+        assert_eq!(l1.entries, 10);
+        assert_eq!(l1.iterations, 50);
+        // inner flops roll up into the outer loop
+        assert_eq!(l1.flops, 50);
+        assert_eq!(l0.flops, 50);
+    }
+
+    #[test]
+    fn footprint_ranges() {
+        let (prof, _) = run_owned(
+            "float out[100]; void main() { int i; \
+             for (i = 10; i < 20; i++) { out[i] = 1.0; } }",
+        );
+        let l0 = prof.loop_profile(LoopId(0)).unwrap();
+        let fp = &l0.footprints["out"];
+        assert_eq!((fp.min_idx, fp.max_idx), (10, 19));
+        assert_eq!(fp.bytes(), 40);
+        assert_eq!(l0.mem_writes, 10);
+    }
+
+    #[test]
+    fn function_calls_and_returns() {
+        let (_, out) = run_owned(
+            "float out[1]; \
+             float square(float x) { return x * x; } \
+             void main() { out[0] = square(3.0) + square(4.0); }",
+        );
+        assert_eq!(out[0], 25.0);
+    }
+
+    #[test]
+    fn arrays_pass_by_reference() {
+        let (_, out) = run_owned(
+            "float out[3]; \
+             void fill(float a[], int n, float v) { int i; \
+               for (i = 0; i < n; i++) { a[i] = v; } } \
+             void main() { fill(out, 3, 7.0); }",
+        );
+        assert_eq!(out, vec![7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn builtins_work() {
+        let (_, out) = run_owned(
+            "float out[3]; void main() { \
+             out[0] = sqrt(16.0); out[1] = fabs(-2.5); out[2] = fmax(1.0, 2.0); }",
+        );
+        assert_eq!(out, vec![4.0, 2.5, 2.0]);
+    }
+
+    #[test]
+    fn int_semantics_truncate() {
+        let (_, out) = run_owned(
+            "float out[2]; void main() { int a; a = 7 / 2; out[0] = a; out[1] = 7 % 2; }",
+        );
+        assert_eq!(out, vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn while_and_if() {
+        let (_, out) = run_owned(
+            "float out[1]; void main() { int n; n = 10; \
+             while (n > 0) { if (n % 2 == 0) { out[0] += 1.0; } n -= 1; } }",
+        );
+        assert_eq!(out[0], 5.0);
+    }
+
+    #[test]
+    fn global_override() {
+        let p = parse(
+            "int N = 100; float out[100]; void main() { int i; \
+             for (i = 0; i < N; i++) { out[i] = 1.0; } }",
+        )
+        .unwrap();
+        let mut it = Interp::new(&p);
+        it.set_global("N", Value::Int(5));
+        it.run_main().unwrap();
+        let out = it.read_array("out").unwrap();
+        assert_eq!(out.iter().filter(|v| **v == 1.0).count(), 5);
+    }
+
+    #[test]
+    fn step_budget_catches_infinite_loop() {
+        let p = parse("void main() { int i; i = 0; while (i < 1) { i = 0; } }").unwrap();
+        let mut it = Interp::new(&p);
+        it.set_max_steps(10_000);
+        assert!(it.run_main().is_err());
+    }
+
+    #[test]
+    fn out_of_bounds_is_error() {
+        let p = parse("float out[2]; void main() { out[5] = 1.0; }").unwrap();
+        let mut it = Interp::new(&p);
+        assert!(it.run_main().is_err());
+    }
+
+    #[test]
+    fn recursion_depth_limited() {
+        let p = parse("int f(int x) { return f(x); } void main() { f(1); }").unwrap();
+        let mut it = Interp::new(&p);
+        assert!(it.run_main().is_err());
+    }
+
+    #[test]
+    fn short_circuit_and() {
+        // `i < 2 && out[i] ...` must not evaluate out[5] when i >= 2
+        let (_, out) = run_owned(
+            "float out[2]; void main() { int i; i = 5; \
+             if (i < 2 && i / 0 > 0) { out[0] = 1.0; } else { out[1] = 1.0; } }",
+        );
+        assert_eq!(out[1], 1.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! MiniC interpreter + dynamic profiler.
+//!
+//! Substrate for two things the paper gets from its toolchain:
+//!
+//! 1. **Dynamic profiling** (the paper: gcov/gprof trip counts + the PGI
+//!    compiler's arithmetic-intensity analysis).  Running the application
+//!    on its sample data yields, per loop statement: entries, iterations,
+//!    float/int op counts, memory traffic, and the array *footprint*
+//!    (min..max index range per array) — everything [`crate::intensity`]
+//!    needs.
+//! 2. **CPU-side numerics** for the verification environment: the
+//!    interpreter's outputs are the all-CPU reference the FPGA-offloaded
+//!    (PJRT-executed) variant must match.
+
+pub mod eval;
+pub mod profile;
+
+pub use eval::{Interp, InterpError, Value};
+pub use profile::{LoopProfile, Profile};
+
+use crate::cparse::Program;
+
+/// Convenience: run `main()` and return the profile.
+pub fn profile_program(program: &Program) -> Result<Profile, InterpError> {
+    let mut interp = Interp::new(program);
+    interp.run_main()?;
+    Ok(interp.into_profile())
+}

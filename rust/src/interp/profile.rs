@@ -1,0 +1,122 @@
+//! Per-loop dynamic profile counters.
+//!
+//! Counters are attributed to **every loop on the active loop stack**, so
+//! an outer loop's numbers include its inner loops — matching how the
+//! paper treats a nested loop statement as one offloadable unit.
+
+use std::collections::BTreeMap;
+
+use crate::cparse::ast::LoopId;
+
+/// Footprint of one array inside one loop: contiguous index range touched.
+/// (min..=max is the right approximation for the affine accesses MiniC
+/// apps make; the HLS local-memory sizing uses it too.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Footprint {
+    pub min_idx: i64,
+    pub max_idx: i64,
+    pub elem_bytes: u64,
+    /// raw access count (reads + writes)
+    pub accesses: u64,
+}
+
+impl Footprint {
+    pub fn bytes(&self) -> u64 {
+        if self.max_idx < self.min_idx {
+            0
+        } else {
+            (self.max_idx - self.min_idx + 1) as u64 * self.elem_bytes
+        }
+    }
+}
+
+/// Dynamic counters for one loop statement.
+#[derive(Debug, Clone, Default)]
+pub struct LoopProfile {
+    /// times the loop statement was entered
+    pub entries: u64,
+    /// total iterations across all entries
+    pub iterations: u64,
+    /// floating-point arithmetic ops (adds/subs/muls/divs)
+    pub flops: u64,
+    /// builtin math calls (sin/cos/sqrt/...), counted separately: they
+    /// cost tens of CPU cycles but one pipelined FPGA core
+    pub math_calls: u64,
+    /// integer arithmetic ops
+    pub int_ops: u64,
+    /// array element reads / writes
+    pub mem_reads: u64,
+    pub mem_writes: u64,
+    /// per-array footprint (index ranges)
+    pub footprints: BTreeMap<String, Footprint>,
+}
+
+impl LoopProfile {
+    /// Total bytes moved by array accesses (counting each access).
+    pub fn traffic_bytes(&self) -> u64 {
+        self.footprints
+            .values()
+            .map(|f| f.accesses * f.elem_bytes)
+            .sum()
+    }
+
+    /// Distinct bytes touched — the "data size" term of the paper's
+    /// arithmetic intensity (and the H2D/D2H transfer size on offload).
+    pub fn footprint_bytes(&self) -> u64 {
+        self.footprints.values().map(Footprint::bytes).sum()
+    }
+
+    /// All float work including builtin math calls.
+    pub fn total_flops(&self) -> u64 {
+        self.flops + self.math_calls
+    }
+}
+
+/// Whole-program dynamic profile.
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    pub loops: BTreeMap<LoopId, LoopProfile>,
+    /// program-wide totals (for the all-CPU baseline time)
+    pub total_flops: u64,
+    pub total_math_calls: u64,
+    pub total_int_ops: u64,
+    pub total_mem_reads: u64,
+    pub total_mem_writes: u64,
+    /// interpreter steps executed (safety-valve metric)
+    pub steps: u64,
+}
+
+impl Profile {
+    pub fn loop_profile(&self, id: LoopId) -> Option<&LoopProfile> {
+        self.loops.get(&id)
+    }
+
+    /// Bytes moved program-wide (4 B/element nominal f32 traffic).
+    pub fn total_traffic_bytes(&self) -> u64 {
+        (self.total_mem_reads + self.total_mem_writes) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprint_bytes() {
+        let f = Footprint { min_idx: 10, max_idx: 19, elem_bytes: 4, accesses: 100 };
+        assert_eq!(f.bytes(), 40);
+        let empty = Footprint { min_idx: 1, max_idx: 0, elem_bytes: 4, accesses: 0 };
+        assert_eq!(empty.bytes(), 0);
+    }
+
+    #[test]
+    fn traffic_vs_footprint() {
+        let mut lp = LoopProfile::default();
+        lp.footprints.insert(
+            "a".into(),
+            Footprint { min_idx: 0, max_idx: 99, elem_bytes: 4, accesses: 1000 },
+        );
+        assert_eq!(lp.footprint_bytes(), 400);
+        assert_eq!(lp.traffic_bytes(), 4000);
+    }
+}

@@ -1,0 +1,266 @@
+//! Loop-statement extraction: walks the AST and records every `for`/`while`
+//! with its nesting context, plus the *canonical* counted form
+//! `for (v = lo; v < hi; v += step)` when the header matches it — the form
+//! the OpenCL generator and the HLS scheduler reason about.
+
+use crate::cparse::ast::*;
+use crate::cparse::error::Pos;
+
+/// Kind of loop statement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopKind {
+    For,
+    While,
+}
+
+/// Canonical counted loop `for (var = lo; var </<= hi; var += step)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CanonicalLoop {
+    pub var: String,
+    pub lo: Expr,
+    pub hi: Expr,
+    /// `true` when the condition is `<=` (trip count = hi - lo + 1).
+    pub inclusive: bool,
+    pub step: i64,
+}
+
+/// One loop statement with its nesting context.
+#[derive(Debug, Clone)]
+pub struct LoopInfo {
+    pub id: LoopId,
+    pub kind: LoopKind,
+    /// Enclosing function name.
+    pub function: String,
+    /// Nesting depth inside the function (0 = outermost loop).
+    pub depth: u32,
+    /// Immediately enclosing loop, if any.
+    pub parent: Option<LoopId>,
+    /// Loops nested directly inside this one.
+    pub children: Vec<LoopId>,
+    pub pos: Pos,
+    /// Canonical counted form, when recognizable.
+    pub canonical: Option<CanonicalLoop>,
+    /// `while` condition (None for `for`).
+    pub while_cond: Option<Expr>,
+    /// For-header as parsed (None for `while`).
+    pub header: Option<ForHeader>,
+    /// Loop body (owned clone — later stages are AST-independent).
+    pub body: Vec<Stmt>,
+    /// Number of statements in the body subtree (size metric).
+    pub body_stmts: usize,
+}
+
+impl LoopInfo {
+    /// Is this an innermost loop (no nested loops)?
+    pub fn is_innermost(&self) -> bool {
+        self.children.is_empty()
+    }
+}
+
+fn canonicalize(header: &ForHeader) -> Option<CanonicalLoop> {
+    // init: `v = lo` (assignment or declaration with init)
+    let (var, lo) = match header.init.as_deref() {
+        Some(Stmt::Assign { target: LValue::Var(v), op: AssignOp::Assign, value, .. }) => {
+            (v.clone(), value.clone())
+        }
+        Some(Stmt::Decl(d)) => (d.name.clone(), d.init.clone()?),
+        _ => return None,
+    };
+    // cond: `v < hi` or `v <= hi`
+    let (hi, inclusive) = match &header.cond {
+        Some(Expr::Binary(BinOp::Lt, a, b)) if **a == Expr::Var(var.clone()) => {
+            ((**b).clone(), false)
+        }
+        Some(Expr::Binary(BinOp::Le, a, b)) if **a == Expr::Var(var.clone()) => {
+            ((**b).clone(), true)
+        }
+        _ => return None,
+    };
+    // step: `v += k` / `v = v + k`
+    let step = match header.step.as_deref() {
+        Some(Stmt::Assign { target: LValue::Var(v), op: AssignOp::AddAssign, value: Expr::IntLit(k), .. })
+            if *v == var => *k,
+        Some(Stmt::Assign { target: LValue::Var(v), op: AssignOp::Assign, value, .. }) if *v == var => {
+            match value {
+                Expr::Binary(BinOp::Add, a, b)
+                    if **a == Expr::Var(var.clone()) =>
+                {
+                    if let Expr::IntLit(k) = **b { k } else { return None }
+                }
+                _ => return None,
+            }
+        }
+        _ => return None,
+    };
+    if step <= 0 {
+        return None;
+    }
+    Some(CanonicalLoop { var, lo, hi, inclusive, step })
+}
+
+fn count_stmts(body: &[Stmt]) -> usize {
+    let mut n = 0;
+    for s in body {
+        s.walk(&mut |_| n += 1);
+    }
+    n
+}
+
+struct Walker {
+    out: Vec<LoopInfo>,
+    function: String,
+    stack: Vec<LoopId>,
+}
+
+impl Walker {
+    fn visit_all(&mut self, body: &[Stmt]) {
+        for s in body {
+            self.visit(s);
+        }
+    }
+
+    fn visit(&mut self, s: &Stmt) {
+        match s {
+            Stmt::For { id, header, body, pos } => {
+                self.push_loop(LoopInfo {
+                    id: *id,
+                    kind: LoopKind::For,
+                    function: self.function.clone(),
+                    depth: self.stack.len() as u32,
+                    parent: self.stack.last().copied(),
+                    children: Vec::new(),
+                    pos: *pos,
+                    canonical: canonicalize(header),
+                    while_cond: None,
+                    header: Some(header.clone()),
+                    body: body.clone(),
+                    body_stmts: count_stmts(body),
+                });
+                self.stack.push(*id);
+                self.visit_all(body);
+                self.stack.pop();
+            }
+            Stmt::While { id, cond, body, pos } => {
+                self.push_loop(LoopInfo {
+                    id: *id,
+                    kind: LoopKind::While,
+                    function: self.function.clone(),
+                    depth: self.stack.len() as u32,
+                    parent: self.stack.last().copied(),
+                    children: Vec::new(),
+                    pos: *pos,
+                    canonical: None,
+                    while_cond: Some(cond.clone()),
+                    header: None,
+                    body: body.clone(),
+                    body_stmts: count_stmts(body),
+                });
+                self.stack.push(*id);
+                self.visit_all(body);
+                self.stack.pop();
+            }
+            Stmt::If { then_branch, else_branch, .. } => {
+                self.visit_all(then_branch);
+                self.visit_all(else_branch);
+            }
+            Stmt::Block(body) => self.visit_all(body),
+            _ => {}
+        }
+    }
+
+    fn push_loop(&mut self, info: LoopInfo) {
+        if let Some(pid) = info.parent {
+            if let Some(p) = self.out.iter_mut().find(|l| l.id == pid) {
+                p.children.push(info.id);
+            }
+        }
+        self.out.push(info);
+    }
+}
+
+/// Extract every loop statement in the program, in source (LoopId) order.
+pub fn extract(program: &Program) -> Vec<LoopInfo> {
+    let mut w = Walker { out: Vec::new(), function: String::new(), stack: Vec::new() };
+    for f in &program.functions {
+        self_assert_stack_empty(&w);
+        w.function = f.name.clone();
+        w.visit_all(&f.body);
+    }
+    w.out.sort_by_key(|l| l.id);
+    w.out
+}
+
+fn self_assert_stack_empty(w: &Walker) {
+    debug_assert!(w.stack.is_empty(), "loop stack must reset between functions");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+
+    fn loops(src: &str) -> Vec<LoopInfo> {
+        extract(&parse(src).unwrap())
+    }
+
+    #[test]
+    fn extracts_nesting_structure() {
+        let l = loops(
+            "void f(int n) { int i; int j; \
+             for (i = 0; i < n; i++) { for (j = 0; j < n; j++) { } } \
+             for (i = 0; i < n; i++) { } }",
+        );
+        assert_eq!(l.len(), 3);
+        assert_eq!(l[0].depth, 0);
+        assert_eq!(l[1].depth, 1);
+        assert_eq!(l[1].parent, Some(l[0].id));
+        assert_eq!(l[0].children, vec![l[1].id]);
+        assert_eq!(l[2].depth, 0);
+        assert!(l[1].is_innermost());
+        assert!(!l[0].is_innermost());
+    }
+
+    #[test]
+    fn canonical_for_recognized() {
+        let l = loops("void f(int n) { int i; for (i = 0; i < n; i++) { } }");
+        let c = l[0].canonical.as_ref().unwrap();
+        assert_eq!(c.var, "i");
+        assert_eq!(c.step, 1);
+        assert!(!c.inclusive);
+    }
+
+    #[test]
+    fn canonical_variants() {
+        let l = loops(
+            "void f(int n) { \
+             for (int i = 2; i <= n; i += 3) { } \
+             for (int j = 0; j < n; j = j + 2) { } }",
+        );
+        let c0 = l[0].canonical.as_ref().unwrap();
+        assert_eq!((c0.step, c0.inclusive), (3, true));
+        assert_eq!(c0.lo, crate::cparse::Expr::IntLit(2));
+        let c1 = l[1].canonical.as_ref().unwrap();
+        assert_eq!(c1.step, 2);
+    }
+
+    #[test]
+    fn non_canonical_forms_rejected() {
+        // decreasing loop and while: no canonical form
+        let l = loops(
+            "void f(int n) { int i; \
+             for (i = n; i > 0; i -= 1) { } \
+             while (n > 0) { n -= 1; } }",
+        );
+        assert!(l[0].canonical.is_none());
+        assert_eq!(l[1].kind, LoopKind::While);
+        assert!(l[1].canonical.is_none());
+    }
+
+    #[test]
+    fn loops_inside_if_found() {
+        let l = loops(
+            "void f(int n) { int i; if (n > 0) { for (i = 0; i < n; i++) { } } }",
+        );
+        assert_eq!(l.len(), 1);
+    }
+}

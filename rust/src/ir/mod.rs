@@ -1,0 +1,39 @@
+//! Loop-nest IR: what Step 1 of the paper's flow extracts from the AST.
+//!
+//! * [`loops`] — every loop statement with nesting structure and the
+//!   canonical counted-loop header when one exists;
+//! * [`varref`] — per-loop variable/array reference sets (the paper:
+//!   "for 文内で使われる変数データ等の、プログラム構造を把握する");
+//! * [`deps`] — conservative dependence analysis deciding which loops are
+//!   parallelizable / FPGA-offloadable, with reduction recognition.
+
+pub mod deps;
+pub mod funcblock;
+pub mod loops;
+pub mod varref;
+
+pub use deps::{DepAnalysis, Reduction};
+pub use loops::{CanonicalLoop, LoopInfo, LoopKind};
+pub use varref::LoopRefs;
+
+use crate::cparse::Program;
+
+/// Full per-loop analysis bundle used by the rest of the pipeline.
+#[derive(Debug, Clone)]
+pub struct LoopAnalysis {
+    pub info: LoopInfo,
+    pub refs: LoopRefs,
+    pub deps: DepAnalysis,
+}
+
+/// Analyze every loop in the program (Step 1 output).
+pub fn analyze(program: &Program) -> Vec<LoopAnalysis> {
+    loops::extract(program)
+        .into_iter()
+        .map(|info| {
+            let refs = varref::collect(&info);
+            let deps = deps::analyze(&info, &refs);
+            LoopAnalysis { info, refs, deps }
+        })
+        .collect()
+}

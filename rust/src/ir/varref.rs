@@ -1,0 +1,239 @@
+//! Per-loop variable/array reference collection (Step 1: "変数参照関係").
+//!
+//! For a loop body we record which arrays are read/written together with
+//! the index expressions used, which scalars are read/written, which
+//! scalars are *declared inside* the body (privatizable), and which
+//! functions are called.  The OpenCL generator derives kernel arguments
+//! from exactly this set; the dependence analysis consumes it too.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cparse::ast::*;
+
+use super::loops::LoopInfo;
+
+/// Reference sets of one loop body (including nested loops).
+#[derive(Debug, Clone, Default)]
+pub struct LoopRefs {
+    /// array name -> index expressions used in reads
+    pub array_reads: BTreeMap<String, Vec<Expr>>,
+    /// array name -> index expressions used in writes
+    pub array_writes: BTreeMap<String, Vec<Expr>>,
+    pub scalar_reads: BTreeSet<String>,
+    pub scalar_writes: BTreeSet<String>,
+    /// scalars declared inside the loop body (private per iteration)
+    pub locals: BTreeSet<String>,
+    /// called function names (including math builtins)
+    pub calls: BTreeSet<String>,
+}
+
+/// Math builtins the interpreter / OpenCL / HLS all understand.
+pub const BUILTINS: &[&str] = &[
+    "sin", "cos", "sqrt", "fabs", "exp", "floor", "fmin", "fmax",
+];
+
+pub fn is_builtin(name: &str) -> bool {
+    BUILTINS.contains(&name)
+}
+
+impl LoopRefs {
+    /// All arrays touched (read or written).
+    pub fn arrays(&self) -> BTreeSet<String> {
+        self.array_reads
+            .keys()
+            .chain(self.array_writes.keys())
+            .cloned()
+            .collect()
+    }
+
+    /// Scalars read before any write and not declared locally —
+    /// these must be passed *into* a generated kernel.
+    pub fn free_scalars(&self) -> BTreeSet<String> {
+        self.scalar_reads
+            .union(&self.scalar_writes)
+            .filter(|s| !self.locals.contains(*s))
+            .cloned()
+            .collect()
+    }
+
+    /// Non-builtin calls — a loop making these cannot be offloaded.
+    pub fn non_builtin_calls(&self) -> BTreeSet<String> {
+        self.calls
+            .iter()
+            .filter(|c| !is_builtin(c))
+            .cloned()
+            .collect()
+    }
+
+    fn read_expr(&mut self, e: &Expr) {
+        e.walk(&mut |e| match e {
+            Expr::Var(n) => {
+                self.scalar_reads.insert(n.clone());
+            }
+            Expr::Index(n, i) => {
+                self.array_reads.entry(n.clone()).or_default().push((**i).clone());
+            }
+            Expr::Call(f, _) => {
+                self.calls.insert(f.clone());
+            }
+            _ => {}
+        });
+    }
+
+    fn visit(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Decl(d) => {
+                self.locals.insert(d.name.clone());
+                if let Some(init) = &d.init {
+                    self.read_expr(init);
+                }
+            }
+            Stmt::Assign { target, op, value, .. } => {
+                self.read_expr(value);
+                match target {
+                    LValue::Var(n) => {
+                        self.scalar_writes.insert(n.clone());
+                        // compound assignment also reads the target
+                        if *op != AssignOp::Assign {
+                            self.scalar_reads.insert(n.clone());
+                        }
+                    }
+                    LValue::Index(n, i) => {
+                        self.read_expr(i);
+                        self.array_writes.entry(n.clone()).or_default().push((**i).clone());
+                        if *op != AssignOp::Assign {
+                            self.array_reads.entry(n.clone()).or_default().push((**i).clone());
+                        }
+                    }
+                }
+            }
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                self.read_expr(cond);
+                for s in then_branch.iter().chain(else_branch) {
+                    self.visit(s);
+                }
+            }
+            Stmt::For { header, body, .. } => {
+                if let Some(s) = &header.init {
+                    self.visit(s);
+                }
+                if let Some(c) = &header.cond {
+                    self.read_expr(c);
+                }
+                if let Some(s) = &header.step {
+                    self.visit(s);
+                }
+                for s in body {
+                    self.visit(s);
+                }
+            }
+            Stmt::While { cond, body, .. } => {
+                self.read_expr(cond);
+                for s in body {
+                    self.visit(s);
+                }
+            }
+            Stmt::Return(e, _) => {
+                if let Some(e) = e {
+                    self.read_expr(e);
+                }
+            }
+            Stmt::Expr(e, _) => self.read_expr(e),
+            Stmt::Block(body) => {
+                for s in body {
+                    self.visit(s);
+                }
+            }
+        }
+    }
+}
+
+/// Collect reference sets for one loop (its whole body subtree).
+pub fn collect(info: &LoopInfo) -> LoopRefs {
+    let mut refs = LoopRefs::default();
+    // the loop's own counter is a local of the loop for kernel purposes
+    if let Some(c) = &info.canonical {
+        refs.locals.insert(c.var.clone());
+        refs.read_expr(&c.lo);
+        refs.read_expr(&c.hi);
+    }
+    for s in &info.body {
+        refs.visit(s);
+    }
+    refs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+    use crate::ir::loops;
+
+    fn refs_of(src: &str, idx: usize) -> LoopRefs {
+        let p = parse(src).unwrap();
+        let l = loops::extract(&p);
+        collect(&l[idx])
+    }
+
+    #[test]
+    fn collects_array_reads_and_writes() {
+        let r = refs_of(
+            "void f(float a[], float b[], int n) { int i; \
+             for (i = 0; i < n; i++) { a[i] = b[i] * 2.0; } }",
+            0,
+        );
+        assert!(r.array_writes.contains_key("a"));
+        assert!(r.array_reads.contains_key("b"));
+        assert!(!r.array_reads.contains_key("a"));
+        assert_eq!(r.arrays().len(), 2);
+    }
+
+    #[test]
+    fn compound_assign_reads_target() {
+        let r = refs_of(
+            "void f(float a[], int n) { int i; \
+             for (i = 0; i < n; i++) { a[i] += 1.0; } }",
+            0,
+        );
+        assert!(r.array_reads.contains_key("a"));
+        assert!(r.array_writes.contains_key("a"));
+    }
+
+    #[test]
+    fn locals_are_private() {
+        let r = refs_of(
+            "void f(float a[], int n) { int i; \
+             for (i = 0; i < n; i++) { float t; t = a[i]; a[i] = t * t; } }",
+            0,
+        );
+        assert!(r.locals.contains("t"));
+        assert!(r.locals.contains("i"), "loop counter is private");
+        assert!(!r.free_scalars().contains("t"));
+        assert!(r.free_scalars().contains("n"));
+    }
+
+    #[test]
+    fn builtin_vs_user_calls() {
+        let r = refs_of(
+            "void f(float a[], int n) { int i; \
+             for (i = 0; i < n; i++) { a[i] = sin(a[i]) + helper(i); } }",
+            0,
+        );
+        assert!(r.calls.contains("sin"));
+        assert_eq!(r.non_builtin_calls().into_iter().collect::<Vec<_>>(), vec!["helper"]);
+    }
+
+    #[test]
+    fn nested_loop_refs_roll_up() {
+        let r = refs_of(
+            "void f(float a[], float b[], float c[], int n) { int i; int j; \
+             for (i = 0; i < n; i++) { \
+               for (j = 0; j < n; j++) { c[i * n + j] = a[i] + b[j]; } } }",
+            0,
+        );
+        assert_eq!(r.arrays().len(), 3);
+        assert!(r.locals.contains("i"));
+        // j is declared outside both loops, so it is free for the outer loop
+        assert!(r.free_scalars().contains("j"));
+    }
+}

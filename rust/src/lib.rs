@@ -1,0 +1,40 @@
+//! # flopt — automatic FPGA offloading of application loop statements
+//!
+//! Reproduction of Yamato, *"Evaluation of Automatic FPGA Offloading for
+//! Loop Statements of Applications"* (2020).  Given unmodified C-subset
+//! application source, the coordinator finds the loop statements worth
+//! offloading to an FPGA, generates OpenCL for them, and searches for the
+//! fastest offload pattern while keeping the number of (simulated,
+//! hours-long) full FPGA compiles tiny.
+//!
+//! The crate is the **L3 Rust coordinator** of a three-layer stack:
+//!
+//! * L1 — Pallas kernels (`python/compile/kernels/`), the "FPGA bitstream"
+//!   equivalents of the two paper workloads (tdfir, MRI-Q), AOT-lowered to
+//!   HLO text.
+//! * L2 — JAX whole-app graphs (`python/compile/model.py`).
+//! * L3 — this crate: parsing, profiling, narrowing, OpenCL generation,
+//!   HLS pre-compile simulation, the Arria10 board model, and the
+//!   verification-environment search.  Offloaded-loop numerics execute
+//!   through the PJRT runtime ([`runtime`]) against the L1 artifacts.
+//!
+//! See `DESIGN.md` for the full system inventory and the paper→module map.
+
+pub mod apps;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod cparse;
+pub mod cpu;
+pub mod fpga;
+pub mod hls;
+pub mod intensity;
+pub mod interp;
+pub mod ir;
+pub mod metrics;
+pub mod opencl;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

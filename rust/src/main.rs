@@ -1,0 +1,297 @@
+//! flopt CLI — the leader entrypoint.
+//!
+//! ```text
+//! flopt apps                       list registered applications
+//! flopt env                        print the Fig-3 testbed table
+//! flopt analyze <app>              Steps 1-2: loops, intensity ranking
+//! flopt offload <app> [opts]       full offload search (paper Fig 2)
+//! flopt opencl <app>               print generated OpenCL for the solution
+//! flopt verify <app>               PJRT numerics cross-check of the hot loop
+//! flopt compare <app>              proposed vs GA vs exhaustive vs naive
+//! ```
+//!
+//! Options for `offload`/`compare`: `--a N --b N --c N --d N --lanes N
+//! --full-scale` (default runs the paper's a=5, b=1, c=3, d=4 at test
+//! scale; `--full-scale` uses the paper-sized workloads).
+
+use flopt::apps;
+use flopt::baselines;
+use flopt::config::{fig3_table, SearchConfig};
+use flopt::coordinator::pipeline::{analyze_app, offload_search, search_with_analysis};
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+use flopt::intensity;
+use flopt::runtime::{default_artifact_dir, Runtime};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: flopt <command> [args]\n\
+         commands:\n\
+         \x20 apps                      list applications\n\
+         \x20 env                       print the Fig-3 testbed table\n\
+         \x20 analyze <app>             loop + intensity analysis\n\
+         \x20 offload <app> [opts]      full offload search\n\
+         \x20 opencl <app> [opts]       print the solution's OpenCL\n\
+         \x20 verify <app>              PJRT numerics cross-check\n\
+         \x20 compare <app> [opts]      proposed vs baselines\n\
+         \x20 blocks <app>              functional-block detection (Step 1)\n\
+         \x20 adapt <app> [opts]        Steps 4-6: size, place, verify operation\n\
+         opts: --a N --b N --c N --d N --lanes N --full-scale"
+    );
+    std::process::exit(2);
+}
+
+struct Opts {
+    app: Option<String>,
+    cfg: SearchConfig,
+    full_scale: bool,
+}
+
+fn parse_opts(args: &[String]) -> Opts {
+    let mut cfg = SearchConfig::default();
+    let mut app = None;
+    let mut full_scale = false;
+    let mut i = 0;
+    while i < args.len() {
+        let take = |i: &mut usize| -> usize {
+            *i += 1;
+            args.get(*i)
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| usage())
+        };
+        match args[i].as_str() {
+            "--a" => cfg.a_intensity = take(&mut i),
+            "--b" => cfg.b_unroll = take(&mut i),
+            "--c" => cfg.c_efficiency = take(&mut i),
+            "--d" => cfg.d_patterns = take(&mut i),
+            "--lanes" => cfg.compile_parallelism = take(&mut i),
+            "--full-scale" => full_scale = true,
+            s if !s.starts_with('-') && app.is_none() => app = Some(s.to_string()),
+            _ => usage(),
+        }
+        i += 1;
+    }
+    Opts { app, cfg, full_scale }
+}
+
+fn get_app(opts: &Opts) -> &'static apps::App {
+    let name = opts.app.as_deref().unwrap_or_else(|| usage());
+    apps::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown app `{name}`; try `flopt apps`");
+        std::process::exit(2);
+    })
+}
+
+fn main() -> flopt::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let opts = parse_opts(&args[1..]);
+
+    match cmd.as_str() {
+        "apps" => {
+            for a in apps::all() {
+                let loops = a.parse().loop_count();
+                println!(
+                    "{:<12} {:>3} loops  {}{}",
+                    a.name,
+                    loops,
+                    a.description,
+                    a.paper_loop_count
+                        .map(|n| format!("  [paper: {n}]"))
+                        .unwrap_or_default()
+                );
+            }
+        }
+        "env" => {
+            println!("{}", fig3_table());
+            println!(
+                "FPGA model: {} | base fmax {:.0} MHz | PCIe {:.1} GB/s",
+                ARRIA10_GX.name,
+                ARRIA10_GX.base_fmax_hz / 1e6,
+                ARRIA10_GX.pcie_bw_bytes_per_s / 1e9
+            );
+            println!("CPU model:  {}", XEON_3104.name);
+        }
+        "analyze" => {
+            let app = get_app(&opts);
+            let analysis = analyze_app(app, !opts.full_scale)?;
+            println!(
+                "{}: {} loop statements",
+                app.name,
+                analysis.program.loop_count()
+            );
+            let mut ints = analysis.intensities.clone();
+            ints.sort_by(|a, b| b.intensity.partial_cmp(&a.intensity).unwrap());
+            println!(
+                "{:<6} {:<14} {:>10} {:>12} {:>12} {:>10}  {}",
+                "loop", "function", "trips", "flops", "footprintB", "intensity", "offloadable"
+            );
+            for l in &ints {
+                println!(
+                    "{:<6} {:<14} {:>10} {:>12} {:>12} {:>10.2}  {}",
+                    l.id.to_string(),
+                    l.function,
+                    l.trips,
+                    l.flops,
+                    l.footprint_bytes,
+                    l.intensity,
+                    l.offloadable
+                );
+            }
+            let top = intensity::top_a(&analysis.intensities, &analysis.loops, opts.cfg.a_intensity);
+            println!(
+                "top-{}: {:?}",
+                opts.cfg.a_intensity,
+                top.iter().map(|l| l.id.to_string()).collect::<Vec<_>>()
+            );
+        }
+        "offload" => {
+            let app = get_app(&opts);
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+            let trace = offload_search(app, &env, !opts.full_scale)?;
+            println!("{}", trace.render());
+        }
+        "opencl" => {
+            let app = get_app(&opts);
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+            let trace = offload_search(app, &env, !opts.full_scale)?;
+            match trace.best {
+                Some(best) => {
+                    let code = trace
+                        .opencl
+                        .iter()
+                        .find(|c| c.pattern == best.pattern)
+                        .expect("solution has generated OpenCL");
+                    println!("// ===== {}.cl =====", best.pattern.label());
+                    println!("{}", code.cl_source());
+                    println!("// ===== host.c =====");
+                    println!("{}", code.host);
+                }
+                None => println!("no improving pattern found"),
+            }
+        }
+        "verify" => {
+            let app = get_app(&opts);
+            let rt = Runtime::load(default_artifact_dir())?;
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+            let check = env.check_numerics(app, &rt)?;
+            println!(
+                "artifact {}: {} elements, max|fpga-cpu| = {:.3e}, max|pallas-jnp| = {:.3e} -> {}",
+                check.artifact,
+                check.elements,
+                check.max_abs_err,
+                check.max_abs_err_vs_cpu_artifact,
+                if check.passed { "PASS" } else { "FAIL" }
+            );
+            if !check.passed {
+                std::process::exit(1);
+            }
+        }
+        "blocks" => {
+            let app = get_app(&opts);
+            let program = app.parse();
+            let loops = flopt::ir::analyze(&program);
+            let matches = flopt::ir::funcblock::detect(&loops, 0.90);
+            if matches.is_empty() {
+                println!("no functional blocks recognized (threshold 0.90)");
+            }
+            for m in matches {
+                println!(
+                    "{}: {} (similarity {:.3}){}",
+                    m.loop_id,
+                    m.block,
+                    m.similarity,
+                    m.artifact
+                        .map(|a| format!("  [pre-optimized artifact: {a}]"))
+                        .unwrap_or_default()
+                );
+            }
+        }
+        "adapt" => {
+            let app = get_app(&opts);
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+            let trace = offload_search(app, &env, !opts.full_scale)?;
+            let Some(best) = &trace.best else {
+                println!("no improving pattern — nothing to deploy");
+                return Ok(());
+            };
+            println!("solution pattern: {} ({:.2}x)", best.pattern, best.speedup);
+            let plan = flopt::coordinator::adapt::adapt(
+                app,
+                best,
+                &ARRIA10_GX,
+                &flopt::coordinator::adapt::demo_sites(),
+                /*target_rps=*/ 200.0,
+                /*max_latency_ms=*/ 100.0,
+                &env.clock,
+            )?;
+            println!(
+                "step 4 — resources: {} instance(s)/board, {} board(s), {:.0} runs/s provisioned",
+                plan.resources.instances_per_board,
+                plan.resources.boards,
+                plan.resources.provisioned_rps
+            );
+            match &plan.placement {
+                Some(p) => println!(
+                    "step 5 — placement: {} ({} boards, est latency {:.1} ms)",
+                    p.site, p.boards, p.est_latency_ms
+                ),
+                None => println!("step 5 — placement: NO feasible site"),
+            }
+            println!("step 6 — operation verification:");
+            for c in &plan.verification {
+                println!(
+                    "  {:<24} ref={:.6e} got={:.6e} {}",
+                    c.case,
+                    c.reference,
+                    c.observed,
+                    if c.passed { "PASS" } else { "FAIL" }
+                );
+            }
+        }
+        "compare" => {
+            let app = get_app(&opts);
+            let analysis = analyze_app(app, !opts.full_scale)?;
+            println!(
+                "{:<12} {:>9} {:>8} {:>14}",
+                "method", "speedup", "evals", "compile-hours"
+            );
+            {
+                let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+                let t = search_with_analysis(app, &analysis, &env, &opts.cfg)?;
+                println!(
+                    "{:<12} {:>9.2} {:>8} {:>14.1}",
+                    "proposed",
+                    t.speedup(),
+                    t.patterns_measured(),
+                    t.compile_hours
+                );
+            }
+            for (name, out) in [
+                ("ga", {
+                    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+                    baselines::ga::search(&analysis, &env, &baselines::ga::GaConfig::default())
+                }),
+                ("exhaustive", {
+                    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+                    baselines::exhaustive::search(&analysis, &env)
+                }),
+                ("naive-all", {
+                    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+                    baselines::naive::search(&analysis, &env)
+                }),
+            ] {
+                println!(
+                    "{:<12} {:>9.2} {:>8} {:>14.1}",
+                    name,
+                    out.speedup(),
+                    out.evaluations,
+                    out.compile_hours
+                );
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! This is the only place the L3 coordinator touches XLA.  Python never
+//! runs here — artifacts are compiled once at build time (`make
+//! artifacts`) and the manifest + HLO text are all the rust binary needs.
+//!
+//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax ≥0.5
+//! serialized protos with 64-bit instruction ids; the text parser
+//! reassigns ids — see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::json;
+
+/// I/O signature of one artifact (from `manifest.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// input shapes (all f32, rank-1 for the paper workloads)
+    pub input_shapes: Vec<Vec<usize>>,
+    pub num_outputs: usize,
+}
+
+/// PJRT CPU client + compiled-executable cache over an artifact dir.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`).
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut specs = HashMap::new();
+        for (name, entry) in doc.as_obj().ok_or_else(|| anyhow!("manifest must be an object"))? {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact `{name}`: missing file"))?
+                .to_string();
+            let input_shapes = entry
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("artifact `{name}`: missing inputs"))?
+                .iter()
+                .map(|inp| {
+                    inp.get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                        .ok_or_else(|| anyhow!("artifact `{name}`: bad shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>, _>>()?;
+            let num_outputs = entry
+                .get("num_outputs")
+                .and_then(|n| n.as_usize())
+                .ok_or_else(|| anyhow!("artifact `{name}`: missing num_outputs"))?;
+            specs.insert(
+                name.clone(),
+                ArtifactSpec { name: name.clone(), file, input_shapes, num_outputs },
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, specs, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    fn executable(
+        &self,
+        name: &str,
+    ) -> crate::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().expect("poisoned").get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling `{name}`: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .expect("poisoned")
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with f32 inputs; returns the flattened f32
+    /// outputs.  Input lengths must match the manifest shapes.
+    pub fn execute_f32(&self, name: &str, inputs: &[Vec<f32>]) -> crate::Result<Vec<Vec<f32>>> {
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .clone();
+        if inputs.len() != spec.input_shapes.len() {
+            bail!(
+                "`{name}` expects {} inputs, got {}",
+                spec.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&spec.input_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                bail!("`{name}` input {i}: expected {want} elements, got {}", data.len());
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+            let lit = lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing `{name}`: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != spec.num_outputs {
+            bail!("`{name}`: expected {} outputs, got {}", spec.num_outputs, parts.len());
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Default artifact dir: `$FLOPT_ARTIFACTS` or `artifacts/` under the
+/// crate root (where `make artifacts` writes).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("FLOPT_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full end-to-end numerics live in rust/tests/runtime_artifacts.rs
+    // (they need `make artifacts`).  Here: manifest parsing only.
+
+    #[test]
+    fn manifest_parse_errors_are_reported() {
+        let dir = std::env::temp_dir().join("flopt-runtime-test");
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+        let err = match Runtime::load(&dir) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("bad manifest must fail"),
+        };
+        assert!(err.contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = match Runtime::load("/nonexistent-dir-xyz") {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("missing dir must fail"),
+        };
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn default_dir_is_stable() {
+        let d = default_artifact_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+}

@@ -1,0 +1,85 @@
+//! Tiny measurement harness (criterion is unavailable offline).
+//!
+//! `benches/*.rs` are `harness = false` binaries; they use [`time_it`] for
+//! wall-clock medians and print the paper-table rows directly.
+
+use std::time::Instant;
+
+/// Result of a timed measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: usize,
+}
+
+/// Run `f` for `iters` timed iterations (after one warmup) and report
+/// median/min/max wall-clock seconds.
+pub fn time_it<T>(iters: usize, mut f: impl FnMut() -> T) -> Timing {
+    assert!(iters >= 1);
+    let _warmup = f();
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            let r = f();
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(r);
+            dt
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        median_s: samples[samples.len() / 2],
+        min_s: samples[0],
+        max_s: *samples.last().unwrap(),
+        iters,
+    }
+}
+
+/// Pretty seconds (auto unit).
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Simulated hours → human string (benches report the paper's compile
+/// hours from the simulated clock).
+pub fn fmt_sim_hours(h: f64) -> String {
+    if h >= 1.0 {
+        format!("{h:.1} h")
+    } else {
+        format!("{:.0} min", h * 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_sane() {
+        let t = time_it(5, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert!(t.min_s <= t.median_s && t.median_s <= t.max_s);
+        assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_s(2.0).ends_with(" s"));
+        assert!(fmt_s(2e-3).ends_with(" ms"));
+        assert!(fmt_s(2e-6).ends_with(" µs"));
+        assert!(fmt_s(2e-9).ends_with(" ns"));
+        assert_eq!(fmt_sim_hours(3.0), "3.0 h");
+        assert_eq!(fmt_sim_hours(0.5), "30 min");
+    }
+}

@@ -1,0 +1,18 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is fully offline (only the `xla` crate closure +
+//! `anyhow` are vendored), so the small infrastructure pieces a crates.io
+//! project would pull in are implemented here instead:
+//!
+//! * [`json`] — minimal JSON parser/writer (reads `artifacts/manifest.json`);
+//! * [`rng`] — SplitMix64/xoshiro-style deterministic PRNG (GA baseline,
+//!   property tests, workload generators);
+//! * [`pool`] — fixed-size worker thread pool (the verification
+//!   environment's compile farm);
+//! * [`bench`] — tiny measurement harness (criterion stand-in) used by
+//!   `benches/*.rs`.
+
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod rng;

