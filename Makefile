@@ -1,0 +1,23 @@
+# Convenience targets. The Rust crate builds fully offline; `artifacts`
+# needs the Python environment (jax) and is only required for the
+# PJRT-backed paths (`flopt verify`, tests behind the `xla` feature).
+
+.PHONY: build test artifacts bench clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+bench:
+	cargo bench --bench fig4_speedup
+	cargo bench --bench narrowing
+	cargo bench --bench automation_time
+
+clean:
+	cargo clean
+	rm -rf artifacts

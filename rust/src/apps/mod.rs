@@ -30,11 +30,15 @@ pub struct ArtifactBinding {
 /// One registered application.
 #[derive(Debug, Clone)]
 pub struct App {
+    /// Registry name (the CLI's `<app>` argument).
     pub name: &'static str,
+    /// One-line description shown by `flopt apps`.
     pub description: &'static str,
+    /// Embedded MiniC source.
     pub source: &'static str,
     /// loop count the paper reports (None for the extra apps)
     pub paper_loop_count: Option<usize>,
+    /// PJRT artifact binding for the hot loop, when one exists.
     pub binding: Option<ArtifactBinding>,
     /// global scalar overrides that shrink the problem for fast tests
     pub test_scale: &'static [(&'static str, i64)],

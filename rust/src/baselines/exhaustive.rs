@@ -11,6 +11,7 @@ use super::{candidate_pool, reports_for, BaselineOutcome};
 /// Cap on the pool size (2^n subsets — keep the simulation bounded).
 pub const MAX_POOL: usize = 12;
 
+/// Compile + measure every non-empty subset of the candidate pool.
 pub fn search(analysis: &AppAnalysis, env: &VerifyEnv<'_>) -> BaselineOutcome {
     let mut pool = candidate_pool(analysis);
     pool.truncate(MAX_POOL);

@@ -19,10 +19,15 @@ use super::{candidate_pool, reports_for, BaselineOutcome};
 /// GA parameters (defaults follow the GPU paper's modest settings).
 #[derive(Debug, Clone)]
 pub struct GaConfig {
+    /// Genomes per generation.
     pub population: usize,
+    /// Generations to evolve.
     pub generations: usize,
+    /// Single-point crossover probability.
     pub crossover_p: f64,
+    /// Per-bit mutation probability.
     pub mutation_p: f64,
+    /// PRNG seed (runs are deterministic per seed).
     pub seed: u64,
 }
 
@@ -116,13 +121,13 @@ pub fn search(
             next.push(g.clone());
         }
         while next.len() < cfg.population {
-            let pick = |rng: &mut Rng| -> &Genome {
-                let a = &scored[rng.below(scored.len() as u64) as usize];
-                let b = &scored[rng.below(scored.len() as u64) as usize];
-                if a.0 >= b.0 { &a.1 } else { &b.1 }
+            let mut pick = || -> usize {
+                let a = rng.below(scored.len() as u64) as usize;
+                let b = rng.below(scored.len() as u64) as usize;
+                if scored[a].0 >= scored[b].0 { a } else { b }
             };
-            let pa = pick(&mut rng).clone();
-            let pb = pick(&mut rng).clone();
+            let pa = scored[pick()].1.clone();
+            let pb = scored[pick()].1.clone();
             let mut child = if n > 1 && rng.bool(cfg.crossover_p) {
                 let cut = 1 + rng.below((n - 1) as u64) as usize;
                 let mut c = pa[..cut].to_vec();

@@ -24,16 +24,20 @@ use crate::intensity;
 /// Outcome of a baseline search.
 #[derive(Debug)]
 pub struct BaselineOutcome {
+    /// Which baseline produced this outcome.
     pub method: &'static str,
+    /// Fastest compiled pattern found, if any.
     pub best: Option<PatternMeasurement>,
     /// patterns compiled+measured
     pub evaluations: usize,
     /// simulated wall-clock hours the search took
     pub sim_hours: f64,
+    /// Simulated compile-lane hours burned.
     pub compile_hours: f64,
 }
 
 impl BaselineOutcome {
+    /// Best speedup found (1.0 when nothing improved).
     pub fn speedup(&self) -> f64 {
         self.best.as_ref().map(|b| b.speedup).unwrap_or(1.0)
     }

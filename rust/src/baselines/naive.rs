@@ -9,6 +9,7 @@ use crate::opencl::OffloadPattern;
 
 use super::{candidate_pool, reports_for, BaselineOutcome};
 
+/// Offload every offloadable loop in a single pattern.
 pub fn search(analysis: &AppAnalysis, env: &VerifyEnv<'_>) -> BaselineOutcome {
     let pool = candidate_pool(analysis);
     let reports = reports_for(analysis, env, &pool, 1);

@@ -38,12 +38,19 @@ impl Default for SearchConfig {
 /// One machine row of the paper's Fig 3 environment table.
 #[derive(Debug, Clone)]
 pub struct Machine {
+    /// Role of the machine in the testbed.
     pub name: &'static str,
+    /// Chassis / model.
     pub hardware: &'static str,
+    /// CPU part and clock.
     pub cpu: &'static str,
+    /// Installed memory.
     pub ram: &'static str,
+    /// FPGA board (`-` when absent).
     pub fpga: &'static str,
+    /// Operating system.
     pub os: &'static str,
+    /// FPGA acceleration stack version (`-` when absent).
     pub accel_stack: &'static str,
 }
 

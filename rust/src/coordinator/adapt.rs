@@ -59,7 +59,9 @@ pub fn plan_resources(
 /// A facility-resource-DB entry (Step 5 candidates).
 #[derive(Debug, Clone)]
 pub struct Site {
+    /// Site identifier.
     pub name: &'static str,
+    /// FPGA boards currently free at the site.
     pub free_fpga_boards: usize,
     /// network RTT from the clients this app serves
     pub client_rtt_ms: f64,
@@ -70,8 +72,11 @@ pub struct Site {
 /// Step 5 output.
 #[derive(Debug, Clone)]
 pub struct Placement {
+    /// Chosen site.
     pub site: &'static str,
+    /// Boards reserved there.
     pub boards: usize,
+    /// Estimated client-observed latency (RTT + one app run).
     pub est_latency_ms: f64,
 }
 
@@ -99,6 +104,7 @@ pub fn choose_placement(
 /// One operation-verification test case (the paper's テストケースDB).
 #[derive(Debug, Clone)]
 pub struct TestCase {
+    /// Test-case name (unique within the app's DB).
     pub name: String,
     /// global scalar overrides applied before the run
     pub overrides: Vec<(String, i64)>,
@@ -134,9 +140,13 @@ pub fn default_cases(app: &App) -> Vec<TestCase> {
 /// Step 6 outcome for one case.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
+    /// Name of the executed test case.
     pub case: String,
+    /// All-CPU reference value.
     pub reference: f64,
+    /// Value observed on the deployed configuration.
     pub observed: f64,
+    /// Did the observation match within tolerance?
     pub passed: bool,
 }
 
@@ -175,9 +185,13 @@ pub fn verify_operation(app: &App, clock: &SimClock) -> crate::Result<Vec<CaseRe
 /// The full Step 4→6 adaptation record.
 #[derive(Debug, Clone)]
 pub struct AdaptationPlan {
+    /// The deployed offload pattern.
     pub pattern: Vec<LoopId>,
+    /// Step-4 sizing decision.
     pub resources: ResourcePlan,
+    /// Step-5 placement decision (None when no site fits).
     pub placement: Option<Placement>,
+    /// Step-6 operation-verification results.
     pub verification: Vec<CaseResult>,
 }
 

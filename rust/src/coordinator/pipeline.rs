@@ -20,10 +20,15 @@ use super::verify_env::{PatternMeasurement, VerifyEnv};
 
 /// Step-1/2 analysis products, reusable across searches.
 pub struct AppAnalysis {
+    /// Registry name of the analyzed app.
     pub app_name: String,
+    /// Parsed program.
     pub program: Program,
+    /// Per-loop structural + dependence analysis.
     pub loops: Vec<LoopAnalysis>,
+    /// Dynamic profile of the sample run.
     pub profile: Profile,
+    /// Intensity metrics of every executed loop.
     pub intensities: Vec<LoopIntensity>,
 }
 
@@ -49,10 +54,15 @@ pub fn analyze_app(app: &App, test_scale: bool) -> crate::Result<AppAnalysis> {
 /// and resource efficiency (the paper's 算術強度/リソース量).
 #[derive(Debug, Clone)]
 pub struct CandidateReport {
+    /// The candidate loop.
     pub id: LoopId,
+    /// Arithmetic intensity from the profile.
     pub intensity: f64,
+    /// Device utilization of the pre-compiled kernel.
     pub utilization: f64,
+    /// Resource efficiency: intensity / utilization.
     pub efficiency: f64,
+    /// The full pre-compile report.
     pub hls: HlsReport,
 }
 
@@ -60,6 +70,7 @@ pub struct CandidateReport {
 /// ("算術強度、リソース効率、…途中情報と共に、…性能測定結果を記録").
 #[derive(Debug)]
 pub struct SearchTrace {
+    /// Registry name of the searched app.
     pub app_name: String,
     /// total loop statements discovered (paper: tdfir 36, MRI-Q 16)
     pub loop_count: usize,

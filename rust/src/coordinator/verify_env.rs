@@ -32,6 +32,7 @@ use super::pipeline::AppAnalysis;
 /// Result of compiling + measuring one offload pattern.
 #[derive(Debug, Clone)]
 pub struct PatternMeasurement {
+    /// The measured offload pattern.
     pub pattern: OffloadPattern,
     /// combined device utilization (incl. BSP)
     pub utilization: f64,
@@ -50,29 +51,37 @@ pub struct PatternMeasurement {
 /// Outcome of the PJRT numerics cross-check for a bound hot loop.
 #[derive(Debug, Clone)]
 pub struct NumericsCheck {
+    /// Name of the checked FPGA-variant artifact.
     pub artifact: String,
     /// max |fpga − cpu-interpreter| over all output elements
     pub max_abs_err: f64,
     /// max |fpga − cpu-artifact| (pallas vs pure-jnp via PJRT)
     pub max_abs_err_vs_cpu_artifact: f64,
+    /// Total output elements compared.
     pub elements: usize,
+    /// Did both comparisons stay within tolerance?
     pub passed: bool,
 }
 
 /// The verification environment.
 pub struct VerifyEnv<'a> {
+    /// The FPGA board model patterns compile against.
     pub device: &'a Device,
+    /// The CPU model providing the all-CPU baseline.
     pub cpu: &'a CpuModel,
+    /// Simulated clock tracking automation time.
     pub clock: SimClock,
     cfg: SearchConfig,
 }
 
 impl<'a> VerifyEnv<'a> {
+    /// Build an environment with `cfg.compile_parallelism` compile lanes.
     pub fn new(device: &'a Device, cpu: &'a CpuModel, cfg: SearchConfig) -> Self {
         let clock = SimClock::new(cfg.compile_parallelism.max(1));
         Self { device, cpu, clock, cfg }
     }
 
+    /// The search configuration this environment was built with.
     pub fn config(&self) -> &SearchConfig {
         &self.cfg
     }

@@ -20,9 +20,13 @@ impl std::fmt::Display for LoopId {
 /// Scalar and array types of the MiniC subset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Type {
+    /// `void` (function returns only).
     Void,
+    /// 32-bit integer.
     Int,
+    /// Single-precision float.
     Float,
+    /// Double-precision float.
     Double,
     /// 1-D array; `None` length for array parameters (`float a[]`).
     Array(Box<Type>, Option<usize>),
@@ -40,10 +44,12 @@ impl Type {
         }
     }
 
+    /// Is this `float` or `double`?
     pub fn is_float(&self) -> bool {
         matches!(self, Type::Float | Type::Double)
     }
 
+    /// Is this an array type?
     pub fn is_array(&self) -> bool {
         matches!(self, Type::Array(..))
     }
@@ -51,6 +57,7 @@ impl Type {
 
 /// Binary operators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[allow(missing_docs)] // one-symbol operators; names are the documentation
 pub enum BinOp {
     Add, Sub, Mul, Div, Mod,
     Lt, Le, Gt, Ge, Eq, Ne,
@@ -58,6 +65,7 @@ pub enum BinOp {
 }
 
 impl BinOp {
+    /// Is this one of the arithmetic operators (`+ - * / %`)?
     pub fn is_arith(self) -> bool {
         matches!(self, BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Mod)
     }
@@ -66,30 +74,43 @@ impl BinOp {
 /// Unary operators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum UnOp {
+    /// Arithmetic negation (`-x`).
     Neg,
+    /// Logical not (`!x`).
     Not,
 }
 
 /// Compound-assignment operators (plain `=` is `Assign`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AssignOp {
+    /// `=`
     Assign,
+    /// `+=`
     AddAssign,
+    /// `-=`
     SubAssign,
+    /// `*=`
     MulAssign,
+    /// `/=`
     DivAssign,
 }
 
 /// Expressions.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Expr {
+    /// Integer literal.
     IntLit(i64),
+    /// Floating-point literal.
     FloatLit(f64),
+    /// Scalar variable reference.
     Var(String),
     /// `name[index]`
     Index(String, Box<Expr>),
+    /// Unary operator application.
     Unary(UnOp, Box<Expr>),
+    /// Binary operator application.
     Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// Function call (builtin or user-defined).
     Call(String, Vec<Expr>),
 }
 
@@ -116,11 +137,14 @@ impl Expr {
 /// Assignment target: scalar variable or array element.
 #[derive(Debug, Clone, PartialEq)]
 pub enum LValue {
+    /// Scalar variable target.
     Var(String),
+    /// Array element target (`name[index]`).
     Index(String, Box<Expr>),
 }
 
 impl LValue {
+    /// The assigned variable or array name.
     pub fn name(&self) -> &str {
         match self {
             LValue::Var(n) | LValue::Index(n, _) => n,
@@ -131,9 +155,13 @@ impl LValue {
 /// A variable declaration (local or global).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Decl {
+    /// Declared type.
     pub ty: Type,
+    /// Declared name.
     pub name: String,
+    /// Optional initializer expression.
     pub init: Option<Expr>,
+    /// Source position of the declaration.
     pub pos: Pos,
 }
 
@@ -142,42 +170,68 @@ pub struct Decl {
 /// canonical counted loops without re-pattern-matching.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ForHeader {
+    /// Init clause: declaration or simple statement.
     pub init: Option<Box<Stmt>>,
+    /// Continuation condition.
     pub cond: Option<Expr>,
+    /// Step statement run after each iteration.
     pub step: Option<Box<Stmt>>,
 }
 
 /// Statements.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Stmt {
+    /// Local variable declaration.
     Decl(Decl),
+    /// Assignment (plain or compound) to a scalar or array element.
     Assign {
+        /// Assignment target.
         target: LValue,
+        /// Plain `=` or a compound operator.
         op: AssignOp,
+        /// Right-hand side.
         value: Expr,
+        /// Source position.
         pos: Pos,
     },
+    /// `if`/`else` conditional.
     If {
+        /// Branch condition.
         cond: Expr,
+        /// Statements of the `if` branch.
         then_branch: Vec<Stmt>,
+        /// Statements of the `else` branch (empty when absent).
         else_branch: Vec<Stmt>,
+        /// Source position.
         pos: Pos,
     },
+    /// `for` loop statement.
     For {
+        /// Stable source-ordered loop id.
         id: LoopId,
+        /// The three header clauses.
         header: ForHeader,
+        /// Loop body.
         body: Vec<Stmt>,
+        /// Source position.
         pos: Pos,
     },
+    /// `while` loop statement.
     While {
+        /// Stable source-ordered loop id.
         id: LoopId,
+        /// Continuation condition.
         cond: Expr,
+        /// Loop body.
         body: Vec<Stmt>,
+        /// Source position.
         pos: Pos,
     },
+    /// `return` with optional value.
     Return(Option<Expr>, Pos),
     /// Bare expression statement (usually a call).
     Expr(Expr, Pos),
+    /// Braced statement block.
     Block(Vec<Stmt>),
 }
 
@@ -220,28 +274,38 @@ impl Stmt {
 /// Function parameter.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Param {
+    /// Parameter type (arrays pass by reference).
     pub ty: Type,
+    /// Parameter name.
     pub name: String,
 }
 
 /// Function definition.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Function {
+    /// Return type.
     pub ret: Type,
+    /// Function name.
     pub name: String,
+    /// Parameter list.
     pub params: Vec<Param>,
+    /// Function body statements.
     pub body: Vec<Stmt>,
+    /// Source position of the definition.
     pub pos: Pos,
 }
 
 /// A parsed translation unit.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct Program {
+    /// Global declarations, in source order.
     pub globals: Vec<Decl>,
+    /// Function definitions, in source order.
     pub functions: Vec<Function>,
 }
 
 impl Program {
+    /// Look up a function by name.
     pub fn function(&self, name: &str) -> Option<&Function> {
         self.functions.iter().find(|f| f.name == name)
     }

@@ -6,7 +6,9 @@ use std::fmt;
 /// Line/column position in the source (1-based, like compiler diagnostics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Pos {
+    /// 1-based source line.
     pub line: u32,
+    /// 1-based source column.
     pub col: u32,
 }
 
@@ -19,11 +21,14 @@ impl fmt::Display for Pos {
 /// Error produced by the lexer or parser.
 #[derive(Debug, Clone)]
 pub struct ParseError {
+    /// Where the error was detected.
     pub pos: Pos,
+    /// Human-readable description.
     pub message: String,
 }
 
 impl ParseError {
+    /// Construct an error at `pos`.
     pub fn new(pos: Pos, message: impl Into<String>) -> Self {
         Self { pos, message: message.into() }
     }

@@ -8,6 +8,7 @@ use super::error::{ParseError, Pos};
 
 /// Token kinds.
 #[derive(Debug, Clone, PartialEq)]
+#[allow(missing_docs)] // token names mirror their lexemes
 pub enum Tok {
     // literals / identifiers
     Int(i64),
@@ -31,7 +32,9 @@ pub enum Tok {
 /// A token with its source position.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Token {
+    /// The token kind (and literal payload, if any).
     pub tok: Tok,
+    /// Position of the token's first character.
     pub pos: Pos,
 }
 

@@ -8,6 +8,7 @@ use super::ast::*;
 use super::error::{ParseError, Pos};
 use super::lexer::{Tok, Token};
 
+/// Recursive-descent parser over a lexed token stream.
 pub struct Parser {
     toks: Vec<Token>,
     i: usize,
@@ -15,6 +16,7 @@ pub struct Parser {
 }
 
 impl Parser {
+    /// Build a parser over `toks` (must be terminated by `Tok::Eof`).
     pub fn new(toks: Vec<Token>) -> Self {
         Self { toks, i: 0, next_loop: 0 }
     }
@@ -72,6 +74,7 @@ impl Parser {
 
     // ---- program ---------------------------------------------------------
 
+    /// Parse a whole translation unit.
     pub fn parse_program(mut self) -> Result<Program, ParseError> {
         let mut prog = Program::default();
         while *self.peek() != Tok::Eof {
@@ -391,6 +394,7 @@ impl Parser {
 
     // ---- expressions (precedence climbing) --------------------------------
 
+    /// Parse a single expression (precedence climbing from the bottom).
     pub fn parse_expr(&mut self) -> Result<Expr, ParseError> {
         self.parse_bin(0)
     }

@@ -18,11 +18,17 @@ use crate::interp::{LoopProfile, Profile};
 /// Per-op cycle costs + clock of one CPU.
 #[derive(Debug, Clone)]
 pub struct CpuModel {
+    /// CPU part name and clock.
     pub name: &'static str,
+    /// Core clock in Hz.
     pub freq_hz: f64,
+    /// Effective cycles per float arithmetic op.
     pub cycles_per_flop: f64,
+    /// Effective cycles per libm call.
     pub cycles_per_math_call: f64,
+    /// Effective cycles per array element access.
     pub cycles_per_mem_access: f64,
+    /// Effective cycles per integer/branch op.
     pub cycles_per_int_op: f64,
     /// loop/call bookkeeping overhead per loop entry
     pub cycles_per_loop_entry: f64,

@@ -8,16 +8,23 @@
 /// Absolute resource counts of one FPGA.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Resources {
+    /// Adaptive logic modules.
     pub alms: f64,
+    /// Flip-flops.
     pub ffs: f64,
+    /// Look-up tables.
     pub luts: f64,
+    /// Hardened DSP blocks.
     pub dsps: f64,
+    /// M20K block-RAM instances.
     pub m20ks: f64,
 }
 
 impl Resources {
+    /// The all-zero resource vector.
     pub const ZERO: Resources = Resources { alms: 0.0, ffs: 0.0, luts: 0.0, dsps: 0.0, m20ks: 0.0 };
 
+    /// Component-wise sum.
     pub fn add(&self, o: &Resources) -> Resources {
         Resources {
             alms: self.alms + o.alms,
@@ -28,6 +35,7 @@ impl Resources {
         }
     }
 
+    /// Component-wise scaling by `k`.
     pub fn scale(&self, k: f64) -> Resources {
         Resources {
             alms: self.alms * k,
@@ -42,7 +50,9 @@ impl Resources {
 /// The FPGA device + board model.
 #[derive(Debug, Clone)]
 pub struct Device {
+    /// Marketing name of the board.
     pub name: &'static str,
+    /// Total device resources.
     pub total: Resources,
     /// fraction of every resource type held by the BSP static region
     pub bsp_frac: f64,
@@ -50,6 +60,7 @@ pub struct Device {
     pub base_fmax_hz: f64,
     /// fmax derating slope vs. logic utilization (DESIGN.md §6)
     pub fmax_derate: f64,
+    /// Floor below which the derated clock never drops.
     pub min_fmax_hz: f64,
     /// PCIe Gen3 x8 effective bandwidth
     pub pcie_bw_bytes_per_s: f64,

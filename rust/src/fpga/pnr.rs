@@ -23,6 +23,7 @@ pub enum CompileOutcome {
 }
 
 impl CompileOutcome {
+    /// Simulated seconds the compile occupied the farm, success or not.
     pub fn sim_seconds(&self) -> f64 {
         match self {
             CompileOutcome::Ok { sim_s } => *sim_s,
@@ -30,6 +31,7 @@ impl CompileOutcome {
         }
     }
 
+    /// Did the compile produce a bitstream?
     pub fn is_ok(&self) -> bool {
         matches!(self, CompileOutcome::Ok { .. })
     }
@@ -49,7 +51,9 @@ fn jitter(label: &str) -> f64 {
 /// Base fitter time: ~2.4 h; resource term: up to +2.5 h near full;
 /// jitter: ±20 min.  Typical small kernel ≈ 2.8–3.2 h — the paper's "3 h".
 pub const BASE_COMPILE_S: f64 = 2.4 * 3600.0;
+/// Extra compile time added as utilization approaches the device cap.
 pub const PRESSURE_COMPILE_S: f64 = 2.5 * 3600.0;
+/// Amplitude of the deterministic per-kernel compile-time jitter.
 pub const JITTER_S: f64 = 20.0 * 60.0;
 
 /// Simulate the full compile of a pattern's combined kernels.

@@ -17,16 +17,20 @@ use super::device::Device;
 /// Timing breakdown for one offloaded loop execution.
 #[derive(Debug, Clone)]
 pub struct KernelExec {
+    /// The offloaded loop statement.
     pub loop_id: LoopId,
     /// pipeline execution seconds
     pub kernel_s: f64,
+    /// Host→device DMA seconds.
     pub transfer_in_s: f64,
+    /// Device→host DMA seconds.
     pub transfer_out_s: f64,
     /// pipelined (innermost) iterations the model charged
     pub inner_iters: u64,
 }
 
 impl KernelExec {
+    /// Kernel plus both transfer directions.
     pub fn total_s(&self) -> f64 {
         self.kernel_s + self.transfer_in_s + self.transfer_out_s
     }

@@ -61,6 +61,7 @@ mod latency {
 /// Result of pre-compiling one kernel (one offloaded loop).
 #[derive(Debug, Clone)]
 pub struct HlsReport {
+    /// The loop the kernel was generated from.
     pub loop_id: crate::cparse::ast::LoopId,
     /// unroll factor the datapath was built for (b parallel iteration
     /// bodies -> b iterations retired per II cycles)

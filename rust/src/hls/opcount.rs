@@ -15,25 +15,36 @@ use crate::opencl::kernel::type_env;
 /// Datapath operator counts.
 #[derive(Debug, Clone, Default)]
 pub struct OpCounts {
+    /// Float adds/subtracts.
     pub fadd: u32,
+    /// Float multiplies.
     pub fmul: u32,
+    /// Float divides (and float modulo).
     pub fdiv: u32,
+    /// `sin`/`cos` cores.
     pub trig: u32,
+    /// `sqrt` cores.
     pub sqrt: u32,
+    /// `exp` cores.
     pub exp: u32,
+    /// Cheap float ops (`fabs`, `floor`, `fmin`, `fmax`, negation).
     pub fmisc: u32,
+    /// Integer ALU ops (index math, counters).
     pub int_ops: u32,
+    /// Comparisons and logical ops.
     pub cmps: u32,
     /// distinct global arrays accessed (→ LSU count)
     pub arrays: u32,
     /// `+`-reductions (→ shift registers)
     pub plus_reductions: u32,
+    /// `*`-reductions (carry the multiplier latency).
     pub star_reductions: u32,
     /// loops in the offloaded nest (→ loop-control logic)
     pub nest_depth: u32,
 }
 
 impl OpCounts {
+    /// Total datapath operators (excludes structural counts).
     pub fn total(&self) -> u32 {
         self.fadd + self.fmul + self.fdiv + self.trig + self.sqrt + self.exp
             + self.fmisc + self.int_ops + self.cmps

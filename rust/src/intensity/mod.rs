@@ -24,10 +24,13 @@ use crate::ir::LoopAnalysis;
 /// Intensity metrics of one candidate loop.
 #[derive(Debug, Clone)]
 pub struct LoopIntensity {
+    /// The loop statement this row describes.
     pub id: LoopId,
     /// enclosing function (diagnostics)
     pub function: String,
+    /// total iterations observed on the sample workload
     pub trips: u64,
+    /// total float work (arith flops + math-builtin calls)
     pub flops: u64,
     /// distinct bytes touched (min..max index ranges)
     pub footprint_bytes: u64,

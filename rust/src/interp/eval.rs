@@ -15,11 +15,14 @@ use super::profile::{Footprint, LoopProfile, Profile};
 /// Runtime scalar value.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Value {
+    /// Integer value (`int` variables and int literals).
     Int(i64),
+    /// Floating value (`float`/`double` variables and float literals).
     Float(f64),
 }
 
 impl Value {
+    /// Numeric value as `f64` (ints convert exactly).
     pub fn as_f64(self) -> f64 {
         match self {
             Value::Int(n) => n as f64,
@@ -27,6 +30,7 @@ impl Value {
         }
     }
 
+    /// Numeric value truncated to `i64` (C cast semantics).
     pub fn as_i64(self) -> i64 {
         match self {
             Value::Int(n) => n,
@@ -45,7 +49,9 @@ impl Value {
 /// Interpreter runtime error.
 #[derive(Debug, Clone)]
 pub struct InterpError {
+    /// Human-readable description.
     pub message: String,
+    /// Source position, when one is attributable.
     pub pos: Option<Pos>,
 }
 
@@ -113,6 +119,7 @@ pub struct Interp<'p> {
 }
 
 impl<'p> Interp<'p> {
+    /// Build an interpreter for one run of `program`.
     pub fn new(program: &'p Program) -> Self {
         let max_loop = {
             let mut m = 0u32;
@@ -149,6 +156,7 @@ impl<'p> Interp<'p> {
         self.overrides.insert(name.to_string(), value);
     }
 
+    /// Override the runaway-loop step budget.
     pub fn set_max_steps(&mut self, max: u64) {
         self.max_steps = max;
     }

@@ -13,14 +13,18 @@ use crate::cparse::ast::LoopId;
 /// apps make; the HLS local-memory sizing uses it too.)
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Footprint {
+    /// Smallest index touched.
     pub min_idx: i64,
+    /// Largest index touched.
     pub max_idx: i64,
+    /// Bytes per element (4 for the MiniC f32 model).
     pub elem_bytes: u64,
     /// raw access count (reads + writes)
     pub accesses: u64,
 }
 
 impl Footprint {
+    /// Distinct bytes covered by the min..=max index range.
     pub fn bytes(&self) -> u64 {
         if self.max_idx < self.min_idx {
             0
@@ -46,6 +50,7 @@ pub struct LoopProfile {
     pub int_ops: u64,
     /// array element reads / writes
     pub mem_reads: u64,
+    /// Array element writes.
     pub mem_writes: u64,
     /// per-array footprint (index ranges)
     pub footprints: BTreeMap<String, Footprint>,
@@ -75,18 +80,24 @@ impl LoopProfile {
 /// Whole-program dynamic profile.
 #[derive(Debug, Clone, Default)]
 pub struct Profile {
+    /// Per-loop counters for every loop that executed at least once.
     pub loops: BTreeMap<LoopId, LoopProfile>,
     /// program-wide totals (for the all-CPU baseline time)
     pub total_flops: u64,
+    /// Program-wide builtin math calls.
     pub total_math_calls: u64,
+    /// Program-wide integer ops.
     pub total_int_ops: u64,
+    /// Program-wide array element reads.
     pub total_mem_reads: u64,
+    /// Program-wide array element writes.
     pub total_mem_writes: u64,
     /// interpreter steps executed (safety-valve metric)
     pub steps: u64,
 }
 
 impl Profile {
+    /// Counters of one loop (None if it never executed).
     pub fn loop_profile(&self, id: LoopId) -> Option<&LoopProfile> {
         self.loops.get(&id)
     }

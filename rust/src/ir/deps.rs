@@ -26,6 +26,7 @@ use super::varref::LoopRefs;
 /// A recognized scalar reduction carried by the loop.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Reduction {
+    /// The reduced scalar variable.
     pub var: String,
     /// `+` or `*`.
     pub op: char,

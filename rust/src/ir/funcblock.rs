@@ -28,14 +28,19 @@ pub struct Fingerprint {
     pub depth: f64,
     /// float mul / add / div / trig / sqrt counts (per innermost body)
     pub fmul: f64,
+    /// Float add/sub count (see [`Fingerprint::fmul`]).
     pub fadd: f64,
+    /// Float divide count.
     pub fdiv: f64,
+    /// `sin`/`cos` call count.
     pub trig: f64,
+    /// `sqrt` call count.
     pub sqrt: f64,
     /// number of `+`-reductions carried
     pub reductions: f64,
     /// distinct arrays read / written
     pub arrays_read: f64,
+    /// Distinct arrays written.
     pub arrays_written: f64,
     /// array reads whose index mixes BOTH loop counters of a 2-nest
     /// (the matmul/conv signature: a[i*n+k], x[s+t-1-k], ...)
@@ -79,8 +84,11 @@ impl Fingerprint {
 /// A known functional block in the library.
 #[derive(Debug, Clone)]
 pub struct KnownBlock {
+    /// Block identifier (e.g. `fir_filter`).
     pub name: &'static str,
+    /// One-line description of what the block computes.
     pub description: &'static str,
+    /// Reference structural fingerprint.
     pub fingerprint: Fingerprint,
     /// pre-optimized artifact usable instead of generated OpenCL
     pub artifact: Option<&'static str>,
@@ -89,9 +97,13 @@ pub struct KnownBlock {
 /// A match of a loop against the library.
 #[derive(Debug, Clone)]
 pub struct BlockMatch {
+    /// The matched loop statement.
     pub loop_id: LoopId,
+    /// Name of the matched library block.
     pub block: &'static str,
+    /// Cosine similarity of the fingerprints (0..1).
     pub similarity: f64,
+    /// Pre-optimized artifact of the block, when one exists.
     pub artifact: Option<&'static str>,
 }
 

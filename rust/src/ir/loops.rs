@@ -9,25 +9,33 @@ use crate::cparse::error::Pos;
 /// Kind of loop statement.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LoopKind {
+    /// A `for` statement.
     For,
+    /// A `while` statement.
     While,
 }
 
 /// Canonical counted loop `for (var = lo; var </<= hi; var += step)`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CanonicalLoop {
+    /// The loop counter variable.
     pub var: String,
+    /// Initial counter value.
     pub lo: Expr,
+    /// Loop bound.
     pub hi: Expr,
     /// `true` when the condition is `<=` (trip count = hi - lo + 1).
     pub inclusive: bool,
+    /// Positive constant counter increment.
     pub step: i64,
 }
 
 /// One loop statement with its nesting context.
 #[derive(Debug, Clone)]
 pub struct LoopInfo {
+    /// Stable source-ordered loop id.
     pub id: LoopId,
+    /// `for` or `while`.
     pub kind: LoopKind,
     /// Enclosing function name.
     pub function: String,
@@ -37,6 +45,7 @@ pub struct LoopInfo {
     pub parent: Option<LoopId>,
     /// Loops nested directly inside this one.
     pub children: Vec<LoopId>,
+    /// Source position of the loop statement.
     pub pos: Pos,
     /// Canonical counted form, when recognizable.
     pub canonical: Option<CanonicalLoop>,

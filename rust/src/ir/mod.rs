@@ -21,8 +21,11 @@ use crate::cparse::Program;
 /// Full per-loop analysis bundle used by the rest of the pipeline.
 #[derive(Debug, Clone)]
 pub struct LoopAnalysis {
+    /// Structural facts: nesting, canonical header, body.
     pub info: LoopInfo,
+    /// Variable/array reference sets of the body.
     pub refs: LoopRefs,
+    /// Dependence verdict and recognized reductions.
     pub deps: DepAnalysis,
 }
 

@@ -19,7 +19,9 @@ pub struct LoopRefs {
     pub array_reads: BTreeMap<String, Vec<Expr>>,
     /// array name -> index expressions used in writes
     pub array_writes: BTreeMap<String, Vec<Expr>>,
+    /// Scalars read anywhere in the body.
     pub scalar_reads: BTreeSet<String>,
+    /// Scalars written anywhere in the body.
     pub scalar_writes: BTreeSet<String>,
     /// scalars declared inside the loop body (private per iteration)
     pub locals: BTreeSet<String>,
@@ -32,6 +34,7 @@ pub const BUILTINS: &[&str] = &[
     "sin", "cos", "sqrt", "fabs", "exp", "floor", "fmin", "fmax",
 ];
 
+/// Is `name` one of the MiniC math builtins?
 pub fn is_builtin(name: &str) -> bool {
     BUILTINS.contains(&name)
 }

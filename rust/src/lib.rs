@@ -20,6 +20,8 @@
 //!
 //! See `DESIGN.md` for the full system inventory and the paper→module map.
 
+#![warn(missing_docs)]
+
 pub mod apps;
 pub mod baselines;
 pub mod config;

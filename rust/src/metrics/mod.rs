@@ -10,7 +10,9 @@ use std::sync::Mutex;
 /// A named simulated-time event.
 #[derive(Debug, Clone)]
 pub struct Event {
+    /// What the time was spent on.
     pub label: String,
+    /// Simulated duration in seconds.
     pub sim_seconds: f64,
     /// lane the event ran on (compile farm), 0 for serial phases
     pub lane: usize,
@@ -32,6 +34,7 @@ struct Inner {
 }
 
 impl SimClock {
+    /// A clock with `lanes` parallel compile slots (`lanes >= 1`).
     pub fn new(lanes: usize) -> Self {
         assert!(lanes >= 1);
         Self {
@@ -71,6 +74,7 @@ impl SimClock {
         g.serial + g.lanes.iter().cloned().fold(0.0, f64::max)
     }
 
+    /// [`SimClock::total_seconds`] in hours.
     pub fn total_hours(&self) -> f64 {
         self.total_seconds() / 3600.0
     }
@@ -81,6 +85,7 @@ impl SimClock {
         g.lanes.iter().sum()
     }
 
+    /// Snapshot of every recorded event, in submission order.
     pub fn events(&self) -> Vec<Event> {
         self.inner.lock().expect("poisoned").events.clone()
     }

@@ -24,9 +24,11 @@ pub const SR_LEN: usize = 8;
 /// One kernel argument.
 #[derive(Debug, Clone)]
 pub struct KernelArg {
+    /// Argument name (the source variable it mirrors).
     pub name: String,
     /// OpenCL type text (e.g. `__global float* restrict` or `const int`).
     pub decl: String,
+    /// Is this a `__global` buffer argument?
     pub is_array: bool,
     /// element type for arrays
     pub elem: Type,
@@ -36,10 +38,15 @@ pub struct KernelArg {
 /// generator need.
 #[derive(Debug, Clone)]
 pub struct KernelSource {
+    /// The offloaded loop statement.
     pub loop_id: LoopId,
+    /// Kernel symbol name (`loop_<id>`).
     pub name: String,
+    /// The `.cl` source of this kernel.
     pub code: String,
+    /// Kernel arguments in declaration order.
     pub args: Vec<KernelArg>,
+    /// Unroll factor the kernel was generated for.
     pub unroll: usize,
     /// reductions rewritten through shift registers
     pub shift_register_reductions: Vec<String>,

@@ -8,9 +8,13 @@ use std::time::Instant;
 /// Result of a timed measurement.
 #[derive(Debug, Clone, Copy)]
 pub struct Timing {
+    /// Median wall-clock seconds per iteration.
     pub median_s: f64,
+    /// Fastest observed iteration.
     pub min_s: f64,
+    /// Slowest observed iteration.
     pub max_s: f64,
+    /// Number of timed iterations.
     pub iters: usize,
 }
 

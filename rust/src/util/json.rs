@@ -8,15 +8,22 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number (always stored as `f64`).
     Num(f64),
+    /// String value.
     Str(String),
+    /// Array value.
     Arr(Vec<Json>),
+    /// Object value (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object member lookup (`None` for non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -24,6 +31,7 @@ impl Json {
         }
     }
 
+    /// String payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -31,6 +39,7 @@ impl Json {
         }
     }
 
+    /// Numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -38,10 +47,12 @@ impl Json {
         }
     }
 
+    /// Numeric payload truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|v| v as usize)
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -49,6 +60,7 @@ impl Json {
         }
     }
 
+    /// Object members, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -60,7 +72,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub offset: usize,
+    /// Human-readable description.
     pub message: String,
 }
 

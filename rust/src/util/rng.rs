@@ -19,6 +19,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed the generator (SplitMix64 expands the seed into the state).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Self {
@@ -31,6 +32,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit output of the xoshiro256** core.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -69,6 +71,7 @@ impl Rng {
         lo + self.below((hi - lo + 1) as u64) as i64
     }
 
+    /// Bernoulli draw: `true` with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }

@@ -1,0 +1,93 @@
+//! Coverage for the extra registered workloads (matmul, laplace2d,
+//! histogram): loop counts, dependence verdicts on the interesting loop
+//! shapes (nested accumulation, boundary-guarded nests, data-dependent
+//! writes), and the top-a intensity rankings the narrowing relies on.
+
+use flopt::apps;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cparse::ast::LoopId;
+use flopt::cpu::XEON_3104;
+use flopt::fpga::ARRIA10_GX;
+use flopt::intensity;
+
+#[test]
+fn loop_counts_are_stable() {
+    assert_eq!(apps::MATMUL.parse().loop_count(), 5);
+    assert_eq!(apps::LAPLACE2D.parse().loop_count(), 9);
+    assert_eq!(apps::HISTOGRAM.parse().loop_count(), 6);
+}
+
+#[test]
+fn matmul_nest_structure_and_reduction() {
+    let p = apps::MATMUL.parse();
+    let loops = flopt::ir::analyze(&p);
+    let outer = loops
+        .iter()
+        .find(|l| l.info.function == "mm" && l.info.depth == 0)
+        .expect("mm outer loop");
+    assert_eq!(outer.info.id, LoopId(1));
+    assert!(outer.deps.offloadable, "{:?}", outer.deps.reject_reason);
+    // the innermost k-loop carries the `acc` accumulation
+    let inner = loops
+        .iter()
+        .find(|l| l.info.function == "mm" && l.info.depth == 2)
+        .expect("mm innermost loop");
+    assert_eq!(inner.info.id, LoopId(3));
+    assert!(inner.deps.offloadable);
+    assert_eq!(inner.deps.reductions[0].var, "acc");
+}
+
+#[test]
+fn matmul_top_a_ranks_the_nest_first() {
+    let analysis = analyze_app(&apps::MATMUL, true).unwrap();
+    let top = intensity::top_a(&analysis.intensities, &analysis.loops, 5);
+    assert_eq!(top[0].id, LoopId(1), "top-a: {:?}",
+        top.iter().map(|l| l.id).collect::<Vec<_>>());
+}
+
+#[test]
+fn laplace_guarded_nest_is_the_candidate() {
+    let analysis = analyze_app(&apps::LAPLACE2D, true).unwrap();
+    // the boundary-guarded row nest (first depth-1 loop of jacobi)
+    let grid = analysis
+        .loops
+        .iter()
+        .find(|l| l.info.function == "jacobi" && l.info.depth == 1)
+        .expect("grid nest");
+    assert!(grid.deps.offloadable, "{:?}", grid.deps.reject_reason);
+    let top = intensity::top_a(&analysis.intensities, &analysis.loops, 5);
+    let ids: Vec<LoopId> = top.iter().map(|l| l.id).collect();
+    assert!(ids.contains(&grid.info.id), "top-a {ids:?}");
+}
+
+#[test]
+fn histogram_transform_ranks_first_fill_is_rejected() {
+    let analysis = analyze_app(&apps::HISTOGRAM, true).unwrap();
+    let top = intensity::top_a(&analysis.intensities, &analysis.loops, 5);
+    assert_eq!(top[0].id, LoopId(2), "transform sweep must rank first");
+    let fill = analysis
+        .loops
+        .iter()
+        .find(|l| l.info.function == "build_hist")
+        .expect("fill loop");
+    assert!(!fill.deps.offloadable, "data-dependent writes must reject");
+    assert!(!top.iter().any(|l| l.id == fill.info.id));
+}
+
+#[test]
+fn new_workloads_complete_the_full_search() {
+    for app in [&apps::MATMUL, &apps::LAPLACE2D, &apps::HISTOGRAM] {
+        let analysis = analyze_app(app, true).unwrap();
+        let cfg = SearchConfig::default();
+        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+        let t = search_with_analysis(app, &analysis, &env, &cfg).unwrap();
+        let best = t.best.as_ref()
+            .unwrap_or_else(|| panic!("{}: a pattern must win", app.name));
+        assert!(best.speedup > 1.0, "{}: speedup {}", app.name, best.speedup);
+        assert!(t.patterns_measured() <= cfg.d_patterns);
+        let rendered = t.render();
+        assert!(rendered.contains("solution: pattern"), "{rendered}");
+    }
+}
