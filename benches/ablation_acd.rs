@@ -5,11 +5,11 @@
 //! compiles, so every extra candidate costs real wall-clock.
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 
 fn main() {
     for app in [&apps::TDFIR, &apps::MRIQ] {
@@ -20,7 +20,7 @@ fn main() {
         println!("{:>3} {:>10} {:>10} {:>14}", "a", "speedup", "patterns", "compile-h");
         for a in 1..=8 {
             let cfg = SearchConfig { a_intensity: a, ..Default::default() };
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
             let t = search_with_analysis(app, &analysis, &env, &cfg).expect("search");
             println!(
                 "{:>3} {:>9.2}x {:>10} {:>14.1}",
@@ -35,7 +35,7 @@ fn main() {
         println!("{:>3} {:>10} {:>10} {:>14}", "c", "speedup", "patterns", "compile-h");
         for c in 1..=5 {
             let cfg = SearchConfig { c_efficiency: c, ..Default::default() };
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
             let t = search_with_analysis(app, &analysis, &env, &cfg).expect("search");
             println!(
                 "{:>3} {:>9.2}x {:>10} {:>14.1}",
@@ -50,7 +50,7 @@ fn main() {
         println!("{:>3} {:>10} {:>10} {:>14}", "d", "speedup", "patterns", "compile-h");
         for d in 1..=8 {
             let cfg = SearchConfig { d_patterns: d, ..Default::default() };
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
             let t = search_with_analysis(app, &analysis, &env, &cfg).expect("search");
             println!(
                 "{:>3} {:>9.2}x {:>10} {:>14.1}",

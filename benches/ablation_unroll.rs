@@ -5,6 +5,7 @@
 //! and past the device cap the compile fails early.
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
 use flopt::coordinator::verify_env::VerifyEnv;
@@ -34,7 +35,7 @@ fn main() {
             let rep = hls::precompile(&analysis.program, hot, b, &ARRIA10_GX);
             let fits = ARRIA10_GX.fits(&rep.resources);
             let cfg = SearchConfig { b_unroll: b, ..Default::default() };
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
             let t = search_with_analysis(app, &analysis, &env, &cfg).expect("search");
             println!(
                 "{:>4} {:>10.3} {:>8.0} {:>10.0} {:>12} {:>9.2}x",

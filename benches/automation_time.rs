@@ -3,11 +3,11 @@
 //! lane sweep (an extension ablation: the paper compiles on one machine).
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::offload_search;
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 use flopt::util::bench::fmt_sim_hours;
 
 fn main() {
@@ -17,7 +17,7 @@ fn main() {
         "app", "patterns", "makespan", "compile-lane-h", "per-compile avg"
     );
     for app in [&apps::TDFIR, &apps::MRIQ] {
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         let t = offload_search(app, &env, false).expect("search");
         let n = t.patterns_measured();
         println!(
@@ -37,7 +37,7 @@ fn main() {
     for app in [&apps::TDFIR, &apps::MRIQ] {
         for lanes in [1usize, 2, 4] {
             let cfg = SearchConfig { compile_parallelism: lanes, ..Default::default() };
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg);
+            let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg);
             let t = offload_search(app, &env, false).expect("search");
             println!("{:<8} {:>6} {:>16}", app.name, lanes, fmt_sim_hours(t.sim_hours));
         }

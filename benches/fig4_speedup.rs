@@ -1,41 +1,78 @@
 //! Bench: regenerate **Fig 4** — performance improvement of the proposed
 //! FPGA auto-offload over all-CPU, for both paper applications at full
 //! paper scale.  Also times the L3 search itself (wall clock).
+//!
+//! ```sh
+//! cargo bench --bench fig4_speedup                      # full paper scale
+//! cargo bench --bench fig4_speedup -- --test-scale \
+//!     --report reports/fig4_speedup.json                # CI smoke + JSON
+//! ```
+
+use std::collections::BTreeMap;
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::{fig3_table, SearchConfig};
 use flopt::coordinator::pipeline::offload_search;
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
-use flopt::util::bench::{fmt_s, time_it};
+use flopt::util::bench::{fmt_s, parse_bench_args, time_it};
+use flopt::util::json::{self, Json};
 
 fn main() {
+    let opts = parse_bench_args();
     println!("=== Fig 3: evaluation environment (models calibrated to) ===");
     println!("{}", fig3_table());
 
     println!("=== Fig 4: performance improvement of the proposed method ===");
-    println!(
-        "{:<46} {:>8} {:>10}",
-        "Application", "paper", "this repo"
-    );
-    let mut rows = Vec::new();
+    println!("{:<46} {:>8} {:>10}", "Application", "paper", "this repo");
+    let mut report_rows = Vec::new();
+    let mut timing_rows = Vec::new();
     for (app, paper, label) in [
         (&apps::TDFIR, 4.0, "Time domain finite impulse response filter"),
         (&apps::MRIQ, 7.1, "MRI-Q"),
     ] {
-        let run = || {
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
-            offload_search(app, &env, false).expect("search")
+        let test_scale = opts.test_scale;
+        let run = move || {
+            let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
+            offload_search(app, &env, test_scale).expect("search")
         };
         let trace = run();
         println!("{:<46} {:>7.1}x {:>9.2}x", label, paper, trace.speedup());
-        rows.push((app, label, run));
+        let mut row = BTreeMap::new();
+        row.insert("app".to_string(), Json::Str(app.name.to_string()));
+        row.insert("label".to_string(), Json::Str(label.to_string()));
+        row.insert(
+            "destination".to_string(),
+            Json::Str(trace.destination.to_string()),
+        );
+        row.insert("paper_speedup".to_string(), Json::Num(paper));
+        row.insert("speedup".to_string(), Json::Num(trace.speedup()));
+        row.insert(
+            "patterns_measured".to_string(),
+            Json::Num(trace.patterns_measured() as f64),
+        );
+        row.insert("sim_hours".to_string(), Json::Num(trace.sim_hours));
+        row.insert("compile_hours".to_string(), Json::Num(trace.compile_hours));
+        report_rows.push(Json::Obj(row));
+        timing_rows.push((label, run));
     }
 
-    println!("\n=== search wall-clock (L3 hot path, full scale) ===");
-    for (_, label, run) in rows {
+    println!("\n=== search wall-clock (L3 hot path) ===");
+    for (label, run) in timing_rows {
         let t = time_it(3, run);
         println!("{:<46} median {}", label, fmt_s(t.median_s));
+    }
+
+    if let Some(path) = &opts.report {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("fig4_speedup".to_string()));
+        doc.insert(
+            "scale".to_string(),
+            Json::Str(if opts.test_scale { "test" } else { "full" }.to_string()),
+        );
+        doc.insert("rows".to_string(), Json::Arr(report_rows));
+        std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
+        println!("\nreport written to {path}");
     }
 }

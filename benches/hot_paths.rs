@@ -6,6 +6,7 @@
 //! iteration log.
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
 use flopt::coordinator::verify_env::VerifyEnv;
@@ -56,7 +57,7 @@ fn main() {
     let analysis = analyze_app(app, false).unwrap();
     let cfg = SearchConfig::default();
     let t = time_it(10, || {
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
         search_with_analysis(app, &analysis, &env, &cfg).unwrap()
     });
     println!("search (post-analysis, full):      {:>12}", fmt_s(t.median_s));

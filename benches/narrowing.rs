@@ -3,11 +3,11 @@
 //! intensity → top-3 by resource efficiency → ≤4 measured patterns.
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::offload_search;
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 
 fn main() {
     println!("=== §5.1.2 narrowing conditions (a=5, b=1, c=3, d=4) ===\n");
@@ -16,7 +16,7 @@ fn main() {
         "app", "loops", "paper-loops", "top-a", "top-c", "patterns"
     );
     for (app, paper_loops) in [(&apps::TDFIR, 36), (&apps::MRIQ, 16)] {
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         let t = offload_search(app, &env, false).expect("search");
         println!(
             "{:<8} {:>12} {:>12} {:>12} {:>10} {:>10}",
@@ -33,7 +33,7 @@ fn main() {
 
     println!("\n=== per-candidate detail (the intermediate data the paper logs) ===");
     for app in [&apps::TDFIR, &apps::MRIQ] {
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         let t = offload_search(app, &env, false).expect("search");
         println!("\n{}:", app.name);
         println!(

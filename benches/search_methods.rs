@@ -2,18 +2,41 @@
 //! 2018]), exhaustive subsets, and naive offload-everything — the
 //! quantitative version of the paper's §3.2 argument that measurement-
 //! heavy search is infeasible when every evaluation is a ~3 h compile.
+//!
+//! ```sh
+//! cargo bench --bench search_methods                    # full paper scale
+//! cargo bench --bench search_methods -- --test-scale \
+//!     --report reports/search_methods.json              # CI smoke + JSON
+//! ```
+
+use std::collections::BTreeMap;
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::baselines;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
+use flopt::util::bench::parse_bench_args;
+use flopt::util::json::{self, Json};
+
+fn report_row(app: &str, method: &str, speedup: f64, evals: usize, compile_h: f64) -> Json {
+    let mut row = BTreeMap::new();
+    row.insert("app".to_string(), Json::Str(app.to_string()));
+    row.insert("method".to_string(), Json::Str(method.to_string()));
+    row.insert("speedup".to_string(), Json::Num(speedup));
+    row.insert("evaluations".to_string(), Json::Num(evals as f64));
+    row.insert("compile_hours".to_string(), Json::Num(compile_h));
+    row.insert("compile_days".to_string(), Json::Num(compile_h / 24.0));
+    Json::Obj(row)
+}
 
 fn main() {
+    let opts = parse_bench_args();
+    let mut report_rows = Vec::new();
     for app in [&apps::TDFIR, &apps::MRIQ] {
-        let analysis = analyze_app(app, false).expect("analysis");
+        let analysis = analyze_app(app, opts.test_scale).expect("analysis");
         println!("=== {} ===", app.name);
         println!(
             "{:<12} {:>9} {:>8} {:>14} {:>16}",
@@ -21,7 +44,7 @@ fn main() {
         );
 
         let cfg = SearchConfig::default();
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
         let t = search_with_analysis(app, &analysis, &env, &cfg).expect("search");
         println!(
             "{:<12} {:>8.2}x {:>8} {:>14.1} {:>16.2}",
@@ -31,12 +54,19 @@ fn main() {
             t.compile_hours,
             t.compile_hours / 24.0
         );
+        report_rows.push(report_row(
+            app.name,
+            "proposed",
+            t.speedup(),
+            t.patterns_measured(),
+            t.compile_hours,
+        ));
 
-        let ga_env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+        let ga_env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
         let ga = baselines::ga::search(&analysis, &ga_env, &baselines::ga::GaConfig::default());
-        let ex_env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+        let ex_env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
         let ex = baselines::exhaustive::search(&analysis, &ex_env);
-        let nv_env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+        let nv_env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
         let nv = baselines::naive::search(&analysis, &nv_env);
         for out in [ga, ex, nv] {
             println!(
@@ -47,6 +77,13 @@ fn main() {
                 out.compile_hours,
                 out.compile_hours / 24.0
             );
+            report_rows.push(report_row(
+                app.name,
+                out.method,
+                out.speedup(),
+                out.evaluations,
+                out.compile_hours,
+            ));
         }
         println!();
     }
@@ -55,4 +92,16 @@ fn main() {
          compiling — the paper's point: GA/exhaustive burn days-to-weeks \
          where the proposed narrowing needs ~half a day."
     );
+
+    if let Some(path) = &opts.report {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("search_methods".to_string()));
+        doc.insert(
+            "scale".to_string(),
+            Json::Str(if opts.test_scale { "test" } else { "full" }.to_string()),
+        );
+        doc.insert("rows".to_string(), Json::Arr(report_rows));
+        std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
+        println!("report written to {path}");
+    }
 }

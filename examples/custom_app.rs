@@ -6,11 +6,11 @@
 //! ```
 
 use flopt::apps::App;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::offload_search;
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 
 const SOURCE: &str = r#"
 int N = 4096;
@@ -68,7 +68,7 @@ fn main() -> flopt::Result<()> {
         stats_array: "stats_out",
     }));
 
-    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+    let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
     let trace = offload_search(app, &env, /*test_scale=*/ false)?;
     println!("{}", trace.render());
 

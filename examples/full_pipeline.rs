@@ -19,11 +19,11 @@
 use std::time::Instant;
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::offload_search;
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 use flopt::runtime::{default_artifact_dir, Runtime};
 
 fn main() -> flopt::Result<()> {
@@ -36,7 +36,7 @@ fn main() -> flopt::Result<()> {
     let mut rows = Vec::new();
     for (app, paper) in [(&apps::TDFIR, 4.0), (&apps::MRIQ, 7.1)] {
         let t0 = Instant::now();
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         let trace = offload_search(app, &env, /*test_scale=*/ false)?;
         let search_wall = t0.elapsed().as_secs_f64();
         println!("{}", trace.render());
@@ -60,6 +60,7 @@ fn main() -> flopt::Result<()> {
             app.name,
             paper,
             trace.speedup(),
+            trace.destination,
             trace.patterns_measured(),
             trace.sim_hours,
             search_wall,
@@ -69,24 +70,25 @@ fn main() -> flopt::Result<()> {
 
     println!("==================== Fig 4 (reproduced) ====================");
     println!(
-        "{:<42} {:>8} {:>10} {:>9} {:>8}",
-        "Application", "paper", "this repo", "patterns", "sim-h"
+        "{:<42} {:>8} {:>10} {:>6} {:>9} {:>8}",
+        "Application", "paper", "this repo", "dest", "patterns", "sim-h"
     );
-    for (name, paper, got, pats, sim_h, _, _) in &rows {
+    for (name, paper, got, dest, pats, sim_h, _, _) in &rows {
         println!(
-            "{:<42} {:>7.1}x {:>9.2}x {:>9} {:>8.1}",
+            "{:<42} {:>7.1}x {:>9.2}x {:>6} {:>9} {:>8.1}",
             match *name {
                 "tdfir" => "Time domain finite impulse response filter",
                 other => other,
             },
             paper,
             got,
+            dest,
             pats,
             sim_h
         );
     }
     println!();
-    for (name, _, _, _, _, search_wall, verify_wall) in &rows {
+    for (name, _, _, _, _, _, search_wall, verify_wall) in &rows {
         println!(
             "real wall-clock — {name}: search {:.2}s, PJRT verify {:.2}s",
             search_wall, verify_wall

@@ -6,11 +6,11 @@
 //! ```
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::offload_search;
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 
 fn main() -> flopt::Result<()> {
     // 1. pick an app from the registry (or bring your own — see
@@ -18,10 +18,11 @@ fn main() -> flopt::Result<()> {
     let app = &apps::HISTOGRAM;
     println!("app: {} — {}\n", app.name, app.description);
 
-    // 2. a verification environment: the FPGA board model, the CPU
-    //    baseline model, and the paper's search parameters (a=5, b=1,
-    //    c=3, d=4)
-    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+    // 2. a verification environment: an offload backend (here the FPGA
+    //    board model; `flopt::backend::GPU` is the other option), the
+    //    CPU baseline model, and the paper's search parameters (a=5,
+    //    b=1, c=3, d=4)
+    let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
 
     // 3. run the paper's Steps 1-3: analyze, narrow, generate OpenCL,
     //    compile + measure patterns, select the fastest

@@ -6,19 +6,21 @@
 //! ```
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::offload_search;
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 
 fn main() -> flopt::Result<()> {
-    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+    let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
     let trace = offload_search(&apps::TDFIR, &env, /*test_scale=*/ false)?;
     println!("{}", trace.render());
     println!(
-        "Fig 4 row — Time domain finite impulse response filter: paper 4.0x, this run {:.1}x",
-        trace.speedup()
+        "Fig 4 row — Time domain finite impulse response filter: paper 4.0x, \
+         this run {:.1}x on {}",
+        trace.speedup(),
+        trace.destination
     );
     Ok(())
 }

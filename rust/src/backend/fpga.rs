@@ -1,0 +1,127 @@
+//! FPGA backend — a thin adapter over the pre-seam Arria10 models.
+//!
+//! Every method delegates to the exact functions the coordinator called
+//! before the backend seam existed ([`crate::hls::precompile`],
+//! [`crate::fpga::pnr::full_compile`], [`crate::fpga::timing`]), with
+//! identical arguments — so FPGA search results are bit-identical to the
+//! pre-refactor traces (`rust/tests/backends.rs` asserts this).
+
+use crate::cparse::Program;
+use crate::cpu::CpuModel;
+use crate::fpga::device::Device;
+use crate::fpga::timing::KernelExec;
+use crate::fpga::{ARRIA10_GX, pnr};
+use crate::hls::{self, HlsReport};
+use crate::interp::Profile;
+use crate::ir::LoopAnalysis;
+
+use super::{BackendCompile, BackendReport, OffloadBackend, ReportDetail, SearchMethod};
+
+/// The FPGA offload backend: one board model + the HLS/PnR/timing stack.
+#[derive(Debug, Clone)]
+pub struct FpgaBackend {
+    /// The board the backend compiles against.
+    pub device: &'static Device,
+}
+
+/// The default FPGA backend — the paper's Intel PAC Arria10 GX testbed.
+pub static FPGA: FpgaBackend = FpgaBackend { device: &ARRIA10_GX };
+
+impl FpgaBackend {
+    fn hls_refs<'r>(reports: &[&'r BackendReport]) -> Vec<&'r HlsReport> {
+        reports
+            .iter()
+            .map(|r| r.hls().expect("FPGA backend got a non-FPGA report"))
+            .collect()
+    }
+}
+
+impl OffloadBackend for FpgaBackend {
+    fn name(&self) -> &'static str {
+        "FPGA"
+    }
+
+    fn description(&self) -> String {
+        format!(
+            "{} | base fmax {:.0} MHz | PCIe {:.1} GB/s | full compile ~3 h",
+            self.device.name,
+            self.device.base_fmax_hz / 1e6,
+            self.device.pcie_bw_bytes_per_s / 1e9
+        )
+    }
+
+    fn search_method(&self) -> SearchMethod {
+        SearchMethod::NarrowedTwoRound
+    }
+
+    fn precompile(&self, program: &Program, la: &LoopAnalysis, unroll: usize) -> BackendReport {
+        let rep = hls::precompile(program, la, unroll, self.device);
+        BackendReport {
+            loop_id: rep.loop_id,
+            utilization: rep.utilization,
+            precompile_s: rep.precompile_s,
+            detail: ReportDetail::Fpga(rep),
+        }
+    }
+
+    fn combined_utilization(&self, reports: &[&BackendReport]) -> f64 {
+        hls::combined_utilization(&Self::hls_refs(reports), self.device)
+    }
+
+    fn full_compile(&self, reports: &[&BackendReport], label: &str) -> BackendCompile {
+        let outcome = pnr::full_compile(&Self::hls_refs(reports), self.device, label);
+        BackendCompile { ok: outcome.is_ok(), sim_s: outcome.sim_seconds() }
+    }
+
+    fn kernel_exec(
+        &self,
+        loops: &[LoopAnalysis],
+        profile: &Profile,
+        _cpu: &CpuModel,
+        report: &BackendReport,
+    ) -> KernelExec {
+        let rep = report.hls().expect("FPGA backend got a non-FPGA report");
+        crate::fpga::timing::kernel_time_s(loops, profile, rep, self.device)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+    use crate::ir;
+
+    const MAP: &str = "void f(float a[], float b[], int n) { int i; \
+        for (i = 0; i < n; i++) { a[i] = b[i] * 2.0 + 1.0; } }";
+
+    #[test]
+    fn precompile_matches_direct_hls_call() {
+        let p = parse(MAP).unwrap();
+        let loops = ir::analyze(&p);
+        let via_trait = FPGA.precompile(&p, &loops[0], 1);
+        let direct = hls::precompile(&p, &loops[0], 1, &ARRIA10_GX);
+        assert_eq!(via_trait.loop_id, direct.loop_id);
+        assert_eq!(via_trait.utilization, direct.utilization);
+        assert_eq!(via_trait.precompile_s, direct.precompile_s);
+        let hls_rep = via_trait.hls().expect("fpga detail");
+        assert_eq!(hls_rep.ii, direct.ii);
+        assert_eq!(hls_rep.depth, direct.depth);
+        assert_eq!(hls_rep.fmax_hz, direct.fmax_hz);
+    }
+
+    #[test]
+    fn full_compile_matches_pnr_jitter() {
+        let p = parse(MAP).unwrap();
+        let loops = ir::analyze(&p);
+        let rep = FPGA.precompile(&p, &loops[0], 1);
+        let via_trait = FPGA.full_compile(&[&rep], "L0");
+        let direct = pnr::full_compile(&[rep.hls().unwrap()], &ARRIA10_GX, "L0");
+        assert!(via_trait.ok);
+        assert_eq!(via_trait.sim_s, direct.sim_seconds());
+    }
+
+    #[test]
+    fn empty_pattern_reports_the_bsp_floor() {
+        assert!((FPGA.combined_utilization(&[]) - ARRIA10_GX.bsp_frac).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,202 @@
+//! The backend seam: every device-specific assumption of the offload
+//! search behind one trait.
+//!
+//! The paper frames FPGA loop offloading as one step of
+//! *environment-adaptive software* that places code on whatever hardware
+//! is available; the follow-up (arXiv:2011.12431) makes the mixed
+//! CPU/GPU/FPGA destination choice explicit.  This module extracts what
+//! the coordinator needs to ask of a device — candidate legality,
+//! cost/resource estimation, pattern verification (full-compile) cost,
+//! and the offloaded-timing model — so that the search flow in
+//! [`crate::coordinator`] is destination-neutral:
+//!
+//! * [`fpga`] — thin adapter over the existing Arria10 models
+//!   ([`crate::hls`], [`crate::fpga::pnr`], [`crate::fpga::timing`]);
+//!   results are bit-identical to calling those modules directly.
+//! * [`gpu`] — a calibrated SIMT model (minutes-scale compiles, PCIe
+//!   transfers, kernel-launch overhead) that makes the paper's §3.2
+//!   contrast — measurement-driven GA search is feasible for GPUs,
+//!   infeasible for FPGAs — an executable property.
+
+pub mod fpga;
+pub mod gpu;
+
+pub use fpga::{FPGA, FpgaBackend};
+pub use gpu::{GPU, GpuBackend, GpuDevice, TESLA_P100};
+
+use crate::cparse::ast::LoopId;
+use crate::cparse::Program;
+use crate::cpu::CpuModel;
+use crate::fpga::timing::KernelExec;
+use crate::hls::HlsReport;
+use crate::interp::Profile;
+use crate::ir::LoopAnalysis;
+
+/// Offload destination selected on the CLI (`flopt --target ...`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// FPGA only (the paper's evaluation — the default).
+    Fpga,
+    /// GPU only (the GA-driven flow of [Yamato 2018]).
+    Gpu,
+    /// Mixed destination: run every backend, pick the winner per app.
+    Mixed,
+}
+
+impl Target {
+    /// Parse a `--target` argument (case-insensitive).
+    pub fn parse(s: &str) -> Option<Target> {
+        match s.to_ascii_lowercase().as_str() {
+            "fpga" => Some(Target::Fpga),
+            "gpu" => Some(Target::Gpu),
+            "mixed" => Some(Target::Mixed),
+            _ => None,
+        }
+    }
+
+    /// The backends this target searches, in search order.
+    pub fn backends(self) -> Vec<&'static dyn OffloadBackend> {
+        match self {
+            Target::Fpga => vec![&FPGA as &dyn OffloadBackend],
+            Target::Gpu => vec![&GPU as &dyn OffloadBackend],
+            Target::Mixed => vec![&FPGA as &dyn OffloadBackend, &GPU as &dyn OffloadBackend],
+        }
+    }
+}
+
+/// Which search flow the coordinator drives for a backend (paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMethod {
+    /// Analytic narrowing + two measured rounds — the only feasible flow
+    /// when one pattern verification is an hours-long compile (FPGA).
+    NarrowedTwoRound,
+    /// Measurement-driven GA ([Yamato 2018]) — feasible when one pattern
+    /// verification is a minutes-long compile (GPU).
+    MeasurementGa,
+}
+
+/// Backend-specific payload of a pre-compile report.
+#[derive(Debug, Clone)]
+pub enum ReportDetail {
+    /// Arria10 HLS pre-compile report.
+    Fpga(HlsReport),
+    /// Calibrated GPU kernel estimate.
+    Gpu(gpu::GpuKernelReport),
+}
+
+/// Device-neutral pre-compile ("cost estimation") report for one loop.
+#[derive(Debug, Clone)]
+pub struct BackendReport {
+    /// The loop the estimate describes.
+    pub loop_id: LoopId,
+    /// Device resource fraction (FPGA: utilization incl. BSP; GPU:
+    /// occupancy-style pressure estimate) — the denominator of the
+    /// paper's resource-efficiency metric.
+    pub utilization: f64,
+    /// Simulated estimation time charged to the clock (the FPGA's
+    /// "minutes, not hours" HLS path; a trial build on GPU).
+    pub precompile_s: f64,
+    /// Backend-specific payload.
+    pub detail: ReportDetail,
+}
+
+impl BackendReport {
+    /// The FPGA HLS report, when this estimate came from the FPGA backend.
+    pub fn hls(&self) -> Option<&HlsReport> {
+        match &self.detail {
+            ReportDetail::Fpga(r) => Some(r),
+            ReportDetail::Gpu(_) => None,
+        }
+    }
+
+    /// The GPU kernel estimate, when this came from the GPU backend.
+    pub fn gpu(&self) -> Option<&gpu::GpuKernelReport> {
+        match &self.detail {
+            ReportDetail::Gpu(r) => Some(r),
+            ReportDetail::Fpga(_) => None,
+        }
+    }
+}
+
+/// Outcome of a full pattern compile on a backend.
+#[derive(Debug, Clone)]
+pub struct BackendCompile {
+    /// Did the compile produce a runnable binary/bitstream?
+    pub ok: bool,
+    /// Simulated seconds the compile occupied a farm lane, success or not.
+    pub sim_s: f64,
+}
+
+/// Everything the coordinator asks of an offload destination.
+///
+/// Implementations must be pure functions of their inputs: the search
+/// replays estimates and compiles deterministically, and the FPGA
+/// adapter is required to reproduce the pre-seam models bit-identically
+/// (`rust/tests/backends.rs` enforces this).
+pub trait OffloadBackend: Sync {
+    /// Destination name threaded through traces and reports ("FPGA", "GPU").
+    fn name(&self) -> &'static str;
+
+    /// One-line device description for `flopt env`.
+    fn description(&self) -> String;
+
+    /// Which search flow the coordinator should drive (paper §3.2).
+    fn search_method(&self) -> SearchMethod;
+
+    /// Candidate legality: can this loop statement run as a kernel on
+    /// this device at all?  The default accepts exactly what the
+    /// dependence tests allow; backends may restrict further.
+    fn offloadable(&self, la: &LoopAnalysis) -> bool {
+        la.deps.offloadable
+    }
+
+    /// Analytic pre-compile: cost/resource estimation for one loop.
+    fn precompile(&self, program: &Program, la: &LoopAnalysis, unroll: usize) -> BackendReport;
+
+    /// Device resource fraction of a multi-kernel pattern (cap checks
+    /// and the trace).  An empty pattern reports the static floor.
+    fn combined_utilization(&self, reports: &[&BackendReport]) -> f64;
+
+    /// Pattern verification cost: simulate the full compile of a
+    /// pattern's kernels.  `label` seeds any deterministic jitter.
+    fn full_compile(&self, reports: &[&BackendReport], label: &str) -> BackendCompile;
+
+    /// Offloaded-timing model: one loop's execution on this device,
+    /// including host↔device transfers.
+    fn kernel_exec(
+        &self,
+        loops: &[LoopAnalysis],
+        profile: &Profile,
+        cpu: &CpuModel,
+        report: &BackendReport,
+    ) -> KernelExec;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_parses() {
+        assert_eq!(Target::parse("fpga"), Some(Target::Fpga));
+        assert_eq!(Target::parse("GPU"), Some(Target::Gpu));
+        assert_eq!(Target::parse("Mixed"), Some(Target::Mixed));
+        assert_eq!(Target::parse("tpu"), None);
+    }
+
+    #[test]
+    fn target_backends_cover_the_destination() {
+        assert_eq!(Target::Fpga.backends().len(), 1);
+        assert_eq!(Target::Gpu.backends().len(), 1);
+        let mixed = Target::Mixed.backends();
+        assert_eq!(mixed.len(), 2);
+        assert_eq!(mixed[0].name(), "FPGA");
+        assert_eq!(mixed[1].name(), "GPU");
+    }
+
+    #[test]
+    fn search_methods_match_the_paper_argument() {
+        assert_eq!(FPGA.search_method(), SearchMethod::NarrowedTwoRound);
+        assert_eq!(GPU.search_method(), SearchMethod::MeasurementGa);
+    }
+}

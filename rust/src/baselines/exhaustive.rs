@@ -54,15 +54,15 @@ pub fn search(analysis: &AppAnalysis, env: &VerifyEnv<'_>) -> BaselineOutcome {
 mod tests {
     use super::*;
     use crate::apps;
+    use crate::backend::FPGA;
     use crate::config::SearchConfig;
     use crate::coordinator::pipeline::analyze_app;
     use crate::cpu::XEON_3104;
-    use crate::fpga::ARRIA10_GX;
 
     #[test]
     fn exhaustive_is_optimal_but_expensive() {
         let analysis = analyze_app(&apps::HISTOGRAM, true).unwrap();
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         let out = search(&analysis, &env);
         assert!(out.evaluations >= 3);
         // every evaluation is a ~3h compile

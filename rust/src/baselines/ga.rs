@@ -8,6 +8,7 @@
 
 use std::collections::HashMap;
 
+use crate::backend::OffloadBackend;
 use crate::coordinator::pipeline::AppAnalysis;
 use crate::coordinator::verify_env::{PatternMeasurement, VerifyEnv};
 use crate::cparse::ast::LoopId;
@@ -76,7 +77,7 @@ pub fn search(
             // empty genome = all-CPU: free, speedup 1
             PatternMeasurement {
                 pattern: pat.clone(),
-                utilization: env.device.bsp_frac,
+                utilization: env.backend.combined_utilization(&[]),
                 compiled: true,
                 compile_sim_s: 0.0,
                 time_s: env.cpu_baseline_s(analysis),
@@ -159,15 +160,15 @@ pub fn search(
 mod tests {
     use super::*;
     use crate::apps;
+    use crate::backend::FPGA;
     use crate::config::SearchConfig;
     use crate::coordinator::pipeline::analyze_app;
     use crate::cpu::XEON_3104;
-    use crate::fpga::ARRIA10_GX;
 
     #[test]
     fn ga_finds_an_improving_pattern_but_burns_compile_hours() {
         let analysis = analyze_app(&apps::MRIQ, true).unwrap();
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         let out = search(&analysis, &env, &GaConfig::default());
         assert!(out.speedup() > 1.0, "GA should find the hot loop eventually");
         // the whole point: GA needs far more compiles than the proposed d=4
@@ -179,7 +180,7 @@ mod tests {
     fn ga_is_deterministic_per_seed() {
         let analysis = analyze_app(&apps::HISTOGRAM, true).unwrap();
         let run = |seed| {
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+            let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
             let out = search(&analysis, &env, &GaConfig { seed, ..Default::default() });
             (out.evaluations, out.speedup())
         };

@@ -15,10 +15,10 @@ pub mod naive;
 
 use std::collections::HashMap;
 
+use crate::backend::{BackendReport, OffloadBackend};
 use crate::coordinator::pipeline::AppAnalysis;
 use crate::coordinator::verify_env::{PatternMeasurement, VerifyEnv};
 use crate::cparse::ast::LoopId;
-use crate::hls::{self, HlsReport};
 use crate::intensity;
 
 /// Outcome of a baseline search.
@@ -58,7 +58,7 @@ pub fn reports_for(
     env: &VerifyEnv<'_>,
     ids: &[LoopId],
     unroll: usize,
-) -> HashMap<LoopId, HlsReport> {
+) -> HashMap<LoopId, BackendReport> {
     ids.iter()
         .map(|id| {
             let la = analysis
@@ -66,7 +66,7 @@ pub fn reports_for(
                 .iter()
                 .find(|l| l.info.id == *id)
                 .expect("known loop");
-            (*id, hls::precompile(&analysis.program, la, unroll, env.device))
+            (*id, env.backend.precompile(&analysis.program, la, unroll))
         })
         .collect()
 }

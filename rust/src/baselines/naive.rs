@@ -32,18 +32,18 @@ pub fn search(analysis: &AppAnalysis, env: &VerifyEnv<'_>) -> BaselineOutcome {
 mod tests {
     use super::*;
     use crate::apps;
+    use crate::backend::FPGA;
     use crate::config::SearchConfig;
     use crate::coordinator::pipeline::{analyze_app, search_with_analysis};
     use crate::cpu::XEON_3104;
-    use crate::fpga::ARRIA10_GX;
 
     #[test]
     fn naive_all_is_no_better_than_proposed() {
         let analysis = analyze_app(&apps::TDFIR, true).unwrap();
-        let naive_env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let naive_env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         let naive = search(&analysis, &naive_env);
 
-        let prop_env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let prop_env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         let proposed = search_with_analysis(
             &apps::TDFIR,
             &analysis,

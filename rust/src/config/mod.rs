@@ -20,6 +20,11 @@ pub struct SearchConfig {
     /// Verification-environment compile lanes.  The paper compiles
     /// sequentially on one machine (≈3 h per pattern, ~half a day for 4).
     pub compile_parallelism: usize,
+    /// GA population for measurement-driven backends (GPU; the
+    /// [Yamato 2018] flow the mixed-destination search reuses).
+    pub ga_population: usize,
+    /// GA generations for measurement-driven backends (GPU).
+    pub ga_generations: usize,
 }
 
 impl Default for SearchConfig {
@@ -31,6 +36,8 @@ impl Default for SearchConfig {
             d_patterns: 4,
             resource_cap: 0.85,
             compile_parallelism: 1,
+            ga_population: 8,
+            ga_generations: 5,
         }
     }
 }

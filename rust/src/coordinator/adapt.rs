@@ -229,6 +229,7 @@ pub fn demo_sites() -> Vec<Site> {
 mod tests {
     use super::*;
     use crate::apps;
+    use crate::backend::FPGA;
     use crate::config::SearchConfig;
     use crate::coordinator::pipeline::offload_search;
     use crate::coordinator::verify_env::VerifyEnv;
@@ -236,7 +237,7 @@ mod tests {
     use crate::fpga::ARRIA10_GX;
 
     fn best_of(app: &crate::apps::App) -> PatternMeasurement {
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         offload_search(app, &env, true).unwrap().best.unwrap()
     }
 

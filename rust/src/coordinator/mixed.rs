@@ -1,0 +1,304 @@
+//! Mixed-destination offload (the follow-up proposal, arXiv:2011.12431):
+//! run every available backend's *own* search flow for an application on
+//! one shared simulated clock, then pick the winning destination.
+//!
+//! Each backend declares its feasible search method
+//! ([`crate::backend::SearchMethod`]): the FPGA runs the paper's
+//! narrowed two-round flow (compiles are hours), the GPU runs the
+//! measurement-driven GA of [Yamato 2018] (compiles are minutes).  The
+//! winner is the destination whose best pattern beats the all-CPU
+//! baseline by the most; when nothing improves, the app stays on the
+//! CPU — mixed placement never loses to all-CPU.
+
+use std::sync::Arc;
+
+use crate::apps::App;
+use crate::backend::{OffloadBackend, SearchMethod};
+use crate::baselines::ga::{self, GaConfig};
+use crate::config::SearchConfig;
+use crate::cpu::CpuModel;
+use crate::metrics::SimClock;
+
+use super::pipeline::{analyze_app, charge_analysis, search_with_analysis, AppAnalysis};
+use super::verify_env::{PatternMeasurement, VerifyEnv};
+
+/// Outcome of one backend's search for one app.
+#[derive(Debug)]
+pub struct DestinationSearch {
+    /// Registry name of the searched app.
+    pub app_name: String,
+    /// Destination the search targeted ("FPGA", "GPU").
+    pub destination: &'static str,
+    /// Search flow that produced the result.
+    pub method: &'static str,
+    /// Best speedup found vs. all-CPU (may be < 1 when nothing improved).
+    pub speedup: f64,
+    /// The winning measured pattern, if any compiled.
+    pub best: Option<PatternMeasurement>,
+    /// Patterns compiled + measured by this search.
+    pub patterns_measured: usize,
+    /// Compile-lane hours this search burned on the shared clock.
+    pub compile_hours: f64,
+}
+
+impl DestinationSearch {
+    /// One-destination report (the `--target gpu` CLI output).
+    pub fn render(&self) -> String {
+        let pattern = self
+            .best
+            .as_ref()
+            .map(|b| b.pattern.label())
+            .unwrap_or_else(|| "none".to_string());
+        format!(
+            "=== offload search: {} → {} ({}) ===\n\
+             patterns measured: {}\n\
+             compile-lane hours: {:.1}\n\
+             solution: pattern {} on {} — speedup {:.2}x vs all-CPU\n",
+            self.app_name,
+            self.destination,
+            self.method,
+            self.patterns_measured,
+            self.compile_hours,
+            pattern,
+            self.destination,
+            self.speedup
+        )
+    }
+}
+
+/// The mixed-destination record for one app.
+#[derive(Debug)]
+pub struct MixedTrace {
+    /// Registry name of the searched app.
+    pub app_name: String,
+    /// All-CPU baseline time of the sample run (model).
+    pub cpu_time_s: f64,
+    /// Per-backend search outcomes, in search order.
+    pub searches: Vec<DestinationSearch>,
+    /// Winning destination ("FPGA", "GPU", or "CPU" when nothing won).
+    pub winner: &'static str,
+    /// Speedup of the winning placement (1.0 when staying on CPU).
+    pub speedup: f64,
+    /// Total simulated hours on the shared clock after this app.
+    pub sim_hours: f64,
+}
+
+impl MixedTrace {
+    /// Render the mixed-destination table for this app.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "=== mixed-destination offload: {} ===\n\
+             all-CPU baseline: {:.4} s (model)\n",
+            self.app_name, self.cpu_time_s
+        ));
+        for s in &self.searches {
+            out.push_str(&format!(
+                "  {:<6} {:<16} speedup {:>6.2}x  patterns {:>3}  compile-lane {:>6.1} h\n",
+                s.destination, s.method, s.speedup, s.patterns_measured, s.compile_hours
+            ));
+        }
+        out.push_str(&format!(
+            "destination: {} — {:.2}x vs all-CPU\n\
+             automation time (shared clock): {:.1} h simulated\n",
+            self.winner, self.speedup, self.sim_hours
+        ));
+        out
+    }
+}
+
+/// Run one backend's own search flow for an analyzed app.
+///
+/// Dispatches on [`OffloadBackend::search_method`]: narrowed two-round
+/// for hours-scale compiles, measurement-driven GA for minutes-scale.
+pub fn destination_search(
+    app: &App,
+    analysis: &AppAnalysis,
+    env: &VerifyEnv<'_>,
+    cfg: &SearchConfig,
+) -> crate::Result<DestinationSearch> {
+    let meter = env.clock.compile_meter();
+    let out = match env.backend.search_method() {
+        SearchMethod::NarrowedTwoRound => {
+            let t = search_with_analysis(app, analysis, env, cfg)?;
+            DestinationSearch {
+                app_name: analysis.app_name.clone(),
+                destination: env.backend.name(),
+                method: "narrowed-2round",
+                speedup: t.speedup(),
+                best: t.best.clone(),
+                patterns_measured: t.patterns_measured(),
+                compile_hours: meter.lane_hours(),
+            }
+        }
+        SearchMethod::MeasurementGa => {
+            let ga_cfg = GaConfig {
+                population: cfg.ga_population,
+                generations: cfg.ga_generations,
+                ..GaConfig::default()
+            };
+            let out = ga::search(analysis, env, &ga_cfg);
+            DestinationSearch {
+                app_name: analysis.app_name.clone(),
+                destination: env.backend.name(),
+                method: "ga",
+                speedup: out.speedup(),
+                best: out.best,
+                patterns_measured: out.evaluations,
+                compile_hours: meter.lane_hours(),
+            }
+        }
+    };
+    Ok(out)
+}
+
+/// Mixed-destination search for one app on a fresh clock.
+pub fn mixed_search(
+    app: &App,
+    backends: &[&'static dyn OffloadBackend],
+    cpu: &CpuModel,
+    cfg: &SearchConfig,
+    test_scale: bool,
+) -> crate::Result<MixedTrace> {
+    let clock = Arc::new(SimClock::new(cfg.compile_parallelism.max(1)));
+    mixed_search_with_clock(app, backends, cpu, cfg, test_scale, clock)
+}
+
+/// Mixed-destination search for one app on an existing shared clock
+/// (the `flopt --target mixed` run accounts all apps on one clock).
+pub fn mixed_search_with_clock(
+    app: &App,
+    backends: &[&'static dyn OffloadBackend],
+    cpu: &CpuModel,
+    cfg: &SearchConfig,
+    test_scale: bool,
+    clock: Arc<SimClock>,
+) -> crate::Result<MixedTrace> {
+    // Steps 1-2 run once per app and are shared by every backend.
+    let analysis = analyze_app(app, test_scale)?;
+    charge_analysis(&clock, cpu, &analysis);
+
+    let mut searches = Vec::new();
+    for b in backends {
+        let env = VerifyEnv::with_clock(*b, cpu, cfg.clone(), clock.clone());
+        searches.push(destination_search(app, &analysis, &env, cfg)?);
+    }
+
+    let best = searches
+        .iter()
+        .filter(|s| s.best.is_some() && s.speedup > 1.0)
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap());
+    let (winner, speedup) = match best {
+        Some(s) => (s.destination, s.speedup),
+        None => ("CPU", 1.0),
+    };
+
+    Ok(MixedTrace {
+        app_name: app.name.to_string(),
+        cpu_time_s: cpu.program_time_s(&analysis.profile),
+        searches,
+        winner,
+        speedup,
+        sim_hours: clock.total_hours(),
+    })
+}
+
+/// Mixed-destination search over several apps on **one** shared clock.
+pub fn mixed_search_all(
+    apps: &[&App],
+    backends: &[&'static dyn OffloadBackend],
+    cpu: &CpuModel,
+    cfg: &SearchConfig,
+    test_scale: bool,
+) -> crate::Result<Vec<MixedTrace>> {
+    let clock = Arc::new(SimClock::new(cfg.compile_parallelism.max(1)));
+    let mut traces = Vec::new();
+    for app in apps {
+        traces.push(mixed_search_with_clock(
+            app,
+            backends,
+            cpu,
+            cfg,
+            test_scale,
+            clock.clone(),
+        )?);
+    }
+    Ok(traces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::backend::Target;
+    use crate::cpu::XEON_3104;
+
+    #[test]
+    fn mixed_runs_both_backends_and_never_loses_to_cpu() {
+        let t = mixed_search(
+            &apps::MATMUL,
+            &Target::Mixed.backends(),
+            &XEON_3104,
+            &SearchConfig::default(),
+            true,
+        )
+        .unwrap();
+        assert_eq!(t.searches.len(), 2);
+        assert_eq!(t.searches[0].destination, "FPGA");
+        assert_eq!(t.searches[1].destination, "GPU");
+        assert_eq!(t.searches[0].method, "narrowed-2round");
+        assert_eq!(t.searches[1].method, "ga");
+        assert!(t.speedup >= 1.0, "mixed never loses to CPU: {}", t.speedup);
+        assert!(["FPGA", "GPU", "CPU"].contains(&t.winner));
+        assert!(t.sim_hours > 0.0);
+    }
+
+    #[test]
+    fn shared_clock_accumulates_across_apps() {
+        let apps_list: Vec<&crate::apps::App> = vec![&apps::HISTOGRAM, &apps::MATMUL];
+        let traces = mixed_search_all(
+            &apps_list,
+            &Target::Mixed.backends(),
+            &XEON_3104,
+            &SearchConfig::default(),
+            true,
+        )
+        .unwrap();
+        assert_eq!(traces.len(), 2);
+        // the second app's snapshot includes the first app's time
+        assert!(traces[1].sim_hours > traces[0].sim_hours);
+    }
+
+    #[test]
+    fn gpu_destination_search_uses_minutes_scale_compiles() {
+        let analysis = analyze_app(&apps::HISTOGRAM, true).unwrap();
+        let cfg = SearchConfig::default();
+        let env = VerifyEnv::new(&crate::backend::GPU, &XEON_3104, cfg.clone());
+        let ds = destination_search(&apps::HISTOGRAM, &analysis, &env, &cfg).unwrap();
+        assert_eq!(ds.destination, "GPU");
+        assert_eq!(ds.method, "ga");
+        assert!(ds.patterns_measured > 0);
+        // every GPU evaluation is a minutes-long build, not hours
+        let per_eval_h = ds.compile_hours / ds.patterns_measured as f64;
+        assert!(per_eval_h < 0.5, "per-eval {per_eval_h} h");
+        let rendered = ds.render();
+        assert!(rendered.contains("→ GPU (ga)"), "{rendered}");
+    }
+
+    #[test]
+    fn mixed_trace_renders() {
+        let t = mixed_search(
+            &apps::HISTOGRAM,
+            &Target::Mixed.backends(),
+            &XEON_3104,
+            &SearchConfig::default(),
+            true,
+        )
+        .unwrap();
+        let s = t.render();
+        assert!(s.contains("mixed-destination offload: histogram"));
+        assert!(s.contains("FPGA"));
+        assert!(s.contains("GPU"));
+        assert!(s.contains("destination:"));
+    }
+}

@@ -7,12 +7,16 @@
 //! * [`pipeline`] — the end-to-end search ([`pipeline::offload_search`]);
 //! * [`verify_env`] — the verification environment: simulated compile
 //!   farm + performance measurement + PJRT numerics cross-check;
-//! * [`patterns`] — round-1/round-2 offload-pattern construction.
+//! * [`patterns`] — round-1/round-2 offload-pattern construction;
+//! * [`mixed`] — the mixed-destination search (arXiv:2011.12431): every
+//!   backend's own flow on one shared clock, winner per app.
 
 pub mod adapt;
+pub mod mixed;
 pub mod patterns;
 pub mod pipeline;
 pub mod verify_env;
 
+pub use mixed::{mixed_search, mixed_search_all, DestinationSearch, MixedTrace};
 pub use pipeline::{analyze_app, offload_search, AppAnalysis, CandidateReport, SearchTrace};
 pub use verify_env::{NumericsCheck, PatternMeasurement, VerifyEnv};

@@ -11,9 +11,8 @@
 
 use std::collections::HashMap;
 
+use crate::backend::{BackendReport, OffloadBackend};
 use crate::cparse::ast::LoopId;
-use crate::fpga::device::Device;
-use crate::hls::{combined_utilization, HlsReport};
 use crate::opencl::OffloadPattern;
 
 use super::verify_env::PatternMeasurement;
@@ -26,8 +25,8 @@ pub fn round1(top_c: &[LoopId]) -> Vec<OffloadPattern> {
 /// Round-2 patterns: combinations of improving loops.
 pub fn round2(
     round1_results: &[PatternMeasurement],
-    reports: &HashMap<LoopId, HlsReport>,
-    device: &Device,
+    reports: &HashMap<LoopId, BackendReport>,
+    backend: &dyn OffloadBackend,
     resource_cap: f64,
     budget: usize,
 ) -> Vec<OffloadPattern> {
@@ -62,7 +61,7 @@ pub fn round2(
         if out.len() >= budget {
             break;
         }
-        let refs: Vec<&HlsReport> = pat
+        let refs: Vec<&BackendReport> = pat
             .loops
             .iter()
             .filter_map(|l| reports.get(l))
@@ -70,7 +69,7 @@ pub fn round2(
         if refs.len() != pat.loops.len() {
             continue;
         }
-        if combined_utilization(&refs, device) > resource_cap {
+        if backend.combined_utilization(&refs) > resource_cap {
             continue; // paper: over-cap combinations are never built
         }
         out.push(pat);
@@ -101,6 +100,7 @@ fn subsets_of_size(ids: &[LoopId], size: usize) -> Vec<Vec<LoopId>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{FPGA, ReportDetail};
     use crate::opencl::OffloadPattern;
 
     fn meas(id: u32, speedup: f64, compiled: bool) -> PatternMeasurement {
@@ -127,7 +127,7 @@ mod tests {
     fn round2_combines_improving_loops() {
         let r1 = vec![meas(1, 3.0, true), meas(3, 1.5, true), meas(5, 0.8, true)];
         let reports = fake_reports(&[1, 3, 5]);
-        let pats = round2(&r1, &reports, &crate::fpga::ARRIA10_GX, 0.85, 4);
+        let pats = round2(&r1, &reports, &FPGA, 0.85, 4);
         // L5 did not improve: only the L1+L3 pair remains
         assert_eq!(pats, vec![OffloadPattern::of(vec![LoopId(1), LoopId(3)])]);
     }
@@ -136,7 +136,7 @@ mod tests {
     fn round2_respects_budget() {
         let r1 = vec![meas(1, 3.0, true), meas(3, 2.0, true), meas(5, 1.5, true)];
         let reports = fake_reports(&[1, 3, 5]);
-        let pats = round2(&r1, &reports, &crate::fpga::ARRIA10_GX, 0.85, 1);
+        let pats = round2(&r1, &reports, &FPGA, 0.85, 1);
         assert_eq!(pats.len(), 1);
         // all three improved: their full combination has the largest
         // estimated gain and wins the single remaining slot
@@ -150,7 +150,7 @@ mod tests {
     fn round2_skips_failed_compiles() {
         let r1 = vec![meas(1, 3.0, false), meas(3, 2.0, true)];
         let reports = fake_reports(&[1, 3]);
-        let pats = round2(&r1, &reports, &crate::fpga::ARRIA10_GX, 0.85, 4);
+        let pats = round2(&r1, &reports, &FPGA, 0.85, 4);
         assert!(pats.is_empty(), "only one improving loop => no combos");
     }
 
@@ -160,13 +160,15 @@ mod tests {
         let mut reports = fake_reports(&[1, 3]);
         // inflate L3's resources so the pair blows the cap
         if let Some(r) = reports.get_mut(&LoopId(3)) {
-            r.resources.alms = crate::fpga::ARRIA10_GX.total.alms * 0.9;
+            if let ReportDetail::Fpga(hls) = &mut r.detail {
+                hls.resources.alms = crate::fpga::ARRIA10_GX.total.alms * 0.9;
+            }
         }
-        let pats = round2(&r1, &reports, &crate::fpga::ARRIA10_GX, 0.85, 4);
+        let pats = round2(&r1, &reports, &FPGA, 0.85, 4);
         assert!(pats.is_empty());
     }
 
-    fn fake_reports(ids: &[u32]) -> HashMap<LoopId, HlsReport> {
+    fn fake_reports(ids: &[u32]) -> HashMap<LoopId, BackendReport> {
         use crate::cparse::parse;
         use crate::ir;
         // a real small kernel report, duplicated under several ids
@@ -176,11 +178,14 @@ mod tests {
         )
         .unwrap();
         let loops = ir::analyze(&p);
-        let base = crate::hls::precompile(&p, &loops[0], 1, &crate::fpga::ARRIA10_GX);
+        let base = FPGA.precompile(&p, &loops[0], 1);
         ids.iter()
             .map(|id| {
                 let mut r = base.clone();
                 r.loop_id = LoopId(*id);
+                if let ReportDetail::Fpga(hls) = &mut r.detail {
+                    hls.loop_id = LoopId(*id);
+                }
                 (LoopId(*id), r)
             })
             .collect()

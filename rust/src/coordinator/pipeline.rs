@@ -6,10 +6,10 @@
 use std::collections::HashMap;
 
 use crate::apps::App;
+use crate::backend::{BackendReport, OffloadBackend};
 use crate::config::SearchConfig;
 use crate::cparse::ast::LoopId;
 use crate::cparse::Program;
-use crate::hls::{self, HlsReport};
 use crate::intensity::{self, LoopIntensity};
 use crate::interp::Profile;
 use crate::ir::{self, LoopAnalysis};
@@ -62,8 +62,8 @@ pub struct CandidateReport {
     pub utilization: f64,
     /// Resource efficiency: intensity / utilization.
     pub efficiency: f64,
-    /// The full pre-compile report.
-    pub hls: HlsReport,
+    /// The full backend pre-compile report.
+    pub report: BackendReport,
 }
 
 /// Everything the search recorded — the paper logs exactly this trace
@@ -72,6 +72,8 @@ pub struct CandidateReport {
 pub struct SearchTrace {
     /// Registry name of the searched app.
     pub app_name: String,
+    /// Destination the search targeted ("FPGA", "GPU", ...).
+    pub destination: &'static str,
     /// total loop statements discovered (paper: tdfir 36, MRI-Q 16)
     pub loop_count: usize,
     /// all executed loops with intensity info
@@ -111,8 +113,8 @@ impl SearchTrace {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "=== offload search: {} ===\nloop statements found: {}\n",
-            self.app_name, self.loop_count
+            "=== offload search: {} → {} ===\nloop statements found: {}\n",
+            self.app_name, self.destination, self.loop_count
         ));
         out.push_str(&format!(
             "top-{} by arithmetic intensity: {:?}\n",
@@ -148,11 +150,15 @@ impl SearchTrace {
         }
         match &self.best {
             Some(b) => out.push_str(&format!(
-                "solution: pattern {} — speedup {:.2}x vs all-CPU\n",
+                "solution: pattern {} on {} — speedup {:.2}x vs all-CPU\n",
                 b.pattern.label(),
+                self.destination,
                 b.speedup
             )),
-            None => out.push_str("solution: none (no pattern beat the CPU)\n"),
+            None => out.push_str(&format!(
+                "solution: none (no {} pattern beat the CPU)\n",
+                self.destination
+            )),
         }
         out.push_str(&format!(
             "automation time: {:.1} h simulated ({:.1} compile-lane hours)\n",
@@ -160,6 +166,25 @@ impl SearchTrace {
         ));
         out
     }
+}
+
+/// Charge the Steps 1–2 simulated time (code analysis + one profiled
+/// run + intensity pass) for an analyzed app.  Shared by the
+/// single-backend flow and the mixed-destination search so their clock
+/// semantics cannot diverge.
+pub fn charge_analysis(
+    clock: &crate::metrics::SimClock,
+    cpu: &crate::cpu::CpuModel,
+    analysis: &AppAnalysis,
+) {
+    // Step 1: code analysis (sim: parse + libClang-equivalent walk)
+    clock.advance_serial("code analysis", 30.0);
+    // Step 2: profiling + intensity analysis (sim: one instrumented run
+    // + PGI-style intensity pass)
+    clock.advance_serial(
+        "intensity analysis",
+        120.0 + cpu.program_time_s(&analysis.profile),
+    );
 }
 
 /// Run the paper's full offload search for one app.
@@ -170,13 +195,7 @@ pub fn offload_search(
 ) -> crate::Result<SearchTrace> {
     let cfg: SearchConfig = env.config().clone();
     let analysis = analyze_app(app, test_scale)?;
-    // Step 1: code analysis (sim: parse + libClang-equivalent walk)
-    env.clock.advance_serial("code analysis", 30.0);
-    // Step 2: profiling + intensity analysis (sim: one instrumented run
-    // + PGI-style intensity pass)
-    env.clock
-        .advance_serial("intensity analysis", 120.0 + env.cpu_baseline_s(&analysis));
-
+    charge_analysis(&env.clock, env.cpu, &analysis);
     search_with_analysis(app, &analysis, env, &cfg)
 }
 
@@ -189,11 +208,28 @@ pub fn search_with_analysis(
     cfg: &SearchConfig,
 ) -> crate::Result<SearchTrace> {
     // ---- intensity cut (top a) ----------------------------------------
-    let top_a_loops = intensity::top_a(&analysis.intensities, &analysis.loops, cfg.a_intensity);
+    // Backend legality applies before the quota so a stricter device
+    // backfills with the next-ranked legal loops instead of silently
+    // under-filling `a`.  (No-op for the built-in backends today — the
+    // dependence tests already decide — but the seam keeps stricter
+    // devices possible.)
+    let top_a_loops: Vec<LoopIntensity> =
+        intensity::top_a(&analysis.intensities, &analysis.loops, usize::MAX)
+            .into_iter()
+            .filter(|li| {
+                analysis
+                    .loops
+                    .iter()
+                    .find(|l| l.info.id == li.id)
+                    .map(|la| env.backend.offloadable(la))
+                    .unwrap_or(false)
+            })
+            .take(cfg.a_intensity)
+            .collect();
     let top_a: Vec<LoopId> = top_a_loops.iter().map(|l| l.id).collect();
 
-    // ---- OpenCL generation + HLS pre-compile (minutes each) ------------
-    let mut reports: HashMap<LoopId, HlsReport> = HashMap::new();
+    // ---- kernel generation + backend pre-compile (minutes each) --------
+    let mut reports: HashMap<LoopId, BackendReport> = HashMap::new();
     let mut candidates = Vec::new();
     for li in &top_a_loops {
         let la = analysis
@@ -201,7 +237,7 @@ pub fn search_with_analysis(
             .iter()
             .find(|l| l.info.id == li.id)
             .expect("intensity refers to a known loop");
-        let rep = hls::precompile(&analysis.program, la, cfg.b_unroll, env.device);
+        let rep = env.backend.precompile(&analysis.program, la, cfg.b_unroll);
         env.clock.advance_serial(
             &format!("precompile {}", li.id),
             rep.precompile_s,
@@ -211,7 +247,7 @@ pub fn search_with_analysis(
             intensity: li.intensity,
             utilization: rep.utilization,
             efficiency: li.intensity / rep.utilization,
-            hls: rep.clone(),
+            report: rep.clone(),
         });
         reports.insert(li.id, rep);
     }
@@ -237,7 +273,8 @@ pub fn search_with_analysis(
 
     // ---- round 2: combinations of the improving singles ------------------
     let budget = d.saturating_sub(round1_meas.len());
-    let round2_pats = patterns::round2(&round1_meas, &reports, env.device, cfg.resource_cap, budget);
+    let round2_pats =
+        patterns::round2(&round1_meas, &reports, env.backend, cfg.resource_cap, budget);
     let mut round2_meas = Vec::new();
     for pat in &round2_pats {
         opencl_codes.push(generate_opencl(analysis, pat, cfg));
@@ -260,6 +297,7 @@ pub fn search_with_analysis(
 
     Ok(SearchTrace {
         app_name: analysis.app_name.clone(),
+        destination: env.backend.name(),
         loop_count: analysis.program.loop_count(),
         intensities: analysis.intensities.clone(),
         top_a,
@@ -300,12 +338,12 @@ pub fn generate_opencl(
 mod tests {
     use super::*;
     use crate::apps;
+    use crate::backend::FPGA;
     use crate::config::SearchConfig;
     use crate::cpu::XEON_3104;
-    use crate::fpga::ARRIA10_GX;
 
     fn run_search(app: &crate::apps::App, test_scale: bool) -> SearchTrace {
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         offload_search(app, &env, test_scale).unwrap()
     }
 
@@ -367,9 +405,11 @@ mod tests {
     #[test]
     fn trace_renders() {
         let t = run_search(&apps::MRIQ, true);
+        assert_eq!(t.destination, "FPGA");
         let s = t.render();
-        assert!(s.contains("offload search: mriq"));
+        assert!(s.contains("offload search: mriq → FPGA"));
         assert!(s.contains("solution:"));
+        assert!(s.contains("on FPGA"));
         assert!(s.contains("automation time"));
     }
 }

@@ -7,22 +7,24 @@
 //! built-in sample benchmark):
 //!
 //! ```text
-//! t(pattern) = t_cpu(all) − Σ_{L∈pattern} t_cpu(L) + Σ_{L∈pattern} t_fpga(L)
+//! t(pattern) = t_cpu(all) − Σ_{L∈pattern} t_cpu(L) + Σ_{L∈pattern} t_dev(L)
 //! ```
 //!
-//! with `t_fpga` from the pipelined-execution model (kernel + PCIe).  The
-//! compile farm schedules 3-hour simulated compiles over
+//! with `t_dev` from the backend's offloaded-timing model (FPGA: the
+//! pipelined single-work-item model; GPU: the calibrated SIMT model —
+//! both include host↔device transfers).  The compile farm schedules the
+//! backend's simulated compiles (FPGA: hours; GPU: minutes) over
 //! `compile_parallelism` lanes (paper: 1).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::apps::App;
+use crate::backend::{BackendReport, OffloadBackend};
 use crate::config::SearchConfig;
 use crate::cparse::ast::LoopId;
 use crate::cpu::CpuModel;
-use crate::fpga::device::Device;
-use crate::fpga::{pnr, timing};
-use crate::hls::HlsReport;
+use crate::fpga::timing;
 use crate::metrics::SimClock;
 use crate::opencl::OffloadPattern;
 use crate::runtime::Runtime;
@@ -44,7 +46,7 @@ pub struct PatternMeasurement {
     pub time_s: f64,
     /// speedup vs. the all-CPU run (the paper's Fig-4 metric)
     pub speedup: f64,
-    /// per-kernel FPGA breakdown
+    /// per-kernel device-side breakdown
     pub kernels: Vec<timing::KernelExec>,
 }
 
@@ -65,20 +67,32 @@ pub struct NumericsCheck {
 
 /// The verification environment.
 pub struct VerifyEnv<'a> {
-    /// The FPGA board model patterns compile against.
-    pub device: &'a Device,
+    /// The offload backend patterns compile against.
+    pub backend: &'a dyn OffloadBackend,
     /// The CPU model providing the all-CPU baseline.
     pub cpu: &'a CpuModel,
-    /// Simulated clock tracking automation time.
-    pub clock: SimClock,
+    /// Simulated clock tracking automation time.  `Arc` so a
+    /// mixed-destination search can share one clock across backends.
+    pub clock: Arc<SimClock>,
     cfg: SearchConfig,
 }
 
 impl<'a> VerifyEnv<'a> {
     /// Build an environment with `cfg.compile_parallelism` compile lanes.
-    pub fn new(device: &'a Device, cpu: &'a CpuModel, cfg: SearchConfig) -> Self {
-        let clock = SimClock::new(cfg.compile_parallelism.max(1));
-        Self { device, cpu, clock, cfg }
+    pub fn new(backend: &'a dyn OffloadBackend, cpu: &'a CpuModel, cfg: SearchConfig) -> Self {
+        let clock = Arc::new(SimClock::new(cfg.compile_parallelism.max(1)));
+        Self::with_clock(backend, cpu, cfg, clock)
+    }
+
+    /// Build an environment on an existing (shared) simulated clock —
+    /// the mixed-destination search accounts every backend on one clock.
+    pub fn with_clock(
+        backend: &'a dyn OffloadBackend,
+        cpu: &'a CpuModel,
+        cfg: SearchConfig,
+        clock: Arc<SimClock>,
+    ) -> Self {
+        Self { backend, cpu, clock, cfg }
     }
 
     /// The search configuration this environment was built with.
@@ -91,29 +105,29 @@ impl<'a> VerifyEnv<'a> {
         self.cpu.program_time_s(&analysis.profile)
     }
 
-    /// Compile + measure one pattern.  `reports` must contain an
-    /// [`HlsReport`] for every loop in the pattern.
+    /// Compile + measure one pattern.  `reports` must contain a
+    /// [`BackendReport`] for every loop in the pattern.
     pub fn measure_pattern(
         &self,
         analysis: &AppAnalysis,
-        reports: &HashMap<LoopId, HlsReport>,
+        reports: &HashMap<LoopId, BackendReport>,
         pattern: &OffloadPattern,
     ) -> PatternMeasurement {
-        let refs: Vec<&HlsReport> = pattern
+        let refs: Vec<&BackendReport> = pattern
             .loops
             .iter()
             .map(|l| reports.get(l).expect("pattern loop has a pre-compile report"))
             .collect();
-        let utilization = crate::hls::combined_utilization(&refs, self.device);
+        let utilization = self.backend.combined_utilization(&refs);
 
-        // full compile on the farm (3-hour scale)
-        let outcome = pnr::full_compile(&refs, self.device, &pattern.label());
-        let compile_sim_s = outcome.sim_seconds();
+        // full compile on the farm (FPGA: hours-scale; GPU: minutes)
+        let outcome = self.backend.full_compile(&refs, &pattern.label());
+        let compile_sim_s = outcome.sim_s;
         self.clock
             .schedule_compile(&format!("compile {}", pattern.label()), compile_sim_s);
 
         let cpu_total = self.cpu_baseline_s(analysis);
-        if !outcome.is_ok() {
+        if !outcome.ok {
             // no bitstream: the pattern cannot be measured
             return PatternMeasurement {
                 pattern: pattern.clone(),
@@ -132,18 +146,18 @@ impl<'a> VerifyEnv<'a> {
         let mut offloaded_cpu = 0.0;
         for l in &pattern.loops {
             let rep = reports.get(l).unwrap();
-            kernels.push(timing::kernel_time_s(
+            kernels.push(self.backend.kernel_exec(
                 &analysis.loops,
                 &analysis.profile,
+                self.cpu,
                 rep,
-                self.device,
             ));
             if let Some(lp) = analysis.profile.loop_profile(*l) {
                 offloaded_cpu += self.cpu.loop_time_s(lp);
             }
         }
-        let fpga_s = timing::pattern_fpga_time_s(&kernels);
-        let time_s = (cpu_total - offloaded_cpu).max(0.0) + fpga_s;
+        let device_s = timing::pattern_fpga_time_s(&kernels);
+        let time_s = (cpu_total - offloaded_cpu).max(0.0) + device_s;
         self.clock
             .advance_serial(&format!("measure {}", pattern.label()), time_s);
 

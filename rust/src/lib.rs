@@ -23,6 +23,7 @@
 #![warn(missing_docs)]
 
 pub mod apps;
+pub mod backend;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

@@ -10,17 +10,25 @@
 //! flopt compare <app>              proposed vs GA vs exhaustive vs naive
 //! ```
 //!
-//! Options for `offload`/`compare`: `--a N --b N --c N --d N --lanes N
-//! --full-scale` (default runs the paper's a=5, b=1, c=3, d=4 at test
-//! scale; `--full-scale` uses the paper-sized workloads).
+//! Options for `offload`/`compare`: `--target {fpga,gpu,mixed}` plus
+//! `--a N --b N --c N --d N --lanes N --full-scale` (default runs the
+//! paper's a=5, b=1, c=3, d=4 against the FPGA at test scale;
+//! `--full-scale` uses the paper-sized workloads).
+//!
+//! `flopt --target mixed` (no app) runs **all** registered apps through
+//! both backends on one shared simulated clock and reports the winning
+//! destination per app.
 
 use flopt::apps;
+use flopt::backend::{self, OffloadBackend, Target};
 use flopt::baselines;
 use flopt::config::{fig3_table, SearchConfig};
-use flopt::coordinator::pipeline::{analyze_app, offload_search, search_with_analysis};
+use flopt::coordinator::mixed::{destination_search, mixed_search_all};
+use flopt::coordinator::pipeline::{
+    analyze_app, charge_analysis, offload_search, search_with_analysis,
+};
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 use flopt::intensity;
 use flopt::runtime::{default_artifact_dir, Runtime};
 
@@ -31,13 +39,16 @@ fn usage() -> ! {
          \x20 apps                      list applications\n\
          \x20 env                       print the Fig-3 testbed table\n\
          \x20 analyze <app>             loop + intensity analysis\n\
-         \x20 offload <app> [opts]      full offload search\n\
+         \x20 offload [<app>] [opts]    full offload search\n\
          \x20 opencl <app> [opts]       print the solution's OpenCL\n\
          \x20 verify <app>              PJRT numerics cross-check\n\
          \x20 compare <app> [opts]      proposed vs baselines\n\
          \x20 blocks <app>              functional-block detection (Step 1)\n\
          \x20 adapt <app> [opts]        Steps 4-6: size, place, verify operation\n\
-         opts: --a N --b N --c N --d N --lanes N --full-scale"
+         opts: --target {{fpga,gpu,mixed}} --a N --b N --c N --d N --lanes N\n\
+         \x20     --ga-pop N --ga-gen N --full-scale\n\
+         (`flopt --target mixed` with no app searches all registered apps\n\
+         \x20on one shared clock and reports the winning destination per app)"
     );
     std::process::exit(2);
 }
@@ -46,12 +57,14 @@ struct Opts {
     app: Option<String>,
     cfg: SearchConfig,
     full_scale: bool,
+    target: Target,
 }
 
 fn parse_opts(args: &[String]) -> Opts {
     let mut cfg = SearchConfig::default();
     let mut app = None;
     let mut full_scale = false;
+    let mut target = Target::Fpga;
     let mut i = 0;
     while i < args.len() {
         let take = |i: &mut usize| -> usize {
@@ -66,13 +79,22 @@ fn parse_opts(args: &[String]) -> Opts {
             "--c" => cfg.c_efficiency = take(&mut i),
             "--d" => cfg.d_patterns = take(&mut i),
             "--lanes" => cfg.compile_parallelism = take(&mut i),
+            "--ga-pop" => cfg.ga_population = take(&mut i),
+            "--ga-gen" => cfg.ga_generations = take(&mut i),
+            "--target" => {
+                i += 1;
+                target = args
+                    .get(i)
+                    .and_then(|v| Target::parse(v))
+                    .unwrap_or_else(|| usage());
+            }
             "--full-scale" => full_scale = true,
             s if !s.starts_with('-') && app.is_none() => app = Some(s.to_string()),
             _ => usage(),
         }
         i += 1;
     }
-    Opts { app, cfg, full_scale }
+    Opts { app, cfg, full_scale, target }
 }
 
 fn get_app(opts: &Opts) -> &'static apps::App {
@@ -83,12 +105,38 @@ fn get_app(opts: &Opts) -> &'static apps::App {
     })
 }
 
+/// The single backend a non-mixed command runs against.
+fn single_backend(opts: &Opts, cmd: &str) -> &'static dyn OffloadBackend {
+    match opts.target {
+        Target::Fpga => &backend::FPGA,
+        Target::Gpu => &backend::GPU,
+        Target::Mixed => {
+            eprintln!("`{cmd}` does not support --target mixed (only `offload` does)");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Reject `--target` on commands whose flow is FPGA-specific.
+fn require_fpga_target(opts: &Opts, cmd: &str) {
+    if opts.target != Target::Fpga {
+        eprintln!("`{cmd}` is FPGA-specific and supports only --target fpga");
+        std::process::exit(2);
+    }
+}
+
 fn main() -> flopt::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let Some(cmd) = args.first() else { usage() };
-    let opts = parse_opts(&args[1..]);
+    let Some(first) = args.first() else { usage() };
+    // `flopt --target mixed` etc.: a leading option implies `offload`
+    let (cmd, rest) = if first.starts_with('-') {
+        ("offload", &args[..])
+    } else {
+        (first.as_str(), &args[1..])
+    };
+    let opts = parse_opts(rest);
 
-    match cmd.as_str() {
+    match cmd {
         "apps" => {
             for a in apps::all() {
                 let loops = a.parse().loop_count();
@@ -105,13 +153,10 @@ fn main() -> flopt::Result<()> {
         }
         "env" => {
             println!("{}", fig3_table());
-            println!(
-                "FPGA model: {} | base fmax {:.0} MHz | PCIe {:.1} GB/s",
-                ARRIA10_GX.name,
-                ARRIA10_GX.base_fmax_hz / 1e6,
-                ARRIA10_GX.pcie_bw_bytes_per_s / 1e9
-            );
-            println!("CPU model:  {}", XEON_3104.name);
+            for b in Target::Mixed.backends() {
+                println!("{:<5} model: {}", b.name(), b.description());
+            }
+            println!("CPU   model: {}", XEON_3104.name);
         }
         "analyze" => {
             let app = get_app(&opts);
@@ -146,15 +191,52 @@ fn main() -> flopt::Result<()> {
                 top.iter().map(|l| l.id.to_string()).collect::<Vec<_>>()
             );
         }
-        "offload" => {
-            let app = get_app(&opts);
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
-            let trace = offload_search(app, &env, !opts.full_scale)?;
-            println!("{}", trace.render());
-        }
+        "offload" => match opts.target {
+            Target::Fpga => {
+                let app = get_app(&opts);
+                let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone());
+                let trace = offload_search(app, &env, !opts.full_scale)?;
+                println!("{}", trace.render());
+            }
+            Target::Gpu => {
+                let app = get_app(&opts);
+                let analysis = analyze_app(app, !opts.full_scale)?;
+                let env = VerifyEnv::new(&backend::GPU, &XEON_3104, opts.cfg.clone());
+                charge_analysis(&env.clock, env.cpu, &analysis);
+                let ds = destination_search(app, &analysis, &env, &opts.cfg)?;
+                println!("{}", ds.render());
+                println!(
+                    "automation time: {:.1} h simulated",
+                    env.clock.total_hours()
+                );
+            }
+            Target::Mixed => {
+                // one app when named, the whole registry otherwise —
+                // always on one shared simulated clock
+                let apps_list: Vec<&'static apps::App> = match opts.app.as_deref() {
+                    Some(_) => vec![get_app(&opts)],
+                    None => apps::all(),
+                };
+                let traces = mixed_search_all(
+                    &apps_list,
+                    &Target::Mixed.backends(),
+                    &XEON_3104,
+                    &opts.cfg,
+                    !opts.full_scale,
+                )?;
+                for t in &traces {
+                    println!("{}", t.render());
+                }
+                println!(
+                    "total automation time (shared clock): {:.1} h simulated",
+                    traces.last().map(|t| t.sim_hours).unwrap_or(0.0)
+                );
+            }
+        },
         "opencl" => {
             let app = get_app(&opts);
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+            require_fpga_target(&opts, "opencl");
+            let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone());
             let trace = offload_search(app, &env, !opts.full_scale)?;
             match trace.best {
                 Some(best) => {
@@ -173,8 +255,9 @@ fn main() -> flopt::Result<()> {
         }
         "verify" => {
             let app = get_app(&opts);
+            require_fpga_target(&opts, "verify");
             let rt = Runtime::load(default_artifact_dir())?;
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+            let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone());
             let check = env.check_numerics(app, &rt)?;
             println!(
                 "artifact {}: {} elements, max|fpga-cpu| = {:.3e}, max|pallas-jnp| = {:.3e} -> {}",
@@ -210,7 +293,8 @@ fn main() -> flopt::Result<()> {
         }
         "adapt" => {
             let app = get_app(&opts);
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+            require_fpga_target(&opts, "adapt");
+            let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone());
             let trace = offload_search(app, &env, !opts.full_scale)?;
             let Some(best) = &trace.best else {
                 println!("no improving pattern — nothing to deploy");
@@ -220,7 +304,7 @@ fn main() -> flopt::Result<()> {
             let plan = flopt::coordinator::adapt::adapt(
                 app,
                 best,
-                &ARRIA10_GX,
+                &flopt::fpga::ARRIA10_GX,
                 &flopt::coordinator::adapt::demo_sites(),
                 /*target_rps=*/ 200.0,
                 /*max_latency_ms=*/ 100.0,
@@ -252,13 +336,15 @@ fn main() -> flopt::Result<()> {
         }
         "compare" => {
             let app = get_app(&opts);
+            let be = single_backend(&opts, "compare");
             let analysis = analyze_app(app, !opts.full_scale)?;
+            println!("search methods on the {} backend:", be.name());
             println!(
                 "{:<12} {:>9} {:>8} {:>14}",
                 "method", "speedup", "evals", "compile-hours"
             );
             {
-                let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+                let env = VerifyEnv::new(be, &XEON_3104, opts.cfg.clone());
                 let t = search_with_analysis(app, &analysis, &env, &opts.cfg)?;
                 println!(
                     "{:<12} {:>9.2} {:>8} {:>14.1}",
@@ -268,17 +354,22 @@ fn main() -> flopt::Result<()> {
                     t.compile_hours
                 );
             }
+            let ga_cfg = baselines::ga::GaConfig {
+                population: opts.cfg.ga_population,
+                generations: opts.cfg.ga_generations,
+                ..baselines::ga::GaConfig::default()
+            };
             for (name, out) in [
                 ("ga", {
-                    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
-                    baselines::ga::search(&analysis, &env, &baselines::ga::GaConfig::default())
+                    let env = VerifyEnv::new(be, &XEON_3104, opts.cfg.clone());
+                    baselines::ga::search(&analysis, &env, &ga_cfg)
                 }),
                 ("exhaustive", {
-                    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+                    let env = VerifyEnv::new(be, &XEON_3104, opts.cfg.clone());
                     baselines::exhaustive::search(&analysis, &env)
                 }),
                 ("naive-all", {
-                    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, opts.cfg.clone());
+                    let env = VerifyEnv::new(be, &XEON_3104, opts.cfg.clone());
                     baselines::naive::search(&analysis, &env)
                 }),
             ] {

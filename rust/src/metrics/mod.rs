@@ -89,6 +89,33 @@ impl SimClock {
     pub fn events(&self) -> Vec<Event> {
         self.inner.lock().expect("poisoned").events.clone()
     }
+
+    /// Start a compile-lane meter: attributes the lane-seconds burned
+    /// from this point on (the mixed-destination search meters each
+    /// backend's share of one shared clock).
+    pub fn compile_meter(&self) -> CompileMeter<'_> {
+        CompileMeter { clock: self, start_lane_s: self.compile_lane_seconds() }
+    }
+}
+
+/// Span accounting over a [`SimClock`]: compile-lane time burned since
+/// [`SimClock::compile_meter`] was called.
+#[derive(Debug)]
+pub struct CompileMeter<'c> {
+    clock: &'c SimClock,
+    start_lane_s: f64,
+}
+
+impl CompileMeter<'_> {
+    /// Compile-lane seconds burned since the meter started.
+    pub fn lane_seconds(&self) -> f64 {
+        self.clock.compile_lane_seconds() - self.start_lane_s
+    }
+
+    /// [`CompileMeter::lane_seconds`] in hours.
+    pub fn lane_hours(&self) -> f64 {
+        self.lane_seconds() / 3600.0
+    }
 }
 
 #[cfg(test)]
@@ -120,6 +147,18 @@ mod tests {
         // 2 lanes, 3 jobs of 3h -> makespan 6h
         assert_eq!(c.total_hours(), 6.0);
         assert_eq!(c.compile_lane_seconds(), 9.0 * 3600.0);
+    }
+
+    #[test]
+    fn compile_meter_attributes_spans() {
+        let c = SimClock::new(2);
+        c.schedule_compile("before", 3600.0);
+        let meter = c.compile_meter();
+        assert_eq!(meter.lane_seconds(), 0.0);
+        c.schedule_compile("during", 7200.0);
+        c.advance_serial("serial is not metered", 60.0);
+        assert_eq!(meter.lane_seconds(), 7200.0);
+        assert!((meter.lane_hours() - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -41,6 +41,44 @@ pub fn time_it<T>(iters: usize, mut f: impl FnMut() -> T) -> Timing {
     }
 }
 
+/// Common bench-binary arguments (`harness = false` targets).
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    /// Run the searches at CI test scale instead of full paper scale.
+    pub test_scale: bool,
+    /// Write a JSON report to this path when set.
+    pub report: Option<String>,
+}
+
+/// Parse `--test-scale` / `--report <path>` from the process arguments,
+/// ignoring whatever else `cargo bench` passes through.
+pub fn parse_bench_args() -> BenchArgs {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    parse_bench_args_from(&args)
+}
+
+/// [`parse_bench_args`] over an explicit argument list.  A `--report`
+/// followed by another flag (or nothing) is treated as having no path —
+/// the next flag is still honored rather than swallowed as a filename.
+pub fn parse_bench_args_from(args: &[String]) -> BenchArgs {
+    let mut out = BenchArgs::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--test-scale" => out.test_scale = true,
+            "--report" => {
+                if let Some(v) = args.get(i + 1).filter(|v| !v.starts_with("--")) {
+                    out.report = Some(v.clone());
+                    i += 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
 /// Pretty seconds (auto unit).
 pub fn fmt_s(s: f64) -> String {
     if s >= 1.0 {
@@ -75,6 +113,22 @@ mod tests {
         });
         assert!(t.min_s <= t.median_s && t.median_s <= t.max_s);
         assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn bench_args_parse() {
+        let s = |v: &[&str]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        let a = parse_bench_args_from(&s(&["--test-scale", "--report", "out.json"]));
+        assert!(a.test_scale);
+        assert_eq!(a.report.as_deref(), Some("out.json"));
+        // --report followed by a flag: no path, the flag still applies
+        let b = parse_bench_args_from(&s(&["--report", "--test-scale"]));
+        assert!(b.test_scale);
+        assert!(b.report.is_none());
+        // unknown cargo-bench passthrough args are ignored
+        let c = parse_bench_args_from(&s(&["--bench", "anything"]));
+        assert!(!c.test_scale);
+        assert!(c.report.is_none());
     }
 
     #[test]

@@ -7,11 +7,11 @@
 use std::sync::OnceLock;
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::{offload_search, SearchTrace};
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 
 /// Full-scale searches are deterministic — run each app once per test
 /// binary (the interpreter profile run is the expensive part).
@@ -24,7 +24,7 @@ fn search(app: &'static flopt::apps::App) -> &'static SearchTrace {
         other => panic!("unexpected app {other}"),
     };
     cell.get_or_init(|| {
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         offload_search(app, &env, /*test_scale=*/ false).expect("search")
     })
 }

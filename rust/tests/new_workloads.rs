@@ -4,12 +4,12 @@
 //! writes), and the top-a intensity rankings the narrowing relies on.
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cparse::ast::LoopId;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 use flopt::intensity;
 
 #[test]
@@ -81,7 +81,7 @@ fn new_workloads_complete_the_full_search() {
     for app in [&apps::MATMUL, &apps::LAPLACE2D, &apps::HISTOGRAM] {
         let analysis = analyze_app(app, true).unwrap();
         let cfg = SearchConfig::default();
-        let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
         let t = search_with_analysis(app, &analysis, &env, &cfg).unwrap();
         let best = t.best.as_ref()
             .unwrap_or_else(|| panic!("{}: a pattern must win", app.name));

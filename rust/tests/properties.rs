@@ -10,6 +10,7 @@
 //! * round-2 patterns never exceed the cap, never duplicate round 1;
 //! * JSON round-trips random documents.
 
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
 use flopt::coordinator::verify_env::VerifyEnv;
@@ -150,7 +151,7 @@ fn prop_search_invariants_across_apps() {
                 d_patterns: d,
                 ..Default::default()
             };
-            let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, cfg.clone());
+            let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
             let t = search_with_analysis(app, &analysis, &env, &cfg).unwrap();
             assert!(t.top_a.len() <= a);
             assert!(t.top_c.len() <= c);

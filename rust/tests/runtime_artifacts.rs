@@ -6,10 +6,10 @@
 //! Requires `make artifacts` (the Makefile `test` target guarantees it).
 
 use flopt::apps;
+use flopt::backend::FPGA;
 use flopt::config::SearchConfig;
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
-use flopt::fpga::ARRIA10_GX;
 use flopt::runtime::{default_artifact_dir, Runtime};
 
 fn runtime() -> Runtime {
@@ -102,7 +102,7 @@ fn unknown_artifact_is_rejected() {
 fn numerics_check_passes_for_both_paper_apps() {
     // THE three-layer composition test: interpreter vs pallas vs jnp
     let rt = runtime();
-    let env = VerifyEnv::new(&ARRIA10_GX, &XEON_3104, SearchConfig::default());
+    let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
     for app in [&apps::TDFIR, &apps::MRIQ] {
         let check = env.check_numerics(app, &rt).expect("check runs");
         assert!(
