@@ -1,0 +1,104 @@
+//! Bench: batched offload service throughput — cold batch (every search
+//! runs) vs warm batch (every request served from the content-addressed
+//! cache), over all registered apps × {fpga, gpu}.
+//!
+//! Reports both dimensions that matter: real wall-clock of the service
+//! itself (the L3 hot path) and the *simulated* compile-lane hours the
+//! cache avoided — the paper's ≈3 h/compile is the cost being dodged.
+//!
+//! ```sh
+//! cargo bench --bench service_throughput                # full paper scale
+//! cargo bench --bench service_throughput -- --test-scale \
+//!     --report reports/service_throughput.json          # CI smoke + JSON
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use flopt::apps;
+use flopt::backend::Target;
+use flopt::cpu::XEON_3104;
+use flopt::service::{BatchRequest, BatchService};
+use flopt::util::bench::{fmt_s, fmt_sim_hours, parse_bench_args};
+use flopt::util::json::{self, Json};
+
+fn main() {
+    let opts = parse_bench_args();
+    let mut requests = Vec::new();
+    for app in apps::all() {
+        for target in [Target::Fpga, Target::Gpu] {
+            requests.push(BatchRequest::new(app, target, opts.test_scale));
+        }
+    }
+
+    let svc = BatchService::new(/*workers=*/ 4, /*lanes=*/ 1, &XEON_3104);
+
+    let t0 = Instant::now();
+    let cold = svc.run(&requests).expect("cold batch");
+    let cold_wall_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let warm = svc.run(&requests).expect("warm batch");
+    let warm_wall_s = t1.elapsed().as_secs_f64();
+
+    println!("=== batch offload service: cold vs warm ===");
+    println!("{}", cold.render());
+    println!(
+        "{:<6} {:>9} {:>12} {:>14} {:>10} {:>8}",
+        "batch", "requests", "unique-cold", "compile-lane", "makespan", "wall"
+    );
+    for (label, report, wall) in [("cold", &cold, cold_wall_s), ("warm", &warm, warm_wall_s)] {
+        println!(
+            "{:<6} {:>9} {:>12} {:>14} {:>10} {:>8}",
+            label,
+            report.items.len(),
+            report.unique_cold,
+            fmt_sim_hours(report.compile_hours),
+            fmt_sim_hours(report.sim_hours),
+            fmt_s(wall)
+        );
+    }
+    println!(
+        "warm batch avoided {} of simulated compile-lane time \
+         and ran {:.1}x faster in real time",
+        fmt_sim_hours(warm.saved_compile_hours),
+        cold_wall_s / warm_wall_s.max(1e-9)
+    );
+
+    if let Some(path) = &opts.report {
+        let mut doc = BTreeMap::new();
+        doc.insert(
+            "bench".to_string(),
+            Json::Str("service_throughput".to_string()),
+        );
+        doc.insert(
+            "scale".to_string(),
+            Json::Str(if opts.test_scale { "test" } else { "full" }.to_string()),
+        );
+        doc.insert("requests".to_string(), Json::Num(requests.len() as f64));
+        let mut rows = Vec::new();
+        for (label, report, wall) in
+            [("cold", &cold, cold_wall_s), ("warm", &warm, warm_wall_s)]
+        {
+            let mut row = BTreeMap::new();
+            row.insert("batch".to_string(), Json::Str(label.to_string()));
+            row.insert("unique_cold".to_string(), Json::Num(report.unique_cold as f64));
+            row.insert("warm_hits".to_string(), Json::Num(report.warm_hits as f64));
+            row.insert("deduped".to_string(), Json::Num(report.deduped as f64));
+            row.insert(
+                "compile_hours".to_string(),
+                Json::Num(report.compile_hours),
+            );
+            row.insert("sim_hours".to_string(), Json::Num(report.sim_hours));
+            row.insert(
+                "saved_compile_hours".to_string(),
+                Json::Num(report.saved_compile_hours),
+            );
+            row.insert("wall_s".to_string(), Json::Num(wall));
+            rows.push(Json::Obj(row));
+        }
+        doc.insert("rows".to_string(), Json::Arr(rows));
+        std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
+        println!("report written to {path}");
+    }
+}

@@ -37,8 +37,8 @@ impl FpgaBackend {
 }
 
 impl OffloadBackend for FpgaBackend {
-    fn name(&self) -> &'static str {
-        "FPGA"
+    fn destination(&self) -> super::Destination {
+        super::Destination::Fpga
     }
 
     fn description(&self) -> String {

@@ -126,8 +126,8 @@ impl GpuBackend {
 }
 
 impl OffloadBackend for GpuBackend {
-    fn name(&self) -> &'static str {
-        "GPU"
+    fn destination(&self) -> super::Destination {
+        super::Destination::Gpu
     }
 
     fn description(&self) -> String {

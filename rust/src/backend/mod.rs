@@ -32,6 +32,56 @@ use crate::hls::HlsReport;
 use crate::interp::Profile;
 use crate::ir::LoopAnalysis;
 
+/// A concrete offload destination — the typed identity every trace,
+/// report, and placement decision carries (previously a bare `&str`,
+/// matched stringly in the trace, the mixed search, and the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Destination {
+    /// Stay on the host CPU (no pattern beat the all-CPU baseline).
+    Cpu,
+    /// The Arria10 FPGA backend.
+    Fpga,
+    /// The SIMT GPU backend.
+    Gpu,
+}
+
+impl Destination {
+    /// Canonical report label ("CPU", "FPGA", "GPU").
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Destination::Cpu => "CPU",
+            Destination::Fpga => "FPGA",
+            Destination::Gpu => "GPU",
+        }
+    }
+
+    /// Parse a destination name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Destination> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Some(Destination::Cpu),
+            "fpga" => Some(Destination::Fpga),
+            "gpu" => Some(Destination::Gpu),
+            _ => None,
+        }
+    }
+
+    /// The backend that compiles for this destination (`None` for the
+    /// CPU — staying put needs no offload backend).
+    pub fn backend(self) -> Option<&'static dyn OffloadBackend> {
+        match self {
+            Destination::Cpu => None,
+            Destination::Fpga => Some(&FPGA as &dyn OffloadBackend),
+            Destination::Gpu => Some(&GPU as &dyn OffloadBackend),
+        }
+    }
+}
+
+impl std::fmt::Display for Destination {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
 /// Offload destination selected on the CLI (`flopt --target ...`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Target {
@@ -44,13 +94,16 @@ pub enum Target {
 }
 
 impl Target {
-    /// Parse a `--target` argument (case-insensitive).
+    /// Parse a `--target` argument (case-insensitive): a concrete
+    /// [`Destination`] name, or `mixed`.
     pub fn parse(s: &str) -> Option<Target> {
-        match s.to_ascii_lowercase().as_str() {
-            "fpga" => Some(Target::Fpga),
-            "gpu" => Some(Target::Gpu),
-            "mixed" => Some(Target::Mixed),
-            _ => None,
+        if s.eq_ignore_ascii_case("mixed") {
+            return Some(Target::Mixed);
+        }
+        match Destination::parse(s)? {
+            Destination::Fpga => Some(Target::Fpga),
+            Destination::Gpu => Some(Target::Gpu),
+            Destination::Cpu => None, // "offload to the CPU" is not a search
         }
     }
 
@@ -60,6 +113,16 @@ impl Target {
             Target::Fpga => vec![&FPGA as &dyn OffloadBackend],
             Target::Gpu => vec![&GPU as &dyn OffloadBackend],
             Target::Mixed => vec![&FPGA as &dyn OffloadBackend, &GPU as &dyn OffloadBackend],
+        }
+    }
+
+    /// The single destination this target compiles for, when it is not
+    /// a multi-backend search.
+    pub fn destination(self) -> Option<Destination> {
+        match self {
+            Target::Fpga => Some(Destination::Fpga),
+            Target::Gpu => Some(Destination::Gpu),
+            Target::Mixed => None,
         }
     }
 }
@@ -134,8 +197,13 @@ pub struct BackendCompile {
 /// adapter is required to reproduce the pre-seam models bit-identically
 /// (`rust/tests/backends.rs` enforces this).
 pub trait OffloadBackend: Sync {
+    /// The typed destination this backend compiles for.
+    fn destination(&self) -> Destination;
+
     /// Destination name threaded through traces and reports ("FPGA", "GPU").
-    fn name(&self) -> &'static str;
+    fn name(&self) -> &'static str {
+        self.destination().as_str()
+    }
 
     /// One-line device description for `flopt env`.
     fn description(&self) -> String;
@@ -182,6 +250,29 @@ mod tests {
         assert_eq!(Target::parse("GPU"), Some(Target::Gpu));
         assert_eq!(Target::parse("Mixed"), Some(Target::Mixed));
         assert_eq!(Target::parse("tpu"), None);
+        assert_eq!(Target::parse("cpu"), None, "cpu is a fallback, not a search target");
+    }
+
+    #[test]
+    fn destination_roundtrips() {
+        for d in [Destination::Cpu, Destination::Fpga, Destination::Gpu] {
+            assert_eq!(Destination::parse(d.as_str()), Some(d));
+            assert_eq!(format!("{d}"), d.as_str());
+        }
+        assert_eq!(Destination::parse("npu"), None);
+        assert_eq!(format!("{:<6}|", Destination::Gpu), "GPU   |", "Display must pad");
+    }
+
+    #[test]
+    fn backends_declare_their_destination() {
+        assert_eq!(FPGA.destination(), Destination::Fpga);
+        assert_eq!(GPU.destination(), Destination::Gpu);
+        assert_eq!(FPGA.name(), "FPGA");
+        assert_eq!(GPU.name(), "GPU");
+        assert_eq!(Destination::Fpga.backend().unwrap().name(), "FPGA");
+        assert!(Destination::Cpu.backend().is_none());
+        assert_eq!(Target::Fpga.destination(), Some(Destination::Fpga));
+        assert_eq!(Target::Mixed.destination(), None);
     }
 
     #[test]

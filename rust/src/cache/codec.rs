@@ -1,0 +1,705 @@
+//! JSON (de)serialization of cached pipeline artifacts.
+//!
+//! Built on the in-tree [`crate::util::json`] (no external crates).  The
+//! encoding is **lossless for `f64`**: finite numbers go through Rust's
+//! shortest-roundtrip `Display` in the writer and parse back to the same
+//! bits; non-finite values (a failed compile records `time_s = inf`) are
+//! encoded as the strings `"inf"` / `"-inf"` / `"nan"`.  Every decoder
+//! returns `Option` — a corrupt or truncated payload yields `None` and
+//! the caller recomputes; the cache never fabricates a result.
+
+use crate::backend::gpu::GpuKernelReport;
+use crate::backend::{BackendReport, Destination, ReportDetail};
+use crate::coordinator::mixed::DestinationSearch;
+use crate::coordinator::pipeline::{CandidateReport, SearchTrace};
+use crate::coordinator::stages::{MeasureArtifact, PrecompileArtifact};
+use crate::coordinator::verify_env::PatternMeasurement;
+use crate::cparse::ast::{LoopId, Type};
+use crate::fpga::device::Resources;
+use crate::fpga::timing::KernelExec;
+use crate::hls::{HlsReport, OpCounts};
+use crate::intensity::LoopIntensity;
+use crate::opencl::{KernelArg, KernelSource, OffloadPattern, OpenClCode};
+use crate::util::json::{self, Json};
+
+/// Format version stamped into every payload; bump on layout changes so
+/// stale on-disk entries decode to `None` and recompute.
+pub const VERSION: f64 = 1.0;
+
+// ---------------------------------------------------------------- helpers
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".to_string())
+    } else if v > 0.0 {
+        Json::Str("inf".to_string())
+    } else {
+        Json::Str("-inf".to_string())
+    }
+}
+
+fn f64_of(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => match s.as_str() {
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            "nan" => Some(f64::NAN),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+fn get_f64(j: &Json, k: &str) -> Option<f64> {
+    f64_of(j.get(k)?)
+}
+
+fn get_u64(j: &Json, k: &str) -> Option<u64> {
+    // reject fractional or negative payloads outright — a bit-flipped
+    // disk entry must recompute, never round into a "valid" value
+    match j.get(k)? {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+        _ => None,
+    }
+}
+
+fn get_u32(j: &Json, k: &str) -> Option<u32> {
+    get_u64(j, k).map(|v| v as u32)
+}
+
+fn get_usize(j: &Json, k: &str) -> Option<usize> {
+    get_u64(j, k).map(|v| v as usize)
+}
+
+fn get_bool(j: &Json, k: &str) -> Option<bool> {
+    match j.get(k)? {
+        Json::Bool(b) => Some(*b),
+        _ => None,
+    }
+}
+
+fn get_str<'a>(j: &'a Json, k: &str) -> Option<&'a str> {
+    j.get(k)?.as_str()
+}
+
+fn get_arr<'a>(j: &'a Json, k: &str) -> Option<&'a [Json]> {
+    j.get(k)?.as_arr()
+}
+
+fn check_header(j: &Json, kind: &str) -> Option<()> {
+    (get_str(j, "kind")? == kind && get_f64(j, "v")? == VERSION).then_some(())
+}
+
+fn loop_ids_to_json(ids: &[LoopId]) -> Json {
+    Json::Arr(ids.iter().map(|l| Json::Num(l.0 as f64)).collect())
+}
+
+fn loop_ids_from_json(j: &Json) -> Option<Vec<LoopId>> {
+    j.as_arr()?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| LoopId(n as u32))
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------- components
+
+fn type_to_json(t: &Type) -> Json {
+    match t {
+        Type::Void => Json::Str("void".to_string()),
+        Type::Int => Json::Str("int".to_string()),
+        Type::Float => Json::Str("float".to_string()),
+        Type::Double => Json::Str("double".to_string()),
+        Type::Array(elem, len) => obj(vec![
+            ("elem", type_to_json(elem)),
+            ("len", len.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null)),
+        ]),
+    }
+}
+
+fn type_from_json(j: &Json) -> Option<Type> {
+    match j {
+        Json::Str(s) => match s.as_str() {
+            "void" => Some(Type::Void),
+            "int" => Some(Type::Int),
+            "float" => Some(Type::Float),
+            "double" => Some(Type::Double),
+            _ => None,
+        },
+        Json::Obj(_) => {
+            let elem = type_from_json(j.get("elem")?)?;
+            let len = match j.get("len")? {
+                Json::Null => None,
+                Json::Num(n) => Some(*n as usize),
+                _ => return None,
+            };
+            Some(Type::Array(Box::new(elem), len))
+        }
+        _ => None,
+    }
+}
+
+fn ops_to_json(o: &OpCounts) -> Json {
+    obj(vec![
+        ("fadd", Json::Num(o.fadd as f64)),
+        ("fmul", Json::Num(o.fmul as f64)),
+        ("fdiv", Json::Num(o.fdiv as f64)),
+        ("trig", Json::Num(o.trig as f64)),
+        ("sqrt", Json::Num(o.sqrt as f64)),
+        ("exp", Json::Num(o.exp as f64)),
+        ("fmisc", Json::Num(o.fmisc as f64)),
+        ("int_ops", Json::Num(o.int_ops as f64)),
+        ("cmps", Json::Num(o.cmps as f64)),
+        ("arrays", Json::Num(o.arrays as f64)),
+        ("plus_reductions", Json::Num(o.plus_reductions as f64)),
+        ("star_reductions", Json::Num(o.star_reductions as f64)),
+        ("nest_depth", Json::Num(o.nest_depth as f64)),
+    ])
+}
+
+fn ops_from_json(j: &Json) -> Option<OpCounts> {
+    Some(OpCounts {
+        fadd: get_u32(j, "fadd")?,
+        fmul: get_u32(j, "fmul")?,
+        fdiv: get_u32(j, "fdiv")?,
+        trig: get_u32(j, "trig")?,
+        sqrt: get_u32(j, "sqrt")?,
+        exp: get_u32(j, "exp")?,
+        fmisc: get_u32(j, "fmisc")?,
+        int_ops: get_u32(j, "int_ops")?,
+        cmps: get_u32(j, "cmps")?,
+        arrays: get_u32(j, "arrays")?,
+        plus_reductions: get_u32(j, "plus_reductions")?,
+        star_reductions: get_u32(j, "star_reductions")?,
+        nest_depth: get_u32(j, "nest_depth")?,
+    })
+}
+
+fn resources_to_json(r: &Resources) -> Json {
+    obj(vec![
+        ("alms", num(r.alms)),
+        ("ffs", num(r.ffs)),
+        ("luts", num(r.luts)),
+        ("dsps", num(r.dsps)),
+        ("m20ks", num(r.m20ks)),
+    ])
+}
+
+fn resources_from_json(j: &Json) -> Option<Resources> {
+    Some(Resources {
+        alms: get_f64(j, "alms")?,
+        ffs: get_f64(j, "ffs")?,
+        luts: get_f64(j, "luts")?,
+        dsps: get_f64(j, "dsps")?,
+        m20ks: get_f64(j, "m20ks")?,
+    })
+}
+
+fn hls_to_json(r: &HlsReport) -> Json {
+    obj(vec![
+        ("loop_id", Json::Num(r.loop_id.0 as f64)),
+        ("unroll", Json::Num(r.unroll as f64)),
+        ("resources", resources_to_json(&r.resources)),
+        ("utilization", num(r.utilization)),
+        ("ii", Json::Num(r.ii as f64)),
+        ("depth", Json::Num(r.depth as f64)),
+        ("fmax_hz", num(r.fmax_hz)),
+        ("precompile_s", num(r.precompile_s)),
+        ("ops", ops_to_json(&r.ops)),
+    ])
+}
+
+fn hls_from_json(j: &Json) -> Option<HlsReport> {
+    Some(HlsReport {
+        loop_id: LoopId(get_u32(j, "loop_id")?),
+        unroll: get_usize(j, "unroll")?,
+        resources: resources_from_json(j.get("resources")?)?,
+        utilization: get_f64(j, "utilization")?,
+        ii: get_u32(j, "ii")?,
+        depth: get_u32(j, "depth")?,
+        fmax_hz: get_f64(j, "fmax_hz")?,
+        precompile_s: get_f64(j, "precompile_s")?,
+        ops: ops_from_json(j.get("ops")?)?,
+    })
+}
+
+fn gpu_to_json(r: &GpuKernelReport) -> Json {
+    obj(vec![
+        ("loop_id", Json::Num(r.loop_id.0 as f64)),
+        ("ops", ops_to_json(&r.ops)),
+        ("occupancy", num(r.occupancy)),
+        ("simt_speedup", num(r.simt_speedup)),
+        ("compile_s", num(r.compile_s)),
+    ])
+}
+
+fn gpu_from_json(j: &Json) -> Option<GpuKernelReport> {
+    Some(GpuKernelReport {
+        loop_id: LoopId(get_u32(j, "loop_id")?),
+        ops: ops_from_json(j.get("ops")?)?,
+        occupancy: get_f64(j, "occupancy")?,
+        simt_speedup: get_f64(j, "simt_speedup")?,
+        compile_s: get_f64(j, "compile_s")?,
+    })
+}
+
+fn backend_report_to_json(r: &BackendReport) -> Json {
+    let (device, detail) = match &r.detail {
+        ReportDetail::Fpga(h) => ("fpga", hls_to_json(h)),
+        ReportDetail::Gpu(g) => ("gpu", gpu_to_json(g)),
+    };
+    obj(vec![
+        ("loop_id", Json::Num(r.loop_id.0 as f64)),
+        ("utilization", num(r.utilization)),
+        ("precompile_s", num(r.precompile_s)),
+        ("device", Json::Str(device.to_string())),
+        ("detail", detail),
+    ])
+}
+
+fn backend_report_from_json(j: &Json) -> Option<BackendReport> {
+    let detail = match get_str(j, "device")? {
+        "fpga" => ReportDetail::Fpga(hls_from_json(j.get("detail")?)?),
+        "gpu" => ReportDetail::Gpu(gpu_from_json(j.get("detail")?)?),
+        _ => return None,
+    };
+    Some(BackendReport {
+        loop_id: LoopId(get_u32(j, "loop_id")?),
+        utilization: get_f64(j, "utilization")?,
+        precompile_s: get_f64(j, "precompile_s")?,
+        detail,
+    })
+}
+
+fn candidate_to_json(c: &CandidateReport) -> Json {
+    obj(vec![
+        ("id", Json::Num(c.id.0 as f64)),
+        ("intensity", num(c.intensity)),
+        ("utilization", num(c.utilization)),
+        ("efficiency", num(c.efficiency)),
+        ("report", backend_report_to_json(&c.report)),
+    ])
+}
+
+fn candidate_from_json(j: &Json) -> Option<CandidateReport> {
+    Some(CandidateReport {
+        id: LoopId(get_u32(j, "id")?),
+        intensity: get_f64(j, "intensity")?,
+        utilization: get_f64(j, "utilization")?,
+        efficiency: get_f64(j, "efficiency")?,
+        report: backend_report_from_json(j.get("report")?)?,
+    })
+}
+
+fn intensity_to_json(l: &LoopIntensity) -> Json {
+    obj(vec![
+        ("id", Json::Num(l.id.0 as f64)),
+        ("function", Json::Str(l.function.clone())),
+        ("trips", Json::Num(l.trips as f64)),
+        ("flops", Json::Num(l.flops as f64)),
+        ("footprint_bytes", Json::Num(l.footprint_bytes as f64)),
+        ("traffic_bytes", Json::Num(l.traffic_bytes as f64)),
+        ("intensity", num(l.intensity)),
+        ("offloadable", Json::Bool(l.offloadable)),
+    ])
+}
+
+fn intensity_from_json(j: &Json) -> Option<LoopIntensity> {
+    Some(LoopIntensity {
+        id: LoopId(get_u32(j, "id")?),
+        function: get_str(j, "function")?.to_string(),
+        trips: get_u64(j, "trips")?,
+        flops: get_u64(j, "flops")?,
+        footprint_bytes: get_u64(j, "footprint_bytes")?,
+        traffic_bytes: get_u64(j, "traffic_bytes")?,
+        intensity: get_f64(j, "intensity")?,
+        offloadable: get_bool(j, "offloadable")?,
+    })
+}
+
+fn kernel_exec_to_json(k: &KernelExec) -> Json {
+    obj(vec![
+        ("loop_id", Json::Num(k.loop_id.0 as f64)),
+        ("kernel_s", num(k.kernel_s)),
+        ("transfer_in_s", num(k.transfer_in_s)),
+        ("transfer_out_s", num(k.transfer_out_s)),
+        ("inner_iters", Json::Num(k.inner_iters as f64)),
+    ])
+}
+
+fn kernel_exec_from_json(j: &Json) -> Option<KernelExec> {
+    Some(KernelExec {
+        loop_id: LoopId(get_u32(j, "loop_id")?),
+        kernel_s: get_f64(j, "kernel_s")?,
+        transfer_in_s: get_f64(j, "transfer_in_s")?,
+        transfer_out_s: get_f64(j, "transfer_out_s")?,
+        inner_iters: get_u64(j, "inner_iters")?,
+    })
+}
+
+fn measurement_to_json(m: &PatternMeasurement) -> Json {
+    obj(vec![
+        ("pattern", loop_ids_to_json(&m.pattern.loops)),
+        ("utilization", num(m.utilization)),
+        ("compiled", Json::Bool(m.compiled)),
+        ("compile_sim_s", num(m.compile_sim_s)),
+        ("time_s", num(m.time_s)),
+        ("speedup", num(m.speedup)),
+        (
+            "kernels",
+            Json::Arr(m.kernels.iter().map(kernel_exec_to_json).collect()),
+        ),
+    ])
+}
+
+fn measurement_from_json(j: &Json) -> Option<PatternMeasurement> {
+    Some(PatternMeasurement {
+        pattern: OffloadPattern::of(loop_ids_from_json(j.get("pattern")?)?),
+        utilization: get_f64(j, "utilization")?,
+        compiled: get_bool(j, "compiled")?,
+        compile_sim_s: get_f64(j, "compile_sim_s")?,
+        time_s: get_f64(j, "time_s")?,
+        speedup: get_f64(j, "speedup")?,
+        kernels: get_arr(j, "kernels")?
+            .iter()
+            .map(kernel_exec_from_json)
+            .collect::<Option<Vec<_>>>()?,
+    })
+}
+
+fn kernel_arg_to_json(a: &KernelArg) -> Json {
+    obj(vec![
+        ("name", Json::Str(a.name.clone())),
+        ("decl", Json::Str(a.decl.clone())),
+        ("is_array", Json::Bool(a.is_array)),
+        ("elem", type_to_json(&a.elem)),
+    ])
+}
+
+fn kernel_arg_from_json(j: &Json) -> Option<KernelArg> {
+    Some(KernelArg {
+        name: get_str(j, "name")?.to_string(),
+        decl: get_str(j, "decl")?.to_string(),
+        is_array: get_bool(j, "is_array")?,
+        elem: type_from_json(j.get("elem")?)?,
+    })
+}
+
+fn kernel_source_to_json(k: &KernelSource) -> Json {
+    obj(vec![
+        ("loop_id", Json::Num(k.loop_id.0 as f64)),
+        ("name", Json::Str(k.name.clone())),
+        ("code", Json::Str(k.code.clone())),
+        ("args", Json::Arr(k.args.iter().map(kernel_arg_to_json).collect())),
+        ("unroll", Json::Num(k.unroll as f64)),
+        (
+            "shift_register_reductions",
+            Json::Arr(
+                k.shift_register_reductions
+                    .iter()
+                    .map(|s| Json::Str(s.clone()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn kernel_source_from_json(j: &Json) -> Option<KernelSource> {
+    Some(KernelSource {
+        loop_id: LoopId(get_u32(j, "loop_id")?),
+        name: get_str(j, "name")?.to_string(),
+        code: get_str(j, "code")?.to_string(),
+        args: get_arr(j, "args")?
+            .iter()
+            .map(kernel_arg_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        unroll: get_usize(j, "unroll")?,
+        shift_register_reductions: get_arr(j, "shift_register_reductions")?
+            .iter()
+            .map(|s| s.as_str().map(str::to_string))
+            .collect::<Option<Vec<_>>>()?,
+    })
+}
+
+fn opencl_to_json(c: &OpenClCode) -> Json {
+    obj(vec![
+        ("pattern", loop_ids_to_json(&c.pattern.loops)),
+        (
+            "kernels",
+            Json::Arr(c.kernels.iter().map(kernel_source_to_json).collect()),
+        ),
+        ("host", Json::Str(c.host.clone())),
+    ])
+}
+
+fn opencl_from_json(j: &Json) -> Option<OpenClCode> {
+    Some(OpenClCode {
+        pattern: OffloadPattern::of(loop_ids_from_json(j.get("pattern")?)?),
+        kernels: get_arr(j, "kernels")?
+            .iter()
+            .map(kernel_source_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        host: get_str(j, "host")?.to_string(),
+    })
+}
+
+fn rounds_to_json(rounds: &[Vec<PatternMeasurement>]) -> Json {
+    Json::Arr(
+        rounds
+            .iter()
+            .map(|r| Json::Arr(r.iter().map(measurement_to_json).collect()))
+            .collect(),
+    )
+}
+
+fn rounds_from_json(j: &Json) -> Option<Vec<Vec<PatternMeasurement>>> {
+    j.as_arr()?
+        .iter()
+        .map(|r| {
+            r.as_arr()?
+                .iter()
+                .map(measurement_from_json)
+                .collect::<Option<Vec<_>>>()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------- top-level docs
+
+/// Encode a full [`SearchTrace`].
+pub fn trace_to_json(t: &SearchTrace) -> Json {
+    obj(vec![
+        ("kind", Json::Str("trace".to_string())),
+        ("v", Json::Num(VERSION)),
+        ("app_name", Json::Str(t.app_name.clone())),
+        ("destination", Json::Str(t.destination.as_str().to_string())),
+        ("loop_count", Json::Num(t.loop_count as f64)),
+        (
+            "intensities",
+            Json::Arr(t.intensities.iter().map(intensity_to_json).collect()),
+        ),
+        ("top_a", loop_ids_to_json(&t.top_a)),
+        (
+            "candidates",
+            Json::Arr(t.candidates.iter().map(candidate_to_json).collect()),
+        ),
+        ("top_c", loop_ids_to_json(&t.top_c)),
+        ("opencl", Json::Arr(t.opencl.iter().map(opencl_to_json).collect())),
+        ("rounds", rounds_to_json(&t.rounds)),
+        ("cpu_time_s", num(t.cpu_time_s)),
+        (
+            "best",
+            t.best
+                .as_ref()
+                .map(measurement_to_json)
+                .unwrap_or(Json::Null),
+        ),
+        ("sim_hours", num(t.sim_hours)),
+        ("compile_hours", num(t.compile_hours)),
+    ])
+}
+
+/// Decode a [`SearchTrace`]; `None` on any structural mismatch.
+pub fn trace_from_json(j: &Json) -> Option<SearchTrace> {
+    check_header(j, "trace")?;
+    Some(SearchTrace {
+        app_name: get_str(j, "app_name")?.to_string(),
+        destination: Destination::parse(get_str(j, "destination")?)?,
+        loop_count: get_usize(j, "loop_count")?,
+        intensities: get_arr(j, "intensities")?
+            .iter()
+            .map(intensity_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        top_a: loop_ids_from_json(j.get("top_a")?)?,
+        candidates: get_arr(j, "candidates")?
+            .iter()
+            .map(candidate_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        top_c: loop_ids_from_json(j.get("top_c")?)?,
+        opencl: get_arr(j, "opencl")?
+            .iter()
+            .map(opencl_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        rounds: rounds_from_json(j.get("rounds")?)?,
+        cpu_time_s: get_f64(j, "cpu_time_s")?,
+        best: match j.get("best")? {
+            Json::Null => None,
+            b => Some(measurement_from_json(b)?),
+        },
+        sim_hours: get_f64(j, "sim_hours")?,
+        compile_hours: get_f64(j, "compile_hours")?,
+    })
+}
+
+/// Encode a Precompile-stage artifact.
+pub fn precompile_to_json(p: &PrecompileArtifact) -> Json {
+    obj(vec![
+        ("kind", Json::Str("precompile".to_string())),
+        ("v", Json::Num(VERSION)),
+        (
+            "candidates",
+            Json::Arr(p.candidates.iter().map(candidate_to_json).collect()),
+        ),
+    ])
+}
+
+/// Decode a Precompile-stage artifact.
+pub fn precompile_from_json(j: &Json) -> Option<PrecompileArtifact> {
+    check_header(j, "precompile")?;
+    Some(PrecompileArtifact {
+        candidates: get_arr(j, "candidates")?
+            .iter()
+            .map(candidate_from_json)
+            .collect::<Option<Vec<_>>>()?,
+    })
+}
+
+/// Encode a MeasureRounds-stage artifact.
+pub fn measure_to_json(m: &MeasureArtifact) -> Json {
+    obj(vec![
+        ("kind", Json::Str("measure".to_string())),
+        ("v", Json::Num(VERSION)),
+        ("cpu_time_s", num(m.cpu_time_s)),
+        ("opencl", Json::Arr(m.opencl.iter().map(opencl_to_json).collect())),
+        ("rounds", rounds_to_json(&m.rounds)),
+    ])
+}
+
+/// Decode a MeasureRounds-stage artifact.
+pub fn measure_from_json(j: &Json) -> Option<MeasureArtifact> {
+    check_header(j, "measure")?;
+    Some(MeasureArtifact {
+        cpu_time_s: get_f64(j, "cpu_time_s")?,
+        opencl: get_arr(j, "opencl")?
+            .iter()
+            .map(opencl_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        rounds: rounds_from_json(j.get("rounds")?)?,
+    })
+}
+
+/// Encode a request-level [`DestinationSearch`] outcome.
+pub fn destination_to_json(d: &DestinationSearch) -> Json {
+    obj(vec![
+        ("kind", Json::Str("destination".to_string())),
+        ("v", Json::Num(VERSION)),
+        ("app_name", Json::Str(d.app_name.clone())),
+        ("destination", Json::Str(d.destination.as_str().to_string())),
+        ("method", Json::Str(d.method.to_string())),
+        ("speedup", num(d.speedup)),
+        (
+            "best",
+            d.best
+                .as_ref()
+                .map(measurement_to_json)
+                .unwrap_or(Json::Null),
+        ),
+        ("patterns_measured", Json::Num(d.patterns_measured as f64)),
+        ("compile_hours", num(d.compile_hours)),
+        ("cpu_time_s", num(d.cpu_time_s)),
+    ])
+}
+
+/// Decode a [`DestinationSearch`]; unknown method labels decode to `None`.
+pub fn destination_from_json(j: &Json) -> Option<DestinationSearch> {
+    check_header(j, "destination")?;
+    let method = match get_str(j, "method")? {
+        "narrowed-2round" => "narrowed-2round",
+        "ga" => "ga",
+        _ => return None,
+    };
+    Some(DestinationSearch {
+        app_name: get_str(j, "app_name")?.to_string(),
+        destination: Destination::parse(get_str(j, "destination")?)?,
+        method,
+        speedup: get_f64(j, "speedup")?,
+        best: match j.get("best")? {
+            Json::Null => None,
+            b => Some(measurement_from_json(b)?),
+        },
+        patterns_measured: get_usize(j, "patterns_measured")?,
+        compile_hours: get_f64(j, "compile_hours")?,
+        cpu_time_s: get_f64(j, "cpu_time_s")?,
+    })
+}
+
+/// Canonical string form of a trace — the definition of "bit-identical"
+/// the cache tests compare by.
+pub fn trace_to_string(t: &SearchTrace) -> String {
+    json::to_string(&trace_to_json(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::backend::FPGA;
+    use crate::config::SearchConfig;
+    use crate::coordinator::pipeline::offload_search;
+    use crate::coordinator::verify_env::VerifyEnv;
+    use crate::cpu::XEON_3104;
+
+    #[test]
+    fn trace_roundtrips_bit_identically() {
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
+        let t = offload_search(&apps::TDFIR, &env, true).unwrap();
+        let s1 = trace_to_string(&t);
+        let parsed = json::parse(&s1).unwrap();
+        let back = trace_from_json(&parsed).expect("decode");
+        assert_eq!(trace_to_string(&back), s1, "encode∘decode must be identity");
+        // exact f64 equality on the load-bearing numbers
+        assert_eq!(back.speedup(), t.speedup());
+        assert_eq!(back.cpu_time_s, t.cpu_time_s);
+        assert_eq!(back.sim_hours, t.sim_hours);
+        assert_eq!(back.compile_hours, t.compile_hours);
+        assert_eq!(back.render(), t.render());
+    }
+
+    #[test]
+    fn non_finite_times_survive() {
+        let j = num(f64::INFINITY);
+        assert_eq!(f64_of(&j), Some(f64::INFINITY));
+        assert_eq!(f64_of(&num(f64::NEG_INFINITY)), Some(f64::NEG_INFINITY));
+        assert!(f64_of(&num(f64::NAN)).unwrap().is_nan());
+    }
+
+    #[test]
+    fn corrupt_payloads_decode_to_none() {
+        assert!(trace_from_json(&Json::Null).is_none());
+        assert!(trace_from_json(&obj(vec![("kind", Json::Str("trace".into()))])).is_none());
+        // right kind, wrong version
+        assert!(trace_from_json(&obj(vec![
+            ("kind", Json::Str("trace".into())),
+            ("v", Json::Num(999.0)),
+        ]))
+        .is_none());
+        // wrong kind entirely
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
+        let t = offload_search(&apps::MATMUL, &env, true).unwrap();
+        assert!(precompile_from_json(&trace_to_json(&t)).is_none());
+    }
+
+    #[test]
+    fn type_encoding_roundtrips() {
+        for t in [
+            Type::Void,
+            Type::Int,
+            Type::Float,
+            Type::Double,
+            Type::Array(Box::new(Type::Float), Some(128)),
+            Type::Array(Box::new(Type::Int), None),
+        ] {
+            assert_eq!(type_from_json(&type_to_json(&t)), Some(t));
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Content-addressed artifact cache for the staged offload pipeline.
+//!
+//! The paper's entire method exists because one full FPGA compile costs
+//! ≈3 hours — every compile avoided is the product.  This subsystem
+//! makes *repeat* searches free: each pipeline stage's artifact is keyed
+//! by a stable hash of everything that determines it — application
+//! source, [`SearchConfig`] narrowing parameters, backend identity, and
+//! workload scale — and stored in memory (always) and optionally on disk
+//! as JSON (`--cache-dir`, via [`crate::util::json`]).  A warm re-run of
+//! a search burns **zero** additional simulated compile-lane hours and
+//! returns a bit-identical [`SearchTrace`].
+//!
+//! Cache-key definition (see DESIGN.md §9 for the rationale):
+//!
+//! ```text
+//! app_fp       = H(app.name, app.source, test_scale flag + overrides)
+//! analysis_fp  = H(app.name, loop_count,
+//!                  per-loop {id, trips, flops, footprint, traffic,
+//!                            intensity bits, offloadable})
+//! backend_fp   = H(backend.name, backend.description)   // device identity
+//! analyze_key  = H("analyze",    app_fp)
+//! precompile_key = H("precompile", app_fp, analysis_fp, backend_fp, a, b)
+//! measure_key  = H("measure",    precompile inputs, c, d, resource_cap)
+//! trace_key    = H("trace",      app_fp, backend_fp, full SearchConfig)
+//! dest_key     = H("destination", app_fp, backend_fp, full SearchConfig)
+//! ```
+//!
+//! Stage keys include only the inputs that stage actually depends on, so
+//! e.g. two searches differing only in `d_patterns` share pre-compile
+//! artifacts.  The workload scale enters twice: the literal test-scale
+//! flag (trace/destination keys, where the analysis is not yet in hand)
+//! and the analysis fingerprint (stage keys, which digest the observed
+//! profile — so *any* workload change reshapes the key).
+//!
+//! Corrupt or missing on-disk entries are never trusted: a payload that
+//! fails to parse or decode is discarded and the stage recomputes.
+
+pub mod codec;
+pub mod key;
+pub mod store;
+
+pub use key::{CacheKey, KeyHasher};
+pub use store::{CacheStats, CacheStore};
+
+use crate::apps::App;
+use crate::backend::OffloadBackend;
+use crate::config::SearchConfig;
+use crate::coordinator::pipeline::AppAnalysis;
+
+/// Fingerprint of an application at a workload scale.
+pub fn app_fingerprint(app: &App, test_scale: bool) -> u64 {
+    let mut h = KeyHasher::new("app");
+    h.write_str(app.name).write_str(app.source).write_bool(test_scale);
+    if test_scale {
+        h.write_usize(app.test_scale.len());
+        for (name, v) in app.test_scale {
+            h.write_str(name).write_u64(*v as u64);
+        }
+    }
+    h.finish().0
+}
+
+/// Fingerprint of a completed Steps-1/2 analysis: digests the observed
+/// profile, so any workload-scale or source change reshapes the key.
+pub fn analysis_fingerprint(analysis: &AppAnalysis) -> u64 {
+    let mut h = KeyHasher::new("analysis");
+    h.write_str(&analysis.app_name);
+    h.write_usize(analysis.program.loop_count());
+    h.write_usize(analysis.intensities.len());
+    for li in &analysis.intensities {
+        h.write_u64(li.id.0 as u64)
+            .write_u64(li.trips)
+            .write_u64(li.flops)
+            .write_u64(li.footprint_bytes)
+            .write_u64(li.traffic_bytes)
+            .write_f64(li.intensity)
+            .write_bool(li.offloadable);
+    }
+    h.finish().0
+}
+
+/// Fingerprint of a backend (device identity: the description embeds the
+/// board model and its headline parameters).
+pub fn backend_fingerprint(backend: &dyn OffloadBackend) -> u64 {
+    KeyHasher::new("backend")
+        .write_str(backend.name())
+        .write_str(&backend.description())
+        .finish()
+        .0
+}
+
+fn mix_full_config(h: &mut KeyHasher, cfg: &SearchConfig) {
+    h.write_usize(cfg.a_intensity)
+        .write_usize(cfg.b_unroll)
+        .write_usize(cfg.c_efficiency)
+        .write_usize(cfg.d_patterns)
+        .write_f64(cfg.resource_cap)
+        .write_usize(cfg.compile_parallelism)
+        .write_usize(cfg.ga_population)
+        .write_usize(cfg.ga_generations);
+}
+
+/// Key of the Analyze-stage artifact (backend-independent).
+pub fn analyze_key(app: &App, test_scale: bool) -> CacheKey {
+    KeyHasher::new("analyze")
+        .write_u64(app_fingerprint(app, test_scale))
+        .finish()
+}
+
+/// Key of the Precompile-stage artifact (depends on the analysis, the
+/// backend, and the `a`/`b` narrowing parameters only).
+pub fn precompile_key(
+    app: &App,
+    analysis: &AppAnalysis,
+    backend: &dyn OffloadBackend,
+    cfg: &SearchConfig,
+) -> CacheKey {
+    KeyHasher::new("precompile")
+        .write_str(app.name)
+        .write_str(app.source)
+        .write_u64(analysis_fingerprint(analysis))
+        .write_u64(backend_fingerprint(backend))
+        .write_usize(cfg.a_intensity)
+        .write_usize(cfg.b_unroll)
+        .finish()
+}
+
+/// Key of the MeasureRounds-stage artifact (adds the `c`/`d` cuts and
+/// the resource cap on top of the pre-compile inputs).
+pub fn measure_key(
+    app: &App,
+    analysis: &AppAnalysis,
+    backend: &dyn OffloadBackend,
+    cfg: &SearchConfig,
+) -> CacheKey {
+    KeyHasher::new("measure")
+        .write_str(app.name)
+        .write_str(app.source)
+        .write_u64(analysis_fingerprint(analysis))
+        .write_u64(backend_fingerprint(backend))
+        .write_usize(cfg.a_intensity)
+        .write_usize(cfg.b_unroll)
+        .write_usize(cfg.c_efficiency)
+        .write_usize(cfg.d_patterns)
+        .write_f64(cfg.resource_cap)
+        .finish()
+}
+
+/// Key of a complete [`crate::coordinator::pipeline::SearchTrace`].
+pub fn trace_key(
+    app: &App,
+    test_scale: bool,
+    backend: &dyn OffloadBackend,
+    cfg: &SearchConfig,
+) -> CacheKey {
+    let mut h = KeyHasher::new("trace");
+    h.write_u64(app_fingerprint(app, test_scale))
+        .write_u64(backend_fingerprint(backend));
+    mix_full_config(&mut h, cfg);
+    h.finish()
+}
+
+/// Key of a complete [`crate::coordinator::mixed::DestinationSearch`]
+/// (the batch service's request-level unit of work).
+pub fn destination_key(
+    app: &App,
+    test_scale: bool,
+    backend: &dyn OffloadBackend,
+    cfg: &SearchConfig,
+) -> CacheKey {
+    let mut h = KeyHasher::new("destination");
+    h.write_u64(app_fingerprint(app, test_scale))
+        .write_u64(backend_fingerprint(backend));
+    mix_full_config(&mut h, cfg);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::backend::{FPGA, GPU};
+
+    #[test]
+    fn keys_separate_apps_backends_scales_and_configs() {
+        let cfg = SearchConfig::default();
+        let base = trace_key(&apps::TDFIR, true, &FPGA, &cfg);
+        assert_eq!(base, trace_key(&apps::TDFIR, true, &FPGA, &cfg));
+        assert_ne!(base, trace_key(&apps::MRIQ, true, &FPGA, &cfg));
+        assert_ne!(base, trace_key(&apps::TDFIR, false, &FPGA, &cfg));
+        assert_ne!(base, trace_key(&apps::TDFIR, true, &GPU, &cfg));
+        let mut wider = cfg.clone();
+        wider.d_patterns = 6;
+        assert_ne!(base, trace_key(&apps::TDFIR, true, &FPGA, &wider));
+    }
+
+    #[test]
+    fn stage_keys_ignore_unrelated_config_knobs() {
+        let analysis =
+            crate::coordinator::pipeline::analyze_app(&apps::MATMUL, true).unwrap();
+        let cfg = SearchConfig::default();
+        let mut lanes = cfg.clone();
+        lanes.compile_parallelism = 4; // affects makespan, not artifacts
+        assert_eq!(
+            precompile_key(&apps::MATMUL, &analysis, &FPGA, &cfg),
+            precompile_key(&apps::MATMUL, &analysis, &FPGA, &lanes)
+        );
+        assert_eq!(
+            measure_key(&apps::MATMUL, &analysis, &FPGA, &cfg),
+            measure_key(&apps::MATMUL, &analysis, &FPGA, &lanes)
+        );
+        let mut more_d = cfg.clone();
+        more_d.d_patterns = 6; // reshapes measurement, not pre-compiles
+        assert_eq!(
+            precompile_key(&apps::MATMUL, &analysis, &FPGA, &cfg),
+            precompile_key(&apps::MATMUL, &analysis, &FPGA, &more_d)
+        );
+        assert_ne!(
+            measure_key(&apps::MATMUL, &analysis, &FPGA, &cfg),
+            measure_key(&apps::MATMUL, &analysis, &FPGA, &more_d)
+        );
+    }
+
+    #[test]
+    fn analysis_fingerprint_tracks_scale() {
+        let small = crate::coordinator::pipeline::analyze_app(&apps::MATMUL, true).unwrap();
+        let full = crate::coordinator::pipeline::analyze_app(&apps::MATMUL, false).unwrap();
+        assert_ne!(analysis_fingerprint(&small), analysis_fingerprint(&full));
+        assert_eq!(analysis_fingerprint(&small), analysis_fingerprint(&small));
+    }
+}

@@ -1,0 +1,384 @@
+//! The artifact store: always-on in-memory maps plus an optional
+//! on-disk JSON mirror.
+//!
+//! * **Memory** — every `put` lands in a typed `HashMap` behind a
+//!   mutex; `get` clones out (analyses are shared as `Arc`, they are the
+//!   only artifact too big to clone casually).
+//! * **Disk** — when built [`CacheStore::with_dir`], the serializable
+//!   artifacts (pre-compiles, measurements, traces, destination
+//!   outcomes) are mirrored as `<kind>-<key>.json`; a memory miss falls
+//!   through to disk.  Disk entries are never trusted: payloads that
+//!   fail to parse or decode are discarded (counted in
+//!   [`CacheStats::disk_rejects`]) and the stage recomputes.  All disk
+//!   I/O is best-effort — an unwritable directory degrades to
+//!   memory-only operation, never to an error.
+//! * **Disabled** — [`CacheStore::disabled`] stores nothing and returns
+//!   nothing: every search runs exactly as the pre-cache pipeline did.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::mixed::DestinationSearch;
+use crate::coordinator::pipeline::{AppAnalysis, SearchTrace};
+use crate::coordinator::stages::{MeasureArtifact, PrecompileArtifact};
+use crate::util::json::{self, Json};
+
+use super::codec;
+use super::key::CacheKey;
+
+/// Hit/miss counters (diagnostics; not part of any cache key).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Artifacts served from memory.
+    pub mem_hits: u64,
+    /// Artifacts served from the on-disk store.
+    pub disk_hits: u64,
+    /// Lookups that found nothing and recomputed.
+    pub misses: u64,
+    /// On-disk payloads discarded as corrupt/undecodable.
+    pub disk_rejects: u64,
+}
+
+#[derive(Default)]
+struct Mem {
+    analyses: HashMap<CacheKey, Arc<AppAnalysis>>,
+    precompiles: HashMap<CacheKey, PrecompileArtifact>,
+    measures: HashMap<CacheKey, MeasureArtifact>,
+    traces: HashMap<CacheKey, SearchTrace>,
+    destinations: HashMap<CacheKey, DestinationSearch>,
+}
+
+/// The content-addressed artifact store (see module docs).
+pub struct CacheStore {
+    enabled: bool,
+    dir: Option<PathBuf>,
+    mem: Mutex<Mem>,
+    stats: Mutex<CacheStats>,
+}
+
+impl CacheStore {
+    /// An enabled, memory-only store.
+    pub fn fresh() -> Arc<CacheStore> {
+        Arc::new(CacheStore {
+            enabled: true,
+            dir: None,
+            mem: Mutex::new(Mem::default()),
+            stats: Mutex::new(CacheStats::default()),
+        })
+    }
+
+    /// A store that persists serializable artifacts under `dir`
+    /// (created on first write; unwritable directories degrade to
+    /// memory-only).
+    pub fn with_dir(dir: impl Into<PathBuf>) -> Arc<CacheStore> {
+        Arc::new(CacheStore {
+            enabled: true,
+            dir: Some(dir.into()),
+            mem: Mutex::new(Mem::default()),
+            stats: Mutex::new(CacheStats::default()),
+        })
+    }
+
+    /// A store that caches nothing (`--no-cache`): every get misses,
+    /// every put is a no-op.
+    pub fn disabled() -> Arc<CacheStore> {
+        Arc::new(CacheStore {
+            enabled: false,
+            dir: None,
+            mem: Mutex::new(Mem::default()),
+            stats: Mutex::new(CacheStats::default()),
+        })
+    }
+
+    /// Is this store recording anything at all?
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Snapshot of the hit/miss counters.
+    pub fn stats(&self) -> CacheStats {
+        *self.stats.lock().expect("poisoned")
+    }
+
+    fn note_mem_hit(&self) {
+        self.stats.lock().expect("poisoned").mem_hits += 1;
+    }
+
+    fn note_disk_hit(&self) {
+        self.stats.lock().expect("poisoned").disk_hits += 1;
+    }
+
+    fn note_miss(&self) {
+        self.stats.lock().expect("poisoned").misses += 1;
+    }
+
+    fn note_disk_reject(&self) {
+        self.stats.lock().expect("poisoned").disk_rejects += 1;
+    }
+
+    // ------------------------------------------------------------- disk
+
+    fn disk_path(&self, kind: &str, key: CacheKey) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("{kind}-{key}.json")))
+    }
+
+    /// Read + parse + decode one disk entry; any failure rejects it.
+    fn disk_get<T>(&self, kind: &str, key: CacheKey, decode: impl Fn(&Json) -> Option<T>) -> Option<T> {
+        let path = self.disk_path(kind, key)?;
+        let text = std::fs::read_to_string(&path).ok()?;
+        match json::parse(&text).ok().as_ref().and_then(&decode) {
+            Some(v) => {
+                self.note_disk_hit();
+                Some(v)
+            }
+            None => {
+                self.note_disk_reject();
+                None
+            }
+        }
+    }
+
+    /// Best-effort disk write (never fails the search).
+    fn disk_put(&self, kind: &str, key: CacheKey, payload: &Json) {
+        let Some(path) = self.disk_path(kind, key) else { return };
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let _ = std::fs::write(&path, json::to_string(payload));
+    }
+
+    // --------------------------------------------------------- analyses
+
+    /// Fetch a memoized Steps-1/2 analysis (memory only — the AST and
+    /// profile are cheap to recompute and expensive to serialize).
+    pub fn get_analysis(&self, key: CacheKey) -> Option<Arc<AppAnalysis>> {
+        if !self.enabled {
+            return None;
+        }
+        let hit = self.mem.lock().expect("poisoned").analyses.get(&key).cloned();
+        match hit {
+            Some(a) => {
+                self.note_mem_hit();
+                Some(a)
+            }
+            None => {
+                self.note_miss();
+                None
+            }
+        }
+    }
+
+    /// Memoize a Steps-1/2 analysis.
+    pub fn put_analysis(&self, key: CacheKey, analysis: Arc<AppAnalysis>) {
+        if self.enabled {
+            self.mem.lock().expect("poisoned").analyses.insert(key, analysis);
+        }
+    }
+
+    // ------------------------------------------------------ precompiles
+
+    /// Fetch a Precompile-stage artifact (memory, then disk).
+    pub fn get_precompile(&self, key: CacheKey) -> Option<PrecompileArtifact> {
+        if !self.enabled {
+            return None;
+        }
+        let hit = self.mem.lock().expect("poisoned").precompiles.get(&key).cloned();
+        if let Some(p) = hit {
+            self.note_mem_hit();
+            return Some(p);
+        }
+        if let Some(p) = self.disk_get("precompile", key, codec::precompile_from_json) {
+            self.mem.lock().expect("poisoned").precompiles.insert(key, p.clone());
+            return Some(p);
+        }
+        self.note_miss();
+        None
+    }
+
+    /// Store a Precompile-stage artifact.
+    pub fn put_precompile(&self, key: CacheKey, p: &PrecompileArtifact) {
+        if !self.enabled {
+            return;
+        }
+        self.mem.lock().expect("poisoned").precompiles.insert(key, p.clone());
+        self.disk_put("precompile", key, &codec::precompile_to_json(p));
+    }
+
+    // --------------------------------------------------------- measures
+
+    /// Fetch a MeasureRounds-stage artifact (memory, then disk).
+    pub fn get_measure(&self, key: CacheKey) -> Option<MeasureArtifact> {
+        if !self.enabled {
+            return None;
+        }
+        let hit = self.mem.lock().expect("poisoned").measures.get(&key).cloned();
+        if let Some(m) = hit {
+            self.note_mem_hit();
+            return Some(m);
+        }
+        if let Some(m) = self.disk_get("measure", key, codec::measure_from_json) {
+            self.mem.lock().expect("poisoned").measures.insert(key, m.clone());
+            return Some(m);
+        }
+        self.note_miss();
+        None
+    }
+
+    /// Store a MeasureRounds-stage artifact.
+    pub fn put_measure(&self, key: CacheKey, m: &MeasureArtifact) {
+        if !self.enabled {
+            return;
+        }
+        self.mem.lock().expect("poisoned").measures.insert(key, m.clone());
+        self.disk_put("measure", key, &codec::measure_to_json(m));
+    }
+
+    // ----------------------------------------------------------- traces
+
+    /// Fetch a complete search trace (memory, then disk).
+    pub fn get_trace(&self, key: CacheKey) -> Option<SearchTrace> {
+        if !self.enabled {
+            return None;
+        }
+        let hit = self.mem.lock().expect("poisoned").traces.get(&key).cloned();
+        if let Some(t) = hit {
+            self.note_mem_hit();
+            return Some(t);
+        }
+        if let Some(t) = self.disk_get("trace", key, codec::trace_from_json) {
+            self.mem.lock().expect("poisoned").traces.insert(key, t.clone());
+            return Some(t);
+        }
+        self.note_miss();
+        None
+    }
+
+    /// Store a complete search trace.
+    pub fn put_trace(&self, key: CacheKey, t: &SearchTrace) {
+        if !self.enabled {
+            return;
+        }
+        self.mem.lock().expect("poisoned").traces.insert(key, t.clone());
+        self.disk_put("trace", key, &codec::trace_to_json(t));
+    }
+
+    // ----------------------------------------------------- destinations
+
+    /// Fetch a request-level destination-search outcome (memory, disk).
+    pub fn get_destination(&self, key: CacheKey) -> Option<DestinationSearch> {
+        if !self.enabled {
+            return None;
+        }
+        let hit = self.mem.lock().expect("poisoned").destinations.get(&key).cloned();
+        if let Some(d) = hit {
+            self.note_mem_hit();
+            return Some(d);
+        }
+        if let Some(d) = self.disk_get("destination", key, codec::destination_from_json) {
+            self.mem.lock().expect("poisoned").destinations.insert(key, d.clone());
+            return Some(d);
+        }
+        self.note_miss();
+        None
+    }
+
+    /// Store a request-level destination-search outcome.
+    pub fn put_destination(&self, key: CacheKey, d: &DestinationSearch) {
+        if !self.enabled {
+            return;
+        }
+        self.mem.lock().expect("poisoned").destinations.insert(key, d.clone());
+        self.disk_put("destination", key, &codec::destination_to_json(d));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::backend::FPGA;
+    use crate::config::SearchConfig;
+    use crate::coordinator::pipeline::offload_search;
+    use crate::coordinator::verify_env::VerifyEnv;
+    use crate::cpu::XEON_3104;
+
+    fn sample_trace() -> SearchTrace {
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
+        offload_search(&apps::MATMUL, &env, true).unwrap()
+    }
+
+    #[test]
+    fn disabled_store_is_inert() {
+        let store = CacheStore::disabled();
+        let t = sample_trace();
+        let key = CacheKey(7);
+        store.put_trace(key, &t);
+        assert!(store.get_trace(key).is_none());
+        assert!(!store.is_enabled());
+    }
+
+    #[test]
+    fn memory_roundtrip() {
+        let store = CacheStore::fresh();
+        let t = sample_trace();
+        let key = CacheKey(1);
+        assert!(store.get_trace(key).is_none());
+        store.put_trace(key, &t);
+        let back = store.get_trace(key).expect("hit");
+        assert_eq!(codec::trace_to_string(&back), codec::trace_to_string(&t));
+        let stats = store.stats();
+        assert_eq!(stats.mem_hits, 1);
+        assert_eq!(stats.misses, 1);
+    }
+
+    #[test]
+    fn disk_roundtrip_and_corruption_fallback() {
+        let dir = std::env::temp_dir().join(format!(
+            "flopt-store-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t = sample_trace();
+        let key = CacheKey(2);
+
+        // write through store A, read back through a fresh store B
+        let a = CacheStore::with_dir(&dir);
+        a.put_trace(key, &t);
+        let b = CacheStore::with_dir(&dir);
+        let back = b.get_trace(key).expect("disk hit");
+        assert_eq!(codec::trace_to_string(&back), codec::trace_to_string(&t));
+        assert_eq!(b.stats().disk_hits, 1);
+
+        // corrupt the payload: a fresh store must reject and miss
+        let path = dir.join(format!("trace-{key}.json"));
+        std::fs::write(&path, "{ not json !!").unwrap();
+        let c = CacheStore::with_dir(&dir);
+        assert!(c.get_trace(key).is_none());
+        let stats = c.stats();
+        assert_eq!(stats.disk_rejects, 1);
+        assert_eq!(stats.misses, 1);
+
+        // valid JSON of the wrong shape must also reject
+        std::fs::write(&path, "{\"kind\":\"trace\",\"v\":1}").unwrap();
+        let d = CacheStore::with_dir(&dir);
+        assert!(d.get_trace(key).is_none());
+        assert_eq!(d.stats().disk_rejects, 1);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unwritable_dir_degrades_to_memory_only() {
+        // a path under a *file* can never be created
+        let file = std::env::temp_dir().join(format!("flopt-store-file-{}", std::process::id()));
+        std::fs::write(&file, "x").unwrap();
+        let store = CacheStore::with_dir(file.join("sub"));
+        let t = sample_trace();
+        let key = CacheKey(3);
+        store.put_trace(key, &t); // must not panic
+        assert!(store.get_trace(key).is_some(), "memory tier still works");
+        let _ = std::fs::remove_file(&file);
+    }
+}

@@ -9,26 +9,31 @@
 //! winner is the destination whose best pattern beats the all-CPU
 //! baseline by the most; when nothing improves, the app stays on the
 //! CPU — mixed placement never loses to all-CPU.
-
-use std::sync::Arc;
+//!
+//! Since the batch-service refactor this module is a thin veneer over
+//! [`crate::service::BatchService`]: `mixed_search_all` submits one
+//! request per app × backend, the service analyzes each app once,
+//! dedupes identical work through the artifact cache, runs the searches
+//! concurrently, and accounts everything on one shared clock in
+//! deterministic submission order.
 
 use crate::apps::App;
-use crate::backend::{OffloadBackend, SearchMethod};
+use crate::backend::{Destination, OffloadBackend, SearchMethod, Target};
 use crate::baselines::ga::{self, GaConfig};
 use crate::config::SearchConfig;
 use crate::cpu::CpuModel;
-use crate::metrics::SimClock;
+use crate::service::{BatchRequest, BatchService};
 
-use super::pipeline::{analyze_app, charge_analysis, search_with_analysis, AppAnalysis};
+use super::pipeline::AppAnalysis;
 use super::verify_env::{PatternMeasurement, VerifyEnv};
 
 /// Outcome of one backend's search for one app.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct DestinationSearch {
     /// Registry name of the searched app.
     pub app_name: String,
-    /// Destination the search targeted ("FPGA", "GPU").
-    pub destination: &'static str,
+    /// Destination the search targeted.
+    pub destination: Destination,
     /// Search flow that produced the result.
     pub method: &'static str,
     /// Best speedup found vs. all-CPU (may be < 1 when nothing improved).
@@ -37,8 +42,11 @@ pub struct DestinationSearch {
     pub best: Option<PatternMeasurement>,
     /// Patterns compiled + measured by this search.
     pub patterns_measured: usize,
-    /// Compile-lane hours this search burned on the shared clock.
+    /// Compile-lane hours this search burned (0 when served warm from
+    /// the artifact cache).
     pub compile_hours: f64,
+    /// All-CPU baseline time the search compared against (model).
+    pub cpu_time_s: f64,
 }
 
 impl DestinationSearch {
@@ -67,7 +75,7 @@ impl DestinationSearch {
 }
 
 /// The mixed-destination record for one app.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct MixedTrace {
     /// Registry name of the searched app.
     pub app_name: String,
@@ -75,8 +83,8 @@ pub struct MixedTrace {
     pub cpu_time_s: f64,
     /// Per-backend search outcomes, in search order.
     pub searches: Vec<DestinationSearch>,
-    /// Winning destination ("FPGA", "GPU", or "CPU" when nothing won).
-    pub winner: &'static str,
+    /// Winning destination (CPU when nothing improved).
+    pub winner: Destination,
     /// Speedup of the winning placement (1.0 when staying on CPU).
     pub speedup: f64,
     /// Total simulated hours on the shared clock after this app.
@@ -107,7 +115,10 @@ impl MixedTrace {
     }
 }
 
-/// Run one backend's own search flow for an analyzed app.
+/// Run one backend's own search flow for an analyzed app on the caller's
+/// environment (the single-destination `flopt offload --target gpu`
+/// path; the batch service drives the same dispatch through
+/// [`crate::service::BatchService`]).
 ///
 /// Dispatches on [`OffloadBackend::search_method`]: narrowed two-round
 /// for hours-scale compiles, measurement-driven GA for minutes-scale.
@@ -120,15 +131,16 @@ pub fn destination_search(
     let meter = env.clock.compile_meter();
     let out = match env.backend.search_method() {
         SearchMethod::NarrowedTwoRound => {
-            let t = search_with_analysis(app, analysis, env, cfg)?;
+            let t = super::pipeline::search_with_analysis(app, analysis, env, cfg)?;
             DestinationSearch {
                 app_name: analysis.app_name.clone(),
-                destination: env.backend.name(),
+                destination: env.backend.destination(),
                 method: "narrowed-2round",
                 speedup: t.speedup(),
                 best: t.best.clone(),
                 patterns_measured: t.patterns_measured(),
                 compile_hours: meter.lane_hours(),
+                cpu_time_s: t.cpu_time_s,
             }
         }
         SearchMethod::MeasurementGa => {
@@ -140,88 +152,102 @@ pub fn destination_search(
             let out = ga::search(analysis, env, &ga_cfg);
             DestinationSearch {
                 app_name: analysis.app_name.clone(),
-                destination: env.backend.name(),
+                destination: env.backend.destination(),
                 method: "ga",
                 speedup: out.speedup(),
                 best: out.best,
                 patterns_measured: out.evaluations,
                 compile_hours: meter.lane_hours(),
+                cpu_time_s: env.cpu_baseline_s(analysis),
             }
         }
     };
     Ok(out)
 }
 
-/// Mixed-destination search for one app on a fresh clock.
+/// Mixed-destination search for one app on a fresh service.
 pub fn mixed_search(
-    app: &App,
+    app: &'static App,
     backends: &[&'static dyn OffloadBackend],
     cpu: &CpuModel,
     cfg: &SearchConfig,
     test_scale: bool,
 ) -> crate::Result<MixedTrace> {
-    let clock = Arc::new(SimClock::new(cfg.compile_parallelism.max(1)));
-    mixed_search_with_clock(app, backends, cpu, cfg, test_scale, clock)
+    let traces = mixed_search_all(&[app], backends, cpu, cfg, test_scale)?;
+    Ok(traces.into_iter().next().expect("one app in, one trace out"))
 }
 
-/// Mixed-destination search for one app on an existing shared clock
-/// (the `flopt --target mixed` run accounts all apps on one clock).
-pub fn mixed_search_with_clock(
-    app: &App,
-    backends: &[&'static dyn OffloadBackend],
-    cpu: &CpuModel,
-    cfg: &SearchConfig,
-    test_scale: bool,
-    clock: Arc<SimClock>,
-) -> crate::Result<MixedTrace> {
-    // Steps 1-2 run once per app and are shared by every backend.
-    let analysis = analyze_app(app, test_scale)?;
-    charge_analysis(&clock, cpu, &analysis);
-
-    let mut searches = Vec::new();
-    for b in backends {
-        let env = VerifyEnv::with_clock(*b, cpu, cfg.clone(), clock.clone());
-        searches.push(destination_search(app, &analysis, &env, cfg)?);
-    }
-
-    let best = searches
-        .iter()
-        .filter(|s| s.best.is_some() && s.speedup > 1.0)
-        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap());
-    let (winner, speedup) = match best {
-        Some(s) => (s.destination, s.speedup),
-        None => ("CPU", 1.0),
-    };
-
-    Ok(MixedTrace {
-        app_name: app.name.to_string(),
-        cpu_time_s: cpu.program_time_s(&analysis.profile),
-        searches,
-        winner,
-        speedup,
-        sim_hours: clock.total_hours(),
-    })
-}
-
-/// Mixed-destination search over several apps on **one** shared clock.
+/// Mixed-destination search over several apps on **one** shared clock:
+/// one batch request per app × backend, submitted app-major so the
+/// per-app clock snapshots accumulate in app order.
 pub fn mixed_search_all(
-    apps: &[&App],
+    apps: &[&'static App],
     backends: &[&'static dyn OffloadBackend],
     cpu: &CpuModel,
     cfg: &SearchConfig,
     test_scale: bool,
 ) -> crate::Result<Vec<MixedTrace>> {
-    let clock = Arc::new(SimClock::new(cfg.compile_parallelism.max(1)));
-    let mut traces = Vec::new();
+    let service = BatchService::new(backends.len().max(2), cfg.compile_parallelism, cpu);
+    mixed_search_on(&service, apps, backends, cfg, test_scale)
+}
+
+/// [`mixed_search_all`] on an existing [`BatchService`] (shared clock,
+/// cache, and worker pool — e.g. the CLI's `--cache-dir` store).
+pub fn mixed_search_on(
+    service: &BatchService,
+    apps: &[&'static App],
+    backends: &[&'static dyn OffloadBackend],
+    cfg: &SearchConfig,
+    test_scale: bool,
+) -> crate::Result<Vec<MixedTrace>> {
+    let mut requests = Vec::new();
     for app in apps {
-        traces.push(mixed_search_with_clock(
-            app,
-            backends,
-            cpu,
-            cfg,
-            test_scale,
-            clock.clone(),
-        )?);
+        for b in backends {
+            let target = match b.destination() {
+                Destination::Fpga => Target::Fpga,
+                Destination::Gpu => Target::Gpu,
+                Destination::Cpu => {
+                    anyhow::bail!("the CPU is the baseline, not a searchable backend")
+                }
+            };
+            requests.push(BatchRequest {
+                app: *app,
+                target,
+                cfg: cfg.clone(),
+                test_scale,
+            });
+        }
+    }
+    let report = service.run(&requests)?;
+
+    let per_app = backends.len();
+    let mut traces = Vec::new();
+    for (i, app) in apps.iter().enumerate() {
+        let items = &report.items[i * per_app..(i + 1) * per_app];
+        let searches: Vec<DestinationSearch> =
+            items.iter().map(|it| it.outcome.clone()).collect();
+        let best = searches
+            .iter()
+            .filter(|s| s.best.is_some() && s.speedup > 1.0)
+            .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap());
+        let (winner, speedup) = match best {
+            Some(s) => (s.destination, s.speedup),
+            None => (Destination::Cpu, 1.0),
+        };
+        traces.push(MixedTrace {
+            app_name: app.name.to_string(),
+            cpu_time_s: searches
+                .first()
+                .map(|s| s.cpu_time_s)
+                .unwrap_or_default(),
+            searches,
+            winner,
+            speedup,
+            sim_hours: items
+                .last()
+                .map(|it| it.sim_hours_after)
+                .unwrap_or_default(),
+        });
     }
     Ok(traces)
 }
@@ -231,6 +257,7 @@ mod tests {
     use super::*;
     use crate::apps;
     use crate::backend::Target;
+    use crate::coordinator::pipeline::analyze_app;
     use crate::cpu::XEON_3104;
 
     #[test]
@@ -244,18 +271,20 @@ mod tests {
         )
         .unwrap();
         assert_eq!(t.searches.len(), 2);
-        assert_eq!(t.searches[0].destination, "FPGA");
-        assert_eq!(t.searches[1].destination, "GPU");
+        assert_eq!(t.searches[0].destination, Destination::Fpga);
+        assert_eq!(t.searches[1].destination, Destination::Gpu);
         assert_eq!(t.searches[0].method, "narrowed-2round");
         assert_eq!(t.searches[1].method, "ga");
         assert!(t.speedup >= 1.0, "mixed never loses to CPU: {}", t.speedup);
-        assert!(["FPGA", "GPU", "CPU"].contains(&t.winner));
+        assert!(
+            [Destination::Fpga, Destination::Gpu, Destination::Cpu].contains(&t.winner)
+        );
         assert!(t.sim_hours > 0.0);
     }
 
     #[test]
     fn shared_clock_accumulates_across_apps() {
-        let apps_list: Vec<&crate::apps::App> = vec![&apps::HISTOGRAM, &apps::MATMUL];
+        let apps_list: Vec<&'static crate::apps::App> = vec![&apps::HISTOGRAM, &apps::MATMUL];
         let traces = mixed_search_all(
             &apps_list,
             &Target::Mixed.backends(),
@@ -275,9 +304,10 @@ mod tests {
         let cfg = SearchConfig::default();
         let env = VerifyEnv::new(&crate::backend::GPU, &XEON_3104, cfg.clone());
         let ds = destination_search(&apps::HISTOGRAM, &analysis, &env, &cfg).unwrap();
-        assert_eq!(ds.destination, "GPU");
+        assert_eq!(ds.destination, Destination::Gpu);
         assert_eq!(ds.method, "ga");
         assert!(ds.patterns_measured > 0);
+        assert!(ds.cpu_time_s > 0.0);
         // every GPU evaluation is a minutes-long build, not hours
         let per_eval_h = ds.compile_hours / ds.patterns_measured as f64;
         assert!(per_eval_h < 0.5, "per-eval {per_eval_h} h");

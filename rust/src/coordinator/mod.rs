@@ -4,19 +4,25 @@
 //! measure only a handful on the verification environment, and pick the
 //! fastest.
 //!
-//! * [`pipeline`] — the end-to-end search ([`pipeline::offload_search`]);
+//! * [`pipeline`] — the cache-aware search drivers
+//!   ([`pipeline::offload_search`]);
+//! * [`stages`] — the search body as six explicit, individually callable
+//!   stages with typed artifacts (what the cache stores);
 //! * [`verify_env`] — the verification environment: simulated compile
 //!   farm + performance measurement + PJRT numerics cross-check;
 //! * [`patterns`] — round-1/round-2 offload-pattern construction;
 //! * [`mixed`] — the mixed-destination search (arXiv:2011.12431): every
-//!   backend's own flow on one shared clock, winner per app.
+//!   backend's own flow on one shared clock, winner per app (routed
+//!   through the batch service, [`crate::service`]).
 
 pub mod adapt;
 pub mod mixed;
 pub mod patterns;
 pub mod pipeline;
+pub mod stages;
 pub mod verify_env;
 
 pub use mixed::{mixed_search, mixed_search_all, DestinationSearch, MixedTrace};
 pub use pipeline::{analyze_app, offload_search, AppAnalysis, CandidateReport, SearchTrace};
+pub use stages::{EfficiencyCut, IntensityCut, MeasureArtifact, PrecompileArtifact};
 pub use verify_env::{NumericsCheck, PatternMeasurement, VerifyEnv};

@@ -2,11 +2,19 @@
 //! narrowing → OpenCL generation + pre-compile → resource-efficiency
 //! narrowing → two measured rounds on the verification environment →
 //! solution selection.
-
-use std::collections::HashMap;
+//!
+//! The search body lives in [`super::stages`] as six explicit,
+//! individually callable stages; the drivers here
+//! ([`offload_search`], [`search_with_analysis`]) wire those stages
+//! through the content-addressed artifact cache ([`crate::cache`]): a
+//! stage whose artifact is already cached is skipped entirely — its
+//! simulated time is *not* re-charged — and a fully warm search returns
+//! the stored [`SearchTrace`] bit-identically while burning zero
+//! additional simulated compile-lane hours.
 
 use crate::apps::App;
-use crate::backend::{BackendReport, OffloadBackend};
+use crate::backend::Destination;
+use crate::cache;
 use crate::config::SearchConfig;
 use crate::cparse::ast::LoopId;
 use crate::cparse::Program;
@@ -15,7 +23,10 @@ use crate::interp::Profile;
 use crate::ir::{self, LoopAnalysis};
 use crate::opencl::{self, OpenClCode};
 
-use super::patterns;
+use super::stages::{
+    charge_precompile, stage_analyze, stage_efficiency_narrow, stage_intensity_narrow,
+    stage_measure_rounds, stage_precompile, stage_select,
+};
 use super::verify_env::{PatternMeasurement, VerifyEnv};
 
 /// Step-1/2 analysis products, reusable across searches.
@@ -63,17 +74,17 @@ pub struct CandidateReport {
     /// Resource efficiency: intensity / utilization.
     pub efficiency: f64,
     /// The full backend pre-compile report.
-    pub report: BackendReport,
+    pub report: crate::backend::BackendReport,
 }
 
 /// Everything the search recorded — the paper logs exactly this trace
 /// ("算術強度、リソース効率、…途中情報と共に、…性能測定結果を記録").
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct SearchTrace {
     /// Registry name of the searched app.
     pub app_name: String,
-    /// Destination the search targeted ("FPGA", "GPU", ...).
-    pub destination: &'static str,
+    /// Destination the search targeted.
+    pub destination: Destination,
     /// total loop statements discovered (paper: tdfir 36, MRI-Q 16)
     pub loop_count: usize,
     /// all executed loops with intensity info
@@ -92,9 +103,14 @@ pub struct SearchTrace {
     pub cpu_time_s: f64,
     /// the solution: fastest measured pattern
     pub best: Option<PatternMeasurement>,
-    /// total simulated automation time (hours) — paper: ≈ half a day
+    /// **Canonical** simulated automation hours of this search: what a
+    /// fully cold run charges (paper: ≈ half a day), derived purely from
+    /// the stage artifacts — so the cached trace is byte-identical no
+    /// matter which stages happened to be warm when it was built.  The
+    /// hours actually *burned* by a given run live on its clock/meters.
     pub sim_hours: f64,
-    /// simulated compile-lane hours actually burned
+    /// Canonical simulated compile-lane hours of this search (same
+    /// artifact-derived contract as `sim_hours`).
     pub compile_hours: f64,
 }
 
@@ -188,128 +204,113 @@ pub fn charge_analysis(
 }
 
 /// Run the paper's full offload search for one app.
+///
+/// This is the canonical cached entry point: a warm trace-cache hit
+/// returns the stored [`SearchTrace`] bit-identically without touching
+/// the clock at all; otherwise the six stages run, each individually
+/// skippable when its artifact is already cached.
 pub fn offload_search(
     app: &App,
     env: &VerifyEnv<'_>,
     test_scale: bool,
 ) -> crate::Result<SearchTrace> {
+    let trace_key = cache::trace_key(app, test_scale, env.backend, env.config());
+    if let Some(t) = env.cache.get_trace(trace_key) {
+        return Ok(t);
+    }
     let cfg: SearchConfig = env.config().clone();
-    let analysis = analyze_app(app, test_scale)?;
-    charge_analysis(&env.clock, env.cpu, &analysis);
-    search_with_analysis(app, &analysis, env, &cfg)
+    let analysis = stage_analyze(app, test_scale, &env.cache, env.cpu, Some(&env.clock))?;
+    let mut t = search_with_analysis(app, &analysis, env, &cfg)?;
+    // the trace's canonical times cover the whole search *including*
+    // Steps 1-2 when entered here (search_with_analysis stamped only its
+    // own stages — its callers charge the analysis themselves)
+    stamp_canonical_times(
+        &mut t,
+        Some((env.cpu, &analysis)),
+        cfg.compile_parallelism,
+    );
+    env.cache.put_trace(trace_key, &t);
+    Ok(t)
+}
+
+/// Stamp `sim_hours`/`compile_hours` with the trace's **canonical**
+/// cost: replay the artifact-recorded work (optionally Steps 1–2, then
+/// every pre-compile, then each pattern's compile + measurement, in
+/// measurement order) onto a virtual fresh clock with the search's lane
+/// count.  For a fully cold run this reproduces the live clock's charges
+/// event-for-event; for a partially warm run it reports what the search
+/// *costs*, independent of what this run happened to reuse — so a trace
+/// stored under a cache key is a pure function of that key's inputs.
+fn stamp_canonical_times(
+    t: &mut SearchTrace,
+    analysis_cost: Option<(&crate::cpu::CpuModel, &AppAnalysis)>,
+    lanes: usize,
+) {
+    let clock = crate::metrics::SimClock::new(lanes.max(1));
+    if let Some((cpu, analysis)) = analysis_cost {
+        charge_analysis(&clock, cpu, analysis);
+    }
+    for c in &t.candidates {
+        clock.advance_serial(&format!("precompile {}", c.id), c.report.precompile_s);
+    }
+    for round in &t.rounds {
+        for m in round {
+            clock.schedule_compile(&format!("compile {}", m.pattern.label()), m.compile_sim_s);
+            if m.compiled {
+                clock.advance_serial(&format!("measure {}", m.pattern.label()), m.time_s);
+            }
+        }
+    }
+    t.sim_hours = clock.total_hours();
+    t.compile_hours = clock.compile_lane_seconds() / 3600.0;
 }
 
 /// The search after Steps 1–2 (reused by baselines and the ablations so
 /// analysis cost is not re-paid per configuration).
+///
+/// Drives the staged pipeline ([`super::stages`]) through the artifact
+/// cache on `env`: IntensityNarrow → Precompile → EfficiencyNarrow →
+/// MeasureRounds → Select.  Cached stages are skipped and charge no
+/// simulated time.
 pub fn search_with_analysis(
-    _app: &App,
+    app: &App,
     analysis: &AppAnalysis,
     env: &VerifyEnv<'_>,
     cfg: &SearchConfig,
 ) -> crate::Result<SearchTrace> {
-    // ---- intensity cut (top a) ----------------------------------------
-    // Backend legality applies before the quota so a stricter device
-    // backfills with the next-ranked legal loops instead of silently
-    // under-filling `a`.  (No-op for the built-in backends today — the
-    // dependence tests already decide — but the seam keeps stricter
-    // devices possible.)
-    let top_a_loops: Vec<LoopIntensity> =
-        intensity::top_a(&analysis.intensities, &analysis.loops, usize::MAX)
-            .into_iter()
-            .filter(|li| {
-                analysis
-                    .loops
-                    .iter()
-                    .find(|l| l.info.id == li.id)
-                    .map(|la| env.backend.offloadable(la))
-                    .unwrap_or(false)
-            })
-            .take(cfg.a_intensity)
-            .collect();
-    let top_a: Vec<LoopId> = top_a_loops.iter().map(|l| l.id).collect();
+    // ---- intensity cut (top a): pure, always recomputed ----------------
+    let cut = stage_intensity_narrow(analysis, env.backend, cfg.a_intensity);
 
     // ---- kernel generation + backend pre-compile (minutes each) --------
-    let mut reports: HashMap<LoopId, BackendReport> = HashMap::new();
-    let mut candidates = Vec::new();
-    for li in &top_a_loops {
-        let la = analysis
-            .loops
-            .iter()
-            .find(|l| l.info.id == li.id)
-            .expect("intensity refers to a known loop");
-        let rep = env.backend.precompile(&analysis.program, la, cfg.b_unroll);
-        env.clock.advance_serial(
-            &format!("precompile {}", li.id),
-            rep.precompile_s,
-        );
-        candidates.push(CandidateReport {
-            id: li.id,
-            intensity: li.intensity,
-            utilization: rep.utilization,
-            efficiency: li.intensity / rep.utilization,
-            report: rep.clone(),
-        });
-        reports.insert(li.id, rep);
-    }
+    let pre_key = cache::precompile_key(app, analysis, env.backend, cfg);
+    let pre = match env.cache.get_precompile(pre_key) {
+        Some(p) => p,
+        None => {
+            let p = stage_precompile(analysis, &cut, env.backend, cfg.b_unroll);
+            charge_precompile(&env.clock, &p);
+            env.cache.put_precompile(pre_key, &p);
+            p
+        }
+    };
 
-    // ---- resource-efficiency cut (top c) --------------------------------
-    let mut by_eff = candidates.clone();
-    by_eff.sort_by(|a, b| b.efficiency.partial_cmp(&a.efficiency).unwrap());
-    let top_c: Vec<LoopId> = by_eff
-        .iter()
-        .take(cfg.c_efficiency)
-        .map(|c| c.id)
-        .collect();
+    // ---- resource-efficiency cut (top c): pure --------------------------
+    let eff = stage_efficiency_narrow(&pre, cfg.c_efficiency);
 
-    // ---- round 1: singles ------------------------------------------------
-    let d = cfg.d_patterns;
-    let round1_pats: Vec<_> = patterns::round1(&top_c).into_iter().take(d).collect();
-    let mut opencl_codes = Vec::new();
-    let mut round1_meas = Vec::new();
-    for pat in &round1_pats {
-        opencl_codes.push(generate_opencl(analysis, pat, cfg));
-        round1_meas.push(env.measure_pattern(analysis, &reports, pat));
-    }
+    // ---- two measured rounds on the verification environment ------------
+    let meas_key = cache::measure_key(app, analysis, env.backend, cfg);
+    let meas = match env.cache.get_measure(meas_key) {
+        Some(m) => m,
+        None => {
+            let m = stage_measure_rounds(analysis, &pre, &eff, env, cfg);
+            env.cache.put_measure(meas_key, &m);
+            m
+        }
+    };
 
-    // ---- round 2: combinations of the improving singles ------------------
-    let budget = d.saturating_sub(round1_meas.len());
-    let round2_pats =
-        patterns::round2(&round1_meas, &reports, env.backend, cfg.resource_cap, budget);
-    let mut round2_meas = Vec::new();
-    for pat in &round2_pats {
-        opencl_codes.push(generate_opencl(analysis, pat, cfg));
-        round2_meas.push(env.measure_pattern(analysis, &reports, pat));
-    }
-
-    // ---- solution ---------------------------------------------------------
-    let cpu_time_s = env.cpu_baseline_s(analysis);
-    let best = round1_meas
-        .iter()
-        .chain(&round2_meas)
-        .filter(|m| m.compiled)
-        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
-        .cloned();
-
-    let mut rounds = vec![round1_meas];
-    if !round2_meas.is_empty() {
-        rounds.push(round2_meas);
-    }
-
-    Ok(SearchTrace {
-        app_name: analysis.app_name.clone(),
-        destination: env.backend.name(),
-        loop_count: analysis.program.loop_count(),
-        intensities: analysis.intensities.clone(),
-        top_a,
-        candidates,
-        top_c,
-        opencl: opencl_codes,
-        rounds,
-        cpu_time_s,
-        best,
-        sim_hours: env.clock.total_hours(),
-        compile_hours: env.clock.compile_lane_seconds() / 3600.0,
-    })
+    // ---- solution --------------------------------------------------------
+    let mut t = stage_select(analysis, env.backend.destination(), &cut, &pre, &eff, &meas);
+    stamp_canonical_times(&mut t, None, cfg.compile_parallelism);
+    Ok(t)
 }
 
 /// Generate the OpenCL for a pattern (kernels + ten-step host program).
@@ -339,7 +340,6 @@ mod tests {
     use super::*;
     use crate::apps;
     use crate::backend::FPGA;
-    use crate::config::SearchConfig;
     use crate::cpu::XEON_3104;
 
     fn run_search(app: &crate::apps::App, test_scale: bool) -> SearchTrace {
@@ -405,7 +405,7 @@ mod tests {
     #[test]
     fn trace_renders() {
         let t = run_search(&apps::MRIQ, true);
-        assert_eq!(t.destination, "FPGA");
+        assert_eq!(t.destination, Destination::Fpga);
         let s = t.render();
         assert!(s.contains("offload search: mriq → FPGA"));
         assert!(s.contains("solution:"));

@@ -1,0 +1,329 @@
+//! The offload search as explicit, individually callable stages.
+//!
+//! The paper's Fig-2 flow (Steps 1–3 + verification) decomposes into six
+//! stages, each consuming the previous stage's typed artifact:
+//!
+//! ```text
+//! Analyze          -> Arc<AppAnalysis>      (parse, profile, intensity)
+//! IntensityNarrow  -> IntensityCut          (top-a by arithmetic intensity)
+//! Precompile       -> PrecompileArtifact    (HLS/trial builds, resource efficiency)
+//! EfficiencyNarrow -> EfficiencyCut         (top-c by resource efficiency)
+//! MeasureRounds    -> MeasureArtifact       (two measured rounds on the farm)
+//! Select           -> SearchTrace           (the solution + the logged trace)
+//! ```
+//!
+//! Stages are *re-entrant*: every function here is a pure function of
+//! its inputs (MeasureRounds additionally charges the simulated clock it
+//! is handed, exactly as the pre-refactor monolith did), so a driver may
+//! run one stage, persist its artifact, and resume later — that is what
+//! [`crate::cache`] does, and why a warm re-run burns zero additional
+//! simulated compile-lane hours.  The drivers in
+//! [`super::pipeline::offload_search`] and
+//! [`super::pipeline::search_with_analysis`] wire the stages through the
+//! cache; `rust/tests/backends.rs` pins the composed result bit-identical
+//! to composing the device models by hand.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::apps::App;
+use crate::backend::{BackendReport, Destination, OffloadBackend};
+use crate::cache::{self, CacheStore};
+use crate::config::SearchConfig;
+use crate::cparse::ast::LoopId;
+use crate::cpu::CpuModel;
+use crate::intensity::{self, LoopIntensity};
+use crate::metrics::SimClock;
+use crate::opencl::OpenClCode;
+
+use super::patterns;
+use super::pipeline::{
+    analyze_app, charge_analysis, generate_opencl, AppAnalysis, CandidateReport, SearchTrace,
+};
+use super::verify_env::{PatternMeasurement, VerifyEnv};
+
+/// Artifact of the IntensityNarrow stage: the top-`a` offloadable loops
+/// by arithmetic intensity, in rank order.
+#[derive(Debug, Clone)]
+pub struct IntensityCut {
+    /// Surviving loops with their intensity rows, best first.
+    pub top_a: Vec<LoopIntensity>,
+}
+
+impl IntensityCut {
+    /// The surviving loop ids, in rank order.
+    pub fn ids(&self) -> Vec<LoopId> {
+        self.top_a.iter().map(|l| l.id).collect()
+    }
+}
+
+/// Artifact of the Precompile stage: per-candidate cost/resource reports
+/// with the paper's resource-efficiency metric, in intensity-rank order.
+#[derive(Debug, Clone)]
+pub struct PrecompileArtifact {
+    /// One report per surviving candidate.
+    pub candidates: Vec<CandidateReport>,
+}
+
+impl PrecompileArtifact {
+    /// Per-loop backend reports (what pattern measurement consumes).
+    pub fn reports(&self) -> HashMap<LoopId, BackendReport> {
+        self.candidates
+            .iter()
+            .map(|c| (c.id, c.report.clone()))
+            .collect()
+    }
+}
+
+/// Artifact of the EfficiencyNarrow stage: the top-`c` candidates by
+/// resource efficiency.
+#[derive(Debug, Clone)]
+pub struct EfficiencyCut {
+    /// Surviving loop ids, best efficiency first.
+    pub top_c: Vec<LoopId>,
+}
+
+/// Artifact of the MeasureRounds stage: everything the verification
+/// environment produced — generated OpenCL, both measured rounds, and
+/// the all-CPU baseline they were compared against.
+#[derive(Debug, Clone)]
+pub struct MeasureArtifact {
+    /// All-CPU baseline of the sample run (model).
+    pub cpu_time_s: f64,
+    /// Generated OpenCL for each measured pattern, in measurement order.
+    pub opencl: Vec<OpenClCode>,
+    /// measured rounds (round 1 = singles, round 2 = combinations)
+    pub rounds: Vec<Vec<PatternMeasurement>>,
+}
+
+/// Stage 1 — Analyze: parse, profile, compute intensities (paper Steps
+/// 1–2), memoized through the cache.  Charges the Steps-1/2 simulated
+/// time on `clock` only when the analysis is actually computed — a cache
+/// hit reuses the artifact and burns nothing.
+pub fn stage_analyze(
+    app: &App,
+    test_scale: bool,
+    cache: &CacheStore,
+    cpu: &CpuModel,
+    clock: Option<&SimClock>,
+) -> crate::Result<Arc<AppAnalysis>> {
+    let key = cache::analyze_key(app, test_scale);
+    if let Some(a) = cache.get_analysis(key) {
+        return Ok(a);
+    }
+    let analysis = Arc::new(analyze_app(app, test_scale)?);
+    if let Some(clock) = clock {
+        charge_analysis(clock, cpu, &analysis);
+    }
+    cache.put_analysis(key, Arc::clone(&analysis));
+    Ok(analysis)
+}
+
+/// Stage 2 — IntensityNarrow: the top-`a` cut.  Backend legality applies
+/// before the quota so a stricter device backfills with the next-ranked
+/// legal loops instead of silently under-filling `a`.
+pub fn stage_intensity_narrow(
+    analysis: &AppAnalysis,
+    backend: &dyn OffloadBackend,
+    a_intensity: usize,
+) -> IntensityCut {
+    let top_a = intensity::top_a(&analysis.intensities, &analysis.loops, usize::MAX)
+        .into_iter()
+        .filter(|li| {
+            analysis
+                .loops
+                .iter()
+                .find(|l| l.info.id == li.id)
+                .map(|la| backend.offloadable(la))
+                .unwrap_or(false)
+        })
+        .take(a_intensity)
+        .collect();
+    IntensityCut { top_a }
+}
+
+/// Stage 3 — Precompile: kernel generation + backend cost estimation
+/// (minutes each) for every surviving candidate.  Pure — the driver
+/// charges the simulated pre-compile time when (and only when) this
+/// stage actually ran; see [`charge_precompile`].
+pub fn stage_precompile(
+    analysis: &AppAnalysis,
+    cut: &IntensityCut,
+    backend: &dyn OffloadBackend,
+    b_unroll: usize,
+) -> PrecompileArtifact {
+    let mut candidates = Vec::new();
+    for li in &cut.top_a {
+        let la = analysis
+            .loops
+            .iter()
+            .find(|l| l.info.id == li.id)
+            .expect("intensity refers to a known loop");
+        let rep = backend.precompile(&analysis.program, la, b_unroll);
+        candidates.push(CandidateReport {
+            id: li.id,
+            intensity: li.intensity,
+            utilization: rep.utilization,
+            efficiency: li.intensity / rep.utilization,
+            report: rep,
+        });
+    }
+    PrecompileArtifact { candidates }
+}
+
+/// Charge the simulated pre-compile time of a freshly computed
+/// [`PrecompileArtifact`] (one serial HLS/trial build per candidate,
+/// in candidate order — identical to the pre-stage monolith).
+pub fn charge_precompile(clock: &SimClock, pre: &PrecompileArtifact) {
+    for c in &pre.candidates {
+        clock.advance_serial(&format!("precompile {}", c.id), c.report.precompile_s);
+    }
+}
+
+/// Stage 4 — EfficiencyNarrow: the top-`c` cut by resource efficiency.
+pub fn stage_efficiency_narrow(pre: &PrecompileArtifact, c_efficiency: usize) -> EfficiencyCut {
+    let mut by_eff = pre.candidates.clone();
+    by_eff.sort_by(|a, b| b.efficiency.partial_cmp(&a.efficiency).unwrap());
+    EfficiencyCut {
+        top_c: by_eff.iter().take(c_efficiency).map(|c| c.id).collect(),
+    }
+}
+
+/// Stage 5 — MeasureRounds: generate OpenCL and compile+measure round-1
+/// singles then round-2 combinations on the verification environment.
+/// Charges `env.clock` through [`VerifyEnv::measure_pattern`] exactly as
+/// the pre-stage monolith did (compile then measurement, per pattern).
+pub fn stage_measure_rounds(
+    analysis: &AppAnalysis,
+    pre: &PrecompileArtifact,
+    cut: &EfficiencyCut,
+    env: &VerifyEnv<'_>,
+    cfg: &SearchConfig,
+) -> MeasureArtifact {
+    let reports = pre.reports();
+    let d = cfg.d_patterns;
+
+    // round 1: singles
+    let round1_pats: Vec<_> = patterns::round1(&cut.top_c).into_iter().take(d).collect();
+    let mut opencl = Vec::new();
+    let mut round1_meas = Vec::new();
+    for pat in &round1_pats {
+        opencl.push(generate_opencl(analysis, pat, cfg));
+        round1_meas.push(env.measure_pattern(analysis, &reports, pat));
+    }
+
+    // round 2: combinations of the improving singles
+    let budget = d.saturating_sub(round1_meas.len());
+    let round2_pats =
+        patterns::round2(&round1_meas, &reports, env.backend, cfg.resource_cap, budget);
+    let mut round2_meas = Vec::new();
+    for pat in &round2_pats {
+        opencl.push(generate_opencl(analysis, pat, cfg));
+        round2_meas.push(env.measure_pattern(analysis, &reports, pat));
+    }
+
+    let mut rounds = vec![round1_meas];
+    if !round2_meas.is_empty() {
+        rounds.push(round2_meas);
+    }
+
+    MeasureArtifact {
+        cpu_time_s: env.cpu_baseline_s(analysis),
+        opencl,
+        rounds,
+    }
+}
+
+/// Stage 6 — Select: pick the fastest compiled pattern and assemble the
+/// full [`SearchTrace`].  The caller stamps `sim_hours`/`compile_hours`
+/// from its span meter (they are properties of the *run*, not of the
+/// stage artifacts).
+pub fn stage_select(
+    analysis: &AppAnalysis,
+    destination: Destination,
+    cut: &IntensityCut,
+    pre: &PrecompileArtifact,
+    eff: &EfficiencyCut,
+    meas: &MeasureArtifact,
+) -> SearchTrace {
+    let best = meas
+        .rounds
+        .iter()
+        .flatten()
+        .filter(|m| m.compiled)
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+        .cloned();
+
+    SearchTrace {
+        app_name: analysis.app_name.clone(),
+        destination,
+        loop_count: analysis.program.loop_count(),
+        intensities: analysis.intensities.clone(),
+        top_a: cut.ids(),
+        candidates: pre.candidates.clone(),
+        top_c: eff.top_c.clone(),
+        opencl: meas.opencl.clone(),
+        rounds: meas.rounds.clone(),
+        cpu_time_s: meas.cpu_time_s,
+        best,
+        sim_hours: 0.0,
+        compile_hours: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::backend::FPGA;
+    use crate::cpu::XEON_3104;
+
+    /// Composing the stages by hand must reproduce the driver's trace —
+    /// the stages really are the pipeline, not a parallel copy of it.
+    #[test]
+    fn hand_composed_stages_match_the_driver() {
+        let cfg = SearchConfig::default();
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
+        let driver = super::super::pipeline::offload_search(&apps::TDFIR, &env, true).unwrap();
+
+        let analysis = Arc::new(analyze_app(&apps::TDFIR, true).unwrap());
+        let cut = stage_intensity_narrow(&analysis, &FPGA, cfg.a_intensity);
+        let pre = stage_precompile(&analysis, &cut, &FPGA, cfg.b_unroll);
+        let eff = stage_efficiency_narrow(&pre, cfg.c_efficiency);
+        let env2 = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
+        let meas = stage_measure_rounds(&analysis, &pre, &eff, &env2, &cfg);
+        let hand = stage_select(&analysis, Destination::Fpga, &cut, &pre, &eff, &meas);
+
+        assert_eq!(hand.app_name, driver.app_name);
+        assert_eq!(hand.destination, driver.destination);
+        assert_eq!(hand.top_a, driver.top_a);
+        assert_eq!(hand.top_c, driver.top_c);
+        assert_eq!(hand.cpu_time_s, driver.cpu_time_s);
+        assert_eq!(hand.rounds.len(), driver.rounds.len());
+        for (hr, dr) in hand.rounds.iter().zip(&driver.rounds) {
+            assert_eq!(hr.len(), dr.len());
+            for (hm, dm) in hr.iter().zip(dr) {
+                assert_eq!(hm.pattern, dm.pattern);
+                assert_eq!(hm.time_s, dm.time_s);
+                assert_eq!(hm.speedup, dm.speedup);
+                assert_eq!(hm.compile_sim_s, dm.compile_sim_s);
+            }
+        }
+        assert_eq!(
+            hand.best.as_ref().map(|b| (b.pattern.clone(), b.speedup)),
+            driver.best.as_ref().map(|b| (b.pattern.clone(), b.speedup))
+        );
+    }
+
+    #[test]
+    fn analyze_stage_memoizes_and_charges_once() {
+        let cache = CacheStore::fresh();
+        let clock = SimClock::new(1);
+        let a1 = stage_analyze(&apps::MATMUL, true, &cache, &XEON_3104, Some(&clock)).unwrap();
+        let charged = clock.total_seconds();
+        assert!(charged > 0.0, "cold analyze must charge Steps 1-2 time");
+        let a2 = stage_analyze(&apps::MATMUL, true, &cache, &XEON_3104, Some(&clock)).unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2), "second call must be the memoized Arc");
+        assert_eq!(clock.total_seconds(), charged, "warm analyze must charge nothing");
+    }
+}

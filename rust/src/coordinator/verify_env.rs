@@ -21,6 +21,7 @@ use std::sync::Arc;
 
 use crate::apps::App;
 use crate::backend::{BackendReport, OffloadBackend};
+use crate::cache::CacheStore;
 use crate::config::SearchConfig;
 use crate::cparse::ast::LoopId;
 use crate::cpu::CpuModel;
@@ -74,6 +75,11 @@ pub struct VerifyEnv<'a> {
     /// Simulated clock tracking automation time.  `Arc` so a
     /// mixed-destination search can share one clock across backends.
     pub clock: Arc<SimClock>,
+    /// Content-addressed artifact cache the staged pipeline routes
+    /// through.  Defaults to a private in-memory store (inert for a
+    /// one-shot search); hand in a shared / on-disk store via
+    /// [`VerifyEnv::with_cache`] to reuse artifacts across searches.
+    pub cache: Arc<CacheStore>,
     cfg: SearchConfig,
 }
 
@@ -92,7 +98,14 @@ impl<'a> VerifyEnv<'a> {
         cfg: SearchConfig,
         clock: Arc<SimClock>,
     ) -> Self {
-        Self { backend, cpu, clock, cfg }
+        Self { backend, cpu, clock, cache: CacheStore::fresh(), cfg }
+    }
+
+    /// Route this environment's searches through a shared artifact cache
+    /// (the CLI's `--cache-dir` store, or the batch service's store).
+    pub fn with_cache(mut self, cache: Arc<CacheStore>) -> Self {
+        self.cache = cache;
+        self
     }
 
     /// The search configuration this environment was built with.

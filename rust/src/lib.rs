@@ -25,6 +25,7 @@
 pub mod apps;
 pub mod backend;
 pub mod baselines;
+pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod cparse;
@@ -37,6 +38,7 @@ pub mod ir;
 pub mod metrics;
 pub mod opencl;
 pub mod runtime;
+pub mod service;
 pub mod util;
 
 /// Crate-wide result type.

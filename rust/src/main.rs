@@ -5,25 +5,33 @@
 //! flopt env                        print the Fig-3 testbed table
 //! flopt analyze <app>              Steps 1-2: loops, intensity ranking
 //! flopt offload <app> [opts]       full offload search (paper Fig 2)
+//! flopt batch [<app>] [opts]       batched offload service (N requests,
+//!                                  one compile farm, cache + dedupe)
 //! flopt opencl <app>               print generated OpenCL for the solution
 //! flopt verify <app>               PJRT numerics cross-check of the hot loop
 //! flopt compare <app>              proposed vs GA vs exhaustive vs naive
 //! ```
 //!
-//! Options for `offload`/`compare`: `--target {fpga,gpu,mixed}` plus
-//! `--a N --b N --c N --d N --lanes N --full-scale` (default runs the
-//! paper's a=5, b=1, c=3, d=4 against the FPGA at test scale;
-//! `--full-scale` uses the paper-sized workloads).
+//! Options for `offload`/`batch`/`compare`: `--target {fpga,gpu,mixed}`
+//! plus `--a N --b N --c N --d N --lanes N --full-scale` (default runs
+//! the paper's a=5, b=1, c=3, d=4 against the FPGA at test scale;
+//! `--full-scale` uses the paper-sized workloads).  Caching:
+//! `--cache-dir <dir>` persists stage artifacts as JSON so repeat
+//! searches burn zero additional simulated compile-hours; `--no-cache`
+//! disables artifact reuse entirely.  `--pool N` sets the batch
+//! service's worker count (output is identical for any pool size).
 //!
 //! `flopt --target mixed` (no app) runs **all** registered apps through
 //! both backends on one shared simulated clock and reports the winning
-//! destination per app.
+//! destination per app.  `flopt batch --target mixed` submits every
+//! registered app × {fpga, gpu} to the batch service.
 
 use flopt::apps;
 use flopt::backend::{self, OffloadBackend, Target};
 use flopt::baselines;
+use flopt::cache::{self, CacheStore};
 use flopt::config::{fig3_table, SearchConfig};
-use flopt::coordinator::mixed::{destination_search, mixed_search_all};
+use flopt::coordinator::mixed::{destination_search, mixed_search_on};
 use flopt::coordinator::pipeline::{
     analyze_app, charge_analysis, offload_search, search_with_analysis,
 };
@@ -31,6 +39,9 @@ use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
 use flopt::intensity;
 use flopt::runtime::{default_artifact_dir, Runtime};
+use flopt::service::{BatchRequest, BatchService};
+
+use std::sync::Arc;
 
 fn usage() -> ! {
     eprintln!(
@@ -40,6 +51,7 @@ fn usage() -> ! {
          \x20 env                       print the Fig-3 testbed table\n\
          \x20 analyze <app>             loop + intensity analysis\n\
          \x20 offload [<app>] [opts]    full offload search\n\
+         \x20 batch [<app>] [opts]      batched offload service (cache + dedupe)\n\
          \x20 opencl <app> [opts]       print the solution's OpenCL\n\
          \x20 verify <app>              PJRT numerics cross-check\n\
          \x20 compare <app> [opts]      proposed vs baselines\n\
@@ -47,8 +59,10 @@ fn usage() -> ! {
          \x20 adapt <app> [opts]        Steps 4-6: size, place, verify operation\n\
          opts: --target {{fpga,gpu,mixed}} --a N --b N --c N --d N --lanes N\n\
          \x20     --ga-pop N --ga-gen N --full-scale\n\
+         \x20     --cache-dir <dir> --no-cache --pool N\n\
          (`flopt --target mixed` with no app searches all registered apps\n\
-         \x20on one shared clock and reports the winning destination per app)"
+         \x20on one shared clock and reports the winning destination per app;\n\
+         \x20`flopt batch --target mixed` submits every app x {{fpga,gpu}})"
     );
     std::process::exit(2);
 }
@@ -58,6 +72,9 @@ struct Opts {
     cfg: SearchConfig,
     full_scale: bool,
     target: Target,
+    cache_dir: Option<String>,
+    no_cache: bool,
+    pool: usize,
 }
 
 fn parse_opts(args: &[String]) -> Opts {
@@ -65,6 +82,9 @@ fn parse_opts(args: &[String]) -> Opts {
     let mut app = None;
     let mut full_scale = false;
     let mut target = Target::Fpga;
+    let mut cache_dir = None;
+    let mut no_cache = false;
+    let mut pool = 4;
     let mut i = 0;
     while i < args.len() {
         let take = |i: &mut usize| -> usize {
@@ -81,6 +101,7 @@ fn parse_opts(args: &[String]) -> Opts {
             "--lanes" => cfg.compile_parallelism = take(&mut i),
             "--ga-pop" => cfg.ga_population = take(&mut i),
             "--ga-gen" => cfg.ga_generations = take(&mut i),
+            "--pool" => pool = take(&mut i).max(1),
             "--target" => {
                 i += 1;
                 target = args
@@ -88,13 +109,29 @@ fn parse_opts(args: &[String]) -> Opts {
                     .and_then(|v| Target::parse(v))
                     .unwrap_or_else(|| usage());
             }
+            "--cache-dir" => {
+                i += 1;
+                cache_dir = Some(args.get(i).cloned().unwrap_or_else(|| usage()));
+            }
+            "--no-cache" => no_cache = true,
             "--full-scale" => full_scale = true,
             s if !s.starts_with('-') && app.is_none() => app = Some(s.to_string()),
             _ => usage(),
         }
         i += 1;
     }
-    Opts { app, cfg, full_scale, target }
+    Opts { app, cfg, full_scale, target, cache_dir, no_cache, pool }
+}
+
+/// The artifact cache this invocation routes searches through.
+fn build_cache(opts: &Opts) -> Arc<CacheStore> {
+    if opts.no_cache {
+        CacheStore::disabled()
+    } else if let Some(dir) = &opts.cache_dir {
+        CacheStore::with_dir(dir)
+    } else {
+        CacheStore::fresh()
+    }
 }
 
 fn get_app(opts: &Opts) -> &'static apps::App {
@@ -194,33 +231,48 @@ fn main() -> flopt::Result<()> {
         "offload" => match opts.target {
             Target::Fpga => {
                 let app = get_app(&opts);
-                let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone());
+                let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone())
+                    .with_cache(build_cache(&opts));
                 let trace = offload_search(app, &env, !opts.full_scale)?;
                 println!("{}", trace.render());
             }
             Target::Gpu => {
                 let app = get_app(&opts);
-                let analysis = analyze_app(app, !opts.full_scale)?;
-                let env = VerifyEnv::new(&backend::GPU, &XEON_3104, opts.cfg.clone());
-                charge_analysis(&env.clock, env.cpu, &analysis);
-                let ds = destination_search(app, &analysis, &env, &opts.cfg)?;
-                println!("{}", ds.render());
-                println!(
-                    "automation time: {:.1} h simulated",
-                    env.clock.total_hours()
-                );
+                let store = build_cache(&opts);
+                let key =
+                    cache::destination_key(app, !opts.full_scale, &backend::GPU, &opts.cfg);
+                if let Some(ds) = store.get_destination(key) {
+                    println!("{}", ds.render());
+                    println!("automation time: 0.0 h simulated (served from cache)");
+                } else {
+                    let env = VerifyEnv::new(&backend::GPU, &XEON_3104, opts.cfg.clone())
+                        .with_cache(Arc::clone(&store));
+                    let analysis = analyze_app(app, !opts.full_scale)?;
+                    charge_analysis(&env.clock, env.cpu, &analysis);
+                    let ds = destination_search(app, &analysis, &env, &opts.cfg)?;
+                    store.put_destination(key, &ds);
+                    println!("{}", ds.render());
+                    println!(
+                        "automation time: {:.1} h simulated",
+                        env.clock.total_hours()
+                    );
+                }
             }
             Target::Mixed => {
                 // one app when named, the whole registry otherwise —
-                // always on one shared simulated clock
+                // always on one shared simulated clock (via the batch
+                // service: analyze once per app, dedupe through the cache)
                 let apps_list: Vec<&'static apps::App> = match opts.app.as_deref() {
                     Some(_) => vec![get_app(&opts)],
                     None => apps::all(),
                 };
-                let traces = mixed_search_all(
+                let service =
+                    BatchService::new(opts.pool, opts.cfg.compile_parallelism, &XEON_3104)
+                        .with_cache(build_cache(&opts));
+                let traces = mixed_search_on(
+                    &service,
                     &apps_list,
                     &Target::Mixed.backends(),
-                    &XEON_3104,
                     &opts.cfg,
                     !opts.full_scale,
                 )?;
@@ -233,10 +285,39 @@ fn main() -> flopt::Result<()> {
                 );
             }
         },
+        "batch" => {
+            // one app when named, the whole registry otherwise; `mixed`
+            // fans each app out to both concrete destinations
+            let apps_list: Vec<&'static apps::App> = match opts.app.as_deref() {
+                Some(_) => vec![get_app(&opts)],
+                None => apps::all(),
+            };
+            let targets: Vec<Target> = match opts.target {
+                Target::Mixed => vec![Target::Fpga, Target::Gpu],
+                t => vec![t],
+            };
+            let mut requests = Vec::new();
+            for app in &apps_list {
+                for t in &targets {
+                    requests.push(BatchRequest {
+                        app: *app,
+                        target: *t,
+                        cfg: opts.cfg.clone(),
+                        test_scale: !opts.full_scale,
+                    });
+                }
+            }
+            let service =
+                BatchService::new(opts.pool, opts.cfg.compile_parallelism, &XEON_3104)
+                    .with_cache(build_cache(&opts));
+            let report = service.run(&requests)?;
+            print!("{}", report.render());
+        }
         "opencl" => {
             let app = get_app(&opts);
             require_fpga_target(&opts, "opencl");
-            let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone());
+            let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone())
+                .with_cache(build_cache(&opts));
             let trace = offload_search(app, &env, !opts.full_scale)?;
             match trace.best {
                 Some(best) => {
@@ -294,7 +375,8 @@ fn main() -> flopt::Result<()> {
         "adapt" => {
             let app = get_app(&opts);
             require_fpga_target(&opts, "adapt");
-            let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone());
+            let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, opts.cfg.clone())
+                .with_cache(build_cache(&opts));
             let trace = offload_search(app, &env, !opts.full_scale)?;
             let Some(best) = &trace.best else {
                 println!("no improving pattern — nothing to deploy");
@@ -344,7 +426,8 @@ fn main() -> flopt::Result<()> {
                 "method", "speedup", "evals", "compile-hours"
             );
             {
-                let env = VerifyEnv::new(be, &XEON_3104, opts.cfg.clone());
+                let env = VerifyEnv::new(be, &XEON_3104, opts.cfg.clone())
+                    .with_cache(build_cache(&opts));
                 let t = search_with_analysis(app, &analysis, &env, &opts.cfg)?;
                 println!(
                     "{:<12} {:>9.2} {:>8} {:>14.1}",

@@ -16,6 +16,8 @@ pub struct Event {
     pub sim_seconds: f64,
     /// lane the event ran on (compile farm), 0 for serial phases
     pub lane: usize,
+    /// Was this a compile-farm job (vs. serial automation time)?
+    pub compile: bool,
 }
 
 /// Simulated clock with parallel-lane makespan accounting.
@@ -50,7 +52,7 @@ impl SimClock {
     pub fn advance_serial(&self, label: &str, sim_seconds: f64) {
         let mut g = self.inner.lock().expect("poisoned");
         g.serial += sim_seconds;
-        g.events.push(Event { label: label.into(), sim_seconds, lane: 0 });
+        g.events.push(Event { label: label.into(), sim_seconds, lane: 0, compile: false });
     }
 
     /// Schedule a compile job on the earliest-free lane; returns the lane.
@@ -64,8 +66,23 @@ impl SimClock {
             .map(|(i, _)| i)
             .unwrap();
         g.lanes[lane] += sim_seconds;
-        g.events.push(Event { label: label.into(), sim_seconds, lane });
+        g.events.push(Event { label: label.into(), sim_seconds, lane, compile: true });
         lane
+    }
+
+    /// Re-account a recorded event stream onto this clock, preserving
+    /// serial-vs-compile semantics.  The batch service runs every search
+    /// on a private clock and replays the events of the work it actually
+    /// performed onto the shared batch clock in deterministic submission
+    /// order, so batch accounting is independent of worker count.
+    pub fn replay(&self, events: &[Event]) {
+        for e in events {
+            if e.compile {
+                self.schedule_compile(&e.label, e.sim_seconds);
+            } else {
+                self.advance_serial(&e.label, e.sim_seconds);
+            }
+        }
     }
 
     /// Total simulated wall-clock: serial time + compile-farm makespan.
@@ -96,6 +113,18 @@ impl SimClock {
     pub fn compile_meter(&self) -> CompileMeter<'_> {
         CompileMeter { clock: self, start_lane_s: self.compile_lane_seconds() }
     }
+
+    /// Start a span meter covering both serial time and compile-lane
+    /// time: the staged pipeline stamps each `SearchTrace` with the
+    /// simulated time *that search* added, so a cached trace replays the
+    /// same numbers regardless of what else ran on the clock.
+    pub fn span_meter(&self) -> SpanMeter<'_> {
+        SpanMeter {
+            clock: self,
+            start_total_s: self.total_seconds(),
+            start_lane_s: self.compile_lane_seconds(),
+        }
+    }
 }
 
 /// Span accounting over a [`SimClock`]: compile-lane time burned since
@@ -113,6 +142,37 @@ impl CompileMeter<'_> {
     }
 
     /// [`CompileMeter::lane_seconds`] in hours.
+    pub fn lane_hours(&self) -> f64 {
+        self.lane_seconds() / 3600.0
+    }
+}
+
+/// Span accounting over a [`SimClock`]: simulated wall-clock *and*
+/// compile-lane time added since [`SimClock::span_meter`] was called.
+#[derive(Debug)]
+pub struct SpanMeter<'c> {
+    clock: &'c SimClock,
+    start_total_s: f64,
+    start_lane_s: f64,
+}
+
+impl SpanMeter<'_> {
+    /// Simulated wall-clock seconds added since the meter started.
+    pub fn total_seconds(&self) -> f64 {
+        self.clock.total_seconds() - self.start_total_s
+    }
+
+    /// [`SpanMeter::total_seconds`] in hours.
+    pub fn total_hours(&self) -> f64 {
+        self.total_seconds() / 3600.0
+    }
+
+    /// Compile-lane seconds added since the meter started.
+    pub fn lane_seconds(&self) -> f64 {
+        self.clock.compile_lane_seconds() - self.start_lane_s
+    }
+
+    /// [`SpanMeter::lane_seconds`] in hours.
     pub fn lane_hours(&self) -> f64 {
         self.lane_seconds() / 3600.0
     }
@@ -169,5 +229,38 @@ mod tests {
         let ev = c.events();
         assert_eq!(ev.len(), 2);
         assert_eq!(ev[1].label, "y");
+        assert!(!ev[0].compile);
+        assert!(ev[1].compile);
+    }
+
+    #[test]
+    fn replay_reproduces_totals() {
+        let src = SimClock::new(2);
+        src.advance_serial("analysis", 150.0);
+        src.schedule_compile("p1", 3.0 * 3600.0);
+        src.schedule_compile("p2", 2.0 * 3600.0);
+        src.advance_serial("measure", 10.0);
+
+        let dst = SimClock::new(2);
+        dst.replay(&src.events());
+        assert_eq!(dst.total_seconds(), src.total_seconds());
+        assert_eq!(dst.compile_lane_seconds(), src.compile_lane_seconds());
+        assert_eq!(dst.events().len(), src.events().len());
+    }
+
+    #[test]
+    fn span_meter_attributes_both_dimensions() {
+        let c = SimClock::new(1);
+        c.advance_serial("before", 100.0);
+        c.schedule_compile("before-compile", 50.0);
+        let m = c.span_meter();
+        assert_eq!(m.total_seconds(), 0.0);
+        assert_eq!(m.lane_seconds(), 0.0);
+        c.advance_serial("during", 30.0);
+        c.schedule_compile("during-compile", 7200.0);
+        assert_eq!(m.total_seconds(), 30.0 + 7200.0);
+        assert_eq!(m.lane_seconds(), 7200.0);
+        assert!((m.lane_hours() - 2.0).abs() < 1e-12);
+        assert!((m.total_hours() - (7230.0 / 3600.0)).abs() < 1e-12);
     }
 }

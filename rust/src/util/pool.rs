@@ -1,7 +1,15 @@
 //! Fixed-size worker thread pool — the verification environment's compile
-//! farm runs simulated FPGA compiles on it (tokio is unavailable offline;
-//! plain threads + channels express the same leader/worker structure).
+//! farm and the batch offload service run on it (tokio is unavailable
+//! offline; plain threads + channels express the same leader/worker
+//! structure).
+//!
+//! Panic safety: a panicking job must neither kill its worker nor wedge
+//! the pool.  Workers catch unwinds, so the pool keeps draining jobs and
+//! `Drop` always joins cleanly; [`Pool::map`] captures each job's panic
+//! payload and re-raises the first one (by input order) on the submitting
+//! thread, so a fleet-wide `map` fails loudly instead of hanging.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -26,9 +34,14 @@ impl Pool {
                 thread::Builder::new()
                     .name(format!("flopt-worker-{i}"))
                     .spawn(move || loop {
-                        let job = rx.lock().expect("poisoned").recv();
+                        // the guard drops at the end of this statement, so
+                        // the job itself runs unlocked and a panicking job
+                        // can never poison the receiver mutex
+                        let job = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
                         match job {
-                            Ok(job) => job(),
+                            // a raw `submit` has nowhere to surface a
+                            // panic — swallow it and keep the worker alive
+                            Ok(job) => drop(catch_unwind(AssertUnwindSafe(|| job()))),
                             Err(_) => break, // channel closed: shut down
                         }
                     })
@@ -38,7 +51,8 @@ impl Pool {
         Self { tx: Some(tx), workers }
     }
 
-    /// Submit a job.
+    /// Submit a job.  A panic inside the job is caught by the worker
+    /// (use [`Pool::map`] when the submitter must observe failures).
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
         self.tx
             .as_ref()
@@ -48,6 +62,10 @@ impl Pool {
     }
 
     /// Run all `tasks` on the pool and collect results in input order.
+    ///
+    /// If any job panics, the panic is propagated to the caller
+    /// (re-raised with the original payload, first failing input index
+    /// wins) after every job has finished — the pool itself stays usable.
     pub fn map<T, R>(
         &self,
         tasks: Vec<T>,
@@ -59,22 +77,31 @@ impl Pool {
     {
         let n = tasks.len();
         let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<R>)>();
         for (i, t) in tasks.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
             self.submit(move || {
-                let r = f(t);
+                let r = catch_unwind(AssertUnwindSafe(|| f(t)));
                 let _ = rtx.send((i, r));
             });
         }
         drop(rtx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut out: Vec<Option<thread::Result<R>>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
-            let (i, r) = rrx.recv().expect("worker panicked");
+            // every job sends exactly once (panics are caught above), so
+            // this cannot hang
+            let (i, r) = rrx.recv().expect("pool workers alive");
             out[i] = Some(r);
         }
-        out.into_iter().map(|r| r.expect("all slots filled")).collect()
+        let mut results = Vec::with_capacity(n);
+        for slot in out {
+            match slot.expect("all slots filled") {
+                Ok(r) => results.push(r),
+                Err(payload) => resume_unwind(payload),
+            }
+        }
+        results
     }
 }
 
@@ -118,5 +145,40 @@ mod tests {
         let pool = Pool::new(1);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn panicking_jobs_do_not_kill_workers_or_hang_drop() {
+        let pool = Pool::new(2);
+        // more panicking jobs than workers: pre-fix, this killed the
+        // whole pool and any later map would hang
+        for _ in 0..8 {
+            pool.submit(|| panic!("job exploded"));
+        }
+        let out = pool.map(vec![10, 20, 30], |x| x + 1);
+        assert_eq!(out, vec![11, 21, 31]);
+        drop(pool); // must join cleanly, not hang
+    }
+
+    #[test]
+    fn map_propagates_the_panic_to_the_submitter() {
+        let pool = Pool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![0, 1, 2, 3], |x: i32| {
+                if x == 2 {
+                    panic!("bad item {x}");
+                }
+                x
+            })
+        }));
+        let payload = caught.expect_err("panic must reach the submitter");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("bad item 2"), "payload: {msg:?}");
+        // the pool survives the failed map
+        let out = pool.map(vec![1, 2], |x| x * 10);
+        assert_eq!(out, vec![10, 20]);
     }
 }

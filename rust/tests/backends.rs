@@ -14,7 +14,7 @@
 use std::collections::HashMap;
 
 use flopt::apps;
-use flopt::backend::{FPGA, GPU, Target};
+use flopt::backend::{Destination, FPGA, GPU, Target};
 use flopt::baselines::ga::{self, GaConfig};
 use flopt::config::SearchConfig;
 use flopt::coordinator::mixed::mixed_search;
@@ -33,7 +33,7 @@ fn assert_fpga_search_matches_reference(app: &'static apps::App, test_scale: boo
     let analysis = analyze_app(app, test_scale).unwrap();
     let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
     let t = search_with_analysis(app, &analysis, &env, &cfg).unwrap();
-    assert_eq!(t.destination, "FPGA", "{}", app.name);
+    assert_eq!(t.destination, Destination::Fpga, "{}", app.name);
 
     // direct pre-seam reports for every surviving candidate
     let mut direct: HashMap<LoopId, HlsReport> = HashMap::new();
@@ -145,12 +145,12 @@ fn mixed_full_scale_selects_fpga_for_the_paper_apps() {
             /*test_scale=*/ false,
         )
         .unwrap();
-        let summary: Vec<(&str, f64)> = t
+        let summary: Vec<(Destination, f64)> = t
             .searches
             .iter()
             .map(|s| (s.destination, s.speedup))
             .collect();
-        assert_eq!(t.winner, "FPGA", "{}: {summary:?}", app.name);
+        assert_eq!(t.winner, Destination::Fpga, "{}: {summary:?}", app.name);
         assert!(
             (lo..=hi).contains(&t.speedup),
             "{}: winning speedup {} outside [{lo}, {hi}]",
@@ -186,8 +186,8 @@ fn mixed_never_loses_to_all_cpu_on_any_app() {
         )
         .unwrap();
         assert_eq!(t.searches.len(), 2, "{}", app.name);
-        assert_eq!(t.searches[0].destination, "FPGA");
-        assert_eq!(t.searches[1].destination, "GPU");
+        assert_eq!(t.searches[0].destination, Destination::Fpga);
+        assert_eq!(t.searches[1].destination, Destination::Gpu);
         assert!(
             t.speedup >= 1.0,
             "{}: mixed placement lost to all-CPU ({})",
@@ -211,7 +211,7 @@ fn mixed_never_loses_to_all_cpu_on_any_app() {
                 assert_eq!(t.speedup, best.speedup, "{}", app.name);
             }
             None => {
-                assert_eq!(t.winner, "CPU", "{}", app.name);
+                assert_eq!(t.winner, Destination::Cpu, "{}", app.name);
                 assert_eq!(t.speedup, 1.0, "{}", app.name);
             }
         }

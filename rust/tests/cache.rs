@@ -1,0 +1,178 @@
+//! Cache suite (PR 3): a warm re-run of any search must return a
+//! bit-identical `SearchTrace` while burning **zero** additional
+//! simulated compile-lane hours, through both the in-memory store and a
+//! fresh process's on-disk store; corrupt or missing disk entries must
+//! fall back to recompute — never to wrong results.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use flopt::apps;
+use flopt::backend::FPGA;
+use flopt::cache::{codec, CacheStore};
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::{offload_search, SearchTrace};
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+
+/// "Bit-identical" means the canonical serialization is byte-equal
+/// (every f64 compared by exact bits via shortest-roundtrip encoding)
+/// and the rendered report is byte-equal.
+fn assert_bit_identical(app: &str, cold: &SearchTrace, warm: &SearchTrace) {
+    assert_eq!(
+        codec::trace_to_string(cold),
+        codec::trace_to_string(warm),
+        "{app}: warm trace must serialize byte-identically"
+    );
+    assert_eq!(cold.render(), warm.render(), "{app}: rendered reports must match");
+    assert_eq!(cold.speedup(), warm.speedup(), "{app}");
+    assert_eq!(cold.sim_hours, warm.sim_hours, "{app}");
+    assert_eq!(cold.compile_hours, warm.compile_hours, "{app}");
+}
+
+fn run_with(store: &Arc<CacheStore>, app: &'static apps::App) -> (SearchTrace, f64, f64) {
+    let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default())
+        .with_cache(Arc::clone(store));
+    let t = offload_search(app, &env, true).unwrap();
+    (t, env.clock.compile_lane_seconds(), env.clock.total_seconds())
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("flopt-cache-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn warm_memory_rerun_is_bit_identical_and_free_for_all_apps() {
+    for app in apps::all() {
+        let store = CacheStore::fresh();
+        let (cold, cold_lane_s, cold_total_s) = run_with(&store, app);
+        assert!(cold_lane_s > 0.0, "{}: cold run must burn compile-lane time", app.name);
+        assert!(cold_total_s > 0.0, "{}", app.name);
+
+        let (warm, warm_lane_s, warm_total_s) = run_with(&store, app);
+        assert_eq!(warm_lane_s, 0.0, "{}: warm run burned compile-lane hours", app.name);
+        assert_eq!(warm_total_s, 0.0, "{}: warm run burned simulated time", app.name);
+        assert_bit_identical(app.name, &cold, &warm);
+    }
+}
+
+#[test]
+fn warm_disk_rerun_is_bit_identical_and_free_for_all_apps() {
+    let dir = temp_dir("disk");
+    // cold run, writing through to disk
+    let mut colds = Vec::new();
+    {
+        let store = CacheStore::with_dir(&dir);
+        for app in apps::all() {
+            colds.push((app.name, run_with(&store, app).0));
+        }
+    }
+    // fresh store over the same directory — simulates a new process
+    // whose in-memory tier is empty
+    let store = CacheStore::with_dir(&dir);
+    for (app, (name, cold)) in apps::all().into_iter().zip(&colds) {
+        assert_eq!(app.name, *name);
+        let (warm, lane_s, total_s) = run_with(&store, app);
+        assert_eq!(lane_s, 0.0, "{name}: disk-warm run burned compile-lane hours");
+        assert_eq!(total_s, 0.0, "{name}: disk-warm run burned simulated time");
+        assert_bit_identical(name, cold, &warm);
+    }
+    assert!(store.stats().disk_hits >= apps::all().len() as u64);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_disk_entries_recompute_never_lie() {
+    let dir = temp_dir("corrupt");
+    let (cold, _, _) = run_with(&CacheStore::with_dir(&dir), &apps::TDFIR);
+
+    // corrupt every cached payload in the directory
+    let mut corrupted = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        std::fs::write(&path, "garbage{{{").unwrap();
+        corrupted += 1;
+    }
+    assert!(corrupted > 0, "the cold run must have persisted artifacts");
+
+    let store = CacheStore::with_dir(&dir);
+    let (recomputed, lane_s, _) = run_with(&store, &apps::TDFIR);
+    assert!(lane_s > 0.0, "corrupt cache must recompute, not serve garbage");
+    assert!(store.stats().disk_rejects > 0, "corrupt payloads must be counted");
+    assert_bit_identical("tdfir", &cold, &recomputed);
+
+    // and the recompute must have healed the on-disk entries
+    let healed = CacheStore::with_dir(&dir);
+    let (warm, lane_s, _) = run_with(&healed, &apps::TDFIR);
+    assert_eq!(lane_s, 0.0, "healed cache must serve warm again");
+    assert_bit_identical("tdfir", &cold, &warm);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_disk_entries_recompute() {
+    let dir = temp_dir("missing");
+    let (cold, _, _) = run_with(&CacheStore::with_dir(&dir), &apps::MRIQ);
+    // delete everything: equivalent to an empty cache dir
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = CacheStore::with_dir(&dir);
+    let (recomputed, lane_s, _) = run_with(&store, &apps::MRIQ);
+    assert!(lane_s > 0.0, "missing entries must recompute");
+    assert_bit_identical("mriq", &cold, &recomputed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disabled_cache_matches_default_pipeline_exactly() {
+    let (plain, plain_lane, _) = {
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
+        let t = offload_search(&apps::MATMUL, &env, true).unwrap();
+        let lane = env.clock.compile_lane_seconds();
+        (t, lane, 0)
+    };
+    let store = CacheStore::disabled();
+    let (a, lane_a, _) = run_with(&store, &apps::MATMUL);
+    let (b, lane_b, _) = run_with(&store, &apps::MATMUL);
+    assert_eq!(lane_a, plain_lane, "disabled cache must not change accounting");
+    assert_eq!(lane_b, plain_lane, "disabled cache re-burns every run");
+    assert_bit_identical("matmul", &plain, &a);
+    assert_bit_identical("matmul", &a, &b);
+}
+
+#[test]
+fn stage_cache_shares_precompiles_across_d_configs() {
+    // same a/b narrowing, different d: the pre-compile artifact is
+    // shared, only measurement re-runs — fewer serial precompile
+    // seconds on the second search
+    let store = CacheStore::fresh();
+    let cfg_d4 = SearchConfig::default();
+    let cfg_d6 = SearchConfig { d_patterns: 6, ..SearchConfig::default() };
+
+    let env1 = VerifyEnv::new(&FPGA, &XEON_3104, cfg_d4).with_cache(Arc::clone(&store));
+    let t1 = offload_search(&apps::TDFIR, &env1, true).unwrap();
+    assert!(t1.sim_hours > 0.0);
+
+    let env2 = VerifyEnv::new(&FPGA, &XEON_3104, cfg_d6).with_cache(Arc::clone(&store));
+    let t2 = offload_search(&apps::TDFIR, &env2, true).unwrap();
+    // candidates (and their pre-compile reports) are byte-identical —
+    // they came from the shared stage artifact
+    assert_eq!(t1.candidates.len(), t2.candidates.len());
+    for (c1, c2) in t1.candidates.iter().zip(&t2.candidates) {
+        assert_eq!(c1.id, c2.id);
+        assert_eq!(c1.utilization, c2.utilization);
+        assert_eq!(c1.efficiency, c2.efficiency);
+    }
+    // the d=6 search re-measured but did not re-analyze or re-precompile:
+    // its clock shows only compile + measurement time
+    let events = env2.clock.events();
+    assert!(
+        events.iter().all(|e| !e.label.starts_with("precompile")
+            && e.label != "code analysis"
+            && e.label != "intensity analysis"),
+        "warm stages must not re-charge: {:?}",
+        events.iter().map(|e| e.label.clone()).collect::<Vec<_>>()
+    );
+    assert!(events.iter().any(|e| e.compile), "measurement must still compile");
+}

@@ -1,0 +1,169 @@
+//! Batch-service suite (PR 3): `flopt batch` over all 5 apps × {fpga,
+//! gpu} must produce byte-identical output for pool sizes 1, 2, and 8;
+//! in-batch duplicates dedupe; a repeat batch is fully warm; and the
+//! mixed-destination veneer over the service preserves its contract.
+
+use flopt::apps;
+use flopt::backend::{Destination, Target};
+use flopt::config::SearchConfig;
+use flopt::cpu::XEON_3104;
+use flopt::service::{BatchRequest, BatchService, CacheDisposition};
+
+fn all_apps_both_targets() -> Vec<BatchRequest> {
+    let mut reqs = Vec::new();
+    for app in apps::all() {
+        for target in [Target::Fpga, Target::Gpu] {
+            reqs.push(BatchRequest::new(app, target, /*test_scale=*/ true));
+        }
+    }
+    reqs
+}
+
+#[test]
+fn batch_output_is_identical_for_pool_sizes_1_2_and_8() {
+    let requests = all_apps_both_targets();
+    let mut renders = Vec::new();
+    let mut reports = Vec::new();
+    for workers in [1usize, 2, 8] {
+        let svc = BatchService::new(workers, 1, &XEON_3104);
+        let report = svc.run(&requests).unwrap();
+        renders.push((workers, report.render()));
+        reports.push((workers, report));
+    }
+    let (_, reference) = &renders[0];
+    for (workers, render) in &renders[1..] {
+        assert_eq!(
+            render, reference,
+            "pool size {workers} produced different batch output"
+        );
+    }
+    // structural spot-checks beyond the rendered text
+    let (_, ref r1) = reports[0];
+    for (workers, report) in &reports[1..] {
+        assert_eq!(report.items.len(), r1.items.len());
+        for (a, b) in r1.items.iter().zip(&report.items) {
+            assert_eq!(a.outcome.speedup, b.outcome.speedup, "workers={workers}");
+            assert_eq!(a.outcome.compile_hours, b.outcome.compile_hours);
+            assert_eq!(a.sim_hours_after, b.sim_hours_after, "workers={workers}");
+            assert_eq!(a.disposition, b.disposition);
+        }
+        assert_eq!(report.sim_hours, r1.sim_hours, "workers={workers}");
+        assert_eq!(report.compile_hours, r1.compile_hours, "workers={workers}");
+    }
+}
+
+#[test]
+fn batch_covers_every_request_in_submission_order() {
+    let requests = all_apps_both_targets();
+    let svc = BatchService::new(4, 1, &XEON_3104);
+    let report = svc.run(&requests).unwrap();
+    assert_eq!(report.items.len(), 10);
+    for (req, item) in requests.iter().zip(&report.items) {
+        assert_eq!(item.outcome.app_name, req.app.name);
+        assert_eq!(Some(item.outcome.destination), req.target.destination());
+        assert_eq!(item.disposition, CacheDisposition::Cold);
+        assert!(item.outcome.cpu_time_s > 0.0);
+    }
+    // FPGA rows ran the narrowed flow, GPU rows the GA
+    for item in &report.items {
+        match item.outcome.destination {
+            Destination::Fpga => assert_eq!(item.outcome.method, "narrowed-2round"),
+            Destination::Gpu => {
+                assert_eq!(item.outcome.method, "ga");
+                assert!(item.outcome.patterns_measured > 0);
+            }
+            Destination::Cpu => panic!("no CPU rows in a batch"),
+        }
+    }
+    // the shared clock accumulates monotonically in submission order
+    for w in report.items.windows(2) {
+        assert!(w[1].sim_hours_after >= w[0].sim_hours_after);
+    }
+    assert!(report.compile_hours > 0.0);
+    assert_eq!(report.unique_cold, 10);
+    assert_eq!(report.warm_hits, 0);
+    assert_eq!(report.deduped, 0);
+}
+
+#[test]
+fn interleaved_duplicates_dedupe_against_the_first_occurrence() {
+    let a = BatchRequest::new(&apps::TDFIR, Target::Fpga, true);
+    let b = BatchRequest::new(&apps::MRIQ, Target::Gpu, true);
+    let svc = BatchService::new(3, 1, &XEON_3104);
+    let report = svc
+        .run(&[a.clone(), b.clone(), a.clone(), b.clone(), a])
+        .unwrap();
+    assert_eq!(report.unique_cold, 2);
+    assert_eq!(report.deduped, 3);
+    let dispositions: Vec<CacheDisposition> =
+        report.items.iter().map(|it| it.disposition).collect();
+    assert_eq!(
+        dispositions,
+        vec![
+            CacheDisposition::Cold,
+            CacheDisposition::Cold,
+            CacheDisposition::Deduped,
+            CacheDisposition::Deduped,
+            CacheDisposition::Deduped,
+        ]
+    );
+    // deduped rows carry the identical outcome
+    assert_eq!(report.items[0].outcome.speedup, report.items[2].outcome.speedup);
+    assert_eq!(report.items[0].outcome.speedup, report.items[4].outcome.speedup);
+    assert!(report.saved_compile_hours > 0.0);
+}
+
+#[test]
+fn repeat_batch_on_one_service_is_fully_warm() {
+    let requests = all_apps_both_targets();
+    let svc = BatchService::new(4, 1, &XEON_3104);
+    let cold = svc.run(&requests).unwrap();
+    let clock_after_cold = svc.clock().total_hours();
+    let warm = svc.run(&requests).unwrap();
+    assert_eq!(warm.warm_hits, 10);
+    assert_eq!(warm.unique_cold, 0);
+    assert_eq!(warm.compile_hours, 0.0);
+    assert_eq!(warm.sim_hours, 0.0);
+    assert_eq!(
+        svc.clock().total_hours(),
+        clock_after_cold,
+        "a warm batch must not advance the shared clock"
+    );
+    for (c, w) in cold.items.iter().zip(&warm.items) {
+        assert_eq!(c.outcome.speedup, w.outcome.speedup);
+        assert_eq!(c.outcome.compile_hours, w.outcome.compile_hours);
+        assert_eq!(w.disposition, CacheDisposition::Warm);
+    }
+    assert!(
+        (warm.saved_compile_hours - cold.compile_hours).abs() < 1e-9,
+        "warm batch saves what the cold batch burned: saved {} vs burned {}",
+        warm.saved_compile_hours,
+        cold.compile_hours
+    );
+}
+
+#[test]
+fn mixed_over_the_service_matches_direct_batch_rows() {
+    use flopt::coordinator::mixed::mixed_search_all;
+    let apps_list: Vec<&'static apps::App> = apps::all();
+    let traces = mixed_search_all(
+        &apps_list,
+        &Target::Mixed.backends(),
+        &XEON_3104,
+        &SearchConfig::default(),
+        true,
+    )
+    .unwrap();
+    assert_eq!(traces.len(), 5);
+    for t in &traces {
+        assert_eq!(t.searches.len(), 2);
+        assert_eq!(t.searches[0].destination, Destination::Fpga);
+        assert_eq!(t.searches[1].destination, Destination::Gpu);
+        assert!(t.speedup >= 1.0, "{}: mixed never loses to CPU", t.app_name);
+        assert!(t.cpu_time_s > 0.0);
+    }
+    // per-app snapshots accumulate on the one shared clock
+    for w in traces.windows(2) {
+        assert!(w[1].sim_hours > w[0].sim_hours);
+    }
+}
