@@ -1,0 +1,127 @@
+//! Bench: function-block offloading vs loop-statement offloading — the
+//! follow-up papers' headline claim (arXiv:2004.09883, 2005.04174):
+//! recognizing whole blocks and substituting registry IP/library
+//! kernels beats generating kernels from loop bodies, and never loses
+//! because the combined search keeps whichever side wins.
+//!
+//! ```sh
+//! cargo bench --bench funcblock_speedup                    # full paper scale
+//! cargo bench --bench funcblock_speedup -- --test-scale \
+//!     --report reports/funcblock_speedup.json              # CI smoke + JSON
+//! ```
+
+use std::collections::BTreeMap;
+
+use flopt::apps;
+use flopt::backend::{OffloadBackend, FPGA, GPU};
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::{offload_search, SearchTrace};
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::funcblock::BlockMode;
+use flopt::util::bench::parse_bench_args;
+use flopt::util::json::{self, Json};
+
+fn run(
+    app: &'static apps::App,
+    backend: &'static dyn OffloadBackend,
+    mode: BlockMode,
+    test_scale: bool,
+) -> SearchTrace {
+    let cfg = SearchConfig { block_mode: mode, ..SearchConfig::default() };
+    let env = VerifyEnv::new(backend, &XEON_3104, cfg);
+    offload_search(app, &env, test_scale).expect("search")
+}
+
+fn main() {
+    let opts = parse_bench_args();
+    println!("=== function-block vs loop-statement offloading ===");
+    println!(
+        "{:<12} {:<6} {:>10} {:>10} {:>10} {:>8}  {}",
+        "app", "dest", "loop-only", "blocks", "combined", "blk-cnt", "winner"
+    );
+
+    let mut rows = Vec::new();
+    for app in apps::all() {
+        for backend in [&FPGA as &'static dyn OffloadBackend, &GPU] {
+            let loop_only = run(app, backend, BlockMode::Off, opts.test_scale);
+            let blocks_only = run(app, backend, BlockMode::Only, opts.test_scale);
+            let combined = run(app, backend, BlockMode::On, opts.test_scale);
+            assert!(
+                combined.speedup() >= loop_only.speedup(),
+                "{}: combined must never lose",
+                app.name
+            );
+            let winner = if combined.solution_is_block() {
+                combined
+                    .best_block
+                    .as_ref()
+                    .map(|b| b.label())
+                    .unwrap_or_else(|| "block".to_string())
+            } else {
+                combined
+                    .best
+                    .as_ref()
+                    .map(|b| format!("pattern {}", b.pattern.label()))
+                    .unwrap_or_else(|| "cpu-only".to_string())
+            };
+            println!(
+                "{:<12} {:<6} {:>9.2}x {:>9.2}x {:>9.2}x {:>8}  {}",
+                app.name,
+                backend.name(),
+                loop_only.speedup(),
+                blocks_only.speedup(),
+                combined.speedup(),
+                combined.blocks.len(),
+                winner
+            );
+
+            let mut row = BTreeMap::new();
+            row.insert("app".to_string(), Json::Str(app.name.to_string()));
+            row.insert(
+                "destination".to_string(),
+                Json::Str(backend.name().to_string()),
+            );
+            row.insert("loop_speedup".to_string(), Json::Num(loop_only.speedup()));
+            row.insert("block_speedup".to_string(), Json::Num(blocks_only.speedup()));
+            row.insert(
+                "combined_speedup".to_string(),
+                Json::Num(combined.speedup()),
+            );
+            row.insert(
+                "blocks_measured".to_string(),
+                Json::Num(combined.blocks.len() as f64),
+            );
+            row.insert(
+                "loop_compile_hours".to_string(),
+                Json::Num(loop_only.compile_hours),
+            );
+            row.insert(
+                "blocks_compile_hours".to_string(),
+                Json::Num(blocks_only.compile_hours),
+            );
+            row.insert("winner".to_string(), Json::Str(winner));
+            rows.push(Json::Obj(row));
+        }
+    }
+
+    println!(
+        "\n(\"blocks\" = --blocks only: prebuilt IP, near-zero compile-lane hours;\n\
+         \"combined\" = --blocks on: block placements co-searched with loop patterns)"
+    );
+
+    if let Some(path) = &opts.report {
+        let mut doc = BTreeMap::new();
+        doc.insert(
+            "bench".to_string(),
+            Json::Str("funcblock_speedup".to_string()),
+        );
+        doc.insert(
+            "scale".to_string(),
+            Json::Str(if opts.test_scale { "test" } else { "full" }.to_string()),
+        );
+        doc.insert("rows".to_string(), Json::Arr(rows));
+        std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
+        println!("\nreport written to {path}");
+    }
+}

@@ -11,6 +11,7 @@ use crate::cpu::CpuModel;
 use crate::fpga::device::Device;
 use crate::fpga::timing::KernelExec;
 use crate::fpga::{ARRIA10_GX, pnr};
+use crate::funcblock::{self, BlockOffer, DetectedBlock};
 use crate::hls::{self, HlsReport};
 use crate::interp::Profile;
 use crate::ir::LoopAnalysis;
@@ -82,6 +83,35 @@ impl OffloadBackend for FpgaBackend {
     ) -> KernelExec {
         let rep = report.hls().expect("FPGA backend got a non-FPGA report");
         crate::fpga::timing::kernel_time_s(loops, profile, rep, self.device)
+    }
+
+    fn block_offer(
+        &self,
+        loops: &[LoopAnalysis],
+        profile: &Profile,
+        cpu: &CpuModel,
+        block: &DetectedBlock,
+    ) -> Option<BlockOffer> {
+        let entry = funcblock::entry_for(block.name)?;
+        let ip = entry.for_destination(super::Destination::Fpga)?;
+        let lp = profile.loop_profile(block.root)?;
+        let cpu_time_s = cpu.loop_time_s(lp);
+        let (in_bytes, out_bytes) = funcblock::transfer_bytes(loops, profile, block);
+        let mut exec_s = cpu_time_s / ip.speedup_vs_cpu;
+        if in_bytes > 0 {
+            exec_s += self.device.transfer_s(in_bytes);
+        }
+        if out_bytes > 0 {
+            exec_s += self.device.transfer_s(out_bytes);
+        }
+        Some(BlockOffer {
+            block: block.clone(),
+            description: entry.description,
+            utilization: ip.utilization,
+            compile_sim_s: ip.compile_sim_s,
+            exec_s,
+            cpu_time_s,
+        })
     }
 }
 

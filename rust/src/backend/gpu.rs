@@ -19,7 +19,8 @@
 use crate::cparse::ast::LoopId;
 use crate::cparse::Program;
 use crate::cpu::CpuModel;
-use crate::fpga::timing::{KernelExec, pipelined_iters};
+use crate::fpga::timing::{self, KernelExec, pipelined_iters};
+use crate::funcblock::{self, BlockOffer, DetectedBlock};
 use crate::hls::{opcount, OpCounts};
 use crate::interp::Profile;
 use crate::ir::LoopAnalysis;
@@ -57,6 +58,18 @@ pub struct GpuDevice {
     pub max_simt_speedup: f64,
     /// Ceiling on the occupancy-style pressure estimate.
     pub occupancy_cap: f64,
+}
+
+impl GpuDevice {
+    /// PCIe transfer seconds for `bytes` in one direction (zero bytes
+    /// means no DMA is issued at all).
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        if bytes > 0 {
+            self.pcie_latency_s + bytes as f64 / self.pcie_bw_bytes_per_s
+        } else {
+            0.0
+        }
+    }
 }
 
 /// NVIDIA Tesla P100 (PCIe) — the board class of the GPU-offload papers.
@@ -202,29 +215,45 @@ impl OffloadBackend for GpuBackend {
 
         // transfers follow the same footprint rule as the FPGA host
         // program: H2D everything touched, D2H what the kernel writes
-        let mut in_bytes = 0u64;
-        let mut out_bytes = 0u64;
-        for (arr, fp) in &lp.footprints {
-            in_bytes += fp.bytes();
-            if la.refs.array_writes.contains_key(arr) {
-                out_bytes += fp.bytes();
-            }
-        }
-        let transfer = |bytes: u64| {
-            if bytes > 0 {
-                self.device.pcie_latency_s + bytes as f64 / self.device.pcie_bw_bytes_per_s
-            } else {
-                0.0
-            }
-        };
+        let (in_bytes, out_bytes) = timing::transfer_bytes(la, &lp);
 
         KernelExec {
             loop_id: id,
             kernel_s,
-            transfer_in_s: transfer(in_bytes),
-            transfer_out_s: transfer(out_bytes),
+            transfer_in_s: self.device.transfer_s(in_bytes),
+            transfer_out_s: self.device.transfer_s(out_bytes),
             inner_iters,
         }
+    }
+
+    fn block_offer(
+        &self,
+        loops: &[LoopAnalysis],
+        profile: &Profile,
+        cpu: &CpuModel,
+        block: &DetectedBlock,
+    ) -> Option<BlockOffer> {
+        let entry = funcblock::entry_for(block.name)?;
+        let ip = entry.for_destination(super::Destination::Gpu)?;
+        let lp = profile.loop_profile(block.root)?;
+        let cpu_time_s = cpu.loop_time_s(lp);
+        let (in_bytes, out_bytes) = funcblock::transfer_bytes(loops, profile, block);
+        // library-kernel compute, floored by device-memory bandwidth,
+        // plus one launch per block entry and PCIe both ways
+        let compute_s = cpu_time_s / ip.speedup_vs_cpu;
+        let mem_s = lp.traffic_bytes() as f64 / self.device.mem_bw_bytes_per_s;
+        let exec_s = compute_s.max(mem_s)
+            + lp.entries as f64 * self.device.launch_latency_s
+            + self.device.transfer_s(in_bytes)
+            + self.device.transfer_s(out_bytes);
+        Some(BlockOffer {
+            block: block.clone(),
+            description: entry.description,
+            utilization: ip.utilization,
+            compile_sim_s: ip.compile_sim_s,
+            exec_s,
+            cpu_time_s,
+        })
     }
 }
 

@@ -28,6 +28,7 @@ use crate::cparse::ast::LoopId;
 use crate::cparse::Program;
 use crate::cpu::CpuModel;
 use crate::fpga::timing::KernelExec;
+use crate::funcblock::{BlockOffer, DetectedBlock};
 use crate::hls::HlsReport;
 use crate::interp::Profile;
 use crate::ir::LoopAnalysis;
@@ -238,6 +239,26 @@ pub trait OffloadBackend: Sync {
         cpu: &CpuModel,
         report: &BackendReport,
     ) -> KernelExec;
+
+    /// Quote a function-block replacement offer for a detected block:
+    /// look the block shape up in the IP/library registry
+    /// ([`crate::funcblock::registry`]) and model its execution
+    /// (hand-tuned compute + host↔device transfers for the nest's
+    /// observed footprints).  `None` when the registry carries no
+    /// implementation for this shape on this device, or the block never
+    /// ran on the sample workload.  The default quotes nothing — a
+    /// backend without a registry participates in loop-statement search
+    /// unchanged.
+    fn block_offer(
+        &self,
+        loops: &[LoopAnalysis],
+        profile: &Profile,
+        cpu: &CpuModel,
+        block: &DetectedBlock,
+    ) -> Option<BlockOffer> {
+        let _ = (loops, profile, cpu, block);
+        None
+    }
 }
 
 #[cfg(test)]

@@ -12,8 +12,9 @@ use crate::backend::gpu::GpuKernelReport;
 use crate::backend::{BackendReport, Destination, ReportDetail};
 use crate::coordinator::mixed::DestinationSearch;
 use crate::coordinator::pipeline::{CandidateReport, SearchTrace};
-use crate::coordinator::stages::{MeasureArtifact, PrecompileArtifact};
+use crate::coordinator::stages::{BlockMeasureArtifact, MeasureArtifact, PrecompileArtifact};
 use crate::coordinator::verify_env::PatternMeasurement;
+use crate::funcblock::{BlockMeasurement, BlockMode};
 use crate::cparse::ast::{LoopId, Type};
 use crate::fpga::device::Resources;
 use crate::fpga::timing::KernelExec;
@@ -23,8 +24,10 @@ use crate::opencl::{KernelArg, KernelSource, OffloadPattern, OpenClCode};
 use crate::util::json::{self, Json};
 
 /// Format version stamped into every payload; bump on layout changes so
-/// stale on-disk entries decode to `None` and recompute.
-pub const VERSION: f64 = 1.0;
+/// stale on-disk entries decode to `None` and recompute.  v2 added the
+/// function-block fields (`block_mode`, `blocks`, `best_block`) and the
+/// `blocks` artifact kind.
+pub const VERSION: f64 = 2.0;
 
 // ---------------------------------------------------------------- helpers
 
@@ -95,6 +98,16 @@ fn get_arr<'a>(j: &'a Json, k: &str) -> Option<&'a [Json]> {
 
 fn check_header(j: &Json, kind: &str) -> Option<()> {
     (get_str(j, "kind")? == kind && get_f64(j, "v")? == VERSION).then_some(())
+}
+
+/// Is this a well-formed payload written by a *different* codec version?
+/// The store treats these as silent stale misses — a documented format
+/// bump must not be reported (or counted) as disk corruption.
+pub fn is_stale_version(j: &Json) -> bool {
+    match j.get("v") {
+        Some(Json::Num(v)) => *v != VERSION,
+        _ => false,
+    }
 }
 
 fn loop_ids_to_json(ids: &[LoopId]) -> Json {
@@ -453,6 +466,32 @@ fn opencl_from_json(j: &Json) -> Option<OpenClCode> {
     })
 }
 
+fn block_measurement_to_json(m: &BlockMeasurement) -> Json {
+    obj(vec![
+        ("block", Json::Str(m.block.clone())),
+        ("block_loops", loop_ids_to_json(&m.block_loops)),
+        ("extra_loops", loop_ids_to_json(&m.extra_loops)),
+        ("utilization", num(m.utilization)),
+        ("compiled", Json::Bool(m.compiled)),
+        ("compile_sim_s", num(m.compile_sim_s)),
+        ("time_s", num(m.time_s)),
+        ("speedup", num(m.speedup)),
+    ])
+}
+
+fn block_measurement_from_json(j: &Json) -> Option<BlockMeasurement> {
+    Some(BlockMeasurement {
+        block: get_str(j, "block")?.to_string(),
+        block_loops: loop_ids_from_json(j.get("block_loops")?)?,
+        extra_loops: loop_ids_from_json(j.get("extra_loops")?)?,
+        utilization: get_f64(j, "utilization")?,
+        compiled: get_bool(j, "compiled")?,
+        compile_sim_s: get_f64(j, "compile_sim_s")?,
+        time_s: get_f64(j, "time_s")?,
+        speedup: get_f64(j, "speedup")?,
+    })
+}
+
 fn rounds_to_json(rounds: &[Vec<PatternMeasurement>]) -> Json {
     Json::Arr(
         rounds
@@ -504,6 +543,18 @@ pub fn trace_to_json(t: &SearchTrace) -> Json {
                 .map(measurement_to_json)
                 .unwrap_or(Json::Null),
         ),
+        ("block_mode", Json::Str(t.block_mode.as_str().to_string())),
+        (
+            "blocks",
+            Json::Arr(t.blocks.iter().map(block_measurement_to_json).collect()),
+        ),
+        (
+            "best_block",
+            t.best_block
+                .as_ref()
+                .map(block_measurement_to_json)
+                .unwrap_or(Json::Null),
+        ),
         ("sim_hours", num(t.sim_hours)),
         ("compile_hours", num(t.compile_hours)),
     ])
@@ -536,8 +587,40 @@ pub fn trace_from_json(j: &Json) -> Option<SearchTrace> {
             Json::Null => None,
             b => Some(measurement_from_json(b)?),
         },
+        block_mode: BlockMode::parse(get_str(j, "block_mode")?)?,
+        blocks: get_arr(j, "blocks")?
+            .iter()
+            .map(block_measurement_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        best_block: match j.get("best_block")? {
+            Json::Null => None,
+            b => Some(block_measurement_from_json(b)?),
+        },
         sim_hours: get_f64(j, "sim_hours")?,
         compile_hours: get_f64(j, "compile_hours")?,
+    })
+}
+
+/// Encode a MeasureBlocks-stage artifact.
+pub fn blocks_to_json(b: &BlockMeasureArtifact) -> Json {
+    obj(vec![
+        ("kind", Json::Str("blocks".to_string())),
+        ("v", Json::Num(VERSION)),
+        (
+            "placements",
+            Json::Arr(b.placements.iter().map(block_measurement_to_json).collect()),
+        ),
+    ])
+}
+
+/// Decode a MeasureBlocks-stage artifact.
+pub fn blocks_from_json(j: &Json) -> Option<BlockMeasureArtifact> {
+    check_header(j, "blocks")?;
+    Some(BlockMeasureArtifact {
+        placements: get_arr(j, "placements")?
+            .iter()
+            .map(block_measurement_from_json)
+            .collect::<Option<Vec<_>>>()?,
     })
 }
 
@@ -616,6 +699,7 @@ pub fn destination_from_json(j: &Json) -> Option<DestinationSearch> {
     let method = match get_str(j, "method")? {
         "narrowed-2round" => "narrowed-2round",
         "ga" => "ga",
+        "ip-registry" => "ip-registry",
         _ => return None,
     };
     Some(DestinationSearch {
@@ -663,6 +747,39 @@ mod tests {
         assert_eq!(back.sim_hours, t.sim_hours);
         assert_eq!(back.compile_hours, t.compile_hours);
         assert_eq!(back.render(), t.render());
+    }
+
+    #[test]
+    fn blocks_on_trace_roundtrips_bit_identically() {
+        let cfg = SearchConfig {
+            block_mode: crate::funcblock::BlockMode::On,
+            ..SearchConfig::default()
+        };
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg);
+        let t = offload_search(&apps::TDFIR, &env, true).unwrap();
+        assert!(!t.blocks.is_empty(), "tdfir must measure block placements");
+        let s1 = trace_to_string(&t);
+        let back = trace_from_json(&json::parse(&s1).unwrap()).expect("decode");
+        assert_eq!(trace_to_string(&back), s1);
+        assert_eq!(back.block_mode, t.block_mode);
+        assert_eq!(back.blocks, t.blocks);
+        assert_eq!(back.best_block, t.best_block);
+        assert_eq!(back.speedup(), t.speedup());
+    }
+
+    #[test]
+    fn blocks_artifact_roundtrips() {
+        let cfg = SearchConfig {
+            block_mode: crate::funcblock::BlockMode::On,
+            ..SearchConfig::default()
+        };
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg);
+        let t = offload_search(&apps::MRIQ, &env, true).unwrap();
+        let artifact = BlockMeasureArtifact { placements: t.blocks.clone() };
+        let j = blocks_to_json(&artifact);
+        let back = blocks_from_json(&j).expect("decode");
+        assert_eq!(back.placements, artifact.placements);
+        assert!(blocks_from_json(&trace_to_json(&t)).is_none(), "wrong kind rejects");
     }
 
     #[test]

@@ -19,11 +19,18 @@
 //!                            intensity bits, offloadable})
 //! backend_fp   = H(backend.name, backend.description)   // device identity
 //! analyze_key  = H("analyze",    app_fp)
-//! precompile_key = H("precompile", app_fp, analysis_fp, backend_fp, a, b)
-//! measure_key  = H("measure",    precompile inputs, c, d, resource_cap)
+//! precompile_key = H("precompile", app_fp, analysis_fp, backend_fp, a, b, loops?)
+//! measure_key  = H("measure",    precompile inputs, c, d, resource_cap, loops?)
+//! blocks_key   = H("blocks",     measure inputs, block_mode)
 //! trace_key    = H("trace",      app_fp, backend_fp, full SearchConfig)
 //! dest_key     = H("destination", app_fp, backend_fp, full SearchConfig)
 //! ```
+//!
+//! `loops?` is the loops-enabled flag: `--blocks only` empties the loop
+//! stages, so its (empty) stage artifacts key separately, while `off`
+//! and `on` share loop-stage artifacts (their loop stages are identical
+//! by construction).  The full `SearchConfig` mixed into trace/dest
+//! keys includes the block mode.
 //!
 //! Stage keys include only the inputs that stage actually depends on, so
 //! e.g. two searches differing only in `d_patterns` share pre-compile
@@ -97,7 +104,16 @@ fn mix_full_config(h: &mut KeyHasher, cfg: &SearchConfig) {
         .write_f64(cfg.resource_cap)
         .write_usize(cfg.compile_parallelism)
         .write_usize(cfg.ga_population)
-        .write_usize(cfg.ga_generations);
+        .write_usize(cfg.ga_generations)
+        .write_str(cfg.block_mode.as_str());
+}
+
+/// Do the loop-statement stages actually run under this config?
+/// `--blocks only` empties them, so its stage artifacts must not share
+/// keys with the loop-enabled modes (`off` and `on` *do* share: the loop
+/// stages are identical there by construction).
+fn loops_enabled(cfg: &SearchConfig) -> bool {
+    cfg.block_mode != crate::funcblock::BlockMode::Only
 }
 
 /// Key of the Analyze-stage artifact (backend-independent).
@@ -122,6 +138,7 @@ pub fn precompile_key(
         .write_u64(backend_fingerprint(backend))
         .write_usize(cfg.a_intensity)
         .write_usize(cfg.b_unroll)
+        .write_bool(loops_enabled(cfg))
         .finish()
 }
 
@@ -143,6 +160,31 @@ pub fn measure_key(
         .write_usize(cfg.c_efficiency)
         .write_usize(cfg.d_patterns)
         .write_f64(cfg.resource_cap)
+        .write_bool(loops_enabled(cfg))
+        .finish()
+}
+
+/// Key of the MeasureBlocks-stage artifact
+/// ([`crate::coordinator::stages::BlockMeasureArtifact`]): the measure
+/// inputs (combined placements ride the best loop pattern) plus the
+/// block mode itself (`on` and `only` measure different combinations).
+pub fn blocks_key(
+    app: &App,
+    analysis: &AppAnalysis,
+    backend: &dyn OffloadBackend,
+    cfg: &SearchConfig,
+) -> CacheKey {
+    KeyHasher::new("blocks")
+        .write_str(app.name)
+        .write_str(app.source)
+        .write_u64(analysis_fingerprint(analysis))
+        .write_u64(backend_fingerprint(backend))
+        .write_usize(cfg.a_intensity)
+        .write_usize(cfg.b_unroll)
+        .write_usize(cfg.c_efficiency)
+        .write_usize(cfg.d_patterns)
+        .write_f64(cfg.resource_cap)
+        .write_str(cfg.block_mode.as_str())
         .finish()
 }
 
@@ -218,6 +260,46 @@ mod tests {
         assert_ne!(
             measure_key(&apps::MATMUL, &analysis, &FPGA, &cfg),
             measure_key(&apps::MATMUL, &analysis, &FPGA, &more_d)
+        );
+    }
+
+    #[test]
+    fn block_mode_reshapes_exactly_the_right_keys() {
+        use crate::funcblock::BlockMode;
+        let analysis =
+            crate::coordinator::pipeline::analyze_app(&apps::MATMUL, true).unwrap();
+        let off = SearchConfig::default();
+        let mut on = off.clone();
+        on.block_mode = BlockMode::On;
+        let mut only = off.clone();
+        only.block_mode = BlockMode::Only;
+
+        // off and on share loop-stage artifacts; only does not
+        assert_eq!(
+            precompile_key(&apps::MATMUL, &analysis, &FPGA, &off),
+            precompile_key(&apps::MATMUL, &analysis, &FPGA, &on)
+        );
+        assert_ne!(
+            measure_key(&apps::MATMUL, &analysis, &FPGA, &on),
+            measure_key(&apps::MATMUL, &analysis, &FPGA, &only)
+        );
+        // the block artifact and the trace separate all three modes
+        assert_ne!(
+            blocks_key(&apps::MATMUL, &analysis, &FPGA, &on),
+            blocks_key(&apps::MATMUL, &analysis, &FPGA, &only)
+        );
+        assert_ne!(
+            trace_key(&apps::MATMUL, true, &FPGA, &off),
+            trace_key(&apps::MATMUL, true, &FPGA, &on)
+        );
+        assert_ne!(
+            trace_key(&apps::MATMUL, true, &FPGA, &on),
+            trace_key(&apps::MATMUL, true, &FPGA, &only)
+        );
+        // backend identity still separates block artifacts
+        assert_ne!(
+            blocks_key(&apps::MATMUL, &analysis, &FPGA, &on),
+            blocks_key(&apps::MATMUL, &analysis, &GPU, &on)
         );
     }
 

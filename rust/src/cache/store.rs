@@ -21,7 +21,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::mixed::DestinationSearch;
 use crate::coordinator::pipeline::{AppAnalysis, SearchTrace};
-use crate::coordinator::stages::{MeasureArtifact, PrecompileArtifact};
+use crate::coordinator::stages::{BlockMeasureArtifact, MeasureArtifact, PrecompileArtifact};
 use crate::util::json::{self, Json};
 
 use super::codec;
@@ -38,6 +38,18 @@ pub struct CacheStats {
     pub misses: u64,
     /// On-disk payloads discarded as corrupt/undecodable.
     pub disk_rejects: u64,
+    /// On-disk entries that *exist* but could not be read (I/O error —
+    /// distinct from a clean not-found miss); each one recomputes.
+    pub disk_read_errors: u64,
+}
+
+impl CacheStats {
+    /// Total recomputes forced by a bad disk entry (corrupt payloads
+    /// plus unreadable files) — the corrupt-entry metric `flopt batch`
+    /// and the tests watch.
+    pub fn corrupt_recomputes(&self) -> u64 {
+        self.disk_rejects + self.disk_read_errors
+    }
 }
 
 #[derive(Default)]
@@ -45,6 +57,7 @@ struct Mem {
     analyses: HashMap<CacheKey, Arc<AppAnalysis>>,
     precompiles: HashMap<CacheKey, PrecompileArtifact>,
     measures: HashMap<CacheKey, MeasureArtifact>,
+    blocks: HashMap<CacheKey, BlockMeasureArtifact>,
     traces: HashMap<CacheKey, SearchTrace>,
     destinations: HashMap<CacheKey, DestinationSearch>,
 }
@@ -117,22 +130,53 @@ impl CacheStore {
         self.stats.lock().expect("poisoned").disk_rejects += 1;
     }
 
+    fn note_disk_read_error(&self) {
+        self.stats.lock().expect("poisoned").disk_read_errors += 1;
+    }
+
     // ------------------------------------------------------------- disk
 
     fn disk_path(&self, kind: &str, key: CacheKey) -> Option<PathBuf> {
         self.dir.as_ref().map(|d| d.join(format!("{kind}-{key}.json")))
     }
 
-    /// Read + parse + decode one disk entry; any failure rejects it.
+    /// Read + parse + decode one disk entry; any failure rejects it and
+    /// the stage recomputes.  A missing file is a *clean miss* (silent);
+    /// an entry that exists but cannot be read, or reads but fails to
+    /// parse/decode, gets a one-line warning and its own counter — a
+    /// corrupt store should be visible, never mistaken for cold.
     fn disk_get<T>(&self, kind: &str, key: CacheKey, decode: impl Fn(&Json) -> Option<T>) -> Option<T> {
         let path = self.disk_path(kind, key)?;
-        let text = std::fs::read_to_string(&path).ok()?;
-        match json::parse(&text).ok().as_ref().and_then(&decode) {
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(e) => {
+                eprintln!(
+                    "flopt: cache: failed to read {}: {e}; recomputing",
+                    path.display()
+                );
+                self.note_disk_read_error();
+                return None;
+            }
+        };
+        let parsed = json::parse(&text).ok();
+        if let Some(j) = parsed.as_ref() {
+            if codec::is_stale_version(j) {
+                // a documented format bump, not corruption: stale
+                // entries silently recompute (and get overwritten)
+                return None;
+            }
+        }
+        match parsed.as_ref().and_then(&decode) {
             Some(v) => {
                 self.note_disk_hit();
                 Some(v)
             }
             None => {
+                eprintln!(
+                    "flopt: cache: corrupt {kind} entry {}; recomputing",
+                    path.display()
+                );
                 self.note_disk_reject();
                 None
             }
@@ -232,6 +276,35 @@ impl CacheStore {
         }
         self.mem.lock().expect("poisoned").measures.insert(key, m.clone());
         self.disk_put("measure", key, &codec::measure_to_json(m));
+    }
+
+    // ----------------------------------------------------------- blocks
+
+    /// Fetch a MeasureBlocks-stage artifact (memory, then disk).
+    pub fn get_blocks(&self, key: CacheKey) -> Option<BlockMeasureArtifact> {
+        if !self.enabled {
+            return None;
+        }
+        let hit = self.mem.lock().expect("poisoned").blocks.get(&key).cloned();
+        if let Some(b) = hit {
+            self.note_mem_hit();
+            return Some(b);
+        }
+        if let Some(b) = self.disk_get("blocks", key, codec::blocks_from_json) {
+            self.mem.lock().expect("poisoned").blocks.insert(key, b.clone());
+            return Some(b);
+        }
+        self.note_miss();
+        None
+    }
+
+    /// Store a MeasureBlocks-stage artifact.
+    pub fn put_blocks(&self, key: CacheKey, b: &BlockMeasureArtifact) {
+        if !self.enabled {
+            return;
+        }
+        self.mem.lock().expect("poisoned").blocks.insert(key, b.clone());
+        self.disk_put("blocks", key, &codec::blocks_to_json(b));
     }
 
     // ----------------------------------------------------------- traces
@@ -360,12 +433,83 @@ mod tests {
         assert_eq!(stats.disk_rejects, 1);
         assert_eq!(stats.misses, 1);
 
-        // valid JSON of the wrong shape must also reject
-        std::fs::write(&path, "{\"kind\":\"trace\",\"v\":1}").unwrap();
+        // valid current-version JSON of the wrong shape must also reject
+        std::fs::write(
+            &path,
+            format!("{{\"kind\":\"trace\",\"v\":{}}}", codec::VERSION),
+        )
+        .unwrap();
         let d = CacheStore::with_dir(&dir);
         assert!(d.get_trace(key).is_none());
         assert_eq!(d.stats().disk_rejects, 1);
 
+        // a payload from an older codec version is a *stale* entry — a
+        // silent recompute, never reported or counted as corruption
+        std::fs::write(&path, "{\"kind\":\"trace\",\"v\":1}").unwrap();
+        let e = CacheStore::with_dir(&dir);
+        assert!(e.get_trace(key).is_none());
+        let stats = e.stats();
+        assert_eq!(stats.disk_rejects, 0, "stale version is not corruption");
+        assert_eq!(stats.disk_read_errors, 0);
+        assert_eq!(stats.misses, 1);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unreadable_entry_counts_as_read_error_not_clean_miss() {
+        let dir = std::env::temp_dir().join(format!(
+            "flopt-store-readerr-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let key = CacheKey(9);
+        // a *directory* where the entry file should be: exists, unreadable
+        std::fs::create_dir_all(dir.join(format!("trace-{key}.json"))).unwrap();
+        let store = CacheStore::with_dir(&dir);
+        assert!(store.get_trace(key).is_none(), "unreadable entry recomputes");
+        let stats = store.stats();
+        assert_eq!(stats.disk_read_errors, 1, "read failure must be counted");
+        assert_eq!(stats.disk_rejects, 0, "not a decode reject");
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.corrupt_recomputes(), 1);
+
+        // a clean not-found miss stays silent: no read-error, no reject
+        assert!(store.get_trace(CacheKey(10)).is_none());
+        let stats = store.stats();
+        assert_eq!(stats.disk_read_errors, 1);
+        assert_eq!(stats.disk_rejects, 0);
+        assert_eq!(stats.misses, 2);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn blocks_artifact_roundtrips_through_disk() {
+        use crate::funcblock::BlockMode;
+        let dir = std::env::temp_dir().join(format!(
+            "flopt-store-blocks-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SearchConfig { block_mode: BlockMode::On, ..SearchConfig::default() };
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg);
+        let t = offload_search(&apps::MATMUL, &env, true).unwrap();
+        assert!(!t.blocks.is_empty(), "matmul must measure a block placement");
+
+        let key = CacheKey(11);
+        let artifact = crate::coordinator::stages::BlockMeasureArtifact {
+            placements: t.blocks.clone(),
+        };
+        let a = CacheStore::with_dir(&dir);
+        a.put_blocks(key, &artifact);
+        let b = CacheStore::with_dir(&dir);
+        let back = b.get_blocks(key).expect("disk hit");
+        assert_eq!(back.placements, artifact.placements);
+        assert_eq!(b.stats().disk_hits, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -2,6 +2,8 @@
 
 use std::fmt;
 
+use crate::funcblock::BlockMode;
+
 /// The paper's narrowing / search parameters (§5.1.2 evaluation conditions).
 #[derive(Debug, Clone)]
 pub struct SearchConfig {
@@ -25,6 +27,9 @@ pub struct SearchConfig {
     pub ga_population: usize,
     /// GA generations for measurement-driven backends (GPU).
     pub ga_generations: usize,
+    /// Function-block co-search mode (`flopt --blocks {off,on,only}`;
+    /// the paper's loop-only flow is `Off`, the default).
+    pub block_mode: BlockMode,
 }
 
 impl Default for SearchConfig {
@@ -38,6 +43,7 @@ impl Default for SearchConfig {
             compile_parallelism: 1,
             ga_population: 8,
             ga_generations: 5,
+            block_mode: BlockMode::Off,
         }
     }
 }

@@ -17,14 +17,19 @@
 //! concurrently, and accounts everything on one shared clock in
 //! deterministic submission order.
 
+use std::collections::HashMap;
+
 use crate::apps::App;
-use crate::backend::{Destination, OffloadBackend, SearchMethod, Target};
+use crate::backend::{BackendReport, Destination, OffloadBackend, SearchMethod, Target};
 use crate::baselines::ga::{self, GaConfig};
 use crate::config::SearchConfig;
+use crate::cparse::ast::LoopId;
 use crate::cpu::CpuModel;
+use crate::funcblock::BlockMode;
 use crate::service::{BatchRequest, BatchService};
 
-use super::pipeline::AppAnalysis;
+use super::pipeline::{block_pattern_measurement, AppAnalysis};
+use super::stages::{measure_block_placement, stage_block_narrow};
 use super::verify_env::{PatternMeasurement, VerifyEnv};
 
 /// Outcome of one backend's search for one app.
@@ -128,41 +133,76 @@ pub fn destination_search(
     env: &VerifyEnv<'_>,
     cfg: &SearchConfig,
 ) -> crate::Result<DestinationSearch> {
-    let meter = env.clock.compile_meter();
     let out = match env.backend.search_method() {
         SearchMethod::NarrowedTwoRound => {
+            let meter = env.clock.compile_meter();
             let t = super::pipeline::search_with_analysis(app, analysis, env, cfg)?;
             DestinationSearch {
                 app_name: analysis.app_name.clone(),
                 destination: env.backend.destination(),
                 method: "narrowed-2round",
                 speedup: t.speedup(),
-                best: t.best.clone(),
+                best: t.solution_measurement(),
                 patterns_measured: t.patterns_measured(),
                 compile_hours: meter.lane_hours(),
                 cpu_time_s: t.cpu_time_s,
             }
         }
-        SearchMethod::MeasurementGa => {
+        SearchMethod::MeasurementGa => ga_destination_search(analysis, env, cfg),
+    };
+    Ok(out)
+}
+
+/// The measurement-driven GA flow for one backend, plus the function-
+/// block co-search when `--blocks` is on: every registry offer is
+/// measured as a standalone placement next to the GA result, and the
+/// best wins.  Under `--blocks only` the GA itself is skipped — the IP
+/// registry *is* the search.  Shared by [`destination_search`] and the
+/// batch service so the two paths cannot diverge.
+pub fn ga_destination_search(
+    analysis: &AppAnalysis,
+    env: &VerifyEnv<'_>,
+    cfg: &SearchConfig,
+) -> DestinationSearch {
+    let meter = env.clock.compile_meter();
+    let (mut best, mut measured): (Option<PatternMeasurement>, usize) =
+        if cfg.block_mode == BlockMode::Only {
+            (None, 0)
+        } else {
             let ga_cfg = GaConfig {
                 population: cfg.ga_population,
                 generations: cfg.ga_generations,
                 ..GaConfig::default()
             };
             let out = ga::search(analysis, env, &ga_cfg);
-            DestinationSearch {
-                app_name: analysis.app_name.clone(),
-                destination: env.backend.destination(),
-                method: "ga",
-                speedup: out.speedup(),
-                best: out.best,
-                patterns_measured: out.evaluations,
-                compile_hours: meter.lane_hours(),
-                cpu_time_s: env.cpu_baseline_s(analysis),
+            (out.best, out.evaluations)
+        };
+    if cfg.block_mode != BlockMode::Off {
+        let offers = stage_block_narrow(analysis, env.backend, env.cpu, cfg.block_mode);
+        let no_reports: HashMap<LoopId, BackendReport> = HashMap::new();
+        for offer in &offers.offers {
+            if offer.utilization > cfg.resource_cap {
+                continue; // over-cap IP: never built
+            }
+            let m = measure_block_placement(analysis, &no_reports, offer, &[], env);
+            measured += 1;
+            let current = best.as_ref().map(|b| b.speedup).unwrap_or(0.0);
+            if m.compiled && m.speedup > current {
+                best = Some(block_pattern_measurement(&m));
             }
         }
-    };
-    Ok(out)
+    }
+    DestinationSearch {
+        app_name: analysis.app_name.clone(),
+        destination: env.backend.destination(),
+        // under --blocks only the GA never ran: the registry was the search
+        method: if cfg.block_mode == BlockMode::Only { "ip-registry" } else { "ga" },
+        speedup: best.as_ref().map(|b| b.speedup).unwrap_or(1.0),
+        best,
+        patterns_measured: measured,
+        compile_hours: meter.lane_hours(),
+        cpu_time_s: env.cpu_baseline_s(analysis),
+    }
 }
 
 /// Mixed-destination search for one app on a fresh service.

@@ -18,14 +18,16 @@ use crate::cache;
 use crate::config::SearchConfig;
 use crate::cparse::ast::LoopId;
 use crate::cparse::Program;
+use crate::funcblock::{BlockMeasurement, BlockMode};
 use crate::intensity::{self, LoopIntensity};
 use crate::interp::Profile;
 use crate::ir::{self, LoopAnalysis};
 use crate::opencl::{self, OpenClCode};
 
 use super::stages::{
-    charge_precompile, stage_analyze, stage_efficiency_narrow, stage_intensity_narrow,
-    stage_measure_rounds, stage_precompile, stage_select,
+    charge_precompile, stage_analyze, stage_block_narrow, stage_efficiency_narrow,
+    stage_intensity_narrow, stage_measure_blocks, stage_measure_rounds, stage_precompile,
+    stage_select, BlockMeasureArtifact, IntensityCut,
 };
 use super::verify_env::{PatternMeasurement, VerifyEnv};
 
@@ -101,8 +103,14 @@ pub struct SearchTrace {
     pub rounds: Vec<Vec<PatternMeasurement>>,
     /// all-CPU baseline (model)
     pub cpu_time_s: f64,
-    /// the solution: fastest measured pattern
+    /// the solution among loop-statement patterns: fastest measured
     pub best: Option<PatternMeasurement>,
+    /// function-block co-search mode this trace ran under
+    pub block_mode: BlockMode,
+    /// measured function-block placements (empty under `--blocks off`)
+    pub blocks: Vec<BlockMeasurement>,
+    /// fastest compiled block placement, if any was measured
+    pub best_block: Option<BlockMeasurement>,
     /// **Canonical** simulated automation hours of this search: what a
     /// fully cold run charges (paper: ≈ half a day), derived purely from
     /// the stage artifacts — so the cached trace is byte-identical no
@@ -115,14 +123,45 @@ pub struct SearchTrace {
 }
 
 impl SearchTrace {
-    /// The paper's Fig-4 number for this app.
+    /// The paper's Fig-4 number for this app: the speedup of the overall
+    /// solution — the better of the loop-statement and block-placement
+    /// sides (so combined `--blocks on` search never reports worse than
+    /// loop-only), exactly as [`SearchTrace::render`] prints it.  1.0
+    /// when nothing was measured at all (the app stays on the CPU); a
+    /// measured solution slower than the CPU reports its real sub-1.0
+    /// number, as the loop-only flow always did.
     pub fn speedup(&self) -> f64 {
-        self.best.as_ref().map(|b| b.speedup).unwrap_or(1.0)
+        self.solution_measurement()
+            .map(|m| m.speedup)
+            .unwrap_or(1.0)
     }
 
-    /// Total patterns measured (≤ d).
+    /// Total placements measured: loop patterns (≤ d) plus block
+    /// placements.
     pub fn patterns_measured(&self) -> usize {
-        self.rounds.iter().map(|r| r.len()).sum()
+        self.rounds.iter().map(|r| r.len()).sum::<usize>() + self.blocks.len()
+    }
+
+    /// Did a block placement strictly beat every loop pattern?  Ties go
+    /// to the loop solution so `--blocks on` output degenerates to the
+    /// loop-only output when blocks add nothing.
+    pub fn solution_is_block(&self) -> bool {
+        match (&self.best_block, &self.best) {
+            (Some(b), Some(p)) => b.speedup > p.speedup,
+            (Some(_), None) => true,
+            _ => false,
+        }
+    }
+
+    /// The overall solution as a pattern measurement: the winning loop
+    /// pattern, or the winning block placement viewed as a pattern over
+    /// its member + riding loops (what request-level reports carry).
+    pub fn solution_measurement(&self) -> Option<PatternMeasurement> {
+        if self.solution_is_block() {
+            self.best_block.as_ref().map(block_pattern_measurement)
+        } else {
+            self.best.clone()
+        }
     }
 
     /// Render the trace as the table the paper's evaluation logs.
@@ -164,23 +203,68 @@ impl SearchTrace {
                 ));
             }
         }
-        match &self.best {
-            Some(b) => out.push_str(&format!(
-                "solution: pattern {} on {} — speedup {:.2}x vs all-CPU\n",
-                b.pattern.label(),
+        if !self.blocks.is_empty() {
+            out.push_str(&format!(
+                "block placements (IP registry, --blocks {}):\n",
+                self.block_mode
+            ));
+            for m in &self.blocks {
+                out.push_str(&format!(
+                    "  {:<28} util={:.3} compile={:.1}h {} time={:.5}s speedup={:.2}\n",
+                    m.label(),
+                    m.utilization,
+                    m.compile_sim_s / 3600.0,
+                    if m.compiled { "ok " } else { "FAIL" },
+                    m.time_s,
+                    m.speedup
+                ));
+            }
+        }
+        if self.solution_is_block() {
+            let b = self.best_block.as_ref().expect("block solution exists");
+            out.push_str(&format!(
+                "solution: block {} on {} — speedup {:.2}x vs all-CPU\n",
+                b.label(),
                 self.destination,
                 b.speedup
-            )),
-            None => out.push_str(&format!(
-                "solution: none (no {} pattern beat the CPU)\n",
-                self.destination
-            )),
+            ));
+        } else {
+            match &self.best {
+                Some(b) => out.push_str(&format!(
+                    "solution: pattern {} on {} — speedup {:.2}x vs all-CPU\n",
+                    b.pattern.label(),
+                    self.destination,
+                    b.speedup
+                )),
+                None => out.push_str(&format!(
+                    "solution: none (no {} pattern beat the CPU)\n",
+                    self.destination
+                )),
+            }
         }
         out.push_str(&format!(
             "automation time: {:.1} h simulated ({:.1} compile-lane hours)\n",
             self.sim_hours, self.compile_hours
         ));
         out
+    }
+}
+
+/// View a function-block placement as a pattern measurement over its
+/// member + riding loops (no per-kernel breakdown — the IP core is one
+/// opaque implementation).  Request-level reports and the GA co-search
+/// use this to carry a winning block in the `best` slot.
+pub fn block_pattern_measurement(b: &BlockMeasurement) -> PatternMeasurement {
+    let mut loops = b.block_loops.clone();
+    loops.extend(b.extra_loops.iter().cloned());
+    PatternMeasurement {
+        pattern: crate::opencl::OffloadPattern::of(loops),
+        utilization: b.utilization,
+        compiled: b.compiled,
+        compile_sim_s: b.compile_sim_s,
+        time_s: b.time_s,
+        speedup: b.speedup,
+        kernels: Vec::new(),
     }
 }
 
@@ -261,6 +345,12 @@ fn stamp_canonical_times(
             }
         }
     }
+    for m in &t.blocks {
+        clock.schedule_compile(&format!("compile {}", m.label()), m.compile_sim_s);
+        if m.compiled {
+            clock.advance_serial(&format!("measure {}", m.label()), m.time_s);
+        }
+    }
     t.sim_hours = clock.total_hours();
     t.compile_hours = clock.compile_lane_seconds() / 3600.0;
 }
@@ -278,8 +368,16 @@ pub fn search_with_analysis(
     env: &VerifyEnv<'_>,
     cfg: &SearchConfig,
 ) -> crate::Result<SearchTrace> {
+    // `--blocks only` skips the loop-statement candidates entirely: no
+    // pre-compiles, no measured rounds — the IP registry is the search.
+    let loops_enabled = cfg.block_mode != BlockMode::Only;
+
     // ---- intensity cut (top a): pure, always recomputed ----------------
-    let cut = stage_intensity_narrow(analysis, env.backend, cfg.a_intensity);
+    let cut = if loops_enabled {
+        stage_intensity_narrow(analysis, env.backend, cfg.a_intensity)
+    } else {
+        IntensityCut { top_a: Vec::new() }
+    };
 
     // ---- kernel generation + backend pre-compile (minutes each) --------
     let pre_key = cache::precompile_key(app, analysis, env.backend, cfg);
@@ -307,8 +405,33 @@ pub fn search_with_analysis(
         }
     };
 
+    // ---- function-block co-search (BlockNarrow + MeasureBlocks) ---------
+    let blocks = if cfg.block_mode == BlockMode::Off {
+        BlockMeasureArtifact::empty()
+    } else {
+        let blocks_key = cache::blocks_key(app, analysis, env.backend, cfg);
+        match env.cache.get_blocks(blocks_key) {
+            Some(b) => b,
+            None => {
+                let offers = stage_block_narrow(analysis, env.backend, env.cpu, cfg.block_mode);
+                let b = stage_measure_blocks(analysis, &pre, &meas, &offers, env, cfg);
+                env.cache.put_blocks(blocks_key, &b);
+                b
+            }
+        }
+    };
+
     // ---- solution --------------------------------------------------------
-    let mut t = stage_select(analysis, env.backend.destination(), &cut, &pre, &eff, &meas);
+    let mut t = stage_select(
+        analysis,
+        env.backend.destination(),
+        &cut,
+        &pre,
+        &eff,
+        &meas,
+        &blocks,
+    );
+    t.block_mode = cfg.block_mode;
     stamp_canonical_times(&mut t, None, cfg.compile_parallelism);
     Ok(t)
 }

@@ -9,8 +9,17 @@
 //! Precompile       -> PrecompileArtifact    (HLS/trial builds, resource efficiency)
 //! EfficiencyNarrow -> EfficiencyCut         (top-c by resource efficiency)
 //! MeasureRounds    -> MeasureArtifact       (two measured rounds on the farm)
+//! BlockNarrow      -> BlockArtifact         (function-block detection + IP offers)
+//! MeasureBlocks    -> BlockMeasureArtifact  (block placements on the farm)
 //! Select           -> SearchTrace           (the solution + the logged trace)
 //! ```
+//!
+//! The two block stages (`flopt --blocks {on,only}`) co-search
+//! function-block replacement ([`crate::funcblock`]) with the loop
+//! statement candidates: a block *subsumes* its member loops, so each
+//! combined placement strips subsumed loops from the loop-statement
+//! pattern it rides with, and the selector takes the best of both kinds
+//! — combined search never loses to loop-only search.
 //!
 //! Stages are *re-entrant*: every function here is a pure function of
 //! its inputs (MeasureRounds additionally charges the simulated clock it
@@ -32,6 +41,7 @@ use crate::cache::{self, CacheStore};
 use crate::config::SearchConfig;
 use crate::cparse::ast::LoopId;
 use crate::cpu::CpuModel;
+use crate::funcblock::{self, BlockMeasurement, BlockMode, BlockOffer};
 use crate::intensity::{self, LoopIntensity};
 use crate::metrics::SimClock;
 use crate::opencl::OpenClCode;
@@ -234,10 +244,164 @@ pub fn stage_measure_rounds(
     }
 }
 
+/// Artifact of the BlockNarrow stage: per-detected-block IP offers the
+/// backend quoted from the registry.
+#[derive(Debug, Clone)]
+pub struct BlockArtifact {
+    /// One offer per detected block with a registry implementation, in
+    /// source (root-loop) order.
+    pub offers: Vec<BlockOffer>,
+}
+
+/// Artifact of the MeasureBlocks stage: every block placement compiled
+/// (IP link + any riding pattern) and measured on the farm.
+#[derive(Debug, Clone)]
+pub struct BlockMeasureArtifact {
+    /// Measured placements, in offer order (block alone, then the
+    /// overlap-resolved combination with the best loop pattern).
+    pub placements: Vec<BlockMeasurement>,
+}
+
+impl BlockMeasureArtifact {
+    /// An empty artifact (what `--blocks off` flows through the selector).
+    pub fn empty() -> Self {
+        BlockMeasureArtifact { placements: Vec::new() }
+    }
+}
+
+/// Stage B1 — BlockNarrow: detect registry blocks structurally
+/// ([`crate::funcblock::detect`]) and ask the backend for an IP offer per
+/// block.  Pure; `Off` yields no offers.
+pub fn stage_block_narrow(
+    analysis: &AppAnalysis,
+    backend: &dyn OffloadBackend,
+    cpu: &CpuModel,
+    mode: BlockMode,
+) -> BlockArtifact {
+    if mode == BlockMode::Off {
+        return BlockArtifact { offers: Vec::new() };
+    }
+    let detected = funcblock::detect(&analysis.loops);
+    let offers = detected
+        .iter()
+        .filter_map(|b| backend.block_offer(&analysis.loops, &analysis.profile, cpu, b))
+        .collect();
+    BlockArtifact { offers }
+}
+
+/// Compile + measure one block placement (the IP replacement plus any
+/// co-offloaded loop statements) on the verification environment.
+/// Charges `env.clock` exactly like a pattern: the compile/link on the
+/// farm, then one measured sample run.
+pub fn measure_block_placement(
+    analysis: &AppAnalysis,
+    reports: &HashMap<LoopId, BackendReport>,
+    offer: &BlockOffer,
+    extra: &[LoopId],
+    env: &VerifyEnv<'_>,
+) -> BlockMeasurement {
+    let refs: Vec<&BackendReport> = extra.iter().filter_map(|l| reports.get(l)).collect();
+    let mut m = BlockMeasurement {
+        block: offer.block.name.to_string(),
+        block_loops: offer.block.loops.clone(),
+        extra_loops: extra.to_vec(),
+        utilization: offer.utilization,
+        compiled: true,
+        compile_sim_s: offer.compile_sim_s,
+        time_s: f64::INFINITY,
+        speedup: 0.0,
+    };
+    let mut ok = true;
+    if !refs.is_empty() {
+        m.utilization += env.backend.combined_utilization(&refs);
+        let outcome = env.backend.full_compile(&refs, &m.label());
+        m.compile_sim_s += outcome.sim_s;
+        ok = outcome.ok;
+    }
+    env.clock
+        .schedule_compile(&format!("compile {}", m.label()), m.compile_sim_s);
+    if !ok {
+        m.compiled = false;
+        return m;
+    }
+    let cpu_total = env.cpu_baseline_s(analysis);
+    let mut offloaded_cpu = offer.cpu_time_s;
+    let mut device_s = offer.exec_s;
+    for l in extra {
+        let Some(rep) = reports.get(l) else { continue };
+        let k = env
+            .backend
+            .kernel_exec(&analysis.loops, &analysis.profile, env.cpu, rep);
+        device_s += k.total_s();
+        if let Some(lp) = analysis.profile.loop_profile(*l) {
+            offloaded_cpu += env.cpu.loop_time_s(lp);
+        }
+    }
+    m.time_s = (cpu_total - offloaded_cpu).max(0.0) + device_s;
+    m.speedup = cpu_total / m.time_s;
+    env.clock
+        .advance_serial(&format!("measure {}", m.label()), m.time_s);
+    m
+}
+
+/// Stage B2 — MeasureBlocks: for every offer, measure the block alone
+/// and (when a loop pattern improved) the overlap-resolved combination —
+/// the block subsumes its member loops, so only the remainder of the
+/// best loop pattern rides along, and over-cap combinations are never
+/// built (same rule as round 2).
+pub fn stage_measure_blocks(
+    analysis: &AppAnalysis,
+    pre: &PrecompileArtifact,
+    meas: &MeasureArtifact,
+    blocks: &BlockArtifact,
+    env: &VerifyEnv<'_>,
+    cfg: &SearchConfig,
+) -> BlockMeasureArtifact {
+    let reports = pre.reports();
+    let base_best = meas
+        .rounds
+        .iter()
+        .flatten()
+        .filter(|m| m.compiled && m.speedup > 1.0)
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+        .cloned();
+
+    let mut placements = Vec::new();
+    for offer in &blocks.offers {
+        if offer.utilization > cfg.resource_cap {
+            continue; // over-cap IP: never built (same rule as round 2)
+        }
+        placements.push(measure_block_placement(analysis, &reports, offer, &[], env));
+        if let Some(best) = &base_best {
+            let extra: Vec<LoopId> = best
+                .pattern
+                .loops
+                .iter()
+                .filter(|l| !offer.block.loops.contains(*l))
+                .cloned()
+                .collect();
+            if extra.is_empty() {
+                continue; // the block subsumes the whole pattern
+            }
+            let refs: Vec<&BackendReport> =
+                extra.iter().filter_map(|l| reports.get(l)).collect();
+            if refs.len() != extra.len() {
+                continue;
+            }
+            if offer.utilization + env.backend.combined_utilization(&refs) > cfg.resource_cap {
+                continue; // over-cap combination: never built
+            }
+            placements.push(measure_block_placement(analysis, &reports, offer, &extra, env));
+        }
+    }
+    BlockMeasureArtifact { placements }
+}
+
 /// Stage 6 — Select: pick the fastest compiled pattern and assemble the
-/// full [`SearchTrace`].  The caller stamps `sim_hours`/`compile_hours`
-/// from its span meter (they are properties of the *run*, not of the
-/// stage artifacts).
+/// full [`SearchTrace`], carrying the measured block placements so the
+/// trace's solution is the best of loop patterns *and* blocks.  The
+/// caller stamps `sim_hours`/`compile_hours` from its span meter (they
+/// are properties of the *run*, not of the stage artifacts).
 pub fn stage_select(
     analysis: &AppAnalysis,
     destination: Destination,
@@ -245,11 +409,18 @@ pub fn stage_select(
     pre: &PrecompileArtifact,
     eff: &EfficiencyCut,
     meas: &MeasureArtifact,
+    blocks: &BlockMeasureArtifact,
 ) -> SearchTrace {
     let best = meas
         .rounds
         .iter()
         .flatten()
+        .filter(|m| m.compiled)
+        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
+        .cloned();
+    let best_block = blocks
+        .placements
+        .iter()
         .filter(|m| m.compiled)
         .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
         .cloned();
@@ -266,6 +437,9 @@ pub fn stage_select(
         rounds: meas.rounds.clone(),
         cpu_time_s: meas.cpu_time_s,
         best,
+        block_mode: BlockMode::Off,
+        blocks: blocks.placements.clone(),
+        best_block,
         sim_hours: 0.0,
         compile_hours: 0.0,
     }
@@ -292,7 +466,15 @@ mod tests {
         let eff = stage_efficiency_narrow(&pre, cfg.c_efficiency);
         let env2 = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
         let meas = stage_measure_rounds(&analysis, &pre, &eff, &env2, &cfg);
-        let hand = stage_select(&analysis, Destination::Fpga, &cut, &pre, &eff, &meas);
+        let hand = stage_select(
+            &analysis,
+            Destination::Fpga,
+            &cut,
+            &pre,
+            &eff,
+            &meas,
+            &BlockMeasureArtifact::empty(),
+        );
 
         assert_eq!(hand.app_name, driver.app_name);
         assert_eq!(hand.destination, driver.destination);
@@ -313,6 +495,38 @@ mod tests {
             hand.best.as_ref().map(|b| (b.pattern.clone(), b.speedup)),
             driver.best.as_ref().map(|b| (b.pattern.clone(), b.speedup))
         );
+    }
+
+    #[test]
+    fn block_narrow_is_mode_gated_and_quotes_offers() {
+        let analysis = analyze_app(&apps::TDFIR, true).unwrap();
+        let off = stage_block_narrow(&analysis, &FPGA, &XEON_3104, BlockMode::Off);
+        assert!(off.offers.is_empty(), "Off must quote nothing");
+        let on = stage_block_narrow(&analysis, &FPGA, &XEON_3104, BlockMode::On);
+        assert!(!on.offers.is_empty(), "tdfir has registry blocks");
+        let fir = on
+            .offers
+            .iter()
+            .find(|o| o.block.root == crate::cparse::ast::LoopId(8))
+            .expect("the FIR nest must be offered");
+        assert!(fir.exec_s > 0.0 && fir.exec_s < fir.cpu_time_s);
+        assert!(fir.compile_sim_s < 3600.0, "prebuilt IP links in minutes");
+    }
+
+    #[test]
+    fn block_measurement_charges_the_clock() {
+        let cfg = SearchConfig::default();
+        let analysis = analyze_app(&apps::MATMUL, true).unwrap();
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg);
+        let offers = stage_block_narrow(&analysis, &FPGA, &XEON_3104, BlockMode::On);
+        assert!(!offers.offers.is_empty());
+        let reports = HashMap::new();
+        let before = env.clock.total_seconds();
+        let m = measure_block_placement(&analysis, &reports, &offers.offers[0], &[], &env);
+        assert!(m.compiled);
+        assert!(m.speedup > 0.0);
+        assert!(env.clock.total_seconds() > before, "compile+measure must charge");
+        assert_eq!(m.extra_loops, Vec::<LoopId>::new());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use crate::cparse::ast::LoopId;
 use crate::hls::HlsReport;
-use crate::interp::Profile;
+use crate::interp::{LoopProfile, Profile};
 use crate::ir::LoopAnalysis;
 
 use super::device::Device;
@@ -34,6 +34,23 @@ impl KernelExec {
     pub fn total_s(&self) -> f64 {
         self.kernel_s + self.transfer_in_s + self.transfer_out_s
     }
+}
+
+/// H2D/D2H transfer byte counts of one offloaded statement under the
+/// generated host program's footprint rule: everything the statement
+/// touched goes to the device, written arrays come back.  Shared by the
+/// FPGA timing model, the GPU SIMT model, and the function-block layer
+/// ([`crate::funcblock`]) so the rule cannot silently diverge.
+pub fn transfer_bytes(la: &LoopAnalysis, lp: &LoopProfile) -> (u64, u64) {
+    let mut in_bytes = 0u64;
+    let mut out_bytes = 0u64;
+    for (arr, fp) in &lp.footprints {
+        in_bytes += fp.bytes();
+        if la.refs.array_writes.contains_key(arr) {
+            out_bytes += fp.bytes();
+        }
+    }
+    (in_bytes, out_bytes)
 }
 
 /// Innermost pipelined iteration count of the loop statement `id`:
@@ -84,14 +101,7 @@ pub fn kernel_time_s(
     let kernel_s = cycles / report.fmax_hz;
 
     // transfers: H2D everything touched, D2H what the kernel writes
-    let mut in_bytes = 0u64;
-    let mut out_bytes = 0u64;
-    for (arr, fp) in &lp.footprints {
-        in_bytes += fp.bytes();
-        if la.refs.array_writes.contains_key(arr) {
-            out_bytes += fp.bytes();
-        }
-    }
+    let (in_bytes, out_bytes) = transfer_bytes(la, &lp);
     // one DMA per direction per entry batch — the generated host
     // transfers once per offloaded-loop invocation region, not per entry
     let transfer_in_s = if in_bytes > 0 { device.transfer_s(in_bytes) } else { 0.0 };

@@ -1,0 +1,449 @@
+//! Structural function-block detection over the loop-nest IR.
+//!
+//! Every outermost loop statement is normalized into a [`NestSignature`]
+//! — nest depth, accumulation pattern, array-access shape, and operator
+//! classes — and classified against the registry's block shapes by
+//! signature predicates.  Nothing here looks at function or variable
+//! *names*: a renamed FIR filter still matches, and a loop that merely
+//! lives in a function called `fir` does not.
+//!
+//! Calibrated against the app corpus:
+//!
+//! * tdfir's complex FIR nest (2-deep, scalar accumulators, a product of
+//!   reads from *different* arrays at cross/offset indices) → `fir_filter`;
+//! * matmul's i/j/k nest (3-deep, accumulator, cross-indexed reads, no
+//!   guard) → `dense_matmul`;
+//! * MRI-Q's per-voxel trig accumulation (2-deep, accumulators, trig
+//!   calls in the inner body) → `trig_accumulation`;
+//! * the histogram fills (flat loop, array write at a **data-dependent**
+//!   index) → `histogram_bin`;
+//! * laplace2d's boundary-guarded Jacobi sweep matches **nothing**: its
+//!   3-deep nest carries no accumulator (`dense_matmul` requires one)
+//!   and its stencil is guarded — the negative space
+//!   `rust/tests/funcblock.rs` pins per backend.
+
+use std::collections::BTreeSet;
+
+use crate::cparse::ast::*;
+use crate::ir::LoopAnalysis;
+
+/// Registry name of the FIR-convolution block shape.
+pub const FIR_FILTER: &str = "fir_filter";
+/// Registry name of the dense-matmul block shape.
+pub const DENSE_MATMUL: &str = "dense_matmul";
+/// Registry name of the trig-accumulation (MRI-Q style) block shape.
+pub const TRIG_ACCUMULATION: &str = "trig_accumulation";
+/// Registry name of the data-dependent histogram-fill block shape.
+pub const HISTOGRAM_BIN: &str = "histogram_bin";
+
+/// Normalized structural signature of one outermost loop nest.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NestSignature {
+    /// Nest depth including the root (1 = flat loop).
+    pub depth: u32,
+    /// Distinct scalar `+=`/`-=`-style accumulators anywhere in the nest.
+    pub accumulations: u32,
+    /// `sin`/`cos` call sites in the nest bodies.
+    pub trig_calls: u32,
+    /// Does the nest body contain a conditional (boundary guard)?
+    pub guarded: bool,
+    /// Array reads whose index mixes two or more nest counters
+    /// (`a[i*n+k]`, `x[i-k]` — the matmul/convolution shape).
+    pub cross_indexed_reads: u32,
+    /// Array reads whose index is an additive offset expression
+    /// (`x[i-k]`, `e[b*w+j]` — sliding-window/stencil shape).
+    pub offset_reads: u32,
+    /// Does the nest multiply reads of two *different* arrays (the
+    /// signal×taps / A×B product at the heart of FIR and matmul)?
+    pub product_of_reads: bool,
+    /// Array writes whose index mentions **no** nest counter but does
+    /// mention a variable — a data-dependent scatter (`h[b] += 1`).
+    pub indirect_writes: u32,
+    /// Distinct arrays read in the nest.
+    pub arrays_read: u32,
+    /// Distinct arrays written in the nest.
+    pub arrays_written: u32,
+}
+
+/// One recognized block instance: an outermost loop nest whose signature
+/// matched a registry block shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DetectedBlock {
+    /// Registry name of the matched block shape (e.g. [`FIR_FILTER`]).
+    pub name: &'static str,
+    /// The outermost loop statement of the nest.
+    pub root: LoopId,
+    /// Every loop statement the block subsumes (root + descendants,
+    /// sorted) — the overlap set the combined selector resolves against.
+    pub loops: Vec<LoopId>,
+    /// The signature that matched.
+    pub signature: NestSignature,
+}
+
+fn nest_depth(body: &[Stmt]) -> u32 {
+    let mut depth = 0;
+    for s in body {
+        match s {
+            Stmt::For { body: b, .. } | Stmt::While { body: b, .. } => {
+                depth = depth.max(1 + nest_depth(b));
+            }
+            Stmt::If { then_branch, else_branch, .. } => {
+                depth = depth.max(nest_depth(then_branch));
+                depth = depth.max(nest_depth(else_branch));
+            }
+            Stmt::Block(b) => depth = depth.max(nest_depth(b)),
+            _ => {}
+        }
+    }
+    depth
+}
+
+/// Loop-counter names of the nest: the root's induction variable (from
+/// its canonical form when recognized, else from the raw `for` header —
+/// a decreasing loop still has a counter) plus every nested `for`
+/// header's induction variable.  A `while` root contributes none: its
+/// counter is indistinguishable from ordinary state.
+fn nest_counters(la: &LoopAnalysis) -> BTreeSet<String> {
+    let mut counters = BTreeSet::new();
+    if let Some(c) = &la.info.canonical {
+        counters.insert(c.var.clone());
+    }
+    if let Some(h) = &la.info.header {
+        match h.init.as_deref() {
+            Some(Stmt::Decl(d)) => {
+                counters.insert(d.name.clone());
+            }
+            Some(Stmt::Assign { target: LValue::Var(v), .. }) => {
+                counters.insert(v.clone());
+            }
+            _ => {}
+        }
+    }
+    for s in &la.info.body {
+        s.walk(&mut |s| {
+            if let Stmt::For { header, .. } = s {
+                match header.init.as_deref() {
+                    Some(Stmt::Decl(d)) => {
+                        counters.insert(d.name.clone());
+                    }
+                    Some(Stmt::Assign { target: LValue::Var(v), .. }) => {
+                        counters.insert(v.clone());
+                    }
+                    _ => {}
+                }
+            }
+        });
+    }
+    counters
+}
+
+fn vars_in(e: &Expr) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    e.walk(&mut |e| {
+        if let Expr::Var(n) = e {
+            out.insert(n.clone());
+        }
+    });
+    out
+}
+
+fn arrays_read_in(e: &Expr) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    e.walk(&mut |e| {
+        if let Expr::Index(n, _) = e {
+            out.insert(n.clone());
+        }
+    });
+    out
+}
+
+/// Top-level expressions of a statement (the detector walks each).
+fn stmt_exprs(s: &Stmt) -> Vec<&Expr> {
+    match s {
+        Stmt::Assign { value, target, .. } => {
+            let mut v = vec![value];
+            if let LValue::Index(_, i) = target {
+                v.push(i);
+            }
+            v
+        }
+        Stmt::Decl(d) => d.init.iter().collect(),
+        Stmt::If { cond, .. } | Stmt::While { cond, .. } => vec![cond],
+        Stmt::Expr(e, _) => vec![e],
+        Stmt::Return(Some(e), _) => vec![e],
+        _ => Vec::new(),
+    }
+}
+
+/// Compute the normalized signature of one outermost loop nest.
+pub fn signature(la: &LoopAnalysis) -> NestSignature {
+    let counters = nest_counters(la);
+    let mut sig = NestSignature {
+        depth: 1 + nest_depth(&la.info.body),
+        arrays_read: la.refs.array_reads.len() as u32,
+        arrays_written: la.refs.array_writes.len() as u32,
+        ..Default::default()
+    };
+
+    // accumulation pattern: distinct scalars updated with += / -=
+    let mut accumulators = BTreeSet::new();
+    for s in &la.info.body {
+        s.walk(&mut |s| {
+            if let Stmt::Assign {
+                target: LValue::Var(v),
+                op: AssignOp::AddAssign | AssignOp::SubAssign,
+                ..
+            } = s
+            {
+                accumulators.insert(v.clone());
+            }
+            if matches!(s, Stmt::If { .. }) {
+                sig.guarded = true;
+            }
+        });
+    }
+    sig.accumulations = accumulators.len() as u32;
+
+    // operator classes + index shapes
+    for s in &la.info.body {
+        s.walk(&mut |s| {
+            for e in stmt_exprs(s) {
+                e.walk(&mut |e| match e {
+                    Expr::Call(f, _) if f == "sin" || f == "cos" => sig.trig_calls += 1,
+                    Expr::Index(_, idx) => {
+                        let hits = vars_in(idx)
+                            .iter()
+                            .filter(|v| counters.contains(*v))
+                            .count();
+                        if hits >= 2 {
+                            sig.cross_indexed_reads += 1;
+                        }
+                        if matches!(**idx, Expr::Binary(BinOp::Add | BinOp::Sub, ..)) {
+                            sig.offset_reads += 1;
+                        }
+                    }
+                    Expr::Binary(BinOp::Mul, a, b) => {
+                        let ra = arrays_read_in(a);
+                        let rb = arrays_read_in(b);
+                        if ra.iter().any(|x| rb.iter().any(|y| x != y)) {
+                            sig.product_of_reads = true;
+                        }
+                    }
+                    _ => {}
+                });
+            }
+        });
+    }
+
+    // data-dependent scatters: write index with no counter but some var.
+    // Only classifiable when the nest has a *known* counter — a `while`
+    // nest with no recognizable induction variable must not read every
+    // counter-indexed write as a scatter (false-positive IP bait).
+    if !counters.is_empty() {
+        for indices in la.refs.array_writes.values() {
+            for idx in indices {
+                let vars = vars_in(idx);
+                if !vars.is_empty() && vars.iter().all(|v| !counters.contains(v)) {
+                    sig.indirect_writes += 1;
+                }
+            }
+        }
+    }
+
+    sig
+}
+
+/// Classify a signature against the registry block shapes.  Predicates
+/// are ordered most-specific first; `None` means no block matches (the
+/// laplace2d negative space lands here).
+pub fn classify(sig: &NestSignature) -> Option<&'static str> {
+    // MRI-Q-style field computation: 2-nest, scalar accumulators, trig
+    // in the inner body, and a product of distinct array reads.
+    if sig.depth == 2 && sig.accumulations >= 1 && sig.trig_calls >= 2 && sig.product_of_reads {
+        return Some(TRIG_ACCUMULATION);
+    }
+    // FIR convolution: 2-nest, scalar accumulators, sliding-window reads
+    // mixing both counters, signal×taps product, no trig in the kernel.
+    if sig.depth == 2
+        && sig.accumulations >= 1
+        && sig.trig_calls == 0
+        && sig.cross_indexed_reads >= 1
+        && sig.offset_reads >= 1
+        && sig.product_of_reads
+    {
+        return Some(FIR_FILTER);
+    }
+    // Dense matmul: 3-nest, inner accumulator, A×B product with both
+    // operands cross-indexed, and no boundary guard (a guarded 3-nest is
+    // a stencil sweep, not a matmul).
+    if sig.depth == 3
+        && sig.accumulations >= 1
+        && !sig.guarded
+        && sig.cross_indexed_reads >= 2
+        && sig.product_of_reads
+    {
+        return Some(DENSE_MATMUL);
+    }
+    // Histogram fill: flat loop reading an array and scattering writes
+    // at a data-dependent bin index.
+    if sig.depth == 1 && sig.indirect_writes >= 1 && sig.arrays_read >= 1 {
+        return Some(HISTOGRAM_BIN);
+    }
+    None
+}
+
+fn descendants(loops: &[LoopAnalysis], root: LoopId) -> Vec<LoopId> {
+    let mut out = vec![root];
+    let mut stack = vec![root];
+    while let Some(id) = stack.pop() {
+        if let Some(la) = loops.iter().find(|l| l.info.id == id) {
+            for c in &la.info.children {
+                out.push(*c);
+                stack.push(*c);
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Detect every registry block instance in an analyzed program: each
+/// outermost loop nest is signatured and classified; matches come back
+/// in source (root `LoopId`) order.
+pub fn detect(loops: &[LoopAnalysis]) -> Vec<DetectedBlock> {
+    let mut out = Vec::new();
+    for la in loops {
+        if la.info.depth != 0 {
+            continue; // blocks are rooted at outermost statements
+        }
+        let sig = signature(la);
+        if let Some(name) = classify(&sig) {
+            out.push(DetectedBlock {
+                name,
+                root: la.info.id,
+                loops: descendants(loops, la.info.id),
+                signature: sig,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::ir;
+
+    fn blocks_of(app: &apps::App) -> Vec<DetectedBlock> {
+        detect(&ir::analyze(&app.parse()))
+    }
+
+    #[test]
+    fn tdfir_fir_nest_detected_with_members() {
+        let bs = blocks_of(&apps::TDFIR);
+        let fir = bs
+            .iter()
+            .find(|b| b.root == LoopId(8))
+            .expect("the hot FIR nest must be detected");
+        assert_eq!(fir.name, FIR_FILTER);
+        assert_eq!(fir.loops, vec![LoopId(8), LoopId(9)], "block subsumes L8+L9");
+        assert_eq!(fir.signature.depth, 2);
+        assert!(fir.signature.accumulations >= 2, "{:?}", fir.signature);
+        assert!(fir.signature.product_of_reads);
+    }
+
+    #[test]
+    fn tdfir_memset_and_stabilize_do_not_match() {
+        let bs = blocks_of(&apps::TDFIR);
+        assert!(bs.iter().all(|b| b.root != LoopId(7)), "memset is not a block");
+        assert!(bs.iter().all(|b| b.root != LoopId(10)), "stabilize is not a block");
+    }
+
+    #[test]
+    fn tdfir_histogram_fill_detected() {
+        let bs = blocks_of(&apps::TDFIR);
+        let h = bs
+            .iter()
+            .find(|b| b.name == HISTOGRAM_BIN)
+            .expect("the envelope histogram fill is a block");
+        assert_eq!(h.signature.depth, 1);
+        assert!(h.signature.indirect_writes >= 1);
+    }
+
+    #[test]
+    fn matmul_nest_detected() {
+        let bs = blocks_of(&apps::MATMUL);
+        let mm = bs
+            .iter()
+            .find(|b| b.name == DENSE_MATMUL)
+            .expect("the i/j/k nest must be detected");
+        assert_eq!(mm.root, LoopId(1));
+        assert_eq!(mm.loops, vec![LoopId(1), LoopId(2), LoopId(3)]);
+        assert_eq!(mm.signature.depth, 3);
+        assert!(!mm.signature.guarded);
+    }
+
+    #[test]
+    fn mriq_trig_accumulation_detected() {
+        let bs = blocks_of(&apps::MRIQ);
+        let q = bs
+            .iter()
+            .find(|b| b.root == LoopId(6))
+            .expect("compute_q must be detected");
+        assert_eq!(q.name, TRIG_ACCUMULATION);
+        assert_eq!(q.loops, vec![LoopId(6), LoopId(7)]);
+        assert!(q.signature.trig_calls >= 2);
+    }
+
+    #[test]
+    fn histogram_scatter_detected() {
+        let bs = blocks_of(&apps::HISTOGRAM);
+        let h = bs
+            .iter()
+            .find(|b| b.root == LoopId(3))
+            .expect("build_hist must be detected");
+        assert_eq!(h.name, HISTOGRAM_BIN);
+        assert!(h.signature.indirect_writes >= 1);
+    }
+
+    #[test]
+    fn laplace2d_matches_nothing() {
+        // the boundary-guarded Jacobi sweep is the pinned negative space:
+        // no false-positive IP substitution on stencils
+        assert!(blocks_of(&apps::LAPLACE2D).is_empty());
+    }
+
+    #[test]
+    fn non_canonical_copy_loops_are_not_scatters() {
+        // decreasing `for` and `while` copy loops index by their own
+        // counter — neither may be claimed as a histogram block
+        let src = "void f(float dst[], float src[], int n) {\
+            int i;\
+            for (i = n - 1; i >= 0; i -= 1) { dst[i] = src[i]; }\
+            i = 0;\
+            while (i < n) { dst[i] = src[i]; i = i + 1; } }";
+        let p = crate::cparse::parse(src).unwrap();
+        let bs = detect(&ir::analyze(&p));
+        assert!(bs.is_empty(), "copy loops misread as blocks: {bs:?}");
+    }
+
+    #[test]
+    fn detection_is_name_blind() {
+        // same FIR structure, scrambled identifiers: still matches
+        let src = "void zzz(float p[], float q[], float r[], int n, int t) {\
+            int a;\
+            for (a = 0; a < n; a++) {\
+                float z; z = 0.0;\
+                for (int b = 0; b < t; b++) {\
+                    if (a - b >= 0) { z += p[a - b] * q[b]; }\
+                }\
+                r[a] = z;\
+            } }";
+        let p = crate::cparse::parse(src).unwrap();
+        let bs = detect(&ir::analyze(&p));
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs[0].name, FIR_FILTER);
+    }
+}

@@ -1,0 +1,174 @@
+//! Function-block offloading: detect whole algorithmic blocks, match
+//! them to an accelerator IP/library registry, and co-search them with
+//! loop statements.
+//!
+//! The source paper offloads individual loop statements; Yamato's
+//! follow-ups (arXiv:2004.09883, arXiv:2005.04174) show the bigger wins
+//! come from recognizing whole *function blocks* — an FIR filter, a
+//! dense matmul, a histogram fill — and swapping them for hand-tuned
+//! accelerator IP or library kernels.  This subsystem implements that
+//! layer in three parts:
+//!
+//! * [`detect`] — a **structural** detector over the loop-nest IR: every
+//!   outermost loop nest gets a normalized [`NestSignature`] (depth,
+//!   accumulation pattern, array-access shape, operator classes) and is
+//!   matched against the registry by signature predicates — never by
+//!   function or variable names.
+//! * [`registry`] — the IP/library registry: per-block, per-backend
+//!   implementations with cost/resource/transfer models.  Arria10 IP
+//!   cores are **prebuilt** (near-zero recompile cost — linking a
+//!   partial-reconfiguration region, not a 3-hour place-and-route);
+//!   GPU library kernels ride the existing SIMT cost model.
+//! * the combined search — a `BlockNarrow` stage in
+//!   [`crate::coordinator::stages`] quotes block offers through the
+//!   [`crate::backend::OffloadBackend`] seam and measures block
+//!   placements next to the loop-statement patterns; a block *subsumes*
+//!   its member loops, and the selector resolves the overlap so the
+//!   combined search never loses to loop-only search.
+//!
+//! Exposed on the CLI as `flopt --blocks {off,on,only}`.
+
+pub mod detect;
+pub mod registry;
+
+pub use detect::{detect, DetectedBlock, NestSignature};
+pub use registry::{entry_for, ip_for, registry, BlockIp, BlockOffer, IpModel};
+
+use crate::cparse::ast::LoopId;
+use crate::interp::Profile;
+use crate::ir::LoopAnalysis;
+
+/// How the offload search treats function blocks (`flopt --blocks ...`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BlockMode {
+    /// Loop-statement search only (the source paper's flow; the default).
+    #[default]
+    Off,
+    /// Co-search function-block replacement with loop-statement offload.
+    On,
+    /// Function-block replacement only — no loop-statement candidates
+    /// are pre-compiled or measured (near-zero compile-lane hours).
+    Only,
+}
+
+impl BlockMode {
+    /// Parse a `--blocks` argument (case-insensitive).
+    pub fn parse(s: &str) -> Option<BlockMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" => Some(BlockMode::Off),
+            "on" => Some(BlockMode::On),
+            "only" => Some(BlockMode::Only),
+            _ => None,
+        }
+    }
+
+    /// Canonical label ("off", "on", "only") — also the cache-key and
+    /// JSON encoding of the mode.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BlockMode::Off => "off",
+            BlockMode::On => "on",
+            BlockMode::Only => "only",
+        }
+    }
+}
+
+impl std::fmt::Display for BlockMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// Result of compiling + measuring one function-block placement (the
+/// block-replacement analogue of
+/// [`crate::coordinator::verify_env::PatternMeasurement`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockMeasurement {
+    /// Registry name of the placed block (e.g. `fir_filter`).
+    pub block: String,
+    /// Member loop statements the block replacement subsumes.
+    pub block_loops: Vec<LoopId>,
+    /// Loop statements co-offloaded alongside the block (the overlap-
+    /// resolved remainder of a loop-statement pattern).
+    pub extra_loops: Vec<LoopId>,
+    /// Combined device resource fraction (IP core + extra kernels).
+    pub utilization: f64,
+    /// Did the simulated compile/link produce a runnable image?
+    pub compiled: bool,
+    /// Simulated compile seconds charged to the farm (near-zero for a
+    /// prebuilt IP alone; plus the pattern compile when loops ride along).
+    pub compile_sim_s: f64,
+    /// Measured wall-clock of the sample app under this placement (model).
+    pub time_s: f64,
+    /// Speedup vs. the all-CPU run.
+    pub speedup: f64,
+}
+
+impl BlockMeasurement {
+    /// Human-readable label, e.g. `fir_filter[L8+L9]+L10`.
+    pub fn label(&self) -> String {
+        let members = self
+            .block_loops
+            .iter()
+            .map(|l| l.to_string())
+            .collect::<Vec<_>>()
+            .join("+");
+        let mut out = format!("{}[{members}]", self.block);
+        for l in &self.extra_loops {
+            out.push('+');
+            out.push_str(&l.to_string());
+        }
+        out
+    }
+}
+
+/// H2D/D2H transfer byte counts of a block replacement: the generated
+/// host program's footprint rule ([`crate::fpga::timing::transfer_bytes`])
+/// applied to the block's root nest — everything the nest touched goes
+/// to the device, written arrays come back.
+pub fn transfer_bytes(
+    loops: &[LoopAnalysis],
+    profile: &Profile,
+    block: &DetectedBlock,
+) -> (u64, u64) {
+    let Some(la) = loops.iter().find(|l| l.info.id == block.root) else {
+        return (0, 0);
+    };
+    let Some(lp) = profile.loop_profile(block.root) else {
+        return (0, 0);
+    };
+    crate::fpga::timing::transfer_bytes(la, lp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_and_roundtrips() {
+        for m in [BlockMode::Off, BlockMode::On, BlockMode::Only] {
+            assert_eq!(BlockMode::parse(m.as_str()), Some(m));
+            assert_eq!(format!("{m}"), m.as_str());
+        }
+        assert_eq!(BlockMode::parse("ON"), Some(BlockMode::On));
+        assert_eq!(BlockMode::parse("auto"), None);
+        assert_eq!(BlockMode::default(), BlockMode::Off);
+    }
+
+    #[test]
+    fn measurement_labels() {
+        let m = BlockMeasurement {
+            block: "fir_filter".to_string(),
+            block_loops: vec![LoopId(8), LoopId(9)],
+            extra_loops: vec![LoopId(10)],
+            utilization: 0.4,
+            compiled: true,
+            compile_sim_s: 420.0,
+            time_s: 0.1,
+            speedup: 2.0,
+        };
+        assert_eq!(m.label(), "fir_filter[L8+L9]+L10");
+        let alone = BlockMeasurement { extra_loops: vec![], ..m };
+        assert_eq!(alone.label(), "fir_filter[L8+L9]");
+    }
+}

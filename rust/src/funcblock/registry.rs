@@ -1,0 +1,162 @@
+//! The accelerator IP / library-kernel registry.
+//!
+//! Each registry entry pairs one detected block shape with per-backend
+//! implementations: an **Arria10 IP core** (prebuilt — the simulated
+//! compile is a partial-reconfiguration link of minutes, not the 3-hour
+//! place-and-route a generated kernel pays) and a **GPU library kernel**
+//! (cuBLAS/cuFFT-class, built in the minutes-scale SIMT regime).  Each
+//! implementation carries the cost/resource/transfer model the backend
+//! needs to quote a [`BlockOffer`]: a calibrated speedup of the
+//! hand-tuned implementation over the single-thread CPU model, a device
+//! resource fraction, and the link/build cost.
+//!
+//! Hand-tuned IP beats auto-generated kernels — that is the whole point
+//! of the function-block layer (arXiv:2004.09883): the generated
+//! single-work-item OpenCL of the loop path reaches low-single-digit
+//! speedups, while a vendor FIR/matmul core streams at full clip.  The
+//! speedups below encode that calibration; the combined search still
+//! *measures* every placement and keeps whichever side wins.
+
+use crate::backend::Destination;
+
+use super::detect::DetectedBlock;
+use super::detect::{DENSE_MATMUL, FIR_FILTER, HISTOGRAM_BIN, TRIG_ACCUMULATION};
+
+/// Cost/resource model of one block implementation on one backend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IpModel {
+    /// Calibrated speedup of the hand-tuned implementation over the
+    /// single-thread CPU model of the replaced nest (compute only;
+    /// transfers are charged separately from the observed footprints).
+    pub speedup_vs_cpu: f64,
+    /// Device resource fraction the implementation occupies (FPGA:
+    /// utilization incl. BSP share; GPU: occupancy-style pressure).
+    pub utilization: f64,
+    /// Simulated compile/link seconds: PR-region link for prebuilt FPGA
+    /// IP, library build+link for GPU kernels — minutes, never hours.
+    pub compile_sim_s: f64,
+}
+
+/// One registry entry: a block shape plus its per-backend implementations.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockIp {
+    /// Block-shape name ([`crate::funcblock::detect`] vocabulary).
+    pub name: &'static str,
+    /// One-line description of the library implementation.
+    pub description: &'static str,
+    /// Arria10 IP core, when one exists for this shape.
+    pub fpga: Option<IpModel>,
+    /// GPU library kernel, when one exists for this shape.
+    pub gpu: Option<IpModel>,
+}
+
+/// The built-in registry.  Deliberately **no** stencil entry: laplace2d's
+/// boundary-guarded sweep must never be IP-substituted
+/// (`rust/tests/funcblock.rs` pins that negative space per backend).
+pub const REGISTRY: &[BlockIp] = &[
+    BlockIp {
+        name: FIR_FILTER,
+        description: "systolic complex FIR core / cuFFT-class FIR library kernel",
+        fpga: Some(IpModel { speedup_vs_cpu: 16.0, utilization: 0.34, compile_sim_s: 420.0 }),
+        gpu: Some(IpModel { speedup_vs_cpu: 6.0, utilization: 0.50, compile_sim_s: 90.0 }),
+    },
+    BlockIp {
+        name: DENSE_MATMUL,
+        description: "blocked systolic GEMM core / cuBLAS sgemm",
+        fpga: Some(IpModel { speedup_vs_cpu: 12.0, utilization: 0.46, compile_sim_s: 420.0 }),
+        gpu: Some(IpModel { speedup_vs_cpu: 8.0, utilization: 0.60, compile_sim_s: 60.0 }),
+    },
+    BlockIp {
+        name: TRIG_ACCUMULATION,
+        description: "CORDIC trig-accumulation core / SFU-resident field kernel",
+        fpga: Some(IpModel { speedup_vs_cpu: 12.0, utilization: 0.52, compile_sim_s: 420.0 }),
+        gpu: Some(IpModel { speedup_vs_cpu: 7.0, utilization: 0.55, compile_sim_s: 90.0 }),
+    },
+    BlockIp {
+        name: HISTOGRAM_BIN,
+        description: "banked local-bin histogram core / atomics histogram kernel",
+        fpga: Some(IpModel { speedup_vs_cpu: 6.0, utilization: 0.22, compile_sim_s: 420.0 }),
+        gpu: Some(IpModel { speedup_vs_cpu: 3.0, utilization: 0.35, compile_sim_s: 60.0 }),
+    },
+];
+
+impl BlockIp {
+    /// This entry's implementation for a destination (`None` when the
+    /// shape has no implementation on that device — the CPU never does).
+    pub fn for_destination(&self, dest: Destination) -> Option<&IpModel> {
+        match dest {
+            Destination::Fpga => self.fpga.as_ref(),
+            Destination::Gpu => self.gpu.as_ref(),
+            Destination::Cpu => None,
+        }
+    }
+}
+
+/// The registry contents.
+pub fn registry() -> &'static [BlockIp] {
+    REGISTRY
+}
+
+/// Look up a block shape's registry entry by name.
+pub fn entry_for(name: &str) -> Option<&'static BlockIp> {
+    REGISTRY.iter().find(|b| b.name == name)
+}
+
+/// Look up the implementation of a block shape on a destination
+/// (`None` when the registry carries no implementation for that pair —
+/// the backend then quotes no offer).
+pub fn ip_for(name: &str, dest: Destination) -> Option<&'static IpModel> {
+    entry_for(name)?.for_destination(dest)
+}
+
+/// A backend's quoted offer to replace one detected block with a
+/// registry implementation — what the `BlockNarrow` stage collects and
+/// the block measurement consumes.
+#[derive(Debug, Clone)]
+pub struct BlockOffer {
+    /// The detected block this offer replaces.
+    pub block: DetectedBlock,
+    /// Registry description of the implementation.
+    pub description: &'static str,
+    /// Device resource fraction of the implementation.
+    pub utilization: f64,
+    /// Simulated compile/link seconds (near-zero for prebuilt IP).
+    pub compile_sim_s: f64,
+    /// Modeled device-side seconds of the block on the sample workload,
+    /// including host↔device transfers.
+    pub exec_s: f64,
+    /// CPU-model seconds of the replaced nest on the sample workload
+    /// (what the replacement removes from the host time).
+    pub cpu_time_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_is_minutes_scale_and_sub_cap() {
+        for e in registry() {
+            for ip in [e.fpga.as_ref(), e.gpu.as_ref()].into_iter().flatten() {
+                assert!(ip.speedup_vs_cpu > 1.0, "{}", e.name);
+                assert!(ip.utilization > 0.0 && ip.utilization < 0.85, "{}", e.name);
+                assert!(
+                    ip.compile_sim_s < 1800.0,
+                    "{}: IP link must be minutes, not hours",
+                    e.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_by_destination() {
+        assert!(ip_for(FIR_FILTER, Destination::Fpga).is_some());
+        assert!(ip_for(FIR_FILTER, Destination::Gpu).is_some());
+        assert!(ip_for(FIR_FILTER, Destination::Cpu).is_none(), "CPU needs no IP");
+        assert!(ip_for("stencil", Destination::Fpga).is_none(), "no stencil entry");
+        let f = ip_for(FIR_FILTER, Destination::Fpga).unwrap();
+        let g = ip_for(FIR_FILTER, Destination::Gpu).unwrap();
+        assert!(f.speedup_vs_cpu > g.speedup_vs_cpu, "deep pipeline beats SIMT on FIR");
+    }
+}

@@ -31,6 +31,7 @@ pub mod coordinator;
 pub mod cparse;
 pub mod cpu;
 pub mod fpga;
+pub mod funcblock;
 pub mod hls;
 pub mod intensity;
 pub mod interp;

@@ -13,9 +13,12 @@
 //! ```
 //!
 //! Options for `offload`/`batch`/`compare`: `--target {fpga,gpu,mixed}`
-//! plus `--a N --b N --c N --d N --lanes N --full-scale` (default runs
-//! the paper's a=5, b=1, c=3, d=4 against the FPGA at test scale;
-//! `--full-scale` uses the paper-sized workloads).  Caching:
+//! and `--blocks {off,on,only}` (function-block co-search against the
+//! IP/library registry — `on` co-searches blocks with loop statements,
+//! `only` searches blocks alone), plus `--a N --b N --c N --d N
+//! --lanes N --full-scale` (default runs the paper's a=5, b=1, c=3, d=4
+//! against the FPGA at test scale; `--full-scale` uses the paper-sized
+//! workloads).  Caching:
 //! `--cache-dir <dir>` persists stage artifacts as JSON so repeat
 //! searches burn zero additional simulated compile-hours; `--no-cache`
 //! disables artifact reuse entirely.  `--pool N` sets the batch
@@ -37,6 +40,7 @@ use flopt::coordinator::pipeline::{
 };
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
+use flopt::funcblock::BlockMode;
 use flopt::intensity;
 use flopt::runtime::{default_artifact_dir, Runtime};
 use flopt::service::{BatchRequest, BatchService};
@@ -55,9 +59,10 @@ fn usage() -> ! {
          \x20 opencl <app> [opts]       print the solution's OpenCL\n\
          \x20 verify <app>              PJRT numerics cross-check\n\
          \x20 compare <app> [opts]      proposed vs baselines\n\
-         \x20 blocks <app>              functional-block detection (Step 1)\n\
+         \x20 blocks <app>              function-block detection + IP offers\n\
          \x20 adapt <app> [opts]        Steps 4-6: size, place, verify operation\n\
-         opts: --target {{fpga,gpu,mixed}} --a N --b N --c N --d N --lanes N\n\
+         opts: --target {{fpga,gpu,mixed}} --blocks {{off,on,only}}\n\
+         \x20     --a N --b N --c N --d N --lanes N\n\
          \x20     --ga-pop N --ga-gen N --full-scale\n\
          \x20     --cache-dir <dir> --no-cache --pool N\n\
          (`flopt --target mixed` with no app searches all registered apps\n\
@@ -104,10 +109,22 @@ fn parse_opts(args: &[String]) -> Opts {
             "--pool" => pool = take(&mut i).max(1),
             "--target" => {
                 i += 1;
-                target = args
-                    .get(i)
-                    .and_then(|v| Target::parse(v))
-                    .unwrap_or_else(|| usage());
+                let v = args.get(i).unwrap_or_else(|| usage());
+                target = Target::parse(v).unwrap_or_else(|| {
+                    eprintln!(
+                        "unknown --target `{v}`: expected one of fpga, gpu, mixed \
+                         (cpu is the baseline, not a search target)"
+                    );
+                    std::process::exit(2);
+                });
+            }
+            "--blocks" => {
+                i += 1;
+                let v = args.get(i).unwrap_or_else(|| usage());
+                cfg.block_mode = BlockMode::parse(v).unwrap_or_else(|| {
+                    eprintln!("unknown --blocks `{v}`: expected one of off, on, only");
+                    std::process::exit(2);
+                });
             }
             "--cache-dir" => {
                 i += 1;
@@ -356,9 +373,10 @@ fn main() -> flopt::Result<()> {
             let app = get_app(&opts);
             let program = app.parse();
             let loops = flopt::ir::analyze(&program);
+            println!("-- Deckard-style similarity matches (threshold 0.90) --");
             let matches = flopt::ir::funcblock::detect(&loops, 0.90);
             if matches.is_empty() {
-                println!("no functional blocks recognized (threshold 0.90)");
+                println!("no functional blocks recognized");
             }
             for m in matches {
                 println!(
@@ -370,6 +388,39 @@ fn main() -> flopt::Result<()> {
                         .map(|a| format!("  [pre-optimized artifact: {a}]"))
                         .unwrap_or_default()
                 );
+            }
+            println!("-- structural detector + IP registry offers --");
+            let analysis = analyze_app(app, !opts.full_scale)?;
+            let detected = flopt::funcblock::detect(&analysis.loops);
+            if detected.is_empty() {
+                println!("no registry blocks detected");
+            }
+            for b in &detected {
+                println!(
+                    "block {} rooted at {} (subsumes {})",
+                    b.name,
+                    b.root,
+                    b.loops
+                        .iter()
+                        .map(|l| l.to_string())
+                        .collect::<Vec<_>>()
+                        .join("+")
+                );
+                for be in Target::Mixed.backends() {
+                    match be.block_offer(&analysis.loops, &analysis.profile, &XEON_3104, b) {
+                        Some(o) => println!(
+                            "  {:<5} offer: {} — util {:.2}, link {:.0} s, exec {:.3} ms \
+                             (replaces {:.3} ms CPU)",
+                            be.name(),
+                            o.description,
+                            o.utilization,
+                            o.compile_sim_s,
+                            o.exec_s * 1e3,
+                            o.cpu_time_s * 1e3
+                        ),
+                        None => println!("  {:<5} no registry implementation", be.name()),
+                    }
+                }
             }
         }
         "adapt" => {

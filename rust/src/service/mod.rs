@@ -28,13 +28,13 @@ use std::sync::Arc;
 
 use crate::apps::App;
 use crate::backend::{OffloadBackend, SearchMethod, Target};
-use crate::baselines::ga::{self, GaConfig};
 use crate::cache::{self, CacheKey, CacheStore};
 use crate::config::SearchConfig;
-use crate::coordinator::mixed::DestinationSearch;
+use crate::coordinator::mixed::{ga_destination_search, DestinationSearch};
 use crate::coordinator::pipeline::{offload_search, AppAnalysis, SearchTrace};
 use crate::coordinator::verify_env::VerifyEnv;
 use crate::cpu::CpuModel;
+use crate::funcblock::BlockMode;
 use crate::metrics::{Event, SimClock};
 use crate::util::pool::Pool;
 
@@ -321,7 +321,8 @@ impl BatchService {
         // the shared cache, sequentially, up front) with its analysis and
         // any warm trace — execution is a pure function of the unit.
         let mut cold_specs: Vec<UnitSpec> = Vec::new();
-        let mut publish: Vec<(Arc<CacheStore>, CacheKey, CacheKey)> = Vec::new();
+        let mut publish: Vec<(Arc<CacheStore>, CacheKey, CacheKey, Option<CacheKey>)> =
+            Vec::new();
         for (idx, (u, state)) in units.iter().zip(&states).enumerate() {
             if state.is_some() {
                 continue;
@@ -343,7 +344,16 @@ impl BatchService {
                 if let Some(m) = self.cache.get_measure(meas_key) {
                     store.put_measure(meas_key, &m);
                 }
-                publish.push((Arc::clone(&store), pre_key, meas_key));
+                let blocks_key = if u.cfg.block_mode != BlockMode::Off {
+                    let k = cache::blocks_key(u.app, &analysis, u.backend, &u.cfg);
+                    if let Some(b) = self.cache.get_blocks(k) {
+                        store.put_blocks(k, &b);
+                    }
+                    Some(k)
+                } else {
+                    None
+                };
+                publish.push((Arc::clone(&store), pre_key, meas_key, blocks_key));
             }
             cold_specs.push(UnitSpec {
                 idx,
@@ -422,12 +432,17 @@ impl BatchService {
 
         // ---- publish freshly computed stage artifacts ------------------
         // (deterministic: unit order; idempotent for seeded entries)
-        for (store, pre_key, meas_key) in publish {
+        for (store, pre_key, meas_key, blocks_key) in publish {
             if let Some(p) = store.get_precompile(pre_key) {
                 self.cache.put_precompile(pre_key, &p);
             }
             if let Some(m) = store.get_measure(meas_key) {
                 self.cache.put_measure(meas_key, &m);
+            }
+            if let Some(bkey) = blocks_key {
+                if let Some(b) = store.get_blocks(bkey) {
+                    self.cache.put_blocks(bkey, &b);
+                }
             }
         }
 
@@ -445,14 +460,15 @@ impl BatchService {
 
 /// Build a request-level outcome from a cached (or freshly computed)
 /// narrowed-flow trace: the trace's canonical times make this a pure
-/// function of the trace.
+/// function of the trace.  The carried solution is the trace's overall
+/// winner — a block placement when one beat every loop pattern.
 fn destination_from_trace(t: &SearchTrace) -> DestinationSearch {
     DestinationSearch {
         app_name: t.app_name.clone(),
         destination: t.destination,
         method: "narrowed-2round",
         speedup: t.speedup(),
-        best: t.best.clone(),
+        best: t.solution_measurement(),
         patterns_measured: t.patterns_measured(),
         compile_hours: t.compile_hours,
         cpu_time_s: t.cpu_time_s,
@@ -481,7 +497,6 @@ fn execute_unit(
     let clock = Arc::new(SimClock::new(spec.cfg.compile_parallelism.max(1)));
     let env = VerifyEnv::with_clock(spec.backend, cpu, spec.cfg.clone(), Arc::clone(&clock))
         .with_cache(Arc::clone(&spec.store));
-    let meter = clock.compile_meter();
     let (outcome, trace) = match spec.backend.search_method() {
         SearchMethod::NarrowedTwoRound => {
             let t = offload_search(spec.app, &env, spec.test_scale)?;
@@ -491,22 +506,8 @@ fn execute_unit(
             (outcome, Some(t))
         }
         SearchMethod::MeasurementGa => {
-            let ga_cfg = GaConfig {
-                population: spec.cfg.ga_population,
-                generations: spec.cfg.ga_generations,
-                ..GaConfig::default()
-            };
-            let out = ga::search(&spec.analysis, &env, &ga_cfg);
-            let outcome = DestinationSearch {
-                app_name: spec.analysis.app_name.clone(),
-                destination: spec.backend.destination(),
-                method: "ga",
-                speedup: out.speedup(),
-                best: out.best,
-                patterns_measured: out.evaluations,
-                compile_hours: meter.lane_hours(),
-                cpu_time_s: env.cpu_baseline_s(&spec.analysis),
-            };
+            // shared GA + block co-search flow (meters the same clock)
+            let outcome = ga_destination_search(&spec.analysis, &env, &spec.cfg);
             (outcome, None)
         }
     };

@@ -1,0 +1,121 @@
+//! `Destination` round-trips: CLI parsing, trace labels, report JSON —
+//! plus the CLI's unknown-`--target` error path.
+
+use flopt::apps;
+use flopt::backend::{Destination, Target, FPGA, GPU};
+use flopt::cache::codec;
+use flopt::config::SearchConfig;
+use flopt::coordinator::mixed::DestinationSearch;
+use flopt::coordinator::pipeline::offload_search;
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::util::json;
+
+const ALL: [Destination; 3] = [Destination::Cpu, Destination::Fpga, Destination::Gpu];
+
+#[test]
+fn every_variant_roundtrips_through_cli_parsing() {
+    for d in ALL {
+        assert_eq!(Destination::parse(d.as_str()), Some(d), "canonical label");
+        assert_eq!(
+            Destination::parse(&d.as_str().to_ascii_lowercase()),
+            Some(d),
+            "parsing is case-insensitive"
+        );
+        assert_eq!(format!("{d}"), d.as_str(), "Display matches the label");
+    }
+    assert_eq!(Destination::parse("tpu"), None);
+    assert_eq!(Destination::parse(""), None);
+}
+
+#[test]
+fn target_parsing_covers_destinations_and_rejects_unknowns() {
+    assert_eq!(Target::parse("fpga"), Some(Target::Fpga));
+    assert_eq!(Target::parse("GPU"), Some(Target::Gpu));
+    assert_eq!(Target::parse("mixed"), Some(Target::Mixed));
+    assert_eq!(Target::parse("cpu"), None, "the baseline is not a search target");
+    assert_eq!(Target::parse("npu"), None);
+    assert_eq!(Target::Fpga.destination(), Some(Destination::Fpga));
+    assert_eq!(Target::Gpu.destination(), Some(Destination::Gpu));
+    assert_eq!(Target::Mixed.destination(), None);
+}
+
+#[test]
+fn every_variant_roundtrips_through_report_json() {
+    for d in ALL {
+        let ds = DestinationSearch {
+            app_name: "probe".to_string(),
+            destination: d,
+            method: "ga",
+            speedup: 1.5,
+            best: None,
+            patterns_measured: 3,
+            compile_hours: 0.25,
+            cpu_time_s: 0.01,
+        };
+        let encoded = json::to_string(&codec::destination_to_json(&ds));
+        let back = codec::destination_from_json(&json::parse(&encoded).unwrap())
+            .expect("decode");
+        assert_eq!(back.destination, d, "JSON round-trip must preserve the variant");
+        assert!(
+            ds.render().contains(d.as_str()),
+            "report render must label the destination: {}",
+            ds.render()
+        );
+    }
+}
+
+#[test]
+fn trace_labels_carry_the_destination() {
+    for (backend, label) in [
+        (&FPGA as &'static dyn flopt::backend::OffloadBackend, "FPGA"),
+        (&GPU, "GPU"),
+    ] {
+        let env = VerifyEnv::new(backend, &XEON_3104, SearchConfig::default());
+        let t = offload_search(&apps::MATMUL, &env, true).unwrap();
+        assert_eq!(t.destination.as_str(), label);
+        let rendered = t.render();
+        assert!(
+            rendered.contains(&format!("matmul → {label}")),
+            "trace header must label {label}: {rendered}"
+        );
+        assert!(
+            rendered.contains(&format!("on {label}")) || rendered.contains(&format!("no {label}")),
+            "solution line must label {label}: {rendered}"
+        );
+    }
+}
+
+#[test]
+fn unknown_cli_target_errors_helpfully() {
+    let exe = env!("CARGO_BIN_EXE_flopt");
+    let out = std::process::Command::new(exe)
+        .args(["offload", "matmul", "--target", "tpu"])
+        .output()
+        .expect("run flopt");
+    assert_eq!(out.status.code(), Some(2), "bad --target must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("unknown --target `tpu`"),
+        "error must name the bad value: {stderr}"
+    );
+    assert!(
+        stderr.contains("fpga") && stderr.contains("gpu") && stderr.contains("mixed"),
+        "error must list the accepted targets: {stderr}"
+    );
+}
+
+#[test]
+fn unknown_cli_blocks_mode_errors_helpfully() {
+    let exe = env!("CARGO_BIN_EXE_flopt");
+    let out = std::process::Command::new(exe)
+        .args(["offload", "matmul", "--blocks", "sometimes"])
+        .output()
+        .expect("run flopt");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("unknown --blocks `sometimes`"),
+        "error must name the bad value: {stderr}"
+    );
+}

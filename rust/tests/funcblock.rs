@@ -1,0 +1,236 @@
+//! Function-block offloading subsystem: pinned acceptance invariants.
+//!
+//! * Combined loop+block search (`--blocks on`) is **never worse** than
+//!   loop-only search, for all five apps on both backends.
+//! * The structural detector finds the FIR block in tdfir and the
+//!   accumulation block in matmul, and rejects laplace2d's
+//!   boundary-guarded stencil — per backend, no IP offer is quoted.
+//! * A warm cached re-run of a `--blocks on` search is bit-identical
+//!   and burns zero new compile-lane hours.
+
+use flopt::apps::{self, App};
+use flopt::backend::{OffloadBackend, FPGA, GPU};
+use flopt::cache::codec;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::{analyze_app, offload_search, SearchTrace};
+use flopt::coordinator::stages::stage_block_narrow;
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cparse::ast::LoopId;
+use flopt::cpu::XEON_3104;
+use flopt::funcblock::{self, BlockMode};
+use flopt::ir;
+
+fn cfg_with(mode: BlockMode) -> SearchConfig {
+    SearchConfig { block_mode: mode, ..SearchConfig::default() }
+}
+
+fn search(app: &App, backend: &'static dyn OffloadBackend, mode: BlockMode) -> SearchTrace {
+    let env = VerifyEnv::new(backend, &XEON_3104, cfg_with(mode));
+    offload_search(app, &env, true).expect("search")
+}
+
+#[test]
+fn combined_search_never_loses_to_loop_only() {
+    for app in apps::all() {
+        for backend in [&FPGA as &'static dyn OffloadBackend, &GPU] {
+            let loop_only = search(app, backend, BlockMode::Off);
+            let combined = search(app, backend, BlockMode::On);
+            assert!(
+                combined.speedup() >= loop_only.speedup(),
+                "{} on {}: combined {} < loop-only {}",
+                app.name,
+                backend.name(),
+                combined.speedup(),
+                loop_only.speedup()
+            );
+            // the loop-statement side of the combined search is the
+            // loop-only search, bit for bit
+            assert_eq!(combined.top_a, loop_only.top_a, "{}", app.name);
+            assert_eq!(combined.top_c, loop_only.top_c, "{}", app.name);
+            assert_eq!(combined.rounds.len(), loop_only.rounds.len());
+            assert_eq!(
+                combined.best.as_ref().map(|b| b.speedup),
+                loop_only.best.as_ref().map(|b| b.speedup),
+                "{}",
+                app.name
+            );
+        }
+    }
+}
+
+#[test]
+fn detector_finds_fir_in_tdfir() {
+    let loops = ir::analyze(&apps::TDFIR.parse());
+    let blocks = funcblock::detect(&loops);
+    let fir = blocks
+        .iter()
+        .find(|b| b.root == LoopId(8))
+        .expect("the hot FIR nest must be detected");
+    assert_eq!(fir.name, "fir_filter");
+    assert_eq!(fir.loops, vec![LoopId(8), LoopId(9)]);
+}
+
+#[test]
+fn detector_finds_accumulation_block_in_matmul() {
+    let loops = ir::analyze(&apps::MATMUL.parse());
+    let blocks = funcblock::detect(&loops);
+    let mm = blocks
+        .iter()
+        .find(|b| b.name == "dense_matmul")
+        .expect("the i/j/k accumulation nest must be detected");
+    assert_eq!(mm.root, LoopId(1));
+    assert_eq!(mm.loops, vec![LoopId(1), LoopId(2), LoopId(3)]);
+}
+
+#[test]
+fn laplace2d_rejected_per_backend() {
+    // detector level: the boundary-guarded stencil matches no registry
+    // block at all
+    let loops = ir::analyze(&apps::LAPLACE2D.parse());
+    assert!(
+        funcblock::detect(&loops).is_empty(),
+        "laplace2d must not match any registry block"
+    );
+    // backend level: neither backend quotes an offer, and a blocks-on
+    // search measures no block placement
+    let analysis = analyze_app(&apps::LAPLACE2D, true).unwrap();
+    for backend in [&FPGA as &'static dyn OffloadBackend, &GPU] {
+        let offers = stage_block_narrow(&analysis, backend, &XEON_3104, BlockMode::On);
+        assert!(
+            offers.offers.is_empty(),
+            "{} must quote no IP for laplace2d",
+            backend.name()
+        );
+        let t = search(&apps::LAPLACE2D, backend, BlockMode::On);
+        assert!(t.blocks.is_empty(), "{}: no false-positive placements", backend.name());
+        assert!(t.best_block.is_none());
+    }
+}
+
+#[test]
+fn tdfir_fpga_block_replacement_is_measured_and_wins_or_ties() {
+    let t = search(&apps::TDFIR, &FPGA, BlockMode::On);
+    assert_eq!(t.block_mode, BlockMode::On);
+    assert!(!t.blocks.is_empty(), "tdfir must measure block placements");
+    let fir = t
+        .blocks
+        .iter()
+        .find(|m| m.block == "fir_filter" && m.block_loops.contains(&LoopId(8)))
+        .expect("the FIR placement must be measured");
+    assert!(fir.compiled);
+    assert!(fir.compile_sim_s < 3600.0, "prebuilt IP links in minutes");
+    assert!(fir.speedup > 1.0, "the FIR IP must beat all-CPU: {}", fir.speedup);
+    // combined never loses; here the hand-tuned core should strictly win
+    let loop_only = search(&apps::TDFIR, &FPGA, BlockMode::Off);
+    assert!(
+        t.speedup() > loop_only.speedup(),
+        "FIR IP ({}) must beat the generated loop kernel ({})",
+        t.speedup(),
+        loop_only.speedup()
+    );
+    assert!(t.solution_is_block());
+    let rendered = t.render();
+    assert!(rendered.contains("block placements"), "{rendered}");
+    assert!(rendered.contains("solution: block fir_filter"), "{rendered}");
+}
+
+#[test]
+fn histogram_scatter_is_unlocked_by_blocks() {
+    // the histogram fill is NOT loop-offloadable (data-dependent writes)
+    // but the registry's banked-bin core handles the whole block — the
+    // scenario the loop-only pipeline cannot express
+    let t = search(&apps::HISTOGRAM, &FPGA, BlockMode::On);
+    let hist = t
+        .blocks
+        .iter()
+        .find(|m| m.block == "histogram_bin")
+        .expect("the scatter block must be measured");
+    assert!(hist.compiled);
+    assert!(hist.block_loops.contains(&LoopId(3)));
+}
+
+#[test]
+fn warm_blocks_on_rerun_is_bit_identical_with_zero_new_compile_hours() {
+    let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg_with(BlockMode::On));
+    let t1 = offload_search(&apps::TDFIR, &env, true).unwrap();
+    let total = env.clock.total_seconds();
+    let lanes = env.clock.compile_lane_seconds();
+    assert!(total > 0.0 && lanes > 0.0, "cold run must charge");
+
+    let t2 = offload_search(&apps::TDFIR, &env, true).unwrap();
+    assert_eq!(
+        env.clock.total_seconds(),
+        total,
+        "warm re-run must burn zero simulated time"
+    );
+    assert_eq!(
+        env.clock.compile_lane_seconds(),
+        lanes,
+        "warm re-run must burn zero compile-lane hours"
+    );
+    assert_eq!(
+        codec::trace_to_string(&t1),
+        codec::trace_to_string(&t2),
+        "warm trace must be bit-identical"
+    );
+}
+
+#[test]
+fn blocks_only_mode_skips_loop_candidates() {
+    let t = search(&apps::TDFIR, &FPGA, BlockMode::Only);
+    assert_eq!(t.block_mode, BlockMode::Only);
+    assert!(t.candidates.is_empty(), "no loop pre-compiles under --blocks only");
+    assert_eq!(t.rounds.iter().map(|r| r.len()).sum::<usize>(), 0);
+    assert!(t.best.is_none());
+    let best = t.best_block.as_ref().expect("a block must be placed");
+    assert!(best.speedup > 1.0);
+    assert!(
+        t.compile_hours < 1.0,
+        "prebuilt IP search must be nearly compile-free: {} h",
+        t.compile_hours
+    );
+    // the loop-only flow pays hours-scale compiles for the same app
+    let loop_only = search(&apps::TDFIR, &FPGA, BlockMode::Off);
+    assert!(loop_only.compile_hours > 5.0);
+}
+
+#[test]
+fn gpu_ga_flow_carries_blocks_through_destination_search() {
+    use flopt::coordinator::mixed::ga_destination_search;
+    let analysis = analyze_app(&apps::MATMUL, true).unwrap();
+    let cfg = cfg_with(BlockMode::Only);
+    let env = VerifyEnv::new(&GPU, &XEON_3104, cfg.clone());
+    let ds = ga_destination_search(&analysis, &env, &cfg);
+    assert_eq!(ds.method, "ip-registry", "--blocks only never runs the GA");
+    assert!(ds.patterns_measured >= 1, "block placements count as measurements");
+    let best = ds.best.as_ref().expect("cuBLAS block must place");
+    assert!(best.pattern.loops.contains(&LoopId(1)), "{:?}", best.pattern);
+    assert!(best.kernels.is_empty(), "an IP placement has no per-kernel breakdown");
+}
+
+#[test]
+fn batch_service_dedupes_and_warms_blocks_on_requests() {
+    use flopt::backend::Target;
+    use flopt::service::{BatchRequest, BatchService};
+    let cfg = cfg_with(BlockMode::On);
+    let req = |target| BatchRequest {
+        app: &apps::MATMUL,
+        target,
+        cfg: cfg.clone(),
+        test_scale: true,
+    };
+    let svc = BatchService::new(2, 1, &XEON_3104);
+    let first = svc
+        .run(&[req(Target::Fpga), req(Target::Gpu), req(Target::Fpga)])
+        .unwrap();
+    assert_eq!(first.unique_cold, 2);
+    assert_eq!(first.deduped, 1);
+    let second = svc
+        .run(&[req(Target::Fpga), req(Target::Gpu)])
+        .unwrap();
+    assert_eq!(second.warm_hits, 2, "blocks-on requests must warm-hit");
+    assert_eq!(second.compile_hours, 0.0);
+    for (a, b) in first.items.iter().zip(&second.items) {
+        assert_eq!(a.outcome.speedup, b.outcome.speedup);
+    }
+}
