@@ -1,0 +1,119 @@
+//! Bench: multi-tenant fleet placement — all registered apps co-scheduled
+//! onto a sweep of board-pool sizes.
+//!
+//! Reports, per pool size: how many tenants placed / queued / rejected /
+//! stayed on the CPU, per-board utilization, the fleet's aggregate
+//! speedup vs all-CPU, the reconfiguration hours the packing charged,
+//! and the real wall-clock of the whole flow (search + pack) cold vs
+//! warm (the placement artifact and every stage under it are cached).
+//!
+//! ```sh
+//! cargo bench --bench fleet_throughput                  # full paper scale
+//! cargo bench --bench fleet_throughput -- --test-scale \
+//!     --report reports/fleet_throughput.json            # CI smoke + JSON
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use flopt::apps;
+use flopt::config::SearchConfig;
+use flopt::cpu::XEON_3104;
+use flopt::fleet::{self, FleetStatus};
+use flopt::funcblock::BlockMode;
+use flopt::service::BatchService;
+use flopt::util::bench::{fmt_s, parse_bench_args};
+use flopt::util::json::{self, Json};
+
+fn main() {
+    let opts = parse_bench_args();
+    let cfg = SearchConfig { block_mode: BlockMode::On, ..SearchConfig::default() };
+    let apps_list: Vec<&'static apps::App> = apps::all();
+    let board_sweep = [1usize, 2, 4, 8];
+
+    println!("=== fleet placement: {} apps x boards sweep ===", apps_list.len());
+    println!(
+        "{:<7} {:>7} {:>7} {:>9} {:>5} {:>10} {:>11} {:>10} {:>10}",
+        "boards", "placed", "queued", "rejected", "cpu", "aggregate", "reconfig-h", "cold", "warm"
+    );
+
+    let mut rows = Vec::new();
+    for &boards in &board_sweep {
+        // one service per pool size: the first run is cold, the second
+        // warm through the fleet-report cache
+        let svc = BatchService::new(4, 1, &XEON_3104);
+        let t0 = Instant::now();
+        let cold = fleet::fleet_search(&svc, &apps_list, boards, &cfg, opts.test_scale)
+            .expect("cold fleet");
+        let cold_wall_s = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let warm = fleet::fleet_search(&svc, &apps_list, boards, &cfg, opts.test_scale)
+            .expect("warm fleet");
+        let warm_wall_s = t1.elapsed().as_secs_f64();
+        assert_eq!(warm.render(), cold.render(), "warm fleet must be bit-identical");
+
+        let count = |status: fn(&FleetStatus) -> bool| -> usize {
+            cold.apps.iter().filter(|a| status(&a.status)).count()
+        };
+        let placed = count(|s| matches!(s, FleetStatus::Placed { .. }));
+        let queued = count(|s| matches!(s, FleetStatus::Queued));
+        let rejected = count(|s| matches!(s, FleetStatus::Rejected));
+        let cpu = count(|s| matches!(s, FleetStatus::Cpu));
+        println!(
+            "{:<7} {:>7} {:>7} {:>9} {:>5} {:>9.2}x {:>11.2} {:>10} {:>10}",
+            boards,
+            placed,
+            queued,
+            rejected,
+            cpu,
+            cold.aggregate_speedup,
+            cold.reconfig_hours,
+            fmt_s(cold_wall_s),
+            fmt_s(warm_wall_s)
+        );
+
+        let mut row = BTreeMap::new();
+        row.insert("boards".to_string(), Json::Num(boards as f64));
+        row.insert("placed".to_string(), Json::Num(placed as f64));
+        row.insert("queued".to_string(), Json::Num(queued as f64));
+        row.insert("rejected".to_string(), Json::Num(rejected as f64));
+        row.insert("cpu".to_string(), Json::Num(cpu as f64));
+        row.insert(
+            "aggregate_speedup".to_string(),
+            Json::Num(cold.aggregate_speedup),
+        );
+        row.insert("reconfig_hours".to_string(), Json::Num(cold.reconfig_hours));
+        row.insert("sim_hours".to_string(), Json::Num(cold.sim_hours));
+        row.insert("cold_wall_s".to_string(), Json::Num(cold_wall_s));
+        row.insert("warm_wall_s".to_string(), Json::Num(warm_wall_s));
+        let boards_json: Vec<Json> = cold
+            .board_util
+            .iter()
+            .map(|b| {
+                let mut bj = BTreeMap::new();
+                bj.insert("board".to_string(), Json::Num(b.board as f64));
+                bj.insert("utilization".to_string(), Json::Num(b.utilization));
+                bj.insert(
+                    "tenants".to_string(),
+                    Json::Arr(b.tenants.iter().map(|t| Json::Str(t.clone())).collect()),
+                );
+                Json::Obj(bj)
+            })
+            .collect();
+        row.insert("board_util".to_string(), Json::Arr(boards_json));
+        rows.push(Json::Obj(row));
+    }
+
+    if let Some(path) = &opts.report {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("fleet_throughput".to_string()));
+        doc.insert(
+            "scale".to_string(),
+            Json::Str(if opts.test_scale { "test" } else { "full" }.to_string()),
+        );
+        doc.insert("apps".to_string(), Json::Num(apps_list.len() as f64));
+        doc.insert("rows".to_string(), Json::Arr(rows));
+        std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
+        println!("report written to {path}");
+    }
+}

@@ -180,6 +180,13 @@ impl BackendReport {
             ReportDetail::Fpga(_) => None,
         }
     }
+
+    /// The per-type FPGA resource vector of this estimate, when the
+    /// report came from the FPGA backend ([`crate::fleet`] sums these to
+    /// co-schedule tenants under a board's FF/LUT/DSP/BRAM caps).
+    pub fn resources(&self) -> Option<&crate::fpga::device::Resources> {
+        self.hls().map(|h| &h.resources)
+    }
 }
 
 /// Outcome of a full pattern compile on a backend.

@@ -13,6 +13,7 @@ use crate::coordinator::pipeline::AppAnalysis;
 use crate::coordinator::verify_env::{PatternMeasurement, VerifyEnv};
 use crate::cparse::ast::LoopId;
 use crate::opencl::OffloadPattern;
+use crate::util::order;
 use crate::util::rng::Rng;
 
 use super::{candidate_pool, reports_for, BaselineOutcome};
@@ -114,10 +115,14 @@ pub fn search(
 
         // tournament selection + crossover + mutation
         let mut next = Vec::with_capacity(cfg.population);
-        // elitism: keep the best genome
-        if let Some((_, g)) = scored
-            .iter()
-            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+        // elitism: keep the best genome (NaN fitness never wins; exact
+        // ties go to the earlier genome, so evolution is deterministic)
+        if let Some((_, g)) = order::select_best(
+            scored.iter().enumerate(),
+            |(_, (fit, _))| *fit,
+            |(i, _)| *i,
+        )
+        .map(|(_, sg)| sg)
         {
             next.push(g.clone());
         }

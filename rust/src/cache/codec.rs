@@ -14,6 +14,7 @@ use crate::coordinator::mixed::DestinationSearch;
 use crate::coordinator::pipeline::{CandidateReport, SearchTrace};
 use crate::coordinator::stages::{BlockMeasureArtifact, MeasureArtifact, PrecompileArtifact};
 use crate::coordinator::verify_env::PatternMeasurement;
+use crate::fleet::{AppPlacement, BoardReport, FleetReport, FleetStatus};
 use crate::funcblock::{BlockMeasurement, BlockMode};
 use crate::cparse::ast::{LoopId, Type};
 use crate::fpga::device::Resources;
@@ -671,6 +672,133 @@ pub fn measure_from_json(j: &Json) -> Option<MeasureArtifact> {
     })
 }
 
+fn fleet_status_to_json(s: &FleetStatus) -> Json {
+    let (label, board) = match s {
+        FleetStatus::Placed { board } => ("placed", Some(*board)),
+        FleetStatus::Queued => ("queued", None),
+        FleetStatus::Rejected => ("rejected", None),
+        FleetStatus::Cpu => ("cpu", None),
+    };
+    obj(vec![
+        ("status", Json::Str(label.to_string())),
+        (
+            "board",
+            board.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn fleet_status_from_json(j: &Json) -> Option<FleetStatus> {
+    match get_str(j, "status")? {
+        "placed" => Some(FleetStatus::Placed { board: get_usize(j, "board")? }),
+        "queued" => Some(FleetStatus::Queued),
+        "rejected" => Some(FleetStatus::Rejected),
+        "cpu" => Some(FleetStatus::Cpu),
+        _ => None,
+    }
+}
+
+fn app_placement_to_json(a: &AppPlacement) -> Json {
+    obj(vec![
+        ("app_name", Json::Str(a.app_name.clone())),
+        ("status", fleet_status_to_json(&a.status)),
+        ("solution", Json::Str(a.solution.clone())),
+        ("kind", Json::Str(a.kind.to_string())),
+        ("utilization", num(a.utilization)),
+        ("time_s", num(a.time_s)),
+        ("speedup", num(a.speedup)),
+        ("reconfig_s", num(a.reconfig_s)),
+    ])
+}
+
+fn app_placement_from_json(j: &Json) -> Option<AppPlacement> {
+    let kind = match get_str(j, "kind")? {
+        "bitstream" => "bitstream",
+        "ip-link" => "ip-link",
+        "cpu" => "cpu",
+        _ => return None,
+    };
+    Some(AppPlacement {
+        app_name: get_str(j, "app_name")?.to_string(),
+        status: fleet_status_from_json(j.get("status")?)?,
+        solution: get_str(j, "solution")?.to_string(),
+        kind,
+        utilization: get_f64(j, "utilization")?,
+        time_s: get_f64(j, "time_s")?,
+        speedup: get_f64(j, "speedup")?,
+        reconfig_s: get_f64(j, "reconfig_s")?,
+    })
+}
+
+fn board_report_to_json(b: &BoardReport) -> Json {
+    obj(vec![
+        ("board", Json::Num(b.board as f64)),
+        ("utilization", num(b.utilization)),
+        ("resources", resources_to_json(&b.resources)),
+        (
+            "tenants",
+            Json::Arr(b.tenants.iter().map(|t| Json::Str(t.clone())).collect()),
+        ),
+    ])
+}
+
+fn board_report_from_json(j: &Json) -> Option<BoardReport> {
+    Some(BoardReport {
+        board: get_usize(j, "board")?,
+        utilization: get_f64(j, "utilization")?,
+        resources: resources_from_json(j.get("resources")?)?,
+        tenants: get_arr(j, "tenants")?
+            .iter()
+            .map(|t| t.as_str().map(str::to_string))
+            .collect::<Option<Vec<_>>>()?,
+    })
+}
+
+/// Encode a fleet placement report.
+pub fn fleet_to_json(f: &FleetReport) -> Json {
+    obj(vec![
+        ("kind", Json::Str("fleet".to_string())),
+        ("v", Json::Num(VERSION)),
+        ("boards", Json::Num(f.boards as f64)),
+        (
+            "apps",
+            Json::Arr(f.apps.iter().map(app_placement_to_json).collect()),
+        ),
+        (
+            "board_util",
+            Json::Arr(f.board_util.iter().map(board_report_to_json).collect()),
+        ),
+        ("cpu_total_s", num(f.cpu_total_s)),
+        ("fleet_total_s", num(f.fleet_total_s)),
+        ("aggregate_speedup", num(f.aggregate_speedup)),
+        ("reconfig_hours", num(f.reconfig_hours)),
+        ("sim_hours", num(f.sim_hours)),
+        ("compile_hours", num(f.compile_hours)),
+    ])
+}
+
+/// Decode a fleet placement report; `None` on any structural mismatch.
+pub fn fleet_from_json(j: &Json) -> Option<FleetReport> {
+    check_header(j, "fleet")?;
+    Some(FleetReport {
+        boards: get_usize(j, "boards")?,
+        apps: get_arr(j, "apps")?
+            .iter()
+            .map(app_placement_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        board_util: get_arr(j, "board_util")?
+            .iter()
+            .map(board_report_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        cpu_total_s: get_f64(j, "cpu_total_s")?,
+        fleet_total_s: get_f64(j, "fleet_total_s")?,
+        aggregate_speedup: get_f64(j, "aggregate_speedup")?,
+        reconfig_hours: get_f64(j, "reconfig_hours")?,
+        sim_hours: get_f64(j, "sim_hours")?,
+        compile_hours: get_f64(j, "compile_hours")?,
+    })
+}
+
 /// Encode a request-level [`DestinationSearch`] outcome.
 pub fn destination_to_json(d: &DestinationSearch) -> Json {
     obj(vec![
@@ -780,6 +908,28 @@ mod tests {
         let back = blocks_from_json(&j).expect("decode");
         assert_eq!(back.placements, artifact.placements);
         assert!(blocks_from_json(&trace_to_json(&t)).is_none(), "wrong kind rejects");
+    }
+
+    #[test]
+    fn fleet_report_roundtrips_bit_identically() {
+        use crate::service::BatchService;
+        let svc = BatchService::new(2, 1, &XEON_3104);
+        let apps_list: Vec<&'static crate::apps::App> =
+            vec![&apps::TDFIR, &apps::MATMUL];
+        let r = crate::fleet::fleet_search(
+            &svc,
+            &apps_list,
+            2,
+            &SearchConfig::default(),
+            true,
+        )
+        .unwrap();
+        let s1 = json::to_string(&fleet_to_json(&r));
+        let back = fleet_from_json(&json::parse(&s1).unwrap()).expect("decode");
+        assert_eq!(json::to_string(&fleet_to_json(&back)), s1);
+        assert_eq!(back, r, "decode must be the identity on every field");
+        assert_eq!(back.render(), r.render());
+        assert!(fleet_from_json(&Json::Null).is_none());
     }
 
     #[test]

@@ -202,6 +202,28 @@ pub fn trace_key(
     h.finish()
 }
 
+/// Key of a complete fleet placement report ([`crate::fleet`]): the
+/// ordered tenant set, workload scale, board-backend identity, the full
+/// search config, and the board count — any change to any tenant's
+/// search inputs reshapes the key.
+pub fn fleet_key(
+    apps: &[&App],
+    test_scale: bool,
+    backend: &dyn OffloadBackend,
+    cfg: &SearchConfig,
+    boards: usize,
+) -> CacheKey {
+    let mut h = KeyHasher::new("fleet");
+    h.write_usize(apps.len());
+    for app in apps {
+        h.write_u64(app_fingerprint(app, test_scale));
+    }
+    h.write_u64(backend_fingerprint(backend));
+    mix_full_config(&mut h, cfg);
+    h.write_usize(boards);
+    h.finish()
+}
+
 /// Key of a complete [`crate::coordinator::mixed::DestinationSearch`]
 /// (the batch service's request-level unit of work).
 pub fn destination_key(

@@ -22,6 +22,7 @@ use std::sync::{Arc, Mutex};
 use crate::coordinator::mixed::DestinationSearch;
 use crate::coordinator::pipeline::{AppAnalysis, SearchTrace};
 use crate::coordinator::stages::{BlockMeasureArtifact, MeasureArtifact, PrecompileArtifact};
+use crate::fleet::FleetReport;
 use crate::util::json::{self, Json};
 
 use super::codec;
@@ -60,6 +61,7 @@ struct Mem {
     blocks: HashMap<CacheKey, BlockMeasureArtifact>,
     traces: HashMap<CacheKey, SearchTrace>,
     destinations: HashMap<CacheKey, DestinationSearch>,
+    fleets: HashMap<CacheKey, FleetReport>,
 }
 
 /// The content-addressed artifact store (see module docs).
@@ -363,6 +365,35 @@ impl CacheStore {
         }
         self.mem.lock().expect("poisoned").destinations.insert(key, d.clone());
         self.disk_put("destination", key, &codec::destination_to_json(d));
+    }
+
+    // ----------------------------------------------------------- fleets
+
+    /// Fetch a fleet placement report (memory, then disk).
+    pub fn get_fleet(&self, key: CacheKey) -> Option<FleetReport> {
+        if !self.enabled {
+            return None;
+        }
+        let hit = self.mem.lock().expect("poisoned").fleets.get(&key).cloned();
+        if let Some(f) = hit {
+            self.note_mem_hit();
+            return Some(f);
+        }
+        if let Some(f) = self.disk_get("fleet", key, codec::fleet_from_json) {
+            self.mem.lock().expect("poisoned").fleets.insert(key, f.clone());
+            return Some(f);
+        }
+        self.note_miss();
+        None
+    }
+
+    /// Store a fleet placement report.
+    pub fn put_fleet(&self, key: CacheKey, f: &FleetReport) {
+        if !self.enabled {
+            return;
+        }
+        self.mem.lock().expect("poisoned").fleets.insert(key, f.clone());
+        self.disk_put("fleet", key, &codec::fleet_to_json(f));
     }
 }
 

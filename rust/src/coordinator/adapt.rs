@@ -93,7 +93,9 @@ pub fn choose_placement(
         .filter(|s| s.free_fpga_boards >= plan.boards)
         .filter(|s| s.client_rtt_ms + app_time_s * 1e3 <= max_latency_ms)
         .collect();
-    feasible.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+    feasible.sort_by(|a, b| {
+        crate::util::order::asc_nan_last(a.cost, b.cost).then_with(|| a.name.cmp(b.name))
+    });
     feasible.first().map(|s| Placement {
         site: s.name,
         boards: plan.boards,

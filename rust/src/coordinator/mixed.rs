@@ -27,6 +27,7 @@ use crate::cparse::ast::LoopId;
 use crate::cpu::CpuModel;
 use crate::funcblock::BlockMode;
 use crate::service::{BatchRequest, BatchService};
+use crate::util::order;
 
 use super::pipeline::{block_pattern_measurement, AppAnalysis};
 use super::stages::{measure_block_placement, stage_block_narrow};
@@ -266,10 +267,17 @@ pub fn mixed_search_on(
         let items = &report.items[i * per_app..(i + 1) * per_app];
         let searches: Vec<DestinationSearch> =
             items.iter().map(|it| it.outcome.clone()).collect();
-        let best = searches
-            .iter()
-            .filter(|s| s.best.is_some() && s.speedup > 1.0)
-            .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap());
+        // NaN speedups are rejected, exact ties go to search order (the
+        // FPGA is searched first), so the winner is deterministic.
+        let best = order::select_best(
+            searches
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.best.is_some() && s.speedup > 1.0),
+            |(_, s)| s.speedup,
+            |(i, _)| *i,
+        )
+        .map(|(_, s)| s);
         let (winner, speedup) = match best {
             Some(s) => (s.destination, s.speedup),
             None => (Destination::Cpu, 1.0),

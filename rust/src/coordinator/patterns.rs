@@ -14,6 +14,7 @@ use std::collections::HashMap;
 use crate::backend::{BackendReport, OffloadBackend};
 use crate::cparse::ast::LoopId;
 use crate::opencl::OffloadPattern;
+use crate::util::order;
 
 use super::verify_env::PatternMeasurement;
 
@@ -36,7 +37,9 @@ pub fn round2(
         .filter(|m| m.compiled && m.speedup > 1.0 && m.pattern.loops.len() == 1)
         .map(|m| (m, m.pattern.loops[0]))
         .collect();
-    improving.sort_by(|a, b| b.0.speedup.partial_cmp(&a.0.speedup).unwrap());
+    improving.sort_by(|a, b| {
+        order::desc_nan_last(a.0.speedup, b.0.speedup).then_with(|| a.1.cmp(&b.1))
+    });
     let ids: Vec<LoopId> = improving.iter().map(|(_, id)| *id).collect();
 
     // candidate combinations: larger subsets first within each size tier,
@@ -54,7 +57,7 @@ pub fn round2(
             combos.push((est, OffloadPattern::of(subset)));
         }
     }
-    combos.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    combos.sort_by(|a, b| order::desc_nan_last(a.0, b.0).then_with(|| a.1.cmp(&b.1)));
 
     let mut out = Vec::new();
     for (_, pat) in combos {

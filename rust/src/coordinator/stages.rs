@@ -45,6 +45,7 @@ use crate::funcblock::{self, BlockMeasurement, BlockMode, BlockOffer};
 use crate::intensity::{self, LoopIntensity};
 use crate::metrics::SimClock;
 use crate::opencl::OpenClCode;
+use crate::util::order;
 
 use super::patterns;
 use super::pipeline::{
@@ -191,9 +192,13 @@ pub fn charge_precompile(clock: &SimClock, pre: &PrecompileArtifact) {
 }
 
 /// Stage 4 — EfficiencyNarrow: the top-`c` cut by resource efficiency.
+/// NaN efficiencies (a degenerate pre-compile) always sort last and the
+/// loop id breaks exact ties, so the cut is a total, deterministic order.
 pub fn stage_efficiency_narrow(pre: &PrecompileArtifact, c_efficiency: usize) -> EfficiencyCut {
     let mut by_eff = pre.candidates.clone();
-    by_eff.sort_by(|a, b| b.efficiency.partial_cmp(&a.efficiency).unwrap());
+    by_eff.sort_by(|a, b| {
+        order::desc_nan_last(a.efficiency, b.efficiency).then_with(|| a.id.cmp(&b.id))
+    });
     EfficiencyCut {
         top_c: by_eff.iter().take(c_efficiency).map(|c| c.id).collect(),
     }
@@ -358,13 +363,15 @@ pub fn stage_measure_blocks(
     cfg: &SearchConfig,
 ) -> BlockMeasureArtifact {
     let reports = pre.reports();
-    let base_best = meas
-        .rounds
-        .iter()
-        .flatten()
-        .filter(|m| m.compiled && m.speedup > 1.0)
-        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
-        .cloned();
+    let base_best = order::select_best(
+        meas.rounds
+            .iter()
+            .flatten()
+            .filter(|m| m.compiled && m.speedup > 1.0),
+        |m| m.speedup,
+        |m| m.pattern.loops.clone(),
+    )
+    .cloned();
 
     let mut placements = Vec::new();
     for offer in &blocks.offers {
@@ -411,19 +418,22 @@ pub fn stage_select(
     meas: &MeasureArtifact,
     blocks: &BlockMeasureArtifact,
 ) -> SearchTrace {
-    let best = meas
-        .rounds
-        .iter()
-        .flatten()
-        .filter(|m| m.compiled)
-        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
-        .cloned();
-    let best_block = blocks
-        .placements
-        .iter()
-        .filter(|m| m.compiled)
-        .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
-        .cloned();
+    // NaN-poisoned measurements are rejected by `select_best` (they can
+    // never become the solution, and they can never panic the service);
+    // exact speedup ties go to the smaller pattern id so the winner is
+    // byte-identical across runs and pool sizes.
+    let best = order::select_best(
+        meas.rounds.iter().flatten().filter(|m| m.compiled),
+        |m| m.speedup,
+        |m| m.pattern.loops.clone(),
+    )
+    .cloned();
+    let best_block = order::select_best(
+        blocks.placements.iter().filter(|m| m.compiled),
+        |m| m.speedup,
+        |m| (m.block.clone(), m.block_loops.clone(), m.extra_loops.clone()),
+    )
+    .cloned();
 
     SearchTrace {
         app_name: analysis.app_name.clone(),

@@ -1,0 +1,288 @@
+//! The deterministic first-fit-decreasing fleet packer.
+//!
+//! Classic FFD bin packing adapted to FPGA boards: tenants are placed in
+//! decreasing order of their preferred option's device utilization (the
+//! hardest-to-place demand goes first), each onto the **first** board
+//! where its combined per-type resources stay under the cap.  Two
+//! fleet-specific twists:
+//!
+//! * **Option fallback** — when a tenant's preferred placement (usually
+//!   its fastest) no longer fits on any board, its alternate placement
+//!   (the other side of the loop-pattern ⇄ IP-block search) is tried
+//!   before the tenant is turned away.  Under pressure this is exactly
+//!   where prebuilt IP blocks win: they are the cheap-to-link fallback.
+//! * **Reconfiguration accounting** — a board that already hosts a
+//!   tenant must swap bitstreams to admit another, so every placement
+//!   after a board's first charges the incoming option's
+//!   reconfiguration cost (hours for generated patterns, minutes for a
+//!   prebuilt-IP partial-reconfiguration link).
+//!
+//! Ordering uses the NaN-safe total-order comparators of
+//! [`crate::util::order`] with deterministic tie-breaks (cheaper
+//! reconfiguration first, then submission order), so the packing — and
+//! therefore the whole fleet report — is a pure function of the demand
+//! set: byte-identical across runs, pool sizes, and platforms.
+
+use crate::fpga::device::{Device, Resources};
+use crate::util::order;
+
+use super::TenantDemand;
+
+/// One board's packing state.
+#[derive(Debug, Clone)]
+pub struct BoardState {
+    /// Summed per-type resource demand of everything placed here.
+    pub used: Resources,
+    /// Demand indices placed on this board, in placement order.
+    pub tenants: Vec<usize>,
+}
+
+/// Where one tenant landed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Placement {
+    /// Placed on `board` using `option` (index into the demand's option
+    /// list), paying `reconfig_s` of bitstream-swap time if the board
+    /// was already occupied.
+    Placed {
+        /// Board index in `0..boards`.
+        board: usize,
+        /// Index of the chosen option in the tenant's option list.
+        option: usize,
+        /// Simulated reconfiguration seconds charged on admission.
+        reconfig_s: f64,
+    },
+    /// Admission deferred: some option fits an *empty* board, but every
+    /// board is currently too full.  The tenant runs on the CPU.
+    Queued,
+    /// Admission rejected: no option can ever fit under the cap.  The
+    /// tenant runs on the CPU.
+    Rejected,
+    /// The tenant had no improving placement option at all (its search
+    /// found nothing better than the CPU, or its measurements were
+    /// poisoned): it stays on the CPU by construction.
+    StayCpu,
+}
+
+/// The packer's result.
+#[derive(Debug, Clone)]
+pub struct PackOutcome {
+    /// Per-board state, indexed by board id.
+    pub boards: Vec<BoardState>,
+    /// Per-demand placement, indexed like the input demand slice.
+    pub placements: Vec<Placement>,
+}
+
+/// Deterministic first-fit-decreasing packing of `demands` onto
+/// `boards` boards of `device`, under a combined per-board utilization
+/// cap (the same `resource_cap` the pattern search enforces).
+pub fn first_fit_decreasing(
+    demands: &[TenantDemand],
+    boards: usize,
+    cap: f64,
+    device: &Device,
+) -> PackOutcome {
+    let boards = boards.max(1);
+    let mut state: Vec<BoardState> = (0..boards)
+        .map(|_| BoardState { used: Resources::ZERO, tenants: Vec::new() })
+        .collect();
+    let mut placements: Vec<Placement> = demands
+        .iter()
+        .map(|d| {
+            if d.options.iter().any(|o| o.is_schedulable()) {
+                Placement::Queued // provisional; resolved below
+            } else {
+                Placement::StayCpu
+            }
+        })
+        .collect();
+
+    // FFD order: hardest demand first; ties go to the cheaper-to-link
+    // tenant, then to submission order — a total, deterministic order.
+    let mut idx: Vec<usize> = (0..demands.len())
+        .filter(|&i| placements[i] == Placement::Queued)
+        .collect();
+    idx.sort_by(|&a, &b| {
+        let (da, db) = (&demands[a], &demands[b]);
+        order::desc_nan_last(da.options[0].utilization, db.options[0].utilization)
+            .then_with(|| {
+                order::asc_nan_last(da.options[0].reconfig_s, db.options[0].reconfig_s)
+            })
+            .then_with(|| da.order.cmp(&db.order))
+    });
+
+    for &di in &idx {
+        let d = &demands[di];
+        let mut placed = false;
+        'options: for (oi, opt) in d.options.iter().enumerate() {
+            if !opt.is_schedulable() {
+                continue;
+            }
+            for (bi, b) in state.iter_mut().enumerate() {
+                let combined = b.used.add(&opt.resources);
+                if device.utilization(&combined) <= cap {
+                    // admitting onto occupied silicon swaps bitstreams:
+                    // the incoming tenant pays its reconfiguration cost
+                    let reconfig_s = if b.tenants.is_empty() { 0.0 } else { opt.reconfig_s };
+                    b.used = combined;
+                    b.tenants.push(di);
+                    placements[di] = Placement::Placed { board: bi, option: oi, reconfig_s };
+                    placed = true;
+                    break 'options;
+                }
+            }
+        }
+        if !placed {
+            let feasible_alone = d
+                .options
+                .iter()
+                .filter(|o| o.is_schedulable())
+                .any(|o| device.utilization(&o.resources) <= cap);
+            placements[di] = if feasible_alone { Placement::Queued } else { Placement::Rejected };
+        }
+    }
+
+    PackOutcome { boards: state, placements }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{PlacementKind, PlacementOption, TenantDemand};
+    use super::*;
+    use crate::fpga::ARRIA10_GX;
+
+    fn opt(frac: f64, speedup: f64, reconfig_s: f64, kind: PlacementKind) -> PlacementOption {
+        PlacementOption {
+            label: format!("probe {frac:.2}"),
+            kind,
+            utilization: ARRIA10_GX.bsp_frac + frac,
+            resources: ARRIA10_GX.total.scale(frac),
+            time_s: 1.0 / speedup,
+            speedup,
+            reconfig_s,
+        }
+    }
+
+    fn tenant(name: &str, order: usize, options: Vec<PlacementOption>) -> TenantDemand {
+        TenantDemand {
+            app_name: name.to_string(),
+            order,
+            cpu_time_s: 1.0,
+            options,
+        }
+    }
+
+    #[test]
+    fn respects_the_per_board_cap() {
+        // cap 0.85 with bsp 0.18 leaves 0.67 of dynamic fraction/board:
+        // two 0.4-fraction tenants must land on different boards
+        let demands = vec![
+            tenant("a", 0, vec![opt(0.4, 3.0, 3600.0, PlacementKind::Bitstream)]),
+            tenant("b", 1, vec![opt(0.4, 2.0, 3600.0, PlacementKind::Bitstream)]),
+        ];
+        let out = first_fit_decreasing(&demands, 2, 0.85, &ARRIA10_GX);
+        let boards: Vec<usize> = out
+            .placements
+            .iter()
+            .map(|p| match p {
+                Placement::Placed { board, .. } => *board,
+                other => panic!("both must place: {other:?}"),
+            })
+            .collect();
+        assert_ne!(boards[0], boards[1], "0.4+0.4 dynamic would blow the cap");
+        for b in &out.boards {
+            assert!(ARRIA10_GX.utilization(&b.used) <= 0.85);
+        }
+    }
+
+    #[test]
+    fn second_tenant_on_a_board_pays_reconfiguration() {
+        let demands = vec![
+            tenant("a", 0, vec![opt(0.2, 3.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+            tenant("b", 1, vec![opt(0.2, 2.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+        ];
+        let out = first_fit_decreasing(&demands, 1, 0.85, &ARRIA10_GX);
+        let costs: Vec<f64> = out
+            .placements
+            .iter()
+            .map(|p| match p {
+                Placement::Placed { reconfig_s, .. } => *reconfig_s,
+                other => panic!("both must place: {other:?}"),
+            })
+            .collect();
+        assert_eq!(costs.iter().filter(|c| **c == 0.0).count(), 1, "first is free");
+        assert_eq!(
+            costs.iter().filter(|c| **c == 3.0 * 3600.0).count(),
+            1,
+            "second pays the swap"
+        );
+    }
+
+    #[test]
+    fn under_pressure_the_ip_fallback_wins_the_slot() {
+        // `big` (0.5 dynamic) packs first and holds the only board; the
+        // preferred 0.45 bitstream of `flex` no longer fits anywhere,
+        // but its cheap 0.15 IP fallback does — and links in minutes
+        let demands = vec![
+            tenant("big", 0, vec![opt(0.5, 4.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+            tenant(
+                "flex",
+                1,
+                vec![
+                    opt(0.45, 3.5, 3.0 * 3600.0, PlacementKind::Bitstream),
+                    opt(0.15, 2.0, 420.0, PlacementKind::IpLink),
+                ],
+            ),
+        ];
+        let out = first_fit_decreasing(&demands, 1, 0.85, &ARRIA10_GX);
+        assert!(matches!(out.placements[0], Placement::Placed { option: 0, .. }));
+        match &out.placements[1] {
+            Placement::Placed { option, reconfig_s, .. } => {
+                assert_eq!(*option, 1, "the IP fallback must win the contended slot");
+                assert_eq!(*reconfig_s, 420.0, "and it links cheaply");
+            }
+            other => panic!("flex must place via its fallback: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn queued_vs_rejected_vs_stay_cpu() {
+        let demands = vec![
+            tenant("hog", 0, vec![opt(0.6, 5.0, 3600.0, PlacementKind::Bitstream)]),
+            // fits an empty board, but the hog holds the only one
+            tenant("waits", 1, vec![opt(0.5, 2.0, 3600.0, PlacementKind::Bitstream)]),
+            // can never fit under the cap at all
+            tenant("never", 2, vec![opt(0.9, 9.0, 3600.0, PlacementKind::Bitstream)]),
+            // nothing improving to place
+            tenant("cpu", 3, vec![]),
+            // poisoned measurement: rejected outright, no panic
+            tenant("nan", 4, vec![opt(f64::NAN, f64::NAN, 3600.0, PlacementKind::Bitstream)]),
+        ];
+        let out = first_fit_decreasing(&demands, 1, 0.85, &ARRIA10_GX);
+        assert!(matches!(out.placements[0], Placement::Placed { .. }));
+        assert_eq!(out.placements[1], Placement::Queued);
+        assert_eq!(out.placements[2], Placement::Rejected);
+        assert_eq!(out.placements[3], Placement::StayCpu);
+        assert_eq!(out.placements[4], Placement::StayCpu);
+    }
+
+    #[test]
+    fn packing_is_deterministic_for_any_input_order() {
+        let a = tenant("a", 0, vec![opt(0.3, 3.0, 3600.0, PlacementKind::Bitstream)]);
+        let b = tenant("b", 1, vec![opt(0.3, 2.0, 420.0, PlacementKind::IpLink)]);
+        let c = tenant("c", 2, vec![opt(0.5, 4.0, 3600.0, PlacementKind::Bitstream)]);
+        // the pack sequence is a function of (utilization, reconfig,
+        // submission order) — never of the slice order handed in
+        let packed_apps = |demands: &[TenantDemand]| -> Vec<String> {
+            let out = first_fit_decreasing(demands, 2, 0.85, &ARRIA10_GX);
+            out.boards
+                .iter()
+                .flat_map(|bd| bd.tenants.iter().map(|&i| demands[i].app_name.clone()))
+                .collect()
+        };
+        let fwd = packed_apps(&[a.clone(), b.clone(), c.clone()]);
+        let rev = packed_apps(&[c, b, a]);
+        assert_eq!(fwd, rev, "packing must not depend on slice order");
+        assert_eq!(fwd[0], "c", "the 0.5 demand packs first (FFD)");
+        assert_eq!(fwd[1], "b", "tie at 0.3 goes to the cheap IP link");
+    }
+}

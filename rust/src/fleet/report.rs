@@ -1,0 +1,298 @@
+//! The fleet-level placement report: per-app placements, per-board
+//! utilization, and the aggregate speedup of the whole tenant set.
+//!
+//! Reports are **canonical**: every number is a pure function of the
+//! demand set and the packing (the per-app searches' artifact-derived
+//! automation hours plus the reconfiguration work), never of what a
+//! particular run happened to reuse from the cache — so the cached
+//! report, and its rendered table, are byte-identical across warm
+//! re-runs and worker-pool sizes.
+
+use crate::fpga::device::{Device, Resources};
+
+use super::pack::{PackOutcome, Placement};
+use super::TenantDemand;
+
+/// Admission outcome of one app, as the report carries it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetStatus {
+    /// Running on a fleet board.
+    Placed {
+        /// Board index in `0..boards`.
+        board: usize,
+    },
+    /// Waiting for a board to free up; running on the CPU meanwhile.
+    Queued,
+    /// Can never fit under the per-board cap; running on the CPU.
+    Rejected,
+    /// No improving placement existed; the app stays on the CPU.
+    Cpu,
+}
+
+impl FleetStatus {
+    /// Report label ("board N" / "queued" / "rejected" / "cpu").
+    pub fn label(&self) -> String {
+        match self {
+            FleetStatus::Placed { board } => format!("board {board}"),
+            FleetStatus::Queued => "queued".to_string(),
+            FleetStatus::Rejected => "rejected".to_string(),
+            FleetStatus::Cpu => "cpu".to_string(),
+        }
+    }
+}
+
+/// One app's row of the fleet report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppPlacement {
+    /// Registry name of the tenant app.
+    pub app_name: String,
+    /// Where the app landed.
+    pub status: FleetStatus,
+    /// Solution label (`pattern L8+L9`, `block fir_filter[L8+L9]`, or
+    /// `all-CPU` when nothing placed).
+    pub solution: String,
+    /// How the placement reaches the board ("bitstream" / "ip-link" /
+    /// "cpu").
+    pub kind: &'static str,
+    /// Device fraction the placement occupies (0 when on the CPU).
+    pub utilization: f64,
+    /// Wall-clock of the sample app under this admission decision.
+    pub time_s: f64,
+    /// Speedup vs. all-CPU under this admission decision (1.0 on CPU).
+    pub speedup: f64,
+    /// Reconfiguration seconds charged on admission (0 for a board's
+    /// first tenant and for CPU fallbacks).
+    pub reconfig_s: f64,
+}
+
+/// One board's row of the fleet report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardReport {
+    /// Board index.
+    pub board: usize,
+    /// Combined device utilization (incl. the BSP static region).
+    pub utilization: f64,
+    /// Summed per-type resource demand of the board's tenants.
+    pub resources: Resources,
+    /// Tenant app names, in placement order.
+    pub tenants: Vec<String>,
+}
+
+/// The complete fleet placement report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    /// Number of boards in the fleet.
+    pub boards: usize,
+    /// Per-app rows, in submission order.
+    pub apps: Vec<AppPlacement>,
+    /// Per-board rows, in board order.
+    pub board_util: Vec<BoardReport>,
+    /// Σ all-CPU baselines of every tenant.
+    pub cpu_total_s: f64,
+    /// Σ per-tenant times under the fleet's admission decisions.
+    pub fleet_total_s: f64,
+    /// `cpu_total_s / fleet_total_s` — never below 1.0 by construction
+    /// (only improving placements are admitted; everyone else runs the
+    /// CPU baseline).
+    pub aggregate_speedup: f64,
+    /// Total reconfiguration hours the packing charged.
+    pub reconfig_hours: f64,
+    /// Canonical simulated automation hours (per-app searches, artifact
+    /// derived, plus reconfiguration).
+    pub sim_hours: f64,
+    /// Canonical compile-lane hours (same contract as `sim_hours`).
+    pub compile_hours: f64,
+}
+
+/// Assemble the report from the demand set and the packing.
+/// `base_sim_hours` / `base_compile_hours` are the canonical automation
+/// hours of the per-app searches (summed from their traces).
+pub fn build(
+    demands: &[TenantDemand],
+    outcome: &PackOutcome,
+    boards: usize,
+    device: &Device,
+    base_sim_hours: f64,
+    base_compile_hours: f64,
+) -> FleetReport {
+    let mut apps = Vec::with_capacity(demands.len());
+    let mut cpu_total_s = 0.0;
+    let mut fleet_total_s = 0.0;
+    let mut reconfig_s_total = 0.0;
+    for (d, p) in demands.iter().zip(&outcome.placements) {
+        cpu_total_s += d.cpu_time_s;
+        let row = match p {
+            Placement::Placed { board, option, reconfig_s } => {
+                let opt = &d.options[*option];
+                reconfig_s_total += *reconfig_s;
+                fleet_total_s += opt.time_s;
+                AppPlacement {
+                    app_name: d.app_name.clone(),
+                    status: FleetStatus::Placed { board: *board },
+                    solution: opt.label.clone(),
+                    kind: opt.kind.as_str(),
+                    utilization: opt.utilization,
+                    time_s: opt.time_s,
+                    speedup: opt.speedup,
+                    reconfig_s: *reconfig_s,
+                }
+            }
+            other => {
+                fleet_total_s += d.cpu_time_s;
+                let status = match other {
+                    Placement::Queued => FleetStatus::Queued,
+                    Placement::Rejected => FleetStatus::Rejected,
+                    _ => FleetStatus::Cpu,
+                };
+                AppPlacement {
+                    app_name: d.app_name.clone(),
+                    status,
+                    solution: "all-CPU".to_string(),
+                    kind: "cpu",
+                    utilization: 0.0,
+                    time_s: d.cpu_time_s,
+                    speedup: 1.0,
+                    reconfig_s: 0.0,
+                }
+            }
+        };
+        apps.push(row);
+    }
+
+    let board_util = outcome
+        .boards
+        .iter()
+        .enumerate()
+        .map(|(i, b)| BoardReport {
+            board: i,
+            // an idle board is unconfigured: it reports 0, not the BSP
+            // static fraction a loaded bitstream would pin
+            utilization: if b.tenants.is_empty() {
+                0.0
+            } else {
+                device.utilization(&b.used)
+            },
+            resources: b.used,
+            tenants: b.tenants.iter().map(|&t| demands[t].app_name.clone()).collect(),
+        })
+        .collect();
+
+    let reconfig_hours = reconfig_s_total / 3600.0;
+    FleetReport {
+        boards,
+        apps,
+        board_util,
+        cpu_total_s,
+        fleet_total_s,
+        aggregate_speedup: if fleet_total_s > 0.0 { cpu_total_s / fleet_total_s } else { 1.0 },
+        reconfig_hours,
+        sim_hours: base_sim_hours + reconfig_hours,
+        compile_hours: base_compile_hours + reconfig_hours,
+    }
+}
+
+impl FleetReport {
+    /// Render the fleet table (byte-identical for any pool size and
+    /// across warm cache re-runs).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "=== fleet placement: {} app(s) on {} Arria10 board(s) ===\n",
+            self.apps.len(),
+            self.boards
+        ));
+        out.push_str(&format!(
+            "{:<12} {:<9} {:<10} {:>6} {:>8} {:>10}  {}\n",
+            "app", "admission", "kind", "util", "speedup", "reconfig-h", "solution"
+        ));
+        for a in &self.apps {
+            out.push_str(&format!(
+                "{:<12} {:<9} {:<10} {:>6.3} {:>7.2}x {:>10.2}  {}\n",
+                a.app_name,
+                a.status.label(),
+                a.kind,
+                a.utilization,
+                a.speedup,
+                a.reconfig_s / 3600.0,
+                a.solution
+            ));
+        }
+        out.push_str("board utilization:\n");
+        for b in &self.board_util {
+            out.push_str(&format!(
+                "  board {}: util {:.3}  tenants [{}]\n",
+                b.board,
+                b.utilization,
+                b.tenants.join(", ")
+            ));
+        }
+        out.push_str(&format!(
+            "aggregate: all-CPU {:.5} s -> fleet {:.5} s  ({:.2}x vs all-CPU)\n",
+            self.cpu_total_s, self.fleet_total_s, self.aggregate_speedup
+        ));
+        out.push_str(&format!(
+            "reconfiguration charged: {:.2} h; automation time: {:.1} h simulated \
+             ({:.1} compile-lane hours)\n",
+            self.reconfig_hours, self.sim_hours, self.compile_hours
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pack::first_fit_decreasing;
+    use super::super::{PlacementKind, PlacementOption};
+    use super::*;
+    use crate::fpga::ARRIA10_GX;
+
+    fn demand(name: &str, order: usize, frac: f64, speedup: f64) -> TenantDemand {
+        let options = if speedup > 1.0 {
+            vec![PlacementOption {
+                label: format!("pattern L{order}"),
+                kind: PlacementKind::Bitstream,
+                utilization: ARRIA10_GX.bsp_frac + frac,
+                resources: ARRIA10_GX.total.scale(frac),
+                time_s: 1.0 / speedup,
+                speedup,
+                reconfig_s: 3.0 * 3600.0,
+            }]
+        } else {
+            Vec::new()
+        };
+        TenantDemand { app_name: name.to_string(), order, cpu_time_s: 1.0, options }
+    }
+
+    #[test]
+    fn aggregate_never_loses_to_all_cpu() {
+        let demands = vec![
+            demand("a", 0, 0.4, 3.0),
+            demand("b", 1, 0.4, 2.0),
+            demand("c", 2, 0.4, 1.5), // queued: only two boards' worth of room
+            demand("d", 3, 0.0, 0.5), // stays on CPU
+        ];
+        let out = first_fit_decreasing(&demands, 2, 0.85, &ARRIA10_GX);
+        let r = build(&demands, &out, 2, &ARRIA10_GX, 10.0, 8.0);
+        assert!(r.aggregate_speedup >= 1.0, "aggregate {}", r.aggregate_speedup);
+        assert_eq!(r.cpu_total_s, 4.0);
+        // placed a and b contribute their measured times, c and d the CPU
+        let expected = 1.0 / 3.0 + 1.0 / 2.0 + 1.0 + 1.0;
+        assert!((r.fleet_total_s - expected).abs() < 1e-12);
+        assert_eq!(r.apps.len(), 4);
+        assert_eq!(r.apps[3].status, FleetStatus::Cpu);
+        assert_eq!(r.apps[3].speedup, 1.0);
+        assert!(r.sim_hours >= 10.0 && r.compile_hours >= 8.0);
+    }
+
+    #[test]
+    fn report_renders_every_row() {
+        let demands = vec![demand("a", 0, 0.3, 2.0), demand("b", 1, 0.0, 0.9)];
+        let out = first_fit_decreasing(&demands, 1, 0.85, &ARRIA10_GX);
+        let r = build(&demands, &out, 1, &ARRIA10_GX, 5.0, 4.0);
+        let s = r.render();
+        assert!(s.contains("fleet placement: 2 app(s) on 1 Arria10 board(s)"));
+        assert!(s.contains("board 0"), "{s}");
+        assert!(s.contains("all-CPU"), "{s}");
+        assert!(s.contains("aggregate:"), "{s}");
+    }
+}

@@ -105,6 +105,15 @@ pub struct BlockMeasurement {
 }
 
 impl BlockMeasurement {
+    /// Is this placement a prebuilt IP core alone (no co-offloaded loop
+    /// kernels)?  Pure-IP placements swap onto a board with a cheap
+    /// partial-reconfiguration link instead of a full bitstream build —
+    /// the property the fleet scheduler ([`crate::fleet`]) exploits when
+    /// boards are contended.
+    pub fn is_pure_ip(&self) -> bool {
+        self.extra_loops.is_empty()
+    }
+
     /// Human-readable label, e.g. `fir_filter[L8+L9]+L10`.
     pub fn label(&self) -> String {
         let members = self

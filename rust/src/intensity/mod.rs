@@ -42,13 +42,6 @@ pub struct LoopIntensity {
     pub offloadable: bool,
 }
 
-impl LoopIntensity {
-    /// Ranking key: intensity first, absolute work as tiebreak.
-    fn rank_key(&self) -> (f64, u64) {
-        (self.intensity, self.flops)
-    }
-}
-
 /// Compute intensity for every *offloadable* loop that actually ran.
 ///
 /// Non-offloadable loops are included with `offloadable = false` (the
@@ -102,11 +95,12 @@ pub fn top_a(
         })
         .copied()
         .collect();
+    // rank: intensity first (total order, NaN last), absolute float work
+    // as tiebreak, loop id as the final deterministic tiebreak
     cands.sort_by(|x, y| {
-        y.rank_key()
-            .partial_cmp(&x.rank_key())
-            .unwrap()
-            .then(x.id.cmp(&y.id))
+        crate::util::order::desc_nan_last(x.intensity, y.intensity)
+            .then_with(|| y.flops.cmp(&x.flops))
+            .then_with(|| x.id.cmp(&y.id))
     });
     cands.into_iter().take(a).cloned().collect()
 }

@@ -329,7 +329,10 @@ pub fn detect(loops: &[LoopAnalysis], threshold: f64) -> Vec<BlockMatch> {
             }
         }
     }
-    out.sort_by(|a, b| b.similarity.partial_cmp(&a.similarity).unwrap());
+    out.sort_by(|a, b| {
+        crate::util::order::desc_nan_last(a.similarity, b.similarity)
+            .then_with(|| a.loop_id.cmp(&b.loop_id))
+    });
     out
 }
 

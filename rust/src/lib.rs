@@ -30,6 +30,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cparse;
 pub mod cpu;
+pub mod fleet;
 pub mod fpga;
 pub mod funcblock;
 pub mod hls;

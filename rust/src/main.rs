@@ -7,6 +7,9 @@
 //! flopt offload <app> [opts]       full offload search (paper Fig 2)
 //! flopt batch [<app>] [opts]       batched offload service (N requests,
 //!                                  one compile farm, cache + dedupe)
+//! flopt fleet [<app>] [opts]       multi-tenant FPGA fleet placement:
+//!                                  co-schedule every app's winner onto
+//!                                  --boards N shared Arria10 boards
 //! flopt opencl <app>               print generated OpenCL for the solution
 //! flopt verify <app>               PJRT numerics cross-check of the hot loop
 //! flopt compare <app>              proposed vs GA vs exhaustive vs naive
@@ -40,8 +43,10 @@ use flopt::coordinator::pipeline::{
 };
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
+use flopt::fleet;
 use flopt::funcblock::BlockMode;
 use flopt::intensity;
+use flopt::util::order;
 use flopt::runtime::{default_artifact_dir, Runtime};
 use flopt::service::{BatchRequest, BatchService};
 
@@ -56,13 +61,14 @@ fn usage() -> ! {
          \x20 analyze <app>             loop + intensity analysis\n\
          \x20 offload [<app>] [opts]    full offload search\n\
          \x20 batch [<app>] [opts]      batched offload service (cache + dedupe)\n\
+         \x20 fleet [<app>] [opts]      multi-tenant FPGA fleet placement\n\
          \x20 opencl <app> [opts]       print the solution's OpenCL\n\
          \x20 verify <app>              PJRT numerics cross-check\n\
          \x20 compare <app> [opts]      proposed vs baselines\n\
          \x20 blocks <app>              function-block detection + IP offers\n\
          \x20 adapt <app> [opts]        Steps 4-6: size, place, verify operation\n\
          opts: --target {{fpga,gpu,mixed}} --blocks {{off,on,only}}\n\
-         \x20     --a N --b N --c N --d N --lanes N\n\
+         \x20     --a N --b N --c N --d N --lanes N --boards N\n\
          \x20     --ga-pop N --ga-gen N --full-scale\n\
          \x20     --cache-dir <dir> --no-cache --pool N\n\
          (`flopt --target mixed` with no app searches all registered apps\n\
@@ -80,6 +86,21 @@ struct Opts {
     cache_dir: Option<String>,
     no_cache: bool,
     pool: usize,
+    boards: usize,
+}
+
+/// A flag was given without its required value: name the flag and exit 2
+/// (the same contract as the unknown-value paths pinned by
+/// `rust/tests/destinations.rs`).
+fn missing_value(flag: &str) -> ! {
+    eprintln!("missing value for {flag} (run `flopt` with no arguments for usage)");
+    std::process::exit(2);
+}
+
+/// A numeric flag was given a non-numeric value: name both and exit 2.
+fn invalid_value(flag: &str, got: &str) -> ! {
+    eprintln!("invalid value for {flag}: `{got}` (expected a non-negative integer)");
+    std::process::exit(2);
 }
 
 fn parse_opts(args: &[String]) -> Opts {
@@ -90,26 +111,29 @@ fn parse_opts(args: &[String]) -> Opts {
     let mut cache_dir = None;
     let mut no_cache = false;
     let mut pool = 4;
+    let mut boards = 2;
     let mut i = 0;
     while i < args.len() {
-        let take = |i: &mut usize| -> usize {
+        let take = |i: &mut usize, flag: &str| -> usize {
             *i += 1;
-            args.get(*i)
-                .and_then(|v| v.parse().ok())
-                .unwrap_or_else(|| usage())
+            match args.get(*i) {
+                None => missing_value(flag),
+                Some(v) => v.parse().unwrap_or_else(|_| invalid_value(flag, v)),
+            }
         };
         match args[i].as_str() {
-            "--a" => cfg.a_intensity = take(&mut i),
-            "--b" => cfg.b_unroll = take(&mut i),
-            "--c" => cfg.c_efficiency = take(&mut i),
-            "--d" => cfg.d_patterns = take(&mut i),
-            "--lanes" => cfg.compile_parallelism = take(&mut i),
-            "--ga-pop" => cfg.ga_population = take(&mut i),
-            "--ga-gen" => cfg.ga_generations = take(&mut i),
-            "--pool" => pool = take(&mut i).max(1),
+            "--a" => cfg.a_intensity = take(&mut i, "--a"),
+            "--b" => cfg.b_unroll = take(&mut i, "--b"),
+            "--c" => cfg.c_efficiency = take(&mut i, "--c"),
+            "--d" => cfg.d_patterns = take(&mut i, "--d"),
+            "--lanes" => cfg.compile_parallelism = take(&mut i, "--lanes"),
+            "--ga-pop" => cfg.ga_population = take(&mut i, "--ga-pop"),
+            "--ga-gen" => cfg.ga_generations = take(&mut i, "--ga-gen"),
+            "--pool" => pool = take(&mut i, "--pool").max(1),
+            "--boards" => boards = take(&mut i, "--boards").max(1),
             "--target" => {
                 i += 1;
-                let v = args.get(i).unwrap_or_else(|| usage());
+                let Some(v) = args.get(i) else { missing_value("--target") };
                 target = Target::parse(v).unwrap_or_else(|| {
                     eprintln!(
                         "unknown --target `{v}`: expected one of fpga, gpu, mixed \
@@ -120,7 +144,7 @@ fn parse_opts(args: &[String]) -> Opts {
             }
             "--blocks" => {
                 i += 1;
-                let v = args.get(i).unwrap_or_else(|| usage());
+                let Some(v) = args.get(i) else { missing_value("--blocks") };
                 cfg.block_mode = BlockMode::parse(v).unwrap_or_else(|| {
                     eprintln!("unknown --blocks `{v}`: expected one of off, on, only");
                     std::process::exit(2);
@@ -128,7 +152,8 @@ fn parse_opts(args: &[String]) -> Opts {
             }
             "--cache-dir" => {
                 i += 1;
-                cache_dir = Some(args.get(i).cloned().unwrap_or_else(|| usage()));
+                let Some(v) = args.get(i) else { missing_value("--cache-dir") };
+                cache_dir = Some(v.clone());
             }
             "--no-cache" => no_cache = true,
             "--full-scale" => full_scale = true,
@@ -137,7 +162,7 @@ fn parse_opts(args: &[String]) -> Opts {
         }
         i += 1;
     }
-    Opts { app, cfg, full_scale, target, cache_dir, no_cache, pool }
+    Opts { app, cfg, full_scale, target, cache_dir, no_cache, pool, boards }
 }
 
 /// The artifact cache this invocation routes searches through.
@@ -221,7 +246,9 @@ fn main() -> flopt::Result<()> {
                 analysis.program.loop_count()
             );
             let mut ints = analysis.intensities.clone();
-            ints.sort_by(|a, b| b.intensity.partial_cmp(&a.intensity).unwrap());
+            ints.sort_by(|a, b| {
+                order::desc_nan_last(a.intensity, b.intensity).then_with(|| a.id.cmp(&b.id))
+            });
             println!(
                 "{:<6} {:<14} {:>10} {:>12} {:>12} {:>10}  {}",
                 "loop", "function", "trips", "flops", "footprintB", "intensity", "offloadable"
@@ -328,6 +355,26 @@ fn main() -> flopt::Result<()> {
                 BatchService::new(opts.pool, opts.cfg.compile_parallelism, &XEON_3104)
                     .with_cache(build_cache(&opts));
             let report = service.run(&requests)?;
+            print!("{}", report.render());
+        }
+        "fleet" => {
+            // multi-tenant placement: every app's winner onto a bounded
+            // pool of Arria10 boards, on one shared simulated clock
+            require_fpga_target(&opts, "fleet");
+            let apps_list: Vec<&'static apps::App> = match opts.app.as_deref() {
+                Some(_) => vec![get_app(&opts)],
+                None => apps::all(),
+            };
+            let service =
+                BatchService::new(opts.pool, opts.cfg.compile_parallelism, &XEON_3104)
+                    .with_cache(build_cache(&opts));
+            let report = fleet::fleet_search(
+                &service,
+                &apps_list,
+                opts.boards,
+                &opts.cfg,
+                !opts.full_scale,
+            )?;
             print!("{}", report.render());
         }
         "opencl" => {

@@ -58,11 +58,13 @@ impl SimClock {
     /// Schedule a compile job on the earliest-free lane; returns the lane.
     pub fn schedule_compile(&self, label: &str, sim_seconds: f64) -> usize {
         let mut g = self.inner.lock().expect("poisoned");
+        // total_cmp: lane times are always finite, but the scheduler must
+        // never be able to panic; ties keep the first (lowest-index) lane
         let lane = g
             .lanes
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap();
         g.lanes[lane] += sim_seconds;

@@ -219,6 +219,12 @@ impl BatchService {
         &self.cache
     }
 
+    /// The CPU model requests are measured against (the fleet layer
+    /// reuses it for trace-level fallback searches on the shared clock).
+    pub fn cpu(&self) -> &CpuModel {
+        &self.cpu
+    }
+
     /// Run a batch: results come back in submission order and are
     /// byte-identical for any worker count.
     pub fn run(&self, requests: &[BatchRequest]) -> crate::Result<BatchReport> {

@@ -32,7 +32,7 @@ pub fn time_it<T>(iters: usize, mut f: impl FnMut() -> T) -> Timing {
             dt
         })
         .collect();
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     Timing {
         median_s: samples[samples.len() / 2],
         min_s: samples[0],

@@ -10,9 +10,12 @@
 //! * [`pool`] — fixed-size worker thread pool (the verification
 //!   environment's compile farm);
 //! * [`bench`] — tiny measurement harness (criterion stand-in) used by
-//!   `benches/*.rs`.
+//!   `benches/*.rs`;
+//! * [`order`] — NaN-safe total-order comparators and the deterministic
+//!   winner-selection rule every selection hot path routes through.
 
 pub mod bench;
 pub mod json;
+pub mod order;
 pub mod pool;
 pub mod rng;

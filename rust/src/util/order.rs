@@ -1,0 +1,114 @@
+//! NaN-safe, total-order comparison and selection helpers.
+//!
+//! Every selection hot path in the search (efficiency narrowing, winner
+//! selection, GA elitism, fleet placement) used to sort or `max_by` with
+//! `partial_cmp(..).unwrap()`, which panics the moment one degenerate
+//! measurement produces a NaN — and, on exact ties, silently depends on
+//! iterator order.  This module centralizes the replacement contract:
+//!
+//! * comparisons use [`f64::total_cmp`] (a total order — never panics);
+//! * in sorts, **NaN always ranks last**, whether the sort is ascending
+//!   or descending, so a poisoned value can never float to the front of
+//!   a narrowing cut;
+//! * selections ([`select_best`]) **reject NaN keys outright** and break
+//!   exact ties with a caller-supplied deterministic key (pattern id,
+//!   then submission order), so the winner is a pure function of the
+//!   candidate set — identical across runs, pool sizes, and platforms.
+
+use std::cmp::Ordering;
+
+/// Ascending total order on `f64` with NaN sorted **last**.
+///
+/// For finite and infinite values this is exactly the familiar numeric
+/// order (`total_cmp` agrees with `partial_cmp` there); NaN of either
+/// sign is pushed behind everything else.
+pub fn asc_nan_last(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
+/// Descending total order on `f64` with NaN sorted **last**.
+pub fn desc_nan_last(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => b.total_cmp(&a),
+    }
+}
+
+/// Pick the item with the highest **non-NaN** score; exact ties go to
+/// the smallest `tie` key.  Items whose score is NaN are rejected
+/// outright — a poisoned measurement can never be selected, and the
+/// result is deterministic for any iteration order of equal-score items.
+pub fn select_best<T, K: Ord>(
+    items: impl IntoIterator<Item = T>,
+    score: impl Fn(&T) -> f64,
+    tie: impl Fn(&T) -> K,
+) -> Option<T> {
+    let mut best: Option<(f64, K, T)> = None;
+    for item in items {
+        let s = score(&item);
+        if s.is_nan() {
+            continue; // degenerate measurement: never a winner
+        }
+        let replace = match &best {
+            None => true,
+            Some((bs, bk, _)) => match s.total_cmp(bs) {
+                Ordering::Greater => true,
+                Ordering::Less => false,
+                Ordering::Equal => tie(&item) < *bk,
+            },
+        };
+        if replace {
+            let k = tie(&item);
+            best = Some((s, k, item));
+        }
+    }
+    best.map(|(_, _, item)| item)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nan_sorts_last_in_both_directions() {
+        let mut v = vec![2.0, f64::NAN, 1.0, 3.0];
+        v.sort_by(|a, b| desc_nan_last(*a, *b));
+        assert_eq!(&v[..3], &[3.0, 2.0, 1.0]);
+        assert!(v[3].is_nan());
+        v.sort_by(|a, b| asc_nan_last(*a, *b));
+        assert_eq!(&v[..3], &[1.0, 2.0, 3.0]);
+        assert!(v[3].is_nan());
+    }
+
+    #[test]
+    fn infinities_order_normally() {
+        let mut v = vec![0.0, f64::INFINITY, f64::NEG_INFINITY];
+        v.sort_by(|a, b| asc_nan_last(*a, *b));
+        assert_eq!(v, vec![f64::NEG_INFINITY, 0.0, f64::INFINITY]);
+    }
+
+    #[test]
+    fn select_best_rejects_nan_and_breaks_ties_deterministically() {
+        // NaN never wins, even when it is the only "largest" value
+        let items = vec![("a", f64::NAN), ("b", 2.0), ("c", 2.0), ("d", 1.0)];
+        let w = select_best(items.iter(), |x| x.1, |x| x.0).unwrap();
+        assert_eq!(w.0, "b", "tie between b and c goes to the smaller key");
+
+        // identical result regardless of iteration order
+        let mut rev = items.clone();
+        rev.reverse();
+        let w2 = select_best(rev.iter(), |x| x.1, |x| x.0).unwrap();
+        assert_eq!(w2.0, "b");
+
+        // all-NaN input selects nothing (and does not panic)
+        let poisoned = vec![("x", f64::NAN), ("y", f64::NAN)];
+        assert!(select_best(poisoned.iter(), |x| x.1, |x| x.0).is_none());
+    }
+}

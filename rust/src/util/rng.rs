@@ -54,15 +54,42 @@ impl Rng {
     }
 
     /// Uniform in `[lo, hi)`.
+    ///
+    /// The naive `lo + f64() * (hi - lo)` can round **up to exactly
+    /// `hi`** when the draw is close to 1 and the arithmetic rounds (e.g.
+    /// `lo = 0.0, hi = 1e-300`), violating the half-open contract; such
+    /// draws are clamped to the largest representable value below `hi`.
     pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
-        lo + self.f64() * (hi - lo)
+        let v = lo + self.f64() * (hi - lo);
+        if v >= hi && hi > lo {
+            next_below(hi)
+        } else {
+            v
+        }
     }
 
     /// Uniform integer in `[0, n)`; `n` must be > 0.
+    ///
+    /// Lemire's widening-multiply reduction with rejection: the plain
+    /// `next_u64() % n` used before this is **modulo-biased** — for `n`
+    /// not a power of two the low `2^64 mod n` values are more likely
+    /// than the rest (severely so for `n` near `2^63`), which skews GA
+    /// tournament picks and workload shuffles.
     pub fn below(&mut self, n: u64) -> u64 {
         assert!(n > 0);
-        // rejection-free Lemire-style reduction is overkill here
-        self.next_u64() % n
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut low = m as u64;
+        if low < n {
+            // reject draws from the short (biased) final interval
+            let threshold = n.wrapping_neg() % n;
+            while low < threshold {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                low = m as u64;
+            }
+        }
+        (m >> 64) as u64
     }
 
     /// Uniform integer in `[lo, hi]` inclusive.
@@ -87,6 +114,19 @@ impl Rng {
             let j = self.below((i + 1) as u64) as usize;
             xs.swap(i, j);
         }
+    }
+}
+
+/// The largest representable `f64` strictly below a positive, negative,
+/// or zero finite `hi` (a `f64::next_down` stand-in for the pinned MSRV).
+fn next_below(hi: f64) -> f64 {
+    debug_assert!(hi.is_finite());
+    if hi == 0.0 {
+        -f64::from_bits(1) // largest value below ±0.0 is -min_subnormal
+    } else if hi > 0.0 {
+        f64::from_bits(hi.to_bits() - 1)
+    } else {
+        f64::from_bits(hi.to_bits() + 1)
     }
 }
 
@@ -131,6 +171,61 @@ mod tests {
         let mut r = Rng::new(3);
         for _ in 0..1000 {
             assert!(r.below(7) < 7);
+        }
+    }
+
+    /// Regression for the modulo-bias fix: with `n = 3·2^62`, the old
+    /// `next_u64() % n` reduction returned values below `2^62` with
+    /// probability 1/2 instead of 1/3 (both halves of the 2^64 input
+    /// space land there).  The Lemire reduction must be uniform.
+    #[test]
+    fn below_has_no_modulo_bias_for_large_n() {
+        let n: u64 = 3 << 62;
+        let bucket = 1u64 << 62; // first third of [0, n)
+        let mut r = Rng::new(11);
+        let draws = 30_000;
+        let hits = (0..draws).filter(|_| r.below(n) < bucket).count() as f64;
+        let frac = hits / draws as f64;
+        assert!(
+            (frac - 1.0 / 3.0).abs() < 0.02,
+            "P(v < n/3) = {frac}, expected ≈ 1/3 (0.5 would mean modulo bias)"
+        );
+    }
+
+    #[test]
+    fn below_small_n_buckets_are_level() {
+        let mut r = Rng::new(13);
+        let mut counts = [0u32; 7];
+        let draws = 70_000;
+        for _ in 0..draws {
+            counts[r.below(7) as usize] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let expected = draws as f64 / 7.0;
+            assert!(
+                (*c as f64 - expected).abs() < expected * 0.05,
+                "bucket {i}: {c} vs expected {expected}"
+            );
+        }
+    }
+
+    /// Regression for the `hi`-exclusivity fix: with a subnormal span,
+    /// `lo + f64()·(hi − lo)` rounds up to exactly `hi` for roughly half
+    /// the draws — the clamp must keep every draw strictly below `hi`.
+    #[test]
+    fn range_f64_excludes_hi_even_under_rounding() {
+        let mut r = Rng::new(17);
+        let hi = f64::from_bits(1); // smallest positive subnormal
+        for _ in 0..256 {
+            let v = r.range_f64(0.0, hi);
+            assert!(v < hi, "draw {v} must stay below hi {hi}");
+            assert!(v >= 0.0);
+        }
+        // sane spans are untouched by the clamp
+        let mut r2 = Rng::new(19);
+        for _ in 0..1000 {
+            let v = r2.range_f64(2.0, 3.0);
+            assert!((2.0..3.0).contains(&v));
         }
     }
 

@@ -202,10 +202,15 @@ fn mixed_never_loses_to_all_cpu_on_any_app() {
             .iter()
             .filter(|s| s.best.is_some() && s.speedup > 1.0)
             .collect();
-        match improving
-            .iter()
-            .max_by(|a, b| a.speedup.partial_cmp(&b.speedup).unwrap())
-        {
+        // the coordinator's own rule: highest speedup, NaN rejected,
+        // ties to the earlier (FPGA-first) search
+        let winner = flopt::util::order::select_best(
+            improving.iter().enumerate(),
+            |(_, s)| s.speedup,
+            |(i, _)| *i,
+        )
+        .map(|(_, s)| s);
+        match winner {
             Some(best) => {
                 assert_eq!(t.winner, best.destination, "{}", app.name);
                 assert_eq!(t.speedup, best.speedup, "{}", app.name);

@@ -106,6 +106,38 @@ fn unknown_cli_target_errors_helpfully() {
 }
 
 #[test]
+fn missing_flag_values_name_the_flag_and_exit_2() {
+    let exe = env!("CARGO_BIN_EXE_flopt");
+    for flag in ["--target", "--blocks", "--cache-dir", "--a", "--d", "--boards", "--pool"] {
+        let out = std::process::Command::new(exe)
+            .args(["offload", "matmul", flag])
+            .output()
+            .expect("run flopt");
+        assert_eq!(out.status.code(), Some(2), "{flag}: a missing value must exit 2");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            stderr.contains(&format!("missing value for {flag}")),
+            "{flag}: error must name the missing flag: {stderr}"
+        );
+    }
+}
+
+#[test]
+fn non_numeric_flag_values_name_flag_and_value_and_exit_2() {
+    let exe = env!("CARGO_BIN_EXE_flopt");
+    let out = std::process::Command::new(exe)
+        .args(["offload", "matmul", "--a", "lots"])
+        .output()
+        .expect("run flopt");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("invalid value for --a: `lots`"),
+        "error must name the flag and the bad value: {stderr}"
+    );
+}
+
+#[test]
 fn unknown_cli_blocks_mode_errors_helpfully() {
     let exe = env!("CARGO_BIN_EXE_flopt");
     let out = std::process::Command::new(exe)

@@ -1,0 +1,300 @@
+//! Fleet placement suite (ISSUE 5): no placement exceeds a board's
+//! resource caps; the fleet aggregate never loses to all-CPU; output is
+//! byte-identical across pool sizes 1/2/8 and warm cache re-runs; and a
+//! NaN-poisoned measurement is rejected without panicking the run.
+
+use flopt::apps;
+use flopt::backend::{Destination, FPGA};
+use flopt::cache::{self, codec, CacheStore};
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::analyze_app;
+use flopt::coordinator::stages::{
+    stage_block_narrow, stage_efficiency_narrow, stage_intensity_narrow, stage_measure_blocks,
+    stage_measure_rounds, stage_precompile, stage_select, BlockMeasureArtifact, EfficiencyCut,
+    IntensityCut, MeasureArtifact, PrecompileArtifact,
+};
+use flopt::coordinator::verify_env::{PatternMeasurement, VerifyEnv};
+use flopt::cparse::ast::LoopId;
+use flopt::cpu::XEON_3104;
+use flopt::fleet::{self, first_fit_decreasing, tenant_from_trace, FleetStatus};
+use flopt::fpga::ARRIA10_GX;
+use flopt::funcblock::BlockMode;
+use flopt::opencl::OffloadPattern;
+use flopt::service::BatchService;
+
+fn blocks_on() -> SearchConfig {
+    SearchConfig { block_mode: BlockMode::On, ..SearchConfig::default() }
+}
+
+fn run_fleet(pool: usize, boards: usize, cfg: &SearchConfig) -> flopt::fleet::FleetReport {
+    let svc = BatchService::new(pool, 1, &XEON_3104);
+    let apps_list: Vec<&'static apps::App> = apps::all();
+    fleet::fleet_search(&svc, &apps_list, boards, cfg, true).unwrap()
+}
+
+#[test]
+fn no_placement_ever_exceeds_a_boards_resource_caps() {
+    for boards in [1usize, 2, 8] {
+        let cfg = blocks_on();
+        let r = run_fleet(2, boards, &cfg);
+        assert_eq!(r.board_util.len(), boards);
+        for b in &r.board_util {
+            assert!(
+                b.utilization <= cfg.resource_cap + 1e-12,
+                "board {} util {} exceeds the cap",
+                b.board,
+                b.utilization
+            );
+            // per-type caps: the dynamic region never outgrows the
+            // non-BSP share of the device
+            let avail = 1.0 - ARRIA10_GX.bsp_frac;
+            assert!(b.resources.alms <= ARRIA10_GX.total.alms * avail);
+            assert!(b.resources.ffs <= ARRIA10_GX.total.ffs * avail);
+            assert!(b.resources.luts <= ARRIA10_GX.total.luts * avail);
+            assert!(b.resources.dsps <= ARRIA10_GX.total.dsps * avail);
+            assert!(b.resources.m20ks <= ARRIA10_GX.total.m20ks * avail);
+        }
+        // every placed app's row points at a real board
+        for a in &r.apps {
+            if let FleetStatus::Placed { board } = &a.status {
+                assert!(*board < boards);
+                assert!(a.speedup > 1.0, "{}: only improving placements admit", a.app_name);
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_aggregate_never_loses_to_all_cpu() {
+    for cfg in [SearchConfig::default(), blocks_on()] {
+        let r = run_fleet(2, 2, &cfg);
+        assert!(
+            r.aggregate_speedup >= 1.0,
+            "aggregate {} must never lose to all-CPU",
+            r.aggregate_speedup
+        );
+        assert!(r.cpu_total_s > 0.0);
+        assert!(r.fleet_total_s <= r.cpu_total_s + 1e-12);
+        for a in &r.apps {
+            assert!(a.speedup >= 1.0, "{}: per-app never below CPU", a.app_name);
+        }
+        // at least one app should actually win a board at test scale
+        assert!(
+            r.apps.iter().any(|a| matches!(a.status, FleetStatus::Placed { .. })),
+            "someone must place: {}",
+            r.render()
+        );
+    }
+}
+
+#[test]
+fn fleet_output_is_byte_identical_for_pool_sizes_1_2_8() {
+    for boards in [1usize, 2, 8] {
+        let renders: Vec<String> = [1usize, 2, 8]
+            .iter()
+            .map(|&pool| run_fleet(pool, boards, &blocks_on()).render())
+            .collect();
+        assert_eq!(renders[0], renders[1], "boards={boards}: pool 1 vs 2");
+        assert_eq!(renders[0], renders[2], "boards={boards}: pool 1 vs 8");
+    }
+}
+
+#[test]
+fn warm_fleet_reruns_are_byte_identical_and_free() {
+    let dir = std::env::temp_dir().join(format!(
+        "flopt-fleet-warm-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = blocks_on();
+    let apps_list: Vec<&'static apps::App> = apps::all();
+
+    let cold_svc =
+        BatchService::new(2, 1, &XEON_3104).with_cache(CacheStore::with_dir(&dir));
+    let cold = fleet::fleet_search(&cold_svc, &apps_list, 2, &cfg, true).unwrap();
+
+    // same service, warm in-memory hit
+    let warm_mem = fleet::fleet_search(&cold_svc, &apps_list, 2, &cfg, true).unwrap();
+    assert_eq!(warm_mem.render(), cold.render());
+    assert_eq!(warm_mem, cold);
+
+    // fresh service + fresh store over the same disk dir: warm from disk,
+    // burning nothing on the new shared clock
+    let warm_svc =
+        BatchService::new(2, 1, &XEON_3104).with_cache(CacheStore::with_dir(&dir));
+    let warm_disk = fleet::fleet_search(&warm_svc, &apps_list, 2, &cfg, true).unwrap();
+    assert_eq!(warm_disk.render(), cold.render(), "disk-warm run must be bit-identical");
+    assert_eq!(warm_disk, cold);
+    assert_eq!(
+        warm_svc.clock().total_hours(),
+        0.0,
+        "a fleet-report cache hit must not touch the clock"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Build a minimal compiled pattern measurement for selector tests.
+fn pm(loops: &[u32], speedup: f64) -> PatternMeasurement {
+    PatternMeasurement {
+        pattern: OffloadPattern::of(loops.iter().map(|l| LoopId(*l)).collect()),
+        utilization: 0.4,
+        compiled: true,
+        compile_sim_s: 3.0 * 3600.0,
+        time_s: if speedup.is_nan() { f64::NAN } else { 1.0 / speedup },
+        speedup,
+        kernels: Vec::new(),
+    }
+}
+
+fn empty_stage_inputs() -> (IntensityCut, PrecompileArtifact, EfficiencyCut) {
+    (
+        IntensityCut { top_a: Vec::new() },
+        PrecompileArtifact { candidates: Vec::new() },
+        EfficiencyCut { top_c: Vec::new() },
+    )
+}
+
+#[test]
+fn select_rejects_nan_and_is_byte_identical_across_repeats() {
+    let analysis = analyze_app(&apps::MATMUL, true).unwrap();
+    let (cut, pre, eff) = empty_stage_inputs();
+    let meas = MeasureArtifact {
+        cpu_time_s: 1.0,
+        opencl: Vec::new(),
+        // the poisoned measurement has the "highest" speedup slot (NaN)
+        rounds: vec![vec![pm(&[1], f64::NAN), pm(&[2], 2.0), pm(&[3], 1.5)]],
+    };
+    let traces: Vec<String> = (0..3)
+        .map(|_| {
+            let t = stage_select(
+                &analysis,
+                Destination::Fpga,
+                &cut,
+                &pre,
+                &eff,
+                &meas,
+                &BlockMeasureArtifact::empty(),
+            );
+            codec::trace_to_string(&t)
+        })
+        .collect();
+    assert_eq!(traces[0], traces[1]);
+    assert_eq!(traces[0], traces[2]);
+    let t = stage_select(
+        &analysis,
+        Destination::Fpga,
+        &cut,
+        &pre,
+        &eff,
+        &meas,
+        &BlockMeasureArtifact::empty(),
+    );
+    let best = t.best.expect("a finite pattern must win");
+    assert_eq!(best.pattern, OffloadPattern::single(LoopId(2)), "NaN never wins");
+    assert!(best.speedup.is_finite());
+}
+
+#[test]
+fn equal_speedup_ties_break_on_pattern_id_not_iteration_order() {
+    let analysis = analyze_app(&apps::MATMUL, true).unwrap();
+    let (cut, pre, eff) = empty_stage_inputs();
+    let fwd = MeasureArtifact {
+        cpu_time_s: 1.0,
+        opencl: Vec::new(),
+        rounds: vec![vec![pm(&[5], 2.0), pm(&[3], 2.0)]],
+    };
+    let rev = MeasureArtifact {
+        cpu_time_s: 1.0,
+        opencl: Vec::new(),
+        rounds: vec![vec![pm(&[3], 2.0), pm(&[5], 2.0)]],
+    };
+    for meas in [&fwd, &rev] {
+        let t = stage_select(
+            &analysis,
+            Destination::Fpga,
+            &cut,
+            &pre,
+            &eff,
+            meas,
+            &BlockMeasureArtifact::empty(),
+        );
+        assert_eq!(
+            t.best.unwrap().pattern,
+            OffloadPattern::single(LoopId(3)),
+            "the tie must go to the smaller pattern id in either order"
+        );
+    }
+}
+
+#[test]
+fn nan_poisoned_block_measurement_is_rejected_through_block_stages() {
+    let cfg = blocks_on();
+    let analysis = analyze_app(&apps::TDFIR, true).unwrap();
+    let cut = stage_intensity_narrow(&analysis, &FPGA, cfg.a_intensity);
+    let pre = stage_precompile(&analysis, &cut, &FPGA, cfg.b_unroll);
+    let eff = stage_efficiency_narrow(&pre, cfg.c_efficiency);
+    let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
+    let meas = stage_measure_rounds(&analysis, &pre, &eff, &env, &cfg);
+    let offers = stage_block_narrow(&analysis, &FPGA, &XEON_3104, BlockMode::On);
+    assert!(!offers.offers.is_empty(), "tdfir has registry blocks");
+    let mut blocks = stage_measure_blocks(&analysis, &pre, &meas, &offers, &env, &cfg);
+    assert!(!blocks.placements.is_empty());
+
+    // poison every block placement: the selector must fall back to the
+    // loop-pattern side without panicking, deterministically
+    for p in &mut blocks.placements {
+        p.speedup = f64::NAN;
+        p.time_s = f64::NAN;
+    }
+    let s1 = {
+        let t = stage_select(&analysis, Destination::Fpga, &cut, &pre, &eff, &meas, &blocks);
+        assert!(t.best_block.is_none() || t.best_block.as_ref().unwrap().speedup.is_finite());
+        assert!(
+            !t.solution_is_block(),
+            "a poisoned block side can never be the solution"
+        );
+        assert!(t.best.is_some(), "the loop side still wins");
+        codec::trace_to_string(&t)
+    };
+    let s2 = {
+        let t = stage_select(&analysis, Destination::Fpga, &cut, &pre, &eff, &meas, &blocks);
+        codec::trace_to_string(&t)
+    };
+    assert_eq!(s1, s2, "poisoned selection must stay byte-identical");
+}
+
+#[test]
+fn nan_poisoned_trace_degrades_to_cpu_and_the_fleet_run_completes() {
+    // obtain a genuine trace, then poison its winner end to end
+    let svc = BatchService::new(2, 1, &XEON_3104);
+    let apps_list: Vec<&'static apps::App> = vec![&apps::TDFIR, &apps::MATMUL];
+    fleet::fleet_search(&svc, &apps_list, 2, &SearchConfig::default(), true).unwrap();
+    let tkey = cache::trace_key(&apps::TDFIR, true, &FPGA, &SearchConfig::default());
+    let mut poisoned = svc.cache().get_trace(tkey).expect("trace cached");
+    if let Some(best) = &mut poisoned.best {
+        best.speedup = f64::NAN;
+        best.time_s = f64::NAN;
+    }
+    poisoned.best_block = None;
+
+    let healthy_key = cache::trace_key(&apps::MATMUL, true, &FPGA, &SearchConfig::default());
+    let healthy = svc.cache().get_trace(healthy_key).expect("trace cached");
+
+    let demands = vec![
+        tenant_from_trace(&poisoned, FPGA.device, 0),
+        tenant_from_trace(&healthy, FPGA.device, 1),
+    ];
+    assert!(demands[0].options.is_empty(), "poisoned winner must be rejected");
+    let outcome = first_fit_decreasing(&demands, 2, 0.85, &ARRIA10_GX);
+    let report = fleet::report::build(&demands, &outcome, 2, &ARRIA10_GX, 1.0, 1.0);
+    assert_eq!(report.apps[0].status, FleetStatus::Cpu, "poisoned tenant stays on CPU");
+    assert_eq!(report.apps[0].speedup, 1.0);
+    assert!(
+        matches!(report.apps[1].status, FleetStatus::Placed { .. }),
+        "the healthy tenant still places: {}",
+        report.render()
+    );
+    assert!(report.aggregate_speedup >= 1.0);
+}
