@@ -1,6 +1,10 @@
 //! Application corpus: the paper's two evaluation applications (tdfir,
-//! MRI-Q) as MiniC sources with the paper's exact loop counts, plus three
-//! extra sample apps for the examples and the analysis tests.
+//! MRI-Q) as MiniC sources with the paper's exact loop counts, plus the
+//! extra workload families for the examples and the analysis tests —
+//! dense matmul, a 2-D stencil, a histogram pipeline, an FFT butterfly
+//! sweep, sparse CSR matvec, a 3-D stencil, and an n-body pair
+//! interaction.  [`gen`] synthesizes additional random programs from a
+//! seed (the generative property suite and `flopt gen`).
 //!
 //! Each [`App`] may carry an [`ArtifactBinding`]: when the offload search
 //! selects the bound hot loop, the verification environment executes the
@@ -11,6 +15,8 @@
 
 use crate::cparse::{self, Program};
 use crate::interp::{Interp, Value};
+
+pub mod gen;
 
 /// Binding of an app's hot loop to an AOT artifact.
 #[derive(Debug, Clone)]
@@ -137,9 +143,55 @@ pub const HISTOGRAM: App = App {
     stats_array: "stats_out",
 };
 
+/// Extra workload: radix-2 FFT butterfly sweep (strided cross-reads).
+pub const FFT: App = App {
+    name: "fft",
+    description: "Radix-2 FFT butterfly sweep (strided cross-read pairs)",
+    source: include_str!("minic/fft.mc"),
+    paper_loop_count: None,
+    binding: None,
+    test_scale: &[("N", 256), ("STAGES", 8)],
+    stats_array: "stats_out",
+};
+
+/// Extra workload: sparse CSR matrix-vector product (indirect gather).
+pub const SPMV: App = App {
+    name: "spmv",
+    description: "Sparse CSR matrix-vector product (indirect gather)",
+    source: include_str!("minic/spmv.mc"),
+    paper_loop_count: None,
+    binding: None,
+    test_scale: &[("ROWS", 256), ("COLS", 128)],
+    stats_array: "stats_out",
+};
+
+/// Extra workload: 3-D 7-point heat stencil (detector negative space).
+pub const STENCIL3D: App = App {
+    name: "stencil3d",
+    description: "3-D 7-point heat stencil (Jacobi sweeps)",
+    source: include_str!("minic/stencil3d.mc"),
+    paper_loop_count: None,
+    binding: None,
+    test_scale: &[("D", 12), ("ITERS", 2)],
+    stats_array: "stats_out",
+};
+
+/// Extra workload: all-pairs n-body interaction (pair-indexed reads).
+pub const NBODY: App = App {
+    name: "nbody",
+    description: "All-pairs n-body gravitational interaction",
+    source: include_str!("minic/nbody.mc"),
+    paper_loop_count: None,
+    binding: None,
+    test_scale: &[("NB", 96), ("STEPS", 2)],
+    stats_array: "stats_out",
+};
+
 /// All registered apps.
 pub fn all() -> Vec<&'static App> {
-    vec![&TDFIR, &MRIQ, &MATMUL, &LAPLACE2D, &HISTOGRAM]
+    vec![
+        &TDFIR, &MRIQ, &MATMUL, &LAPLACE2D, &HISTOGRAM, &FFT, &SPMV, &STENCIL3D, &NBODY,
+    ]
 }
 
 /// Look up an app by name.
@@ -229,6 +281,49 @@ mod tests {
             .unwrap();
         assert_eq!(phimag.info.id.0, 4);
         assert!(phimag.deps.offloadable);
+    }
+
+    #[test]
+    fn corpus_workload_loop_counts_match_header_comments() {
+        assert_eq!(FFT.parse().loop_count(), 8);
+        assert_eq!(SPMV.parse().loop_count(), 7);
+        assert_eq!(STENCIL3D.parse().loop_count(), 9);
+        assert_eq!(NBODY.parse().loop_count(), 6);
+    }
+
+    #[test]
+    fn corpus_hot_nests_are_offloadable() {
+        for (app, func) in [
+            (&FFT, "butterfly"),
+            (&SPMV, "spmv"),
+            (&NBODY, "forces"),
+        ] {
+            let p = app.parse();
+            let loops = ir::analyze(&p);
+            let hot = loops
+                .iter()
+                .find(|l| l.info.function == func && l.info.depth == 0)
+                .unwrap_or_else(|| panic!("{}: no outer loop in {func}", app.name));
+            assert!(
+                hot.deps.offloadable,
+                "{}: hot loop rejected: {:?}",
+                app.name, hot.deps.reject_reason
+            );
+        }
+    }
+
+    #[test]
+    fn spmv_prefix_sum_build_is_not_offloadable() {
+        let p = SPMV.parse();
+        let loops = ir::analyze(&p);
+        let build = loops
+            .iter()
+            .find(|l| l.info.function == "build_rows")
+            .unwrap();
+        assert!(
+            !build.deps.offloadable,
+            "a stored running total is a carried flow dependence"
+        );
     }
 
     #[test]

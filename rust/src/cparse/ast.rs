@@ -304,6 +304,70 @@ pub struct Program {
     pub functions: Vec<Function>,
 }
 
+/// Deep-copy a program with every source position reset to
+/// `Pos::default()`: AST equality modulo layout.  The pretty-print
+/// round-trip tests (`rust/tests/roundtrip.rs`) and the generative
+/// property suite compare reparsed programs with this — positions
+/// necessarily differ after printing, nothing else may.
+pub fn strip_positions(p: &Program) -> Program {
+    fn decl(d: &Decl) -> Decl {
+        Decl { pos: Pos::default(), ..d.clone() }
+    }
+    fn stmts(body: &[Stmt]) -> Vec<Stmt> {
+        body.iter().map(stmt).collect()
+    }
+    fn stmt(s: &Stmt) -> Stmt {
+        match s {
+            Stmt::Decl(d) => Stmt::Decl(decl(d)),
+            Stmt::Assign { target, op, value, .. } => Stmt::Assign {
+                target: target.clone(),
+                op: *op,
+                value: value.clone(),
+                pos: Pos::default(),
+            },
+            Stmt::If { cond, then_branch, else_branch, .. } => Stmt::If {
+                cond: cond.clone(),
+                then_branch: stmts(then_branch),
+                else_branch: stmts(else_branch),
+                pos: Pos::default(),
+            },
+            Stmt::For { id, header, body, .. } => Stmt::For {
+                id: *id,
+                header: ForHeader {
+                    init: header.init.as_deref().map(|s| Box::new(stmt(s))),
+                    cond: header.cond.clone(),
+                    step: header.step.as_deref().map(|s| Box::new(stmt(s))),
+                },
+                body: stmts(body),
+                pos: Pos::default(),
+            },
+            Stmt::While { id, cond, body, .. } => Stmt::While {
+                id: *id,
+                cond: cond.clone(),
+                body: stmts(body),
+                pos: Pos::default(),
+            },
+            Stmt::Return(e, _) => Stmt::Return(e.clone(), Pos::default()),
+            Stmt::Expr(e, _) => Stmt::Expr(e.clone(), Pos::default()),
+            Stmt::Block(body) => Stmt::Block(stmts(body)),
+        }
+    }
+    Program {
+        globals: p.globals.iter().map(decl).collect(),
+        functions: p
+            .functions
+            .iter()
+            .map(|f| Function {
+                ret: f.ret.clone(),
+                name: f.name.clone(),
+                params: f.params.clone(),
+                body: stmts(&f.body),
+                pos: Pos::default(),
+            })
+            .collect(),
+    }
+}
+
 impl Program {
     /// Look up a function by name.
     pub fn function(&self, name: &str) -> Option<&Function> {

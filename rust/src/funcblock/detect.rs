@@ -17,10 +17,18 @@
 //!   calls in the inner body) → `trig_accumulation`;
 //! * the histogram fills (flat loop, array write at a **data-dependent**
 //!   index) → `histogram_bin`;
-//! * laplace2d's boundary-guarded Jacobi sweep matches **nothing**: its
-//!   3-deep nest carries no accumulator (`dense_matmul` requires one)
-//!   and its stencil is guarded — the negative space
-//!   `rust/tests/funcblock.rs` pins per backend.
+//! * fft's butterfly sweep (2-deep, NO accumulator, strided cross-read
+//!   pairs multiplied against a twiddle table, two arrays written) →
+//!   `fft_butterfly`;
+//! * spmv's CSR gather nest (2-deep accumulation whose inner read index
+//!   is loaded from memory — `gather_reads`) → `spmv_csr`;
+//! * nbody's force nest (2-deep, guarded self-pair, ≥2 accumulators,
+//!   position arrays read at *both* counters — `pair_indexed_arrays`) →
+//!   `nbody_pair`;
+//! * laplace2d's boundary-guarded Jacobi sweep and stencil3d's 4-deep
+//!   variant match **nothing**: neither carries an accumulator
+//!   (`dense_matmul` requires one) and both stencils are guarded — the
+//!   negative space `rust/tests/funcblock.rs` pins per backend.
 
 use std::collections::BTreeSet;
 
@@ -35,13 +43,21 @@ pub const DENSE_MATMUL: &str = "dense_matmul";
 pub const TRIG_ACCUMULATION: &str = "trig_accumulation";
 /// Registry name of the data-dependent histogram-fill block shape.
 pub const HISTOGRAM_BIN: &str = "histogram_bin";
+/// Registry name of the strided butterfly (FFT stage) block shape.
+pub const FFT_BUTTERFLY: &str = "fft_butterfly";
+/// Registry name of the CSR sparse-matvec gather block shape.
+pub const SPMV_CSR: &str = "spmv_csr";
+/// Registry name of the all-pairs interaction block shape.
+pub const NBODY_PAIR: &str = "nbody_pair";
 
 /// Normalized structural signature of one outermost loop nest.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct NestSignature {
     /// Nest depth including the root (1 = flat loop).
     pub depth: u32,
-    /// Distinct scalar `+=`/`-=`-style accumulators anywhere in the nest.
+    /// Distinct scalar `+=`/`-=`-style accumulators anywhere in the
+    /// nest, nest counters excluded (a `k++` step is induction, not
+    /// accumulation).
     pub accumulations: u32,
     /// `sin`/`cos` call sites in the nest bodies.
     pub trig_calls: u32,
@@ -57,8 +73,17 @@ pub struct NestSignature {
     /// signal×taps / A×B product at the heart of FIR and matmul)?
     pub product_of_reads: bool,
     /// Array writes whose index mentions **no** nest counter but does
-    /// mention a variable — a data-dependent scatter (`h[b] += 1`).
+    /// mention a variable, or whose index contains an array read — a
+    /// data-dependent scatter (`h[b] += 1`, `a[idx[i]] = e`).
     pub indirect_writes: u32,
+    /// Array reads whose index mentions **no** nest counter but does
+    /// mention a variable, or whose index contains an array read — a
+    /// data-dependent gather (`x[c]` with `c = colidx[jj]`).
+    pub gather_reads: u32,
+    /// Arrays read at two or more distinct counter-bearing indices
+    /// spanning at least two nest counters (`qx[i]` and `qx[j]` — the
+    /// all-pairs interaction shape).
+    pub pair_indexed_arrays: u32,
     /// Distinct arrays read in the nest.
     pub arrays_read: u32,
     /// Distinct arrays written in the nest.
@@ -185,7 +210,10 @@ pub fn signature(la: &LoopAnalysis) -> NestSignature {
         ..Default::default()
     };
 
-    // accumulation pattern: distinct scalars updated with += / -=
+    // accumulation pattern: distinct scalars updated with += / -=.
+    // Nest counters are excluded: `Stmt::walk` visits nested `for`
+    // headers, so a `k++` step would otherwise read as an accumulator
+    // and no `++`-stepped nest could ever have `accumulations == 0`.
     let mut accumulators = BTreeSet::new();
     for s in &la.info.body {
         s.walk(&mut |s| {
@@ -195,7 +223,9 @@ pub fn signature(la: &LoopAnalysis) -> NestSignature {
                 ..
             } = s
             {
-                accumulators.insert(v.clone());
+                if !counters.contains(v) {
+                    accumulators.insert(v.clone());
+                }
             }
             if matches!(s, Stmt::If { .. }) {
                 sig.guarded = true;
@@ -235,18 +265,59 @@ pub fn signature(la: &LoopAnalysis) -> NestSignature {
         });
     }
 
-    // data-dependent scatters: write index with no counter but some var.
+    // data-dependent scatters/gathers: an index with no counter but some
+    // var, or an index that itself reads an array (`a[idx[i]]` — the
+    // subscript values are data, whatever variables they mention).
     // Only classifiable when the nest has a *known* counter — a `while`
     // nest with no recognizable induction variable must not read every
-    // counter-indexed write as a scatter (false-positive IP bait).
+    // counter-indexed access as data-dependent (false-positive IP bait).
+    let data_dependent = |idx: &Expr| {
+        let vars = vars_in(idx);
+        let mut reads_array = false;
+        idx.walk(&mut |e| {
+            if matches!(e, Expr::Index(..)) {
+                reads_array = true;
+            }
+        });
+        (!vars.is_empty() && vars.iter().all(|v| !counters.contains(v))) || reads_array
+    };
     if !counters.is_empty() {
         for indices in la.refs.array_writes.values() {
             for idx in indices {
-                let vars = vars_in(idx);
-                if !vars.is_empty() && vars.iter().all(|v| !counters.contains(v)) {
+                if data_dependent(idx) {
                     sig.indirect_writes += 1;
                 }
             }
+        }
+        for indices in la.refs.array_reads.values() {
+            for idx in indices {
+                if data_dependent(idx) {
+                    sig.gather_reads += 1;
+                }
+            }
+        }
+    }
+
+    // pair-interaction reads: one array read at several distinct
+    // counter-bearing indices that together span ≥ 2 nest counters
+    for indices in la.refs.array_reads.values() {
+        let mut distinct: Vec<&Expr> = Vec::new();
+        let mut touched = BTreeSet::new();
+        for idx in indices {
+            let hits: Vec<String> = vars_in(idx)
+                .into_iter()
+                .filter(|v| counters.contains(v))
+                .collect();
+            if hits.is_empty() {
+                continue;
+            }
+            if !distinct.iter().any(|e| *e == idx) {
+                distinct.push(idx);
+            }
+            touched.extend(hits);
+        }
+        if distinct.len() >= 2 && touched.len() >= 2 {
+            sig.pair_indexed_arrays += 1;
         }
     }
 
@@ -272,6 +343,42 @@ pub fn classify(sig: &NestSignature) -> Option<&'static str> {
         && sig.product_of_reads
     {
         return Some(FIR_FILTER);
+    }
+    // CSR sparse matvec: 2-nest accumulation whose inner read index is
+    // itself loaded from memory (the column-index gather), with a
+    // values×vector product and no trig.  Disjoint from FIR: a sliding
+    // window indexes by its counters, a gather by loaded data.
+    if sig.depth == 2
+        && sig.accumulations >= 1
+        && sig.trig_calls == 0
+        && sig.gather_reads >= 1
+        && sig.product_of_reads
+    {
+        return Some(SPMV_CSR);
+    }
+    // FFT butterfly: 2-nest with NO accumulator, unguarded, strided
+    // cross-read pairs (`a[b*span+k]` / `a[b*span+k+half]`) multiplied
+    // against a second table, writing ≥ 2 output arrays.
+    if sig.depth == 2
+        && sig.accumulations == 0
+        && sig.trig_calls == 0
+        && !sig.guarded
+        && sig.cross_indexed_reads >= 2
+        && sig.offset_reads >= 1
+        && sig.product_of_reads
+        && sig.arrays_written >= 2
+    {
+        return Some(FFT_BUTTERFLY);
+    }
+    // All-pairs interaction: 2-nest, guarded (self-pair test), several
+    // accumulators, and some array read at BOTH counters (`q[i]`/`q[j]`).
+    if sig.depth == 2
+        && sig.accumulations >= 2
+        && sig.guarded
+        && sig.trig_calls == 0
+        && sig.pair_indexed_arrays >= 1
+    {
+        return Some(NBODY_PAIR);
     }
     // Dense matmul: 3-nest, inner accumulator, A×B product with both
     // operands cross-indexed, and no boundary guard (a guarded 3-nest is
@@ -413,6 +520,90 @@ mod tests {
         // the boundary-guarded Jacobi sweep is the pinned negative space:
         // no false-positive IP substitution on stencils
         assert!(blocks_of(&apps::LAPLACE2D).is_empty());
+    }
+
+    #[test]
+    fn fft_butterfly_detected() {
+        let bs = blocks_of(&apps::FFT);
+        let bf = bs
+            .iter()
+            .find(|b| b.name == FFT_BUTTERFLY)
+            .expect("the butterfly nest must be detected");
+        assert_eq!(bf.root, LoopId(2));
+        assert_eq!(bf.loops, vec![LoopId(2), LoopId(3)]);
+        assert_eq!(bf.signature.depth, 2);
+        assert_eq!(bf.signature.accumulations, 0, "{:?}", bf.signature);
+        assert!(bf.signature.cross_indexed_reads >= 2);
+        assert!(bf.signature.arrays_written >= 2);
+        // the init/copy/checksum loops must not be claimed
+        assert_eq!(bs.iter().filter(|b| b.name == FFT_BUTTERFLY).count(), 1);
+    }
+
+    #[test]
+    fn spmv_gather_detected() {
+        let bs = blocks_of(&apps::SPMV);
+        let sp = bs
+            .iter()
+            .find(|b| b.name == SPMV_CSR)
+            .expect("the CSR gather nest must be detected");
+        assert_eq!(sp.root, LoopId(4));
+        assert_eq!(sp.loops, vec![LoopId(4), LoopId(5)]);
+        assert!(sp.signature.gather_reads >= 1, "{:?}", sp.signature);
+        assert!(sp.signature.product_of_reads);
+        // the CSR build nests (prefix sum, column scatter) match nothing
+        assert!(bs.iter().all(|b| b.root != LoopId(0)));
+        assert!(bs.iter().all(|b| b.root != LoopId(1)));
+    }
+
+    #[test]
+    fn nbody_pair_nest_detected() {
+        let bs = blocks_of(&apps::NBODY);
+        let nb = bs
+            .iter()
+            .find(|b| b.name == NBODY_PAIR)
+            .expect("the force nest must be detected");
+        assert_eq!(nb.root, LoopId(1));
+        assert_eq!(nb.loops, vec![LoopId(1), LoopId(2)]);
+        assert!(nb.signature.pair_indexed_arrays >= 1, "{:?}", nb.signature);
+        assert!(nb.signature.guarded);
+        assert!(nb.signature.accumulations >= 3);
+        // integrate/kinetic/init are not blocks
+        assert_eq!(bs.len(), 1, "{bs:?}");
+    }
+
+    #[test]
+    fn stencil3d_matches_nothing() {
+        // the 4-deep guarded stencil is negative space, like laplace2d
+        assert!(blocks_of(&apps::STENCIL3D).is_empty());
+    }
+
+    #[test]
+    fn scatter_through_index_array_is_indirect() {
+        // `a[idx[i]]` mentions the counter, but the subscript VALUES are
+        // data — the write must still read as a scatter
+        let src = "void f(float a[], float idx[], int n) {\
+            int i;\
+            for (i = 0; i < n; i++) { a[idx[i]] += 1.0; } }";
+        let p = crate::cparse::parse(src).unwrap();
+        let loops = ir::analyze(&p);
+        let sig = signature(&loops[0]);
+        assert!(sig.indirect_writes >= 1, "{sig:?}");
+        assert_eq!(classify(&sig), Some(HISTOGRAM_BIN));
+    }
+
+    #[test]
+    fn fir_is_not_misread_as_pair_interaction() {
+        // the FIR window reads one array at ONE distinct index expression
+        // — pair_indexed_arrays stays 0 and the FIR arm matches first
+        let p = apps::TDFIR.parse();
+        let loops = ir::analyze(&p);
+        let fir = loops
+            .iter()
+            .find(|l| l.info.id == LoopId(8))
+            .unwrap();
+        let sig = signature(fir);
+        assert_eq!(sig.pair_indexed_arrays, 0, "{sig:?}");
+        assert_eq!(classify(&sig), Some(FIR_FILTER));
     }
 
     #[test]

@@ -20,7 +20,10 @@
 use crate::backend::Destination;
 
 use super::detect::DetectedBlock;
-use super::detect::{DENSE_MATMUL, FIR_FILTER, HISTOGRAM_BIN, TRIG_ACCUMULATION};
+use super::detect::{
+    DENSE_MATMUL, FFT_BUTTERFLY, FIR_FILTER, HISTOGRAM_BIN, NBODY_PAIR, SPMV_CSR,
+    TRIG_ACCUMULATION,
+};
 
 /// Cost/resource model of one block implementation on one backend.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -51,8 +54,9 @@ pub struct BlockIp {
 }
 
 /// The built-in registry.  Deliberately **no** stencil entry: laplace2d's
-/// boundary-guarded sweep must never be IP-substituted
-/// (`rust/tests/funcblock.rs` pins that negative space per backend).
+/// boundary-guarded sweep and stencil3d's 4-deep variant must never be
+/// IP-substituted (`rust/tests/funcblock.rs` pins that negative space
+/// per backend).
 pub const REGISTRY: &[BlockIp] = &[
     BlockIp {
         name: FIR_FILTER,
@@ -77,6 +81,26 @@ pub const REGISTRY: &[BlockIp] = &[
         description: "banked local-bin histogram core / atomics histogram kernel",
         fpga: Some(IpModel { speedup_vs_cpu: 6.0, utilization: 0.22, compile_sim_s: 420.0 }),
         gpu: Some(IpModel { speedup_vs_cpu: 3.0, utilization: 0.35, compile_sim_s: 60.0 }),
+    },
+    BlockIp {
+        name: FFT_BUTTERFLY,
+        description: "streaming radix-2 butterfly core / cuFFT stage kernel",
+        fpga: Some(IpModel { speedup_vs_cpu: 14.0, utilization: 0.42, compile_sim_s: 420.0 }),
+        gpu: Some(IpModel { speedup_vs_cpu: 9.0, utilization: 0.55, compile_sim_s: 60.0 }),
+    },
+    BlockIp {
+        name: SPMV_CSR,
+        description: "banked CSR gather-accumulate core / cuSPARSE csrmv",
+        fpga: Some(IpModel { speedup_vs_cpu: 9.0, utilization: 0.30, compile_sim_s: 420.0 }),
+        gpu: Some(IpModel { speedup_vs_cpu: 4.0, utilization: 0.45, compile_sim_s: 60.0 }),
+    },
+    BlockIp {
+        // the one shape where the GPU library edges out the FPGA core:
+        // the O(n^2) pair sweep is arithmetic-bound SIMT heaven
+        name: NBODY_PAIR,
+        description: "pipelined pair-interaction core / tiled n-body SIMT kernel",
+        fpga: Some(IpModel { speedup_vs_cpu: 10.0, utilization: 0.48, compile_sim_s: 420.0 }),
+        gpu: Some(IpModel { speedup_vs_cpu: 11.0, utilization: 0.65, compile_sim_s: 60.0 }),
     },
 ];
 

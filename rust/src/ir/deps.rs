@@ -9,12 +9,17 @@
 //! 1. the loop has a canonical counted header (`for (v = lo; v < hi; v += k)`);
 //! 2. the body makes no non-builtin calls and contains no `return`;
 //! 3. every written array is indexed by an expression that *contains the
-//!    loop counter* (distinct iterations touch distinct elements), and if
+//!    loop counter* (distinct iterations touch distinct elements) and
+//!    contains no array read (`a[idx[i]]` is a data-dependent scatter:
+//!    two iterations may collide however the counter appears), and if
 //!    the same array is also read, every read index is syntactically equal
 //!    to a write index (`a[i] = f(a[i])` allowed, `a[i] = a[i-1]` not);
 //! 4. every scalar that is both read and written is either declared inside
 //!    the body (private) or forms a recognized reduction
-//!    (`s += e` / `s = s + e` / `s *= e` with no other writes to `s`).
+//!    (`s += e` / `s = s + e` / `s *= e` with no other writes to `s`)
+//!    whose running value is never consumed elsewhere in the body — a
+//!    prefix sum (`t = t + x; out[i] = t;`) updates like a reduction but
+//!    each iteration observes the previous one's total.
 
 use std::collections::BTreeSet;
 
@@ -51,6 +56,16 @@ fn expr_contains_var(e: &Expr, var: &str) -> bool {
             if n == var {
                 found = true;
             }
+        }
+    });
+    found
+}
+
+fn expr_contains_index(e: &Expr) -> bool {
+    let mut found = false;
+    e.walk(&mut |e| {
+        if matches!(e, Expr::Index(..)) {
+            found = true;
         }
     });
     found
@@ -120,6 +135,59 @@ fn recognize_reduction(var: &str, assigns: &[(LValue, AssignOp, Expr)]) -> Optio
     op.map(|op| Reduction { var: var.into(), op })
 }
 
+/// Count uses of a recognized reduction variable *outside* its own
+/// reduction updates.  A true reduction is write-only until the loop
+/// ends; any other read (stored to an array, tested in a guard, fed to
+/// another assignment) observes the running value and orders the
+/// iterations — the prefix-sum trap the generative suite fuzzes.
+fn reduction_extra_uses(var: &str, body: &[Stmt]) -> usize {
+    fn count_in(e: &Expr, var: &str) -> usize {
+        let mut n = 0;
+        e.walk(&mut |e| {
+            if let Expr::Var(v) = e {
+                if v == var {
+                    n += 1;
+                }
+            }
+        });
+        n
+    }
+    let mut uses = 0;
+    for s in body {
+        s.walk(&mut |s| match s {
+            Stmt::Assign { target, op, value, .. } => {
+                if let LValue::Index(_, idx) = target {
+                    uses += count_in(idx, var);
+                }
+                let mut in_value = count_in(value, var);
+                // `s = s + e` carries one structural self-reference the
+                // recognizer already accepted; a second (`s = s + s`)
+                // still counts
+                if matches!(target, LValue::Var(t) if t == var) && *op == AssignOp::Assign {
+                    in_value = in_value.saturating_sub(1);
+                }
+                uses += in_value;
+            }
+            Stmt::Decl(d) => {
+                if let Some(init) = &d.init {
+                    uses += count_in(init, var);
+                }
+            }
+            Stmt::If { cond, .. } | Stmt::While { cond, .. } => uses += count_in(cond, var),
+            Stmt::Expr(e, _) | Stmt::Return(Some(e), _) => uses += count_in(e, var),
+            // walk covers a nested for's init/step as statements but not
+            // its header condition
+            Stmt::For { header, .. } => {
+                if let Some(c) = &header.cond {
+                    uses += count_in(c, var);
+                }
+            }
+            _ => {}
+        });
+    }
+    uses
+}
+
 /// Run the dependence tests for one loop.
 pub fn analyze(info: &LoopInfo, refs: &LoopRefs) -> DepAnalysis {
     let mut out = DepAnalysis::default();
@@ -166,6 +234,11 @@ pub fn analyze(info: &LoopInfo, refs: &LoopRefs) -> DepAnalysis {
             if !expr_contains_var(w, &canon.var) {
                 return reject("array written at loop-invariant index");
             }
+            // `a[idx[i]]` contains the counter yet the subscript values
+            // are data — two iterations may hit the same element
+            if expr_contains_index(w) {
+                return reject("array written at data-dependent index");
+            }
         }
         if let Some(reads) = refs.array_reads.get(arr) {
             for r in reads {
@@ -185,7 +258,12 @@ pub fn analyze(info: &LoopInfo, refs: &LoopRefs) -> DepAnalysis {
         .collect();
     for var in carried {
         match recognize_reduction(&var, &assigns) {
-            Some(r) => out.reductions.push(r),
+            Some(r) => {
+                if reduction_extra_uses(&var, &info.body) > 0 {
+                    return reject("reduction value consumed inside the loop");
+                }
+                out.reductions.push(r);
+            }
             None => {
                 return reject("loop-carried scalar dependence (not a reduction)");
             }
@@ -339,6 +417,80 @@ mod tests {
         // reduction recognizer does not model. Accept either outcome but
         // require the *innermost* reduction loop to be classified.
         let _ = d;
+    }
+
+    #[test]
+    fn scatter_through_index_array_rejected() {
+        // `bins[a[i]]` mentions the counter, but the subscript values are
+        // data: iterations collide on shared bins
+        let d = dep(
+            "void f(float bins[], float a[], int n) { int i; \
+             for (i = 0; i < n; i++) { bins[a[i]] += 1.0; } }",
+            0,
+        );
+        assert!(!d.offloadable);
+        assert!(d.reject_reason.unwrap().contains("data-dependent"));
+    }
+
+    #[test]
+    fn prefix_sum_store_rejected() {
+        // `t` updates like a `+` reduction, but storing the running total
+        // makes every iteration observe the previous one
+        let d = dep(
+            "void f(float a[], float pre[], int n) { int i; float t; t = 0.0; \
+             for (i = 0; i < n; i++) { t = t + a[i]; pre[i] = t; } }",
+            0,
+        );
+        assert!(!d.offloadable);
+        assert!(d.reject_reason.unwrap().contains("consumed"));
+    }
+
+    #[test]
+    fn reduction_var_in_write_index_rejected() {
+        // `k -= 1` reduces, but using k to address the store serializes
+        // the iterations (and would alias them all onto shifting slots)
+        let d = dep(
+            "void f(float a[], int n) { int i; int k; k = n; \
+             for (i = 0; i < n; i++) { k -= 1; a[i + k] = 1.0; } }",
+            0,
+        );
+        assert!(!d.offloadable);
+        assert!(d.reject_reason.unwrap().contains("consumed"));
+    }
+
+    #[test]
+    fn self_feeding_sum_rejected() {
+        // `s = s + s` doubles the carried value — not a reduction over
+        // loop-local terms even though it matches the `s = s + e` shape
+        let d = dep(
+            "void f(float a[], int n) { int i; float s; s = 1.0; \
+             for (i = 0; i < n; i++) { s = s + s; a[i] = 0.0; } }",
+            0,
+        );
+        assert!(!d.offloadable);
+        assert!(d.reject_reason.unwrap().contains("consumed"));
+    }
+
+    #[test]
+    fn guard_on_reduction_var_rejected() {
+        let d = dep(
+            "void f(float a[], int n) { int i; float s; s = 0.0; \
+             for (i = 0; i < n; i++) { if (s < 10.0) { s += a[i]; } } }",
+            0,
+        );
+        assert!(!d.offloadable);
+        assert!(d.reject_reason.unwrap().contains("consumed"));
+    }
+
+    #[test]
+    fn gather_read_still_offloadable() {
+        // data-dependent READS are fine — only scattered writes collide
+        let d = dep(
+            "void f(float a[], float b[], float idx[], int n) { int i; \
+             for (i = 0; i < n; i++) { a[i] = b[idx[i]] * 2.0; } }",
+            0,
+        );
+        assert!(d.offloadable, "{:?}", d.reject_reason);
     }
 
     #[test]

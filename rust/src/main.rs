@@ -13,6 +13,7 @@
 //! flopt opencl <app>               print generated OpenCL for the solution
 //! flopt verify <app>               PJRT numerics cross-check of the hot loop
 //! flopt compare <app>              proposed vs GA vs exhaustive vs naive
+//! flopt gen [--seed S --count N]   print N seeded MiniC programs
 //! ```
 //!
 //! Options for `offload`/`batch`/`compare`: `--target {fpga,gpu,mixed}`
@@ -67,10 +68,12 @@ fn usage() -> ! {
          \x20 compare <app> [opts]      proposed vs baselines\n\
          \x20 blocks <app>              function-block detection + IP offers\n\
          \x20 adapt <app> [opts]        Steps 4-6: size, place, verify operation\n\
+         \x20 gen [--seed S --count N]  print N seeded MiniC programs (fuzz corpus)\n\
          opts: --target {{fpga,gpu,mixed}} --blocks {{off,on,only}}\n\
          \x20     --a N --b N --c N --d N --lanes N --boards N\n\
          \x20     --ga-pop N --ga-gen N --full-scale\n\
          \x20     --cache-dir <dir> --no-cache --pool N\n\
+         \x20     --seed S --count N (gen only)\n\
          (`flopt --target mixed` with no app searches all registered apps\n\
          \x20on one shared clock and reports the winning destination per app;\n\
          \x20`flopt batch --target mixed` submits every app x {{fpga,gpu}})"
@@ -87,6 +90,8 @@ struct Opts {
     no_cache: bool,
     pool: usize,
     boards: usize,
+    seed: u64,
+    count: usize,
 }
 
 /// A flag was given without its required value: name the flag and exit 2
@@ -112,6 +117,8 @@ fn parse_opts(args: &[String]) -> Opts {
     let mut no_cache = false;
     let mut pool = 4;
     let mut boards = 2;
+    let mut seed: u64 = 42;
+    let mut count = 5;
     let mut i = 0;
     while i < args.len() {
         let take = |i: &mut usize, flag: &str| -> usize {
@@ -131,6 +138,13 @@ fn parse_opts(args: &[String]) -> Opts {
             "--ga-gen" => cfg.ga_generations = take(&mut i, "--ga-gen"),
             "--pool" => pool = take(&mut i, "--pool").max(1),
             "--boards" => boards = take(&mut i, "--boards").max(1),
+            "--count" => count = take(&mut i, "--count").max(1),
+            "--seed" => {
+                // seeds span the full u64 range; `take` parses usize
+                i += 1;
+                let Some(v) = args.get(i) else { missing_value("--seed") };
+                seed = v.parse().unwrap_or_else(|_| invalid_value("--seed", v));
+            }
             "--target" => {
                 i += 1;
                 let Some(v) = args.get(i) else { missing_value("--target") };
@@ -162,7 +176,7 @@ fn parse_opts(args: &[String]) -> Opts {
         }
         i += 1;
     }
-    Opts { app, cfg, full_scale, target, cache_dir, no_cache, pool, boards }
+    Opts { app, cfg, full_scale, target, cache_dir, no_cache, pool, boards, seed, count }
 }
 
 /// The artifact cache this invocation routes searches through.
@@ -512,6 +526,16 @@ fn main() -> flopt::Result<()> {
                     c.observed,
                     if c.passed { "PASS" } else { "FAIL" }
                 );
+            }
+        }
+        "gen" => {
+            // seeded MiniC corpus on stdout: program `i` depends only on
+            // (--seed, i), so any slice of the pool is reproducible
+            for idx in 0..opts.count {
+                if idx > 0 {
+                    println!();
+                }
+                print!("{}", apps::gen::gen_source(opts.seed, idx as u64));
             }
         }
         "compare" => {

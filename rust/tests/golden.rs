@@ -1,0 +1,123 @@
+//! Golden-file suite (rsjsonnet-style): CLI output is locked against
+//! files in `rust/tests/golden/`.
+//!
+//! Two goldens are **committed** and produced independently of the Rust
+//! code they check (see `rust/tests/golden/gen_port.py`): the `flopt
+//! gen` corpus for seed 42 and the `flopt apps` table.  A drift in the
+//! RNG, the generator's draw order, or the emitted text fails against
+//! bytes Rust never wrote — the suite cannot silently bless itself.
+//!
+//! The remaining goldens (`env`, `analyze`, `blocks`) hold model-driven
+//! numbers that are impractical to hand-compute; they are blessed on
+//! first run (or with `FLOPT_BLESS=1`) and lock the output from then
+//! on.  See `rust/tests/golden/README.md` for the blessing workflow.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use flopt::apps::gen;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+/// Compare `actual` against the golden file `name`.  Missing files are
+/// written and accepted (first-run bless); `FLOPT_BLESS=1` forces a
+/// rewrite.  Committed goldens always exist, so for them this is a
+/// strict byte comparison.
+fn check_golden(name: &str, actual: &str) {
+    let path = golden_dir().join(name);
+    let bless = std::env::var("FLOPT_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        std::fs::write(&path, actual).unwrap_or_else(|e| panic!("blessing {name}: {e}"));
+        if !bless {
+            eprintln!("golden: blessed missing {name}");
+        }
+        return;
+    }
+    let expected =
+        std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {name}: {e}"));
+    assert_eq!(
+        expected, actual,
+        "golden mismatch for {name}; rerun with FLOPT_BLESS=1 to re-bless \
+         (never re-bless gen_s42_n3.txt / apps.txt from Rust — regenerate \
+         them with rust/tests/golden/gen_port.py instead)"
+    );
+}
+
+/// Run the `flopt` binary and return its stdout.
+fn flopt(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_flopt"))
+        .args(args)
+        .output()
+        .unwrap_or_else(|e| panic!("spawning flopt {args:?}: {e}"));
+    assert!(
+        out.status.success(),
+        "flopt {args:?} exited with {:?}\nstderr:\n{}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("flopt output is UTF-8")
+}
+
+// ------------------------------------------------------- committed goldens
+
+#[test]
+fn gen_cli_matches_the_python_port_golden() {
+    let stdout = flopt(&["gen", "--seed", "42", "--count", "3"]);
+    assert!(
+        golden_dir().join("gen_s42_n3.txt").exists(),
+        "committed golden gen_s42_n3.txt is missing — regenerate with \
+         rust/tests/golden/gen_port.py, do not bless from Rust"
+    );
+    check_golden("gen_s42_n3.txt", &stdout);
+}
+
+#[test]
+fn gen_cli_output_equals_the_in_process_generator() {
+    // the CLI is a plain print of gen_source with one blank separator
+    // line; a drift here would make the golden pin the wrong layer
+    let stdout = flopt(&["gen", "--seed", "42", "--count", "3"]);
+    let expected: String = (0..3)
+        .map(|i| gen::gen_source(42, i))
+        .collect::<Vec<_>>()
+        .join("\n");
+    assert_eq!(expected, stdout);
+}
+
+#[test]
+fn apps_cli_matches_the_committed_golden() {
+    let stdout = flopt(&["apps"]);
+    assert!(
+        golden_dir().join("apps.txt").exists(),
+        "committed golden apps.txt is missing — regenerate with \
+         rust/tests/golden/gen_port.py, do not bless from Rust"
+    );
+    check_golden("apps.txt", &stdout);
+}
+
+// ----------------------------------------------------- blessed-once goldens
+
+#[test]
+fn env_cli_output_is_locked() {
+    check_golden("env.txt", &flopt(&["env"]));
+}
+
+#[test]
+fn analyze_matmul_output_is_locked() {
+    // test scale (the default), so trip counts and intensities are the
+    // small deterministic profile
+    check_golden("analyze_matmul.txt", &flopt(&["analyze", "matmul"]));
+}
+
+#[test]
+fn blocks_tdfir_output_is_locked() {
+    check_golden("blocks_tdfir.txt", &flopt(&["blocks", "tdfir"]));
+}
+
+#[test]
+fn blocks_fft_output_is_locked() {
+    // locks the PR 6 detector arm: the butterfly nest must keep being
+    // offered as the fft_butterfly registry block by both backends
+    check_golden("blocks_fft.txt", &flopt(&["blocks", "fft"]));
+}

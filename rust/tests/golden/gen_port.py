@@ -1,0 +1,253 @@
+#!/usr/bin/env python3
+"""Independent Python port of `flopt gen` used to produce the committed
+golden `gen_s42_n3.txt` (and the static `apps.txt` table).
+
+This is deliberately a from-scratch reimplementation of
+`rust/src/util/rng.rs` (SplitMix64-seeded xoshiro256** with Lemire
+integer reduction) and `rust/src/apps/gen.rs`: the golden test then
+checks the Rust generator against bytes that were NOT produced by the
+Rust generator, so a silent behaviour drift in either the RNG or the
+emitter fails the suite instead of blessing itself.
+
+Usage:
+    python3 gen_port.py            # rewrites gen_s42_n3.txt and apps.txt
+"""
+
+import os
+
+MASK = (1 << 64) - 1
+MIX = 0x9E3779B97F4A7C15
+ARRAY_LEN = 96
+
+
+def _splitmix64(state):
+    state = (state + MIX) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** with SplitMix64 seeding — mirrors util/rng.rs."""
+
+    def __init__(self, seed):
+        sm = seed & MASK
+        self.s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            self.s.append(v)
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def below(self, n):
+        assert n > 0
+        x = self.next_u64()
+        m = x * n
+        low = m & MASK
+        if low < n:
+            threshold = ((1 << 64) - n) % n  # n.wrapping_neg() % n
+            while low < threshold:
+                x = self.next_u64()
+                m = x * n
+                low = m & MASK
+        return m >> 64
+
+    def range_i64(self, lo, hi):
+        assert hi >= lo
+        return lo + self.below(hi - lo + 1)
+
+
+def program_seed(seed, index):
+    return seed ^ ((index * MIX) & MASK)
+
+
+def emit_construct(lines, rng, kind, c, n):
+    if kind == 0:
+        a = rng.below(n)
+        hi = rng.range_i64(16, ARRAY_LEN)
+        d1 = rng.range_i64(1, 9)
+        d2 = rng.range_i64(1, 9)
+        lines.append(f"    for (int i{c} = 0; i{c} < {hi}; i{c}++) {{")
+        lines.append(
+            f"        arr{a}[i{c}] = sin(i{c} * 0.0{d1}) + cos(i{c} * 0.0{d2}) * 0.5;"
+        )
+        lines.append("    }")
+    elif kind == 1:
+        a = rng.below(n)
+        b = rng.below(n)
+        hi = rng.range_i64(16, ARRAY_LEN)
+        d1 = rng.range_i64(1, 9)
+        d2 = rng.range_i64(1, 9)
+        lines.append(f"    for (int i{c} = 0; i{c} < {hi}; i{c}++) {{")
+        lines.append(f"        arr{a}[i{c}] = arr{b}[i{c}] * 1.{d1} + 0.{d2};")
+        lines.append("    }")
+    elif kind == 2:
+        a = rng.below(n)
+        b = (a + 1) % n
+        hi = rng.range_i64(16, ARRAY_LEN)
+        g = rng.range_i64(1, 4)
+        d = rng.range_i64(1, 9)
+        lines.append(f"    for (int i{c} = 1; i{c} < {hi}; i{c}++) {{")
+        lines.append(f"        if (i{c} > {g}) {{")
+        lines.append(
+            f"            arr{a}[i{c}] = arr{b}[i{c} - 1] * 0.{d} + arr{b}[i{c}] * 0.5;"
+        )
+        lines.append("        }")
+        lines.append("    }")
+    elif kind == 3:
+        a = rng.below(n)
+        hi = rng.range_i64(16, ARRAY_LEN)
+        slot = rng.range_i64(4, 7)
+        lines.append(f"    float s{c};")
+        lines.append(f"    s{c} = 0.0;")
+        lines.append(f"    for (int i{c} = 0; i{c} < {hi}; i{c}++) {{")
+        lines.append(f"        s{c} += arr{a}[i{c}] * arr{a}[i{c}];")
+        lines.append("    }")
+        lines.append(f"    stats_out[{slot}] = s{c};")
+    elif kind == 4:
+        a = rng.below(n)
+        b = (a + 1) % n
+        taps = rng.range_i64(4, 12)
+        hi = rng.range_i64(16, ARRAY_LEN)
+        if rng.below(2) == 1:
+            e = rng.below(n)
+            tap = f"arr{e}[k{c}]"
+        else:
+            d = rng.range_i64(1, 9)
+            tap = f"0.{d}"
+        lines.append(f"    for (int i{c} = 0; i{c} < {hi}; i{c}++) {{")
+        lines.append(f"        float acc{c};")
+        lines.append(f"        acc{c} = 0.0;")
+        lines.append(f"        for (int k{c} = 0; k{c} < {taps}; k{c}++) {{")
+        lines.append(f"            if (i{c} - k{c} >= 0) {{")
+        lines.append(f"                acc{c} += arr{a}[i{c} - k{c}] * {tap};")
+        lines.append("            }")
+        lines.append("        }")
+        lines.append(f"        arr{b}[i{c}] = acc{c};")
+        lines.append("    }")
+    elif kind == 5:
+        src = rng.below(n)
+        h = rng.below(n)
+        hi = rng.range_i64(16, ARRAY_LEN)
+        lines.append(f"    for (int i{c} = 0; i{c} < {hi}; i{c}++) {{")
+        lines.append(f"        int b{c};")
+        lines.append(f"        b{c} = floor((arr{src}[i{c}] + 4.0) * 2.0);")
+        lines.append(f"        if (b{c} < 0) {{")
+        lines.append(f"            b{c} = 0;")
+        lines.append("        }")
+        lines.append(f"        if (b{c} > 15) {{")
+        lines.append(f"            b{c} = 15;")
+        lines.append("        }")
+        lines.append(f"        arr{h}[b{c}] += 1.0;")
+        lines.append("    }")
+    elif kind == 6:
+        a = rng.below(n)
+        b = rng.below(n)
+        hi = rng.range_i64(16, ARRAY_LEN)
+        d = rng.range_i64(1, 9)
+        lines.append(f"    for (int i{c} = 0; i{c} < {hi}; i{c}++) {{")
+        lines.append(f"        arr{a}[i{c}] = sqrt(fabs(arr{b}[i{c}])) + 0.{d};")
+        lines.append("    }")
+    elif kind == 7:
+        a = rng.below(n)
+        b = rng.below(n)
+        dst = rng.below(n)
+        lines.append(f"    for (int i{c} = 0; i{c} < 8; i{c}++) {{")
+        lines.append(f"        for (int j{c} = 0; j{c} < 8; j{c}++) {{")
+        lines.append(f"            float m{c};")
+        lines.append(f"            m{c} = 0.0;")
+        lines.append(f"            for (int k{c} = 0; k{c} < 8; k{c}++) {{")
+        lines.append(
+            f"                m{c} += arr{a}[i{c} * 8 + k{c}] * arr{b}[k{c} * 8 + j{c}];"
+        )
+        lines.append("            }")
+        lines.append(f"            arr{dst}[i{c} * 8 + j{c}] = m{c};")
+        lines.append("        }")
+        lines.append("    }")
+    else:
+        a = rng.below(n)
+        hi = rng.range_i64(16, ARRAY_LEN)
+        d = rng.range_i64(1, 9)
+        lines.append(f"    int w{c};")
+        lines.append(f"    w{c} = 0;")
+        lines.append(f"    while (w{c} < {hi}) {{")
+        lines.append(f"        arr{a}[w{c}] += 0.{d};")
+        lines.append(f"        w{c} = w{c} + 1;")
+        lines.append("    }")
+
+
+def gen_source(seed, index):
+    rng = Rng(program_seed(seed, index))
+    n_arrays = rng.range_i64(2, 4)
+
+    lines = [f"// gen seed={seed} index={index}", "float stats_out[8];"]
+    for a in range(n_arrays):
+        lines.append(f"float arr{a}[{ARRAY_LEN}];")
+    lines.append("")
+    lines.append("void main() {")
+
+    constructs = rng.range_i64(2, 5)
+    for c in range(constructs):
+        kind = 0 if c == 0 else rng.below(9)
+        emit_construct(lines, rng, kind, c, n_arrays)
+
+    for slot in range(4):
+        a = rng.below(n_arrays)
+        idx = rng.range_i64(0, ARRAY_LEN - 1)
+        lines.append(f"    stats_out[{slot}] = arr{a}[{idx}];")
+    lines.append("}")
+    return "\n".join(lines) + "\n"
+
+
+# (name, loop_count, description, paper_loop_count) rows of `flopt apps`,
+# in apps::all() order; loop counts are the pinned values from
+# rust/tests/new_workloads.rs / the .mc header comments.
+APPS = [
+    ("tdfir", 36, "Time-domain finite impulse response filter (HPEC Challenge)", 36),
+    ("mriq", 16, "MRI-Q non-Cartesian reconstruction (Parboil)", 16),
+    ("matmul", 5, "Dense single-precision matrix multiply", None),
+    ("laplace2d", 9, "2-D Laplace stencil (Jacobi sweeps)", None),
+    ("histogram", 6, "Histogram + pointwise transform pipeline", None),
+    ("fft", 8, "Radix-2 FFT butterfly sweep (strided cross-read pairs)", None),
+    ("spmv", 7, "Sparse CSR matrix-vector product (indirect gather)", None),
+    ("stencil3d", 9, "3-D 7-point heat stencil (Jacobi sweeps)", None),
+    ("nbody", 6, "All-pairs n-body gravitational interaction", None),
+]
+
+
+def apps_table():
+    out = []
+    for name, loops, desc, paper in APPS:
+        suffix = f"  [paper: {paper}]" if paper is not None else ""
+        out.append(f"{name:<12} {loops:>3} loops  {desc}{suffix}")
+    return "\n".join(out) + "\n"
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    # `flopt gen --seed 42 --count 3`: programs separated by one blank line
+    gen = "\n".join(gen_source(42, i) for i in range(3))
+    with open(os.path.join(here, "gen_s42_n3.txt"), "w") as f:
+        f.write(gen)
+    with open(os.path.join(here, "apps.txt"), "w") as f:
+        f.write(apps_table())
+    print("wrote gen_s42_n3.txt and apps.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
 //! Coverage for the extra registered workloads (matmul, laplace2d,
-//! histogram): loop counts, dependence verdicts on the interesting loop
-//! shapes (nested accumulation, boundary-guarded nests, data-dependent
-//! writes), and the top-a intensity rankings the narrowing relies on.
+//! histogram, and the PR 6 corpus: fft, spmv, stencil3d, nbody): loop
+//! counts, dependence verdicts on the interesting loop shapes (nested
+//! accumulation, boundary-guarded nests, data-dependent writes, strided
+//! cross-reads, indirect gathers, pair interactions), and the top-a
+//! intensity rankings the narrowing relies on.
 
 use flopt::apps;
 use flopt::backend::FPGA;
@@ -17,6 +19,10 @@ fn loop_counts_are_stable() {
     assert_eq!(apps::MATMUL.parse().loop_count(), 5);
     assert_eq!(apps::LAPLACE2D.parse().loop_count(), 9);
     assert_eq!(apps::HISTOGRAM.parse().loop_count(), 6);
+    assert_eq!(apps::FFT.parse().loop_count(), 8);
+    assert_eq!(apps::SPMV.parse().loop_count(), 7);
+    assert_eq!(apps::STENCIL3D.parse().loop_count(), 9);
+    assert_eq!(apps::NBODY.parse().loop_count(), 6);
 }
 
 #[test]
@@ -74,6 +80,103 @@ fn histogram_transform_ranks_first_fill_is_rejected() {
         .expect("fill loop");
     assert!(!fill.deps.offloadable, "data-dependent writes must reject");
     assert!(!top.iter().any(|l| l.id == fill.info.id));
+}
+
+#[test]
+fn fft_butterfly_is_parallel_but_the_stage_sweep_stays_on_cpu() {
+    let p = apps::FFT.parse();
+    let loops = flopt::ir::analyze(&p);
+    // the group loop of the butterfly nest ping-pongs into br/bi, so
+    // despite the strided cross-reads it is fully parallel
+    let group = loops
+        .iter()
+        .find(|l| l.info.function == "butterfly" && l.info.depth == 0)
+        .expect("butterfly group loop");
+    assert_eq!(group.info.id, LoopId(2));
+    assert!(group.deps.offloadable, "{:?}", group.deps.reject_reason);
+    // the stage sweep in main calls butterfly/copy_back — never a candidate
+    let stage = loops
+        .iter()
+        .find(|l| l.info.function == "main")
+        .expect("stage sweep");
+    assert_eq!(stage.info.id, LoopId(7));
+    assert!(!stage.deps.offloadable);
+}
+
+#[test]
+fn spmv_gather_is_parallel_but_the_prefix_sum_is_consumed() {
+    let p = apps::SPMV.parse();
+    let loops = flopt::ir::analyze(&p);
+    // the row loop gathers x[c] through loaded column indices — reads
+    // may collide, writes (ys[i]) never do, so it stays offloadable
+    let row = loops
+        .iter()
+        .find(|l| l.info.function == "spmv" && l.info.depth == 0)
+        .expect("spmv row loop");
+    assert_eq!(row.info.id, LoopId(4));
+    assert!(row.deps.offloadable, "{:?}", row.deps.reject_reason);
+    // the CSR row-extent build stores its running total every iteration
+    let build = loops
+        .iter()
+        .find(|l| l.info.function == "build_rows")
+        .expect("prefix-sum build loop");
+    let reason = build.deps.reject_reason.as_deref().unwrap_or_default();
+    assert!(!build.deps.offloadable);
+    assert!(reason.contains("consumed"), "wrong reject reason: {reason}");
+}
+
+#[test]
+fn stencil3d_plane_nest_is_the_candidate() {
+    let analysis = analyze_app(&apps::STENCIL3D, true).unwrap();
+    // the i-plane nest inside the time sweep only reads `a`, writes `b`
+    let plane = analysis
+        .loops
+        .iter()
+        .find(|l| l.info.function == "jacobi3d" && l.info.depth == 1)
+        .expect("plane nest");
+    assert_eq!(plane.info.id, LoopId(3));
+    assert!(plane.deps.offloadable, "{:?}", plane.deps.reject_reason);
+    let top = intensity::top_a(&analysis.intensities, &analysis.loops, 5);
+    let ids: Vec<LoopId> = top.iter().map(|l| l.id).collect();
+    assert!(ids.contains(&plane.info.id), "top-a {ids:?}");
+}
+
+#[test]
+fn nbody_pair_nest_is_parallel_with_private_accumulators() {
+    let p = apps::NBODY.parse();
+    let loops = flopt::ir::analyze(&p);
+    // ax/ay/az are declared inside the body loop, so the inner-pair
+    // accumulation never becomes a loop-carried dependence of the nest
+    let body = loops
+        .iter()
+        .find(|l| l.info.function == "forces" && l.info.depth == 0)
+        .expect("body loop");
+    assert_eq!(body.info.id, LoopId(1));
+    assert!(body.deps.offloadable, "{:?}", body.deps.reject_reason);
+    let stepping = loops
+        .iter()
+        .find(|l| l.info.function == "main")
+        .expect("time stepping");
+    assert!(!stepping.deps.offloadable, "calls forces/integrate");
+}
+
+#[test]
+fn corpus_workloads_complete_the_search_without_losing_to_cpu() {
+    // the new families must flow through the whole loop pipeline; what
+    // wins varies by shape, but the search may never end below all-CPU
+    for app in [&apps::FFT, &apps::SPMV, &apps::STENCIL3D, &apps::NBODY] {
+        let analysis = analyze_app(app, true).unwrap();
+        let cfg = SearchConfig::default();
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
+        let t = search_with_analysis(app, &analysis, &env, &cfg).unwrap();
+        assert!(
+            t.speedup() >= 1.0,
+            "{}: search result {}x loses to all-CPU",
+            app.name,
+            t.speedup()
+        );
+        assert!(t.patterns_measured() <= cfg.d_patterns);
+    }
 }
 
 #[test]

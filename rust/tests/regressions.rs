@@ -1,0 +1,115 @@
+//! Minimized reproducers for bugs the generative fuzzer surfaced while
+//! building the property suite (`rust/tests/generative.rs`).  Each
+//! fixture under `rust/tests/fixtures/` is one shrunk program; the
+//! tests pin both the analysis verdict that was wrong and that the
+//! end-to-end search still completes on the program.
+
+use flopt::apps::gen::leak_app;
+use flopt::backend;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::offload_search;
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cparse::parse;
+use flopt::cpu::XEON_3104;
+use flopt::funcblock;
+use flopt::ir;
+
+const SCATTER: &str = include_str!("fixtures/scatter_through_index_array.mc");
+const PREFIX_SUM: &str = include_str!("fixtures/prefix_sum_store.mc");
+const COUNTER_STEP: &str = include_str!("fixtures/counter_step_not_accumulator.mc");
+
+fn reject_reason(src: &str, loop_index: usize) -> String {
+    let program = parse(src).expect("fixture parses");
+    let loops = ir::analyze(&program);
+    let l = &loops[loop_index];
+    assert!(
+        !l.deps.offloadable,
+        "{} must not be offloadable",
+        l.info.id
+    );
+    l.deps.reject_reason.clone().expect("rejects carry a reason")
+}
+
+#[test]
+fn scatter_through_index_array_is_rejected_as_data_dependent() {
+    // the write index `vals[j]` mentions the counter, which used to be
+    // enough to pass rule 3 — the subscript values are data, though
+    let reason = reject_reason(SCATTER, 1);
+    assert!(
+        reason.contains("data-dependent"),
+        "wrong reject reason: {reason}"
+    );
+}
+
+#[test]
+fn scatter_fixture_still_reads_as_a_histogram_block() {
+    // rejecting the loop for LOOP offloading must not hide it from the
+    // BLOCK detector — the registry histogram core handles the scatter
+    let program = parse(SCATTER).expect("fixture parses");
+    let loops = ir::analyze(&program);
+    let blocks = funcblock::detect(&loops);
+    assert!(
+        blocks
+            .iter()
+            .any(|b| b.name == funcblock::detect::HISTOGRAM_BIN),
+        "expected a histogram block, got {:?}",
+        blocks.iter().map(|b| b.name).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn prefix_sum_store_is_rejected_as_consumed_reduction() {
+    // `t = t + a[j]` matches the reduction form but `pre[j] = t` makes
+    // the loop order-dependent — the recognizer used to accept it
+    let reason = reject_reason(PREFIX_SUM, 1);
+    assert!(reason.contains("consumed"), "wrong reject reason: {reason}");
+}
+
+#[test]
+fn counter_step_is_not_an_accumulator() {
+    // `Stmt::walk` visits nested `for` headers, so the inner `k++` step
+    // used to register as a scalar accumulator; `accumulations == 0`
+    // was unsatisfiable and this butterfly misfiled as fir_filter
+    let program = parse(COUNTER_STEP).expect("fixture parses");
+    let loops = ir::analyze(&program);
+    let blocks = funcblock::detect(&loops);
+    let names: Vec<&str> = blocks.iter().map(|b| b.name).collect();
+    assert_eq!(names, vec![funcblock::detect::FFT_BUTTERFLY]);
+    assert_eq!(blocks[0].signature.accumulations, 0, "{:?}", blocks[0].signature);
+}
+
+#[test]
+fn fixtures_run_under_the_interpreter() {
+    for (name, src) in [
+        ("scatter", SCATTER),
+        ("prefix_sum", PREFIX_SUM),
+        ("counter_step", COUNTER_STEP),
+    ] {
+        let app = leak_app(format!("fixture-{name}"), src.to_string());
+        let program = app.parse();
+        let mut it = app.interp(&program, true);
+        it.run_main().unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn search_completes_end_to_end_on_both_fixtures() {
+    // neither fixture may panic the pipeline; whatever wins (a block
+    // offer or staying on the CPU) must never lose to all-CPU
+    for (name, src) in [
+        ("scatter", SCATTER),
+        ("prefix_sum", PREFIX_SUM),
+        ("counter_step", COUNTER_STEP),
+    ] {
+        let app = leak_app(format!("fixture-e2e-{name}"), src.to_string());
+        let cfg = SearchConfig::default();
+        let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, cfg.clone());
+        let trace =
+            offload_search(app, &env, true).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            trace.speedup() >= 1.0 - 1e-9,
+            "{name}: search result {}x loses to all-CPU",
+            trace.speedup()
+        );
+    }
+}

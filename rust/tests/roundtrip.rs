@@ -6,71 +6,8 @@
 //! compared with positions normalized to `Pos::default()`.
 
 use flopt::apps;
-use flopt::cparse::ast::{Decl, ForHeader, Function, Program, Stmt};
-use flopt::cparse::error::Pos;
+use flopt::cparse::ast::{strip_positions, Program};
 use flopt::cparse::{parse, pretty};
-
-fn norm_decl(d: &Decl) -> Decl {
-    Decl { pos: Pos::default(), ..d.clone() }
-}
-
-fn norm_stmts(body: &[Stmt]) -> Vec<Stmt> {
-    body.iter().map(norm_stmt).collect()
-}
-
-fn norm_stmt(s: &Stmt) -> Stmt {
-    match s {
-        Stmt::Decl(d) => Stmt::Decl(norm_decl(d)),
-        Stmt::Assign { target, op, value, .. } => Stmt::Assign {
-            target: target.clone(),
-            op: *op,
-            value: value.clone(),
-            pos: Pos::default(),
-        },
-        Stmt::If { cond, then_branch, else_branch, .. } => Stmt::If {
-            cond: cond.clone(),
-            then_branch: norm_stmts(then_branch),
-            else_branch: norm_stmts(else_branch),
-            pos: Pos::default(),
-        },
-        Stmt::For { id, header, body, .. } => Stmt::For {
-            id: *id,
-            header: ForHeader {
-                init: header.init.as_deref().map(|s| Box::new(norm_stmt(s))),
-                cond: header.cond.clone(),
-                step: header.step.as_deref().map(|s| Box::new(norm_stmt(s))),
-            },
-            body: norm_stmts(body),
-            pos: Pos::default(),
-        },
-        Stmt::While { id, cond, body, .. } => Stmt::While {
-            id: *id,
-            cond: cond.clone(),
-            body: norm_stmts(body),
-            pos: Pos::default(),
-        },
-        Stmt::Return(e, _) => Stmt::Return(e.clone(), Pos::default()),
-        Stmt::Expr(e, _) => Stmt::Expr(e.clone(), Pos::default()),
-        Stmt::Block(body) => Stmt::Block(norm_stmts(body)),
-    }
-}
-
-fn normalize(p: &Program) -> Program {
-    Program {
-        globals: p.globals.iter().map(norm_decl).collect(),
-        functions: p
-            .functions
-            .iter()
-            .map(|f| Function {
-                ret: f.ret.clone(),
-                name: f.name.clone(),
-                params: f.params.clone(),
-                body: norm_stmts(&f.body),
-                pos: Pos::default(),
-            })
-            .collect(),
-    }
-}
 
 #[test]
 fn every_registered_app_round_trips_to_an_identical_ast() {
@@ -80,8 +17,8 @@ fn every_registered_app_round_trips_to_an_identical_ast() {
         let p2 = parse(&printed)
             .unwrap_or_else(|e| panic!("{}: reparse failed: {e}\n{printed}", app.name));
         assert_eq!(
-            normalize(&p1),
-            normalize(&p2),
+            strip_positions(&p1),
+            strip_positions(&p2),
             "{}: pretty-print must reparse to the identical AST",
             app.name
         );

@@ -1,5 +1,6 @@
-//! Batch-service suite (PR 3): `flopt batch` over all 5 apps × {fpga,
-//! gpu} must produce byte-identical output for pool sizes 1, 2, and 8;
+//! Batch-service suite (PR 3): `flopt batch` over every registered app
+//! × {fpga, gpu} must produce byte-identical output for pool sizes 1,
+//! 2, and 8;
 //! in-batch duplicates dedupe; a repeat batch is fully warm; and the
 //! mixed-destination veneer over the service preserves its contract.
 
@@ -57,7 +58,7 @@ fn batch_covers_every_request_in_submission_order() {
     let requests = all_apps_both_targets();
     let svc = BatchService::new(4, 1, &XEON_3104);
     let report = svc.run(&requests).unwrap();
-    assert_eq!(report.items.len(), 10);
+    assert_eq!(report.items.len(), 2 * apps::all().len());
     for (req, item) in requests.iter().zip(&report.items) {
         assert_eq!(item.outcome.app_name, req.app.name);
         assert_eq!(Some(item.outcome.destination), req.target.destination());
@@ -80,7 +81,7 @@ fn batch_covers_every_request_in_submission_order() {
         assert!(w[1].sim_hours_after >= w[0].sim_hours_after);
     }
     assert!(report.compile_hours > 0.0);
-    assert_eq!(report.unique_cold, 10);
+    assert_eq!(report.unique_cold, 2 * apps::all().len());
     assert_eq!(report.warm_hits, 0);
     assert_eq!(report.deduped, 0);
 }
@@ -120,7 +121,7 @@ fn repeat_batch_on_one_service_is_fully_warm() {
     let cold = svc.run(&requests).unwrap();
     let clock_after_cold = svc.clock().total_hours();
     let warm = svc.run(&requests).unwrap();
-    assert_eq!(warm.warm_hits, 10);
+    assert_eq!(warm.warm_hits, 2 * apps::all().len());
     assert_eq!(warm.unique_cold, 0);
     assert_eq!(warm.compile_hours, 0.0);
     assert_eq!(warm.sim_hours, 0.0);
@@ -154,7 +155,7 @@ fn mixed_over_the_service_matches_direct_batch_rows() {
         true,
     )
     .unwrap();
-    assert_eq!(traces.len(), 5);
+    assert_eq!(traces.len(), apps::all().len());
     for t in &traces {
         assert_eq!(t.searches.len(), 2);
         assert_eq!(t.searches[0].destination, Destination::Fpga);
