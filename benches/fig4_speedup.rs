@@ -28,6 +28,9 @@ fn main() {
     println!("{:<46} {:>8} {:>10}", "Application", "paper", "this repo");
     let mut report_rows = Vec::new();
     let mut timing_rows = Vec::new();
+    // flat, deterministic (model-derived) numbers for `flopt bench-compare`
+    let mut metrics = BTreeMap::new();
+    let mut patterns_total = 0usize;
     for (app, paper, label) in [
         (&apps::TDFIR, 4.0, "Time domain finite impulse response filter"),
         (&apps::MRIQ, 7.1, "MRI-Q"),
@@ -56,7 +59,20 @@ fn main() {
         row.insert("compile_hours".to_string(), Json::Num(trace.compile_hours));
         report_rows.push(Json::Obj(row));
         timing_rows.push((label, run));
+        metrics.insert(
+            format!("speedup_{}", app.name),
+            Json::Num(trace.speedup()),
+        );
+        metrics.insert(
+            format!("compile_hours_{}", app.name),
+            Json::Num(trace.compile_hours),
+        );
+        patterns_total += trace.patterns_measured();
     }
+    metrics.insert(
+        "patterns_measured_total".to_string(),
+        Json::Num(patterns_total as f64),
+    );
 
     println!("\n=== search wall-clock (L3 hot path) ===");
     for (label, run) in timing_rows {
@@ -72,6 +88,7 @@ fn main() {
             Json::Str(if opts.test_scale { "test" } else { "full" }.to_string()),
         );
         doc.insert("rows".to_string(), Json::Arr(report_rows));
+        doc.insert("metrics".to_string(), Json::Obj(metrics));
         std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
         println!("\nreport written to {path}");
     }

@@ -38,6 +38,8 @@ fn main() {
     );
 
     let mut rows = Vec::new();
+    // flat, deterministic numbers for `flopt bench-compare`
+    let mut metrics = BTreeMap::new();
     for &boards in &board_sweep {
         // one service per pool size: the first run is cold, the second
         // warm through the fleet-report cache
@@ -102,6 +104,15 @@ fn main() {
             .collect();
         row.insert("board_util".to_string(), Json::Arr(boards_json));
         rows.push(Json::Obj(row));
+        metrics.insert(
+            format!("aggregate_speedup_b{boards}"),
+            Json::Num(cold.aggregate_speedup),
+        );
+        metrics.insert(format!("placed_b{boards}"), Json::Num(placed as f64));
+        metrics.insert(
+            format!("reconfig_hours_b{boards}"),
+            Json::Num(cold.reconfig_hours),
+        );
     }
 
     if let Some(path) = &opts.report {
@@ -113,6 +124,7 @@ fn main() {
         );
         doc.insert("apps".to_string(), Json::Num(apps_list.len() as f64));
         doc.insert("rows".to_string(), Json::Arr(rows));
+        doc.insert("metrics".to_string(), Json::Obj(metrics));
         std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
         println!("report written to {path}");
     }

@@ -42,6 +42,12 @@ fn main() {
     );
 
     let mut rows = Vec::new();
+    let mut loop_speedup_sum = 0.0;
+    let mut combined_speedup_sum = 0.0;
+    let mut blocks_total = 0usize;
+    let mut loop_compile_total = 0.0;
+    let mut blocks_compile_total = 0.0;
+    let mut n_rows = 0usize;
     for app in apps::all() {
         for backend in [&FPGA as &'static dyn OffloadBackend, &GPU] {
             let loop_only = run(app, backend, BlockMode::Off, opts.test_scale);
@@ -102,6 +108,12 @@ fn main() {
             );
             row.insert("winner".to_string(), Json::Str(winner));
             rows.push(Json::Obj(row));
+            loop_speedup_sum += loop_only.speedup();
+            combined_speedup_sum += combined.speedup();
+            blocks_total += combined.blocks.len();
+            loop_compile_total += loop_only.compile_hours;
+            blocks_compile_total += blocks_only.compile_hours;
+            n_rows += 1;
         }
     }
 
@@ -121,6 +133,30 @@ fn main() {
             Json::Str(if opts.test_scale { "test" } else { "full" }.to_string()),
         );
         doc.insert("rows".to_string(), Json::Arr(rows));
+        // flat, deterministic aggregates for `flopt bench-compare`
+        let denom = n_rows.max(1) as f64;
+        let mut metrics = BTreeMap::new();
+        metrics.insert(
+            "loop_speedup_mean".to_string(),
+            Json::Num(loop_speedup_sum / denom),
+        );
+        metrics.insert(
+            "combined_speedup_mean".to_string(),
+            Json::Num(combined_speedup_sum / denom),
+        );
+        metrics.insert(
+            "blocks_measured_total".to_string(),
+            Json::Num(blocks_total as f64),
+        );
+        metrics.insert(
+            "loop_compile_hours_total".to_string(),
+            Json::Num(loop_compile_total),
+        );
+        metrics.insert(
+            "blocks_compile_hours_total".to_string(),
+            Json::Num(blocks_compile_total),
+        );
+        doc.insert("metrics".to_string(), Json::Obj(metrics));
         std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
         println!("\nreport written to {path}");
     }

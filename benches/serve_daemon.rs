@@ -1,0 +1,93 @@
+//! Bench: the long-lived offload daemon — steady-state throughput and
+//! latency of `flopt serve` under tenant churn, incremental re-packing
+//! with live migration, DRR fairness, and an admission quota.
+//!
+//! The report's `metrics` are all simulated-model numbers (throughput,
+//! latency percentiles, migration cost), so `flopt bench-compare` can
+//! gate them; the pool-size sweep doubles as a determinism check (the
+//! rendered report must be byte-identical for 1 and 8 workers).
+//!
+//! ```sh
+//! cargo bench --bench serve_daemon                      # full paper scale
+//! cargo bench --bench serve_daemon -- --test-scale \
+//!     --report reports/serve_daemon.json                # CI smoke + JSON
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use flopt::cache::CacheStore;
+use flopt::serve::{run_serve, ServeConfig};
+use flopt::util::bench::{fmt_s, parse_bench_args};
+use flopt::util::json::{self, Json};
+
+fn main() {
+    let opts = parse_bench_args();
+    let cfg = ServeConfig {
+        requests: 1200,
+        quota: 25,
+        test_scale: opts.test_scale,
+        ..ServeConfig::default()
+    };
+
+    let t0 = Instant::now();
+    let report = run_serve(&cfg, CacheStore::fresh()).expect("serve");
+    let wall_s = t0.elapsed().as_secs_f64();
+    print!("{}", report.render());
+    println!("\nwall-clock: {} for {} arrivals", fmt_s(wall_s), cfg.requests);
+
+    // determinism sweep: the report must not depend on the worker pool
+    let narrow = run_serve(
+        &ServeConfig { pool: 1, ..cfg.clone() },
+        CacheStore::fresh(),
+    )
+    .expect("serve pool=1");
+    assert_eq!(
+        narrow.render(),
+        report.render(),
+        "serve report must be byte-identical across pool sizes"
+    );
+    println!("pool sweep 1 vs 4: byte-identical report");
+
+    if let Some(path) = &opts.report {
+        let mut metrics = BTreeMap::new();
+        metrics.insert(
+            "throughput_per_h".to_string(),
+            Json::Num(report.throughput_per_h),
+        );
+        metrics.insert("p50_s".to_string(), Json::Num(report.p50_s));
+        metrics.insert("p99_s".to_string(), Json::Num(report.p99_s));
+        metrics.insert("completed".to_string(), Json::Num(report.completed as f64));
+        metrics.insert(
+            "rejected_quota".to_string(),
+            Json::Num(report.rejected_quota as f64),
+        );
+        metrics.insert("joins".to_string(), Json::Num(report.joins as f64));
+        metrics.insert(
+            "warm_joins".to_string(),
+            Json::Num(report.warm_joins as f64),
+        );
+        metrics.insert(
+            "migrations".to_string(),
+            Json::Num(report.migrations as f64),
+        );
+        metrics.insert(
+            "migration_hours".to_string(),
+            Json::Num(report.migration_hours),
+        );
+        metrics.insert(
+            "search_hours".to_string(),
+            Json::Num(report.search_hours),
+        );
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("serve_daemon".to_string()));
+        doc.insert(
+            "scale".to_string(),
+            Json::Str(if opts.test_scale { "test" } else { "full" }.to_string()),
+        );
+        doc.insert("requests".to_string(), Json::Num(cfg.requests as f64));
+        doc.insert("metrics".to_string(), Json::Obj(metrics));
+        std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
+        println!("report written to {path}");
+    }
+}

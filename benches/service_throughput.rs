@@ -98,6 +98,25 @@ fn main() {
             rows.push(Json::Obj(row));
         }
         doc.insert("rows".to_string(), Json::Arr(rows));
+        // flat, deterministic (simulated-model) numbers for
+        // `flopt bench-compare` — wall-clock stays out of the gate
+        let mut metrics = BTreeMap::new();
+        metrics.insert("cold_unique".to_string(), Json::Num(cold.unique_cold as f64));
+        metrics.insert(
+            "cold_compile_hours".to_string(),
+            Json::Num(cold.compile_hours),
+        );
+        metrics.insert("cold_sim_hours".to_string(), Json::Num(cold.sim_hours));
+        metrics.insert("warm_hits".to_string(), Json::Num(warm.warm_hits as f64));
+        metrics.insert(
+            "warm_compile_hours".to_string(),
+            Json::Num(warm.compile_hours),
+        );
+        metrics.insert(
+            "warm_saved_compile_hours".to_string(),
+            Json::Num(warm.saved_compile_hours),
+        );
+        doc.insert("metrics".to_string(), Json::Obj(metrics));
         std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
         println!("report written to {path}");
     }

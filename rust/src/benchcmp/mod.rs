@@ -1,0 +1,473 @@
+//! Bench-baseline regression comparison (`flopt bench-compare`).
+//!
+//! Every bench writes a structured JSON report with a flat `"metrics"`
+//! object of deterministic model-derived numbers (speedups, simulated
+//! hours, counts).  A committed `BENCH_<name>.json` baseline at the
+//! repo root pins those numbers with per-metric relative tolerances and
+//! a direction (is bigger better, worse, or must it match exactly?).
+//! CI runs each bench, then `flopt bench-compare --baseline … --report
+//! …` — a non-zero exit fails the `bench-smoke` job, making model-level
+//! performance a gated invariant rather than a graph someone eyeballs.
+//!
+//! Baselines bootstrap with `"value": null` ("unblessed"): the compare
+//! warns but passes, and `--bless <path>` writes a copy of the baseline
+//! with every observed value filled in, uploaded as a CI artifact so a
+//! maintainer can commit it verbatim.
+//!
+//! Baseline schema (schema 1):
+//!
+//! ```json
+//! {
+//!   "bench": "fig4_speedup",
+//!   "schema": 1,
+//!   "scale": "test",
+//!   "note": "free text",
+//!   "metrics": {
+//!     "speedup_tdfir": {"value": 4.5, "tol_rel": 0.05,
+//!                        "direction": "higher_better"}
+//!   }
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+/// Which way a metric is allowed to drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Bigger is better: only a drop beyond tolerance regresses.
+    HigherBetter,
+    /// Smaller is better: only a rise beyond tolerance regresses.
+    LowerBetter,
+    /// Any drift beyond tolerance regresses (counts: tolerance 0).
+    Exact,
+}
+
+impl Direction {
+    /// Parse the schema's `direction` string.
+    pub fn parse(s: &str) -> crate::Result<Direction> {
+        match s {
+            "higher_better" => Ok(Direction::HigherBetter),
+            "lower_better" => Ok(Direction::LowerBetter),
+            "exact" => Ok(Direction::Exact),
+            other => anyhow::bail!(
+                "unknown direction `{other}` (want higher_better | lower_better | exact)"
+            ),
+        }
+    }
+
+    fn as_str(&self) -> &'static str {
+        match self {
+            Direction::HigherBetter => "higher_better",
+            Direction::LowerBetter => "lower_better",
+            Direction::Exact => "exact",
+        }
+    }
+}
+
+/// One pinned metric in a baseline file.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricSpec {
+    /// Pinned value; `None` = unblessed bootstrap (warn, pass).
+    pub value: Option<f64>,
+    /// Allowed relative drift (`|Δ| / max(|value|, 1e-12)`).
+    pub tol_rel: f64,
+    /// Drift direction that counts as a regression.
+    pub direction: Direction,
+}
+
+/// A parsed `BENCH_<name>.json` baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Baseline {
+    /// Bench name the baseline pins (must match the report's).
+    pub bench: String,
+    /// Metric name → pinned spec.
+    pub metrics: BTreeMap<String, MetricSpec>,
+}
+
+/// Parse a baseline document.
+pub fn parse_baseline(doc: &Json) -> crate::Result<Baseline> {
+    let bench = doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("baseline: missing string field `bench`"))?
+        .to_string();
+    let metrics_obj = doc
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("baseline: missing object field `metrics`"))?;
+    let mut metrics = BTreeMap::new();
+    for (name, spec) in metrics_obj {
+        let value = match spec.get("value") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("baseline metric `{name}`: `value` must be a number or null")
+            })?),
+        };
+        let tol_rel = match spec.get("tol_rel") {
+            None => 0.0,
+            Some(v) => v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("baseline metric `{name}`: `tol_rel` must be a number")
+            })?,
+        };
+        let direction = match spec.get("direction").and_then(Json::as_str) {
+            Some(s) => Direction::parse(s)
+                .map_err(|e| anyhow::anyhow!("baseline metric `{name}`: {e}"))?,
+            None => Direction::Exact,
+        };
+        metrics.insert(name.clone(), MetricSpec { value, tol_rel, direction });
+    }
+    Ok(Baseline { bench, metrics })
+}
+
+/// Pull the flat `"metrics"` object out of a bench report.
+pub fn extract_metrics(report: &Json) -> crate::Result<BTreeMap<String, f64>> {
+    let obj = report
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("report: missing object field `metrics`"))?;
+    let mut out = BTreeMap::new();
+    for (name, v) in obj {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("report metric `{name}` is not a number"))?;
+        out.insert(name.clone(), n);
+    }
+    Ok(out)
+}
+
+/// Verdict for one metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Within tolerance of the pinned value.
+    Pass,
+    /// Drifted the bad way beyond tolerance — fails the gate.
+    Regressed,
+    /// Drifted the *good* way beyond tolerance (informational pass;
+    /// worth re-blessing so the gate tracks the improvement).
+    Improved,
+    /// Pinned in the baseline but absent from the report — fails.
+    Missing,
+    /// Baseline value is `null` (bootstrap): warn, pass.
+    Unblessed,
+    /// In the report but not pinned by the baseline (informational).
+    New,
+}
+
+impl Status {
+    fn as_str(&self) -> &'static str {
+        match self {
+            Status::Pass => "pass",
+            Status::Regressed => "REGRESSED",
+            Status::Improved => "improved",
+            Status::Missing => "MISSING",
+            Status::Unblessed => "unblessed",
+            Status::New => "new",
+        }
+    }
+}
+
+/// One metric's comparison outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricResult {
+    /// Metric name.
+    pub name: String,
+    /// Verdict.
+    pub status: Status,
+    /// Pinned value, when the baseline has one.
+    pub baseline: Option<f64>,
+    /// Observed value, when the report has one.
+    pub observed: Option<f64>,
+    /// Tolerance the verdict used.
+    pub tol_rel: f64,
+    /// Relative drift `(observed - baseline) / max(|baseline|, 1e-12)`.
+    pub rel_delta: Option<f64>,
+}
+
+/// The full comparison: per-metric verdicts in name order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompareReport {
+    /// Bench name (from the baseline).
+    pub bench: String,
+    /// Per-metric outcomes, baseline metrics first, then `New` ones.
+    pub results: Vec<MetricResult>,
+}
+
+/// Compare observed metrics against a baseline.
+pub fn compare(base: &Baseline, observed: &BTreeMap<String, f64>) -> CompareReport {
+    let mut results = Vec::with_capacity(base.metrics.len());
+    for (name, spec) in &base.metrics {
+        let obs = observed.get(name).copied();
+        let r = match (spec.value, obs) {
+            (_, None) => MetricResult {
+                name: name.clone(),
+                status: Status::Missing,
+                baseline: spec.value,
+                observed: None,
+                tol_rel: spec.tol_rel,
+                rel_delta: None,
+            },
+            (None, Some(o)) => MetricResult {
+                name: name.clone(),
+                status: Status::Unblessed,
+                baseline: None,
+                observed: Some(o),
+                tol_rel: spec.tol_rel,
+                rel_delta: None,
+            },
+            (Some(b), Some(o)) => {
+                let rel = (o - b) / b.abs().max(1e-12);
+                let status = match spec.direction {
+                    Direction::HigherBetter if rel < -spec.tol_rel => Status::Regressed,
+                    Direction::HigherBetter if rel > spec.tol_rel => Status::Improved,
+                    Direction::LowerBetter if rel > spec.tol_rel => Status::Regressed,
+                    Direction::LowerBetter if rel < -spec.tol_rel => Status::Improved,
+                    Direction::Exact if rel.abs() > spec.tol_rel => Status::Regressed,
+                    _ => Status::Pass,
+                };
+                MetricResult {
+                    name: name.clone(),
+                    status,
+                    baseline: Some(b),
+                    observed: Some(o),
+                    tol_rel: spec.tol_rel,
+                    rel_delta: Some(rel),
+                }
+            }
+        };
+        results.push(r);
+    }
+    for (name, &o) in observed {
+        if !base.metrics.contains_key(name) {
+            results.push(MetricResult {
+                name: name.clone(),
+                status: Status::New,
+                baseline: None,
+                observed: Some(o),
+                tol_rel: 0.0,
+                rel_delta: None,
+            });
+        }
+    }
+    CompareReport { bench: base.bench.clone(), results }
+}
+
+impl CompareReport {
+    /// Does any metric fail the gate (regressed or missing)?
+    pub fn failed(&self) -> bool {
+        self.results
+            .iter()
+            .any(|r| matches!(r.status, Status::Regressed | Status::Missing))
+    }
+
+    /// Human-readable comparison table.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "bench-compare: {}", self.bench);
+        for r in &self.results {
+            let base = r.baseline.map(|v| format!("{v:.6}")).unwrap_or_else(|| "-".into());
+            let obs = r.observed.map(|v| format!("{v:.6}")).unwrap_or_else(|| "-".into());
+            let drift = r
+                .rel_delta
+                .map(|d| format!("{:+.2}%", d * 100.0))
+                .unwrap_or_else(|| "-".into());
+            let _ = writeln!(
+                s,
+                "  {:<10} {:<34} base {:>14}  got {:>14}  drift {:>8}  tol {:.1}%",
+                r.status.as_str(),
+                r.name,
+                base,
+                obs,
+                drift,
+                r.tol_rel * 100.0
+            );
+        }
+        let _ = writeln!(
+            s,
+            "  => {}",
+            if self.failed() { "FAIL (regression gate)" } else { "ok" }
+        );
+        s
+    }
+
+    /// Machine-readable diff document (the CI artifact).
+    pub fn to_json(&self) -> Json {
+        let mut results = Vec::with_capacity(self.results.len());
+        for r in &self.results {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(r.name.clone()));
+            m.insert("status".to_string(), Json::Str(r.status.as_str().to_string()));
+            m.insert(
+                "baseline".to_string(),
+                r.baseline.map(Json::Num).unwrap_or(Json::Null),
+            );
+            m.insert(
+                "observed".to_string(),
+                r.observed.map(Json::Num).unwrap_or(Json::Null),
+            );
+            m.insert("tol_rel".to_string(), Json::Num(r.tol_rel));
+            m.insert(
+                "rel_delta".to_string(),
+                r.rel_delta.map(Json::Num).unwrap_or(Json::Null),
+            );
+            results.push(Json::Obj(m));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        doc.insert("failed".to_string(), Json::Bool(self.failed()));
+        doc.insert("results".to_string(), Json::Arr(results));
+        Json::Obj(doc)
+    }
+}
+
+/// A copy of `baseline_doc` with every pinned metric's `value` replaced
+/// by the observed number (metrics absent from the report keep their
+/// old value).  This is what `--bless` writes — commit it to adopt the
+/// observed numbers as the new baseline.
+pub fn bless(baseline_doc: &Json, observed: &BTreeMap<String, f64>) -> Json {
+    let mut doc = match baseline_doc {
+        Json::Obj(m) => m.clone(),
+        _ => BTreeMap::new(),
+    };
+    if let Some(Json::Obj(metrics)) = doc.get("metrics").cloned().as_ref() {
+        let mut blessed = metrics.clone();
+        for (name, spec) in metrics {
+            if let (Some(&o), Json::Obj(sm)) = (observed.get(name), spec) {
+                let mut sm = sm.clone();
+                sm.insert("value".to_string(), Json::Num(o));
+                blessed.insert(name.clone(), Json::Obj(sm));
+            }
+        }
+        doc.insert("metrics".to_string(), Json::Obj(blessed));
+    }
+    Json::Obj(doc)
+}
+
+/// Convenience for the CLI: parse both documents, compare, and return
+/// `(report, blessed baseline)`.
+pub fn run(baseline_text: &str, report_text: &str) -> crate::Result<(CompareReport, Json)> {
+    let base_doc = json::parse(baseline_text)
+        .map_err(|e| anyhow::anyhow!("baseline is not valid JSON: {e}"))?;
+    let rep_doc = json::parse(report_text)
+        .map_err(|e| anyhow::anyhow!("report is not valid JSON: {e}"))?;
+    let base = parse_baseline(&base_doc)?;
+    if let Some(rb) = rep_doc.get("bench").and_then(Json::as_str) {
+        if rb != base.bench {
+            anyhow::bail!(
+                "bench mismatch: baseline pins `{}` but the report is `{}`",
+                base.bench,
+                rb
+            );
+        }
+    }
+    let observed = extract_metrics(&rep_doc)?;
+    let cmp = compare(&base, &observed);
+    let blessed = bless(&base_doc, &observed);
+    Ok((cmp, blessed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline(text: &str) -> Baseline {
+        parse_baseline(&json::parse(text).unwrap()).unwrap()
+    }
+
+    const BASE: &str = r#"{
+        "bench": "demo", "schema": 1,
+        "metrics": {
+            "speedup":  {"value": 4.0,  "tol_rel": 0.05, "direction": "higher_better"},
+            "hours":    {"value": 10.0, "tol_rel": 0.05, "direction": "lower_better"},
+            "count":    {"value": 7,    "tol_rel": 0,    "direction": "exact"},
+            "pending":  {"value": null, "tol_rel": 0.1,  "direction": "higher_better"}
+        }
+    }"#;
+
+    fn obs(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let b = baseline(BASE);
+        let cmp = compare(
+            &b,
+            &obs(&[("speedup", 3.9), ("hours", 10.4), ("count", 7.0), ("pending", 1.0)]),
+        );
+        assert!(!cmp.failed(), "{}", cmp.render());
+        let by_name = |n: &str| cmp.results.iter().find(|r| r.name == n).unwrap().status;
+        assert_eq!(by_name("speedup"), Status::Pass);
+        assert_eq!(by_name("hours"), Status::Pass);
+        assert_eq!(by_name("count"), Status::Pass);
+        assert_eq!(by_name("pending"), Status::Unblessed);
+    }
+
+    #[test]
+    fn bad_direction_drift_regresses_good_direction_improves() {
+        let b = baseline(BASE);
+        let cmp = compare(
+            &b,
+            &obs(&[("speedup", 3.0), ("hours", 8.0), ("count", 7.0), ("pending", 1.0)]),
+        );
+        assert!(cmp.failed());
+        let by_name = |n: &str| cmp.results.iter().find(|r| r.name == n).unwrap().status;
+        assert_eq!(by_name("speedup"), Status::Regressed, "drop beyond 5%");
+        assert_eq!(by_name("hours"), Status::Improved, "20% cheaper is good");
+    }
+
+    #[test]
+    fn exact_metrics_regress_in_either_direction() {
+        let b = baseline(BASE);
+        for v in [6.0, 8.0] {
+            let cmp = compare(
+                &b,
+                &obs(&[("speedup", 4.0), ("hours", 10.0), ("count", v), ("pending", 1.0)]),
+            );
+            assert!(cmp.failed(), "count {v} must fail the exact pin");
+        }
+    }
+
+    #[test]
+    fn missing_metric_fails_new_metric_does_not() {
+        let b = baseline(BASE);
+        let cmp = compare(&b, &obs(&[("speedup", 4.0), ("hours", 10.0), ("extra", 1.0)]));
+        assert!(cmp.failed(), "count+pending are missing from the report");
+        let missing: Vec<&str> = cmp
+            .results
+            .iter()
+            .filter(|r| r.status == Status::Missing)
+            .map(|r| r.name.as_str())
+            .collect();
+        assert_eq!(missing, vec!["count", "pending"]);
+        let extra = cmp.results.iter().find(|r| r.name == "extra").unwrap();
+        assert_eq!(extra.status, Status::New);
+        let only_new = compare(&baseline(r#"{"bench":"demo","metrics":{}}"#), &obs(&[("x", 1.0)]));
+        assert!(!only_new.failed(), "new metrics alone never fail the gate");
+    }
+
+    #[test]
+    fn bless_substitutes_observed_values() {
+        let doc = json::parse(BASE).unwrap();
+        let blessed = bless(&doc, &obs(&[("pending", 2.5), ("speedup", 4.2)]));
+        let b = parse_baseline(&blessed).unwrap();
+        assert_eq!(b.metrics["pending"].value, Some(2.5));
+        assert_eq!(b.metrics["speedup"].value, Some(4.2));
+        assert_eq!(b.metrics["hours"].value, Some(10.0), "unobserved keeps its pin");
+        assert_eq!(b.metrics["pending"].direction, Direction::HigherBetter);
+        assert_eq!(b.metrics["pending"].tol_rel, 0.1);
+    }
+
+    #[test]
+    fn run_rejects_bench_mismatch_and_bad_json() {
+        assert!(run(BASE, r#"{"bench":"other","metrics":{}}"#).is_err());
+        assert!(run("not json", "{}").is_err());
+        assert!(run(BASE, r#"{"bench":"demo"}"#).is_err(), "report without metrics");
+        let (cmp, _) = run(BASE, r#"{"bench":"demo","metrics":{"speedup":4.0,
+            "hours":10.0,"count":7,"pending":3.3}}"#)
+            .unwrap();
+        assert!(!cmp.failed(), "{}", cmp.render());
+    }
+}

@@ -47,7 +47,7 @@ pub mod key;
 pub mod store;
 
 pub use key::{CacheKey, KeyHasher};
-pub use store::{CacheStats, CacheStore};
+pub use store::{CacheStats, CacheStore, EvictionPolicy};
 
 use crate::apps::App;
 use crate::backend::OffloadBackend;

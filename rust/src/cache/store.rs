@@ -14,6 +14,28 @@
 //!   memory-only operation, never to an error.
 //! * **Disabled** — [`CacheStore::disabled`] stores nothing and returns
 //!   nothing: every search runs exactly as the pre-cache pipeline did.
+//!
+//! # Eviction
+//!
+//! Long-lived services (`flopt serve`) cannot let the memory tier grow
+//! without bound, so the store takes an [`EvictionPolicy`]:
+//!
+//! * **LRU under a byte budget** — every serializable artifact is
+//!   weighed by the byte length of its canonical JSON encoding; when
+//!   `budget_bytes` is exceeded the globally least-recently-*used* slot
+//!   (a strictly increasing access sequence number, so victim choice is
+//!   deterministic) is dropped until the store fits.
+//! * **TTL on simulated time** — the store never consults a wall clock
+//!   (that would break byte-identical replay); the service advances
+//!   [`CacheStore::set_now_sim_s`] from its own `SimClock`, which sweeps
+//!   entries older than `ttl_s`, and `get` lazily expires on touch.
+//!
+//! Both policies apply to the **memory tier only**: the disk mirror is
+//! the persistent tier and keeps every artifact ever written, and the
+//! analysis map is exempt (analyses are unserialized `Arc`s, cheap to
+//! recompute, and never part of a result).  Eviction therefore can cost
+//! time (a recompute) but can never change a result — recomputed
+//! artifacts are byte-identical by the determinism the cache tests pin.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -42,6 +64,12 @@ pub struct CacheStats {
     /// On-disk entries that *exist* but could not be read (I/O error —
     /// distinct from a clean not-found miss); each one recomputes.
     pub disk_read_errors: u64,
+    /// Memory entries dropped because their age (in simulated seconds)
+    /// exceeded [`EvictionPolicy::ttl_s`].
+    pub ttl_evictions: u64,
+    /// Memory entries dropped to get back under
+    /// [`EvictionPolicy::budget_bytes`] (least-recently-used first).
+    pub lru_evictions: u64,
 }
 
 impl CacheStats {
@@ -51,17 +79,188 @@ impl CacheStats {
     pub fn corrupt_recomputes(&self) -> u64 {
         self.disk_rejects + self.disk_read_errors
     }
+
+    /// Total memory-tier evictions (TTL plus budget-pressure LRU).
+    pub fn evictions(&self) -> u64 {
+        self.ttl_evictions + self.lru_evictions
+    }
+}
+
+/// Memory-tier eviction policy (see module docs): both knobs default to
+/// `None` = unbounded, which is exactly the pre-eviction store.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvictionPolicy {
+    /// Byte budget for the memory tier (canonical-JSON weight of every
+    /// resident serializable artifact); exceeding it evicts LRU-first.
+    pub budget_bytes: Option<u64>,
+    /// Max age in **simulated** seconds since an artifact was last
+    /// written; older entries expire lazily on `get` and eagerly on
+    /// [`CacheStore::set_now_sim_s`].
+    pub ttl_s: Option<f64>,
+}
+
+/// One resident artifact plus the bookkeeping eviction needs.
+struct Slot<T> {
+    value: T,
+    /// Canonical-JSON byte weight (what `budget_bytes` counts).
+    bytes: u64,
+    /// Access sequence number — strictly increasing store-wide, so the
+    /// LRU victim (minimum `seq`) is unique and deterministic.
+    seq: u64,
+    /// Simulated-time write stamp (TTL measures from last write; a read
+    /// refreshes recency, not age).
+    stamp_s: f64,
 }
 
 #[derive(Default)]
 struct Mem {
+    /// Analyses are exempt from eviction: unserialized `Arc`s with no
+    /// canonical byte weight, cheap to recompute, never part of output.
     analyses: HashMap<CacheKey, Arc<AppAnalysis>>,
-    precompiles: HashMap<CacheKey, PrecompileArtifact>,
-    measures: HashMap<CacheKey, MeasureArtifact>,
-    blocks: HashMap<CacheKey, BlockMeasureArtifact>,
-    traces: HashMap<CacheKey, SearchTrace>,
-    destinations: HashMap<CacheKey, DestinationSearch>,
-    fleets: HashMap<CacheKey, FleetReport>,
+    precompiles: HashMap<CacheKey, Slot<PrecompileArtifact>>,
+    measures: HashMap<CacheKey, Slot<MeasureArtifact>>,
+    blocks: HashMap<CacheKey, Slot<BlockMeasureArtifact>>,
+    traces: HashMap<CacheKey, Slot<SearchTrace>>,
+    destinations: HashMap<CacheKey, Slot<DestinationSearch>>,
+    fleets: HashMap<CacheKey, Slot<FleetReport>>,
+    /// Next access sequence number (shared by every evictable map).
+    seq: u64,
+    /// Current simulated time; only ever advances (monotonic max).
+    now_s: f64,
+    /// Total `bytes` of every resident evictable slot.
+    resident: u64,
+}
+
+/// What touching a memory slot found.
+enum Touched<T> {
+    Hit(T),
+    /// The slot existed but its TTL had lapsed; it has been removed.
+    Expired,
+    Miss,
+}
+
+fn mem_precompiles(m: &mut Mem) -> &mut HashMap<CacheKey, Slot<PrecompileArtifact>> {
+    &mut m.precompiles
+}
+fn mem_measures(m: &mut Mem) -> &mut HashMap<CacheKey, Slot<MeasureArtifact>> {
+    &mut m.measures
+}
+fn mem_blocks(m: &mut Mem) -> &mut HashMap<CacheKey, Slot<BlockMeasureArtifact>> {
+    &mut m.blocks
+}
+fn mem_traces(m: &mut Mem) -> &mut HashMap<CacheKey, Slot<SearchTrace>> {
+    &mut m.traces
+}
+fn mem_destinations(m: &mut Mem) -> &mut HashMap<CacheKey, Slot<DestinationSearch>> {
+    &mut m.destinations
+}
+fn mem_fleets(m: &mut Mem) -> &mut HashMap<CacheKey, Slot<FleetReport>> {
+    &mut m.fleets
+}
+
+/// Touch one slot: expire it if the TTL lapsed, otherwise refresh its
+/// recency and clone the value out.
+fn touch<T: Clone>(
+    map: &mut HashMap<CacheKey, Slot<T>>,
+    key: CacheKey,
+    seq: u64,
+    now_s: f64,
+    ttl_s: Option<f64>,
+) -> (Touched<T>, u64) {
+    let expired = match map.get(&key) {
+        None => return (Touched::Miss, 0),
+        Some(slot) => matches!(ttl_s, Some(ttl) if now_s - slot.stamp_s > ttl),
+    };
+    if expired {
+        let slot = map.remove(&key).expect("slot present");
+        return (Touched::Expired, slot.bytes);
+    }
+    let slot = map.get_mut(&key).expect("slot present");
+    slot.seq = seq;
+    (Touched::Hit(slot.value.clone()), 0)
+}
+
+/// Insert (or replace) a slot; returns the byte weight it displaced.
+fn insert_slot<T>(
+    map: &mut HashMap<CacheKey, Slot<T>>,
+    key: CacheKey,
+    value: T,
+    bytes: u64,
+    seq: u64,
+    stamp_s: f64,
+) -> u64 {
+    map.insert(key, Slot { value, bytes, seq, stamp_s })
+        .map_or(0, |old| old.bytes)
+}
+
+/// Drop every slot older than `ttl` seconds; returns (count, bytes).
+fn sweep<T>(map: &mut HashMap<CacheKey, Slot<T>>, now_s: f64, ttl: f64) -> (u64, u64) {
+    let mut count = 0;
+    let mut bytes = 0;
+    map.retain(|_, slot| {
+        let keep = now_s - slot.stamp_s <= ttl;
+        if !keep {
+            count += 1;
+            bytes += slot.bytes;
+        }
+        keep
+    });
+    (count, bytes)
+}
+
+fn scan_oldest<T>(
+    map: &HashMap<CacheKey, Slot<T>>,
+    kind: u8,
+    best: &mut Option<(u64, u8, CacheKey)>,
+) {
+    for (k, slot) in map {
+        let older = match best {
+            None => true,
+            Some((seq, _, _)) => slot.seq < seq,
+        };
+        if older {
+            *best = Some((slot.seq, kind, *k));
+        }
+    }
+}
+
+impl Mem {
+    /// The store-wide least-recently-used slot, if any: access sequence
+    /// numbers are unique, so the victim is deterministic.
+    fn lru_victim(&self) -> Option<(u8, CacheKey)> {
+        let mut best: Option<(u64, u8, CacheKey)> = None;
+        scan_oldest(&self.precompiles, 0, &mut best);
+        scan_oldest(&self.measures, 1, &mut best);
+        scan_oldest(&self.blocks, 2, &mut best);
+        scan_oldest(&self.traces, 3, &mut best);
+        scan_oldest(&self.destinations, 4, &mut best);
+        scan_oldest(&self.fleets, 5, &mut best);
+        best.map(|(_, kind, key)| (kind, key))
+    }
+
+    fn evict_at(&mut self, kind: u8, key: CacheKey) {
+        let bytes = match kind {
+            0 => self.precompiles.remove(&key).map(|s| s.bytes),
+            1 => self.measures.remove(&key).map(|s| s.bytes),
+            2 => self.blocks.remove(&key).map(|s| s.bytes),
+            3 => self.traces.remove(&key).map(|s| s.bytes),
+            4 => self.destinations.remove(&key).map(|s| s.bytes),
+            _ => self.fleets.remove(&key).map(|s| s.bytes),
+        }
+        .unwrap_or(0);
+        self.resident = self.resident.saturating_sub(bytes);
+    }
+
+    /// Evict LRU-first until the resident set fits; returns the count.
+    fn enforce_budget(&mut self, budget: u64) -> u64 {
+        let mut evicted = 0;
+        while self.resident > budget {
+            let Some((kind, key)) = self.lru_victim() else { break };
+            self.evict_at(kind, key);
+            evicted += 1;
+        }
+        evicted
+    }
 }
 
 /// The content-addressed artifact store (see module docs).
@@ -69,41 +268,37 @@ pub struct CacheStore {
     enabled: bool,
     dir: Option<PathBuf>,
     mem: Mutex<Mem>,
+    policy: Mutex<EvictionPolicy>,
     stats: Mutex<CacheStats>,
 }
 
 impl CacheStore {
-    /// An enabled, memory-only store.
-    pub fn fresh() -> Arc<CacheStore> {
+    fn build(enabled: bool, dir: Option<PathBuf>) -> Arc<CacheStore> {
         Arc::new(CacheStore {
-            enabled: true,
-            dir: None,
+            enabled,
+            dir,
             mem: Mutex::new(Mem::default()),
+            policy: Mutex::new(EvictionPolicy::default()),
             stats: Mutex::new(CacheStats::default()),
         })
+    }
+
+    /// An enabled, memory-only store.
+    pub fn fresh() -> Arc<CacheStore> {
+        Self::build(true, None)
     }
 
     /// A store that persists serializable artifacts under `dir`
     /// (created on first write; unwritable directories degrade to
     /// memory-only).
     pub fn with_dir(dir: impl Into<PathBuf>) -> Arc<CacheStore> {
-        Arc::new(CacheStore {
-            enabled: true,
-            dir: Some(dir.into()),
-            mem: Mutex::new(Mem::default()),
-            stats: Mutex::new(CacheStats::default()),
-        })
+        Self::build(true, Some(dir.into()))
     }
 
     /// A store that caches nothing (`--no-cache`): every get misses,
     /// every put is a no-op.
     pub fn disabled() -> Arc<CacheStore> {
-        Arc::new(CacheStore {
-            enabled: false,
-            dir: None,
-            mem: Mutex::new(Mem::default()),
-            stats: Mutex::new(CacheStats::default()),
-        })
+        Self::build(false, None)
     }
 
     /// Is this store recording anything at all?
@@ -114,6 +309,64 @@ impl CacheStore {
     /// Snapshot of the hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         *self.stats.lock().expect("poisoned")
+    }
+
+    /// Install a memory-tier eviction policy; a lowered byte budget
+    /// takes effect immediately (LRU slots drop until the store fits).
+    pub fn set_policy(&self, policy: EvictionPolicy) {
+        *self.policy.lock().expect("poisoned") = policy;
+        if let Some(budget) = policy.budget_bytes {
+            let evicted = self.mem.lock().expect("poisoned").enforce_budget(budget);
+            if evicted > 0 {
+                self.stats.lock().expect("poisoned").lru_evictions += evicted;
+            }
+        }
+    }
+
+    /// The current eviction policy.
+    pub fn policy(&self) -> EvictionPolicy {
+        *self.policy.lock().expect("poisoned")
+    }
+
+    /// Advance the store's notion of simulated time (monotonic — stale
+    /// updates from out-of-order callers are ignored) and eagerly sweep
+    /// TTL-expired entries.  The store never reads a wall clock: callers
+    /// running on a [`crate::metrics::SimClock`] feed it their own time
+    /// so expiry is reproducible byte-for-byte.
+    pub fn set_now_sim_s(&self, now_s: f64) {
+        let ttl = self.policy.lock().expect("poisoned").ttl_s;
+        let expired = {
+            let mut m = self.mem.lock().expect("poisoned");
+            if now_s > m.now_s {
+                m.now_s = now_s;
+            }
+            let Some(ttl) = ttl else { return };
+            let now = m.now_s;
+            let mut count = 0;
+            let mut bytes = 0;
+            for (c, b) in [
+                sweep(&mut m.precompiles, now, ttl),
+                sweep(&mut m.measures, now, ttl),
+                sweep(&mut m.blocks, now, ttl),
+                sweep(&mut m.traces, now, ttl),
+                sweep(&mut m.destinations, now, ttl),
+                sweep(&mut m.fleets, now, ttl),
+            ] {
+                count += c;
+                bytes += b;
+            }
+            m.resident = m.resident.saturating_sub(bytes);
+            count
+        };
+        if expired > 0 {
+            self.stats.lock().expect("poisoned").ttl_evictions += expired;
+        }
+    }
+
+    /// Total canonical-JSON bytes of the resident evictable artifacts
+    /// (what [`EvictionPolicy::budget_bytes`] bounds).
+    pub fn resident_bytes(&self) -> u64 {
+        self.mem.lock().expect("poisoned").resident
     }
 
     fn note_mem_hit(&self) {
@@ -134,6 +387,57 @@ impl CacheStore {
 
     fn note_disk_read_error(&self) {
         self.stats.lock().expect("poisoned").disk_read_errors += 1;
+    }
+
+    fn note_ttl_eviction(&self) {
+        self.stats.lock().expect("poisoned").ttl_evictions += 1;
+    }
+
+    // ------------------------------------------------- memory tier core
+
+    /// Touch the memory slot for `key` in the map `pick` selects,
+    /// expiring it lazily if the TTL lapsed.
+    fn mem_get<T: Clone>(
+        &self,
+        key: CacheKey,
+        pick: fn(&mut Mem) -> &mut HashMap<CacheKey, Slot<T>>,
+    ) -> Touched<T> {
+        let ttl = self.policy.lock().expect("poisoned").ttl_s;
+        let mut m = self.mem.lock().expect("poisoned");
+        m.seq += 1;
+        let seq = m.seq;
+        let now = m.now_s;
+        let (touched, freed) = touch(pick(&mut m), key, seq, now, ttl);
+        m.resident = m.resident.saturating_sub(freed);
+        touched
+    }
+
+    /// Admit an artifact to the memory tier and enforce the byte budget
+    /// (the freshly admitted slot has the highest `seq`, so it is only
+    /// evicted when it alone exceeds the whole budget).
+    fn admit<T: Clone>(
+        &self,
+        key: CacheKey,
+        value: T,
+        bytes: u64,
+        pick: fn(&mut Mem) -> &mut HashMap<CacheKey, Slot<T>>,
+    ) {
+        let policy = *self.policy.lock().expect("poisoned");
+        let evicted = {
+            let mut m = self.mem.lock().expect("poisoned");
+            m.seq += 1;
+            let seq = m.seq;
+            let now = m.now_s;
+            let displaced = insert_slot(pick(&mut m), key, value, bytes, seq, now);
+            m.resident = m.resident.saturating_sub(displaced) + bytes;
+            match policy.budget_bytes {
+                Some(budget) => m.enforce_budget(budget),
+                None => 0,
+            }
+        };
+        if evicted > 0 {
+            self.stats.lock().expect("poisoned").lru_evictions += evicted;
+        }
     }
 
     // ------------------------------------------------------------- disk
@@ -197,7 +501,8 @@ impl CacheStore {
     // --------------------------------------------------------- analyses
 
     /// Fetch a memoized Steps-1/2 analysis (memory only — the AST and
-    /// profile are cheap to recompute and expensive to serialize).
+    /// profile are cheap to recompute and expensive to serialize; the
+    /// analysis map is exempt from eviction, see module docs).
     pub fn get_analysis(&self, key: CacheKey) -> Option<Arc<AppAnalysis>> {
         if !self.enabled {
             return None;
@@ -229,13 +534,17 @@ impl CacheStore {
         if !self.enabled {
             return None;
         }
-        let hit = self.mem.lock().expect("poisoned").precompiles.get(&key).cloned();
-        if let Some(p) = hit {
-            self.note_mem_hit();
-            return Some(p);
+        match self.mem_get(key, mem_precompiles) {
+            Touched::Hit(p) => {
+                self.note_mem_hit();
+                return Some(p);
+            }
+            Touched::Expired => self.note_ttl_eviction(),
+            Touched::Miss => {}
         }
         if let Some(p) = self.disk_get("precompile", key, codec::precompile_from_json) {
-            self.mem.lock().expect("poisoned").precompiles.insert(key, p.clone());
+            let bytes = json::to_string(&codec::precompile_to_json(&p)).len() as u64;
+            self.admit(key, p.clone(), bytes, mem_precompiles);
             return Some(p);
         }
         self.note_miss();
@@ -247,8 +556,9 @@ impl CacheStore {
         if !self.enabled {
             return;
         }
-        self.mem.lock().expect("poisoned").precompiles.insert(key, p.clone());
-        self.disk_put("precompile", key, &codec::precompile_to_json(p));
+        let payload = codec::precompile_to_json(p);
+        self.admit(key, p.clone(), json::to_string(&payload).len() as u64, mem_precompiles);
+        self.disk_put("precompile", key, &payload);
     }
 
     // --------------------------------------------------------- measures
@@ -258,13 +568,17 @@ impl CacheStore {
         if !self.enabled {
             return None;
         }
-        let hit = self.mem.lock().expect("poisoned").measures.get(&key).cloned();
-        if let Some(m) = hit {
-            self.note_mem_hit();
-            return Some(m);
+        match self.mem_get(key, mem_measures) {
+            Touched::Hit(m) => {
+                self.note_mem_hit();
+                return Some(m);
+            }
+            Touched::Expired => self.note_ttl_eviction(),
+            Touched::Miss => {}
         }
         if let Some(m) = self.disk_get("measure", key, codec::measure_from_json) {
-            self.mem.lock().expect("poisoned").measures.insert(key, m.clone());
+            let bytes = json::to_string(&codec::measure_to_json(&m)).len() as u64;
+            self.admit(key, m.clone(), bytes, mem_measures);
             return Some(m);
         }
         self.note_miss();
@@ -276,8 +590,9 @@ impl CacheStore {
         if !self.enabled {
             return;
         }
-        self.mem.lock().expect("poisoned").measures.insert(key, m.clone());
-        self.disk_put("measure", key, &codec::measure_to_json(m));
+        let payload = codec::measure_to_json(m);
+        self.admit(key, m.clone(), json::to_string(&payload).len() as u64, mem_measures);
+        self.disk_put("measure", key, &payload);
     }
 
     // ----------------------------------------------------------- blocks
@@ -287,13 +602,17 @@ impl CacheStore {
         if !self.enabled {
             return None;
         }
-        let hit = self.mem.lock().expect("poisoned").blocks.get(&key).cloned();
-        if let Some(b) = hit {
-            self.note_mem_hit();
-            return Some(b);
+        match self.mem_get(key, mem_blocks) {
+            Touched::Hit(b) => {
+                self.note_mem_hit();
+                return Some(b);
+            }
+            Touched::Expired => self.note_ttl_eviction(),
+            Touched::Miss => {}
         }
         if let Some(b) = self.disk_get("blocks", key, codec::blocks_from_json) {
-            self.mem.lock().expect("poisoned").blocks.insert(key, b.clone());
+            let bytes = json::to_string(&codec::blocks_to_json(&b)).len() as u64;
+            self.admit(key, b.clone(), bytes, mem_blocks);
             return Some(b);
         }
         self.note_miss();
@@ -305,8 +624,9 @@ impl CacheStore {
         if !self.enabled {
             return;
         }
-        self.mem.lock().expect("poisoned").blocks.insert(key, b.clone());
-        self.disk_put("blocks", key, &codec::blocks_to_json(b));
+        let payload = codec::blocks_to_json(b);
+        self.admit(key, b.clone(), json::to_string(&payload).len() as u64, mem_blocks);
+        self.disk_put("blocks", key, &payload);
     }
 
     // ----------------------------------------------------------- traces
@@ -316,13 +636,17 @@ impl CacheStore {
         if !self.enabled {
             return None;
         }
-        let hit = self.mem.lock().expect("poisoned").traces.get(&key).cloned();
-        if let Some(t) = hit {
-            self.note_mem_hit();
-            return Some(t);
+        match self.mem_get(key, mem_traces) {
+            Touched::Hit(t) => {
+                self.note_mem_hit();
+                return Some(t);
+            }
+            Touched::Expired => self.note_ttl_eviction(),
+            Touched::Miss => {}
         }
         if let Some(t) = self.disk_get("trace", key, codec::trace_from_json) {
-            self.mem.lock().expect("poisoned").traces.insert(key, t.clone());
+            let bytes = json::to_string(&codec::trace_to_json(&t)).len() as u64;
+            self.admit(key, t.clone(), bytes, mem_traces);
             return Some(t);
         }
         self.note_miss();
@@ -334,8 +658,9 @@ impl CacheStore {
         if !self.enabled {
             return;
         }
-        self.mem.lock().expect("poisoned").traces.insert(key, t.clone());
-        self.disk_put("trace", key, &codec::trace_to_json(t));
+        let payload = codec::trace_to_json(t);
+        self.admit(key, t.clone(), json::to_string(&payload).len() as u64, mem_traces);
+        self.disk_put("trace", key, &payload);
     }
 
     // ----------------------------------------------------- destinations
@@ -345,13 +670,17 @@ impl CacheStore {
         if !self.enabled {
             return None;
         }
-        let hit = self.mem.lock().expect("poisoned").destinations.get(&key).cloned();
-        if let Some(d) = hit {
-            self.note_mem_hit();
-            return Some(d);
+        match self.mem_get(key, mem_destinations) {
+            Touched::Hit(d) => {
+                self.note_mem_hit();
+                return Some(d);
+            }
+            Touched::Expired => self.note_ttl_eviction(),
+            Touched::Miss => {}
         }
         if let Some(d) = self.disk_get("destination", key, codec::destination_from_json) {
-            self.mem.lock().expect("poisoned").destinations.insert(key, d.clone());
+            let bytes = json::to_string(&codec::destination_to_json(&d)).len() as u64;
+            self.admit(key, d.clone(), bytes, mem_destinations);
             return Some(d);
         }
         self.note_miss();
@@ -363,8 +692,9 @@ impl CacheStore {
         if !self.enabled {
             return;
         }
-        self.mem.lock().expect("poisoned").destinations.insert(key, d.clone());
-        self.disk_put("destination", key, &codec::destination_to_json(d));
+        let payload = codec::destination_to_json(d);
+        self.admit(key, d.clone(), json::to_string(&payload).len() as u64, mem_destinations);
+        self.disk_put("destination", key, &payload);
     }
 
     // ----------------------------------------------------------- fleets
@@ -374,13 +704,17 @@ impl CacheStore {
         if !self.enabled {
             return None;
         }
-        let hit = self.mem.lock().expect("poisoned").fleets.get(&key).cloned();
-        if let Some(f) = hit {
-            self.note_mem_hit();
-            return Some(f);
+        match self.mem_get(key, mem_fleets) {
+            Touched::Hit(f) => {
+                self.note_mem_hit();
+                return Some(f);
+            }
+            Touched::Expired => self.note_ttl_eviction(),
+            Touched::Miss => {}
         }
         if let Some(f) = self.disk_get("fleet", key, codec::fleet_from_json) {
-            self.mem.lock().expect("poisoned").fleets.insert(key, f.clone());
+            let bytes = json::to_string(&codec::fleet_to_json(&f)).len() as u64;
+            self.admit(key, f.clone(), bytes, mem_fleets);
             return Some(f);
         }
         self.note_miss();
@@ -392,8 +726,9 @@ impl CacheStore {
         if !self.enabled {
             return;
         }
-        self.mem.lock().expect("poisoned").fleets.insert(key, f.clone());
-        self.disk_put("fleet", key, &codec::fleet_to_json(f));
+        let payload = codec::fleet_to_json(f);
+        self.admit(key, f.clone(), json::to_string(&payload).len() as u64, mem_fleets);
+        self.disk_put("fleet", key, &payload);
     }
 }
 
@@ -410,6 +745,10 @@ mod tests {
     fn sample_trace() -> SearchTrace {
         let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default());
         offload_search(&apps::MATMUL, &env, true).unwrap()
+    }
+
+    fn trace_bytes(t: &SearchTrace) -> u64 {
+        json::to_string(&codec::trace_to_json(t)).len() as u64
     }
 
     #[test]
@@ -555,5 +894,99 @@ mod tests {
         store.put_trace(key, &t); // must not panic
         assert!(store.get_trace(key).is_some(), "memory tier still works");
         let _ = std::fs::remove_file(&file);
+    }
+
+    #[test]
+    fn resident_bytes_tracks_canonical_json_weight() {
+        let store = CacheStore::fresh();
+        let t = sample_trace();
+        assert_eq!(store.resident_bytes(), 0);
+        store.put_trace(CacheKey(1), &t);
+        assert_eq!(store.resident_bytes(), trace_bytes(&t));
+        // replacing the same key must not double-count
+        store.put_trace(CacheKey(1), &t);
+        assert_eq!(store.resident_bytes(), trace_bytes(&t));
+        store.put_trace(CacheKey(2), &t);
+        assert_eq!(store.resident_bytes(), 2 * trace_bytes(&t));
+    }
+
+    #[test]
+    fn budget_pressure_evicts_lru_first_and_counts() {
+        let store = CacheStore::fresh();
+        let t = sample_trace();
+        let one = trace_bytes(&t);
+        // room for exactly two traces
+        store.set_policy(EvictionPolicy { budget_bytes: Some(2 * one), ttl_s: None });
+        store.put_trace(CacheKey(1), &t);
+        store.put_trace(CacheKey(2), &t);
+        assert_eq!(store.stats().lru_evictions, 0);
+        // touch key 1 so key 2 becomes the LRU victim
+        assert!(store.get_trace(CacheKey(1)).is_some());
+        store.put_trace(CacheKey(3), &t);
+        assert_eq!(store.stats().lru_evictions, 1);
+        assert!(store.get_trace(CacheKey(2)).is_none(), "LRU slot evicted");
+        assert!(store.get_trace(CacheKey(1)).is_some(), "recently used survives");
+        assert!(store.get_trace(CacheKey(3)).is_some(), "newest survives");
+        assert!(store.resident_bytes() <= 2 * one);
+        assert_eq!(store.stats().evictions(), 1);
+    }
+
+    #[test]
+    fn lowering_the_budget_evicts_immediately() {
+        let store = CacheStore::fresh();
+        let t = sample_trace();
+        store.put_trace(CacheKey(1), &t);
+        store.put_trace(CacheKey(2), &t);
+        store.set_policy(EvictionPolicy {
+            budget_bytes: Some(trace_bytes(&t)),
+            ttl_s: None,
+        });
+        assert_eq!(store.stats().lru_evictions, 1);
+        assert!(store.get_trace(CacheKey(1)).is_none(), "oldest dropped");
+        assert!(store.get_trace(CacheKey(2)).is_some());
+    }
+
+    #[test]
+    fn ttl_expires_on_simulated_time_only() {
+        let store = CacheStore::fresh();
+        store.set_policy(EvictionPolicy { budget_bytes: None, ttl_s: Some(100.0) });
+        let t = sample_trace();
+        store.put_trace(CacheKey(1), &t); // written at sim t=0
+        store.set_now_sim_s(50.0);
+        assert!(store.get_trace(CacheKey(1)).is_some(), "fresh under TTL");
+        assert_eq!(store.stats().ttl_evictions, 0);
+
+        // the eager sweep on time advance expires it
+        store.put_trace(CacheKey(2), &t); // written at sim t=50
+        store.set_now_sim_s(200.0);
+        assert_eq!(store.stats().ttl_evictions, 2, "both writes aged out");
+        assert!(store.get_trace(CacheKey(1)).is_none());
+        assert_eq!(store.resident_bytes(), 0);
+
+        // time never runs backwards: a stale update is ignored
+        store.set_now_sim_s(10.0);
+        store.put_trace(CacheKey(3), &t);
+        assert!(store.get_trace(CacheKey(3)).is_some());
+    }
+
+    #[test]
+    fn ttl_expiry_recomputes_byte_identical() {
+        // the satellite guarantee: eviction costs a recompute, never a
+        // different answer
+        let store = CacheStore::fresh();
+        store.set_policy(EvictionPolicy { budget_bytes: None, ttl_s: Some(10.0) });
+        let t = sample_trace();
+        let key = CacheKey(4);
+        store.put_trace(key, &t);
+        store.set_now_sim_s(1000.0);
+        assert!(store.get_trace(key).is_none(), "expired entry recomputes");
+        let again = sample_trace();
+        assert_eq!(
+            codec::trace_to_string(&t),
+            codec::trace_to_string(&again),
+            "recomputed trace is byte-identical"
+        );
+        store.put_trace(key, &again);
+        assert!(store.get_trace(key).is_some());
     }
 }

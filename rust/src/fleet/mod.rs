@@ -42,7 +42,9 @@
 pub mod pack;
 pub mod report;
 
-pub use pack::{first_fit_decreasing, BoardState, PackOutcome, Placement};
+pub use pack::{
+    first_fit_decreasing, incremental_repack, BoardState, PackOutcome, Placement, RepackOutcome,
+};
 pub use report::{AppPlacement, BoardReport, FleetReport, FleetStatus};
 
 use std::sync::Arc;

@@ -72,6 +72,92 @@ pub struct PackOutcome {
     pub placements: Vec<Placement>,
 }
 
+/// The incremental packer's result ([`incremental_repack`]).
+#[derive(Debug, Clone)]
+pub struct RepackOutcome {
+    /// The adopted packing (incremental or escalated full re-pack).
+    pub outcome: PackOutcome,
+    /// Tenants whose `(board, option)` changed from a prior placement —
+    /// each one is a live migration paying a bitstream swap.
+    pub migrations: usize,
+    /// Summed reconfiguration seconds charged to those migrations.
+    pub migration_s: f64,
+    /// Did the packer escalate to a full FFD re-pack?  Only happens
+    /// when the full pack places strictly more tenants.
+    pub full: bool,
+}
+
+/// Provisional placement vector: schedulable demands start `Queued`,
+/// hopeless ones `StayCpu`.
+fn provisional(demands: &[TenantDemand]) -> Vec<Placement> {
+    demands
+        .iter()
+        .map(|d| {
+            if d.options.iter().any(|o| o.is_schedulable()) {
+                Placement::Queued // provisional; resolved by the packer
+            } else {
+                Placement::StayCpu
+            }
+        })
+        .collect()
+}
+
+/// FFD order: hardest demand first; ties go to the cheaper-to-link
+/// tenant, then to submission order — a total, deterministic order.
+fn ffd_sort(idx: &mut [usize], demands: &[TenantDemand]) {
+    idx.sort_by(|&a, &b| {
+        let (da, db) = (&demands[a], &demands[b]);
+        order::desc_nan_last(da.options[0].utilization, db.options[0].utilization)
+            .then_with(|| {
+                order::asc_nan_last(da.options[0].reconfig_s, db.options[0].reconfig_s)
+            })
+            .then_with(|| da.order.cmp(&db.order))
+    });
+}
+
+/// First-fit one demand onto the current board state, trying its
+/// options in preference order.  Returns the placement or `None`.
+fn place_first_fit(
+    di: usize,
+    d: &TenantDemand,
+    state: &mut [BoardState],
+    cap: f64,
+    device: &Device,
+) -> Option<Placement> {
+    for (oi, opt) in d.options.iter().enumerate() {
+        if !opt.is_schedulable() {
+            continue;
+        }
+        for (bi, b) in state.iter_mut().enumerate() {
+            let combined = b.used.add(&opt.resources);
+            if device.utilization(&combined) <= cap {
+                // admitting onto occupied silicon swaps bitstreams:
+                // the incoming tenant pays its reconfiguration cost
+                let reconfig_s = if b.tenants.is_empty() { 0.0 } else { opt.reconfig_s };
+                b.used = combined;
+                b.tenants.push(di);
+                return Some(Placement::Placed { board: bi, option: oi, reconfig_s });
+            }
+        }
+    }
+    None
+}
+
+/// An unplaced schedulable demand is `Queued` if some option could fit
+/// an empty board, `Rejected` if nothing can ever fit under the cap.
+fn resolve_unplaced(d: &TenantDemand, cap: f64, device: &Device) -> Placement {
+    let feasible_alone = d
+        .options
+        .iter()
+        .filter(|o| o.is_schedulable())
+        .any(|o| device.utilization(&o.resources) <= cap);
+    if feasible_alone {
+        Placement::Queued
+    } else {
+        Placement::Rejected
+    }
+}
+
 /// Deterministic first-fit-decreasing packing of `demands` onto
 /// `boards` boards of `device`, under a combined per-board utilization
 /// cap (the same `resource_cap` the pattern search enforces).
@@ -85,63 +171,136 @@ pub fn first_fit_decreasing(
     let mut state: Vec<BoardState> = (0..boards)
         .map(|_| BoardState { used: Resources::ZERO, tenants: Vec::new() })
         .collect();
-    let mut placements: Vec<Placement> = demands
-        .iter()
-        .map(|d| {
-            if d.options.iter().any(|o| o.is_schedulable()) {
-                Placement::Queued // provisional; resolved below
-            } else {
-                Placement::StayCpu
-            }
-        })
-        .collect();
+    let mut placements = provisional(demands);
 
-    // FFD order: hardest demand first; ties go to the cheaper-to-link
-    // tenant, then to submission order — a total, deterministic order.
     let mut idx: Vec<usize> = (0..demands.len())
         .filter(|&i| placements[i] == Placement::Queued)
         .collect();
-    idx.sort_by(|&a, &b| {
-        let (da, db) = (&demands[a], &demands[b]);
-        order::desc_nan_last(da.options[0].utilization, db.options[0].utilization)
-            .then_with(|| {
-                order::asc_nan_last(da.options[0].reconfig_s, db.options[0].reconfig_s)
-            })
-            .then_with(|| da.order.cmp(&db.order))
-    });
+    ffd_sort(&mut idx, demands);
 
     for &di in &idx {
         let d = &demands[di];
-        let mut placed = false;
-        'options: for (oi, opt) in d.options.iter().enumerate() {
-            if !opt.is_schedulable() {
-                continue;
-            }
-            for (bi, b) in state.iter_mut().enumerate() {
-                let combined = b.used.add(&opt.resources);
-                if device.utilization(&combined) <= cap {
-                    // admitting onto occupied silicon swaps bitstreams:
-                    // the incoming tenant pays its reconfiguration cost
-                    let reconfig_s = if b.tenants.is_empty() { 0.0 } else { opt.reconfig_s };
-                    b.used = combined;
-                    b.tenants.push(di);
-                    placements[di] = Placement::Placed { board: bi, option: oi, reconfig_s };
-                    placed = true;
-                    break 'options;
-                }
-            }
-        }
-        if !placed {
-            let feasible_alone = d
-                .options
-                .iter()
-                .filter(|o| o.is_schedulable())
-                .any(|o| device.utilization(&o.resources) <= cap);
-            placements[di] = if feasible_alone { Placement::Queued } else { Placement::Rejected };
-        }
+        placements[di] = place_first_fit(di, d, &mut state, cap, device)
+            .unwrap_or_else(|| resolve_unplaced(d, cap, device));
     }
 
     PackOutcome { boards: state, placements }
+}
+
+fn placed_count(outcome: &PackOutcome) -> usize {
+    outcome
+        .placements
+        .iter()
+        .filter(|p| matches!(p, Placement::Placed { .. }))
+        .count()
+}
+
+/// Settle reconfiguration charges against the prior placements and
+/// count live migrations: a tenant keeping its exact `(board, option)`
+/// pays nothing (the bitstream is already resident), a tenant moved
+/// away from a prior placement pays its option's full swap cost, and a
+/// fresh admission keeps the charge the packer assessed.
+fn settle_migrations(
+    demands: &[TenantDemand],
+    previous: &[Option<(usize, usize)>],
+    placements: &mut [Placement],
+) -> (usize, f64) {
+    let mut migrations = 0;
+    let mut migration_s = 0.0;
+    for (i, p) in placements.iter_mut().enumerate() {
+        if let Placement::Placed { board, option, reconfig_s } = p {
+            match previous.get(i).copied().flatten() {
+                Some((pb, po)) if pb == *board && po == *option => *reconfig_s = 0.0,
+                Some(_) => {
+                    let cost = demands[i].options[*option].reconfig_s;
+                    *reconfig_s = cost;
+                    migrations += 1;
+                    migration_s += cost;
+                }
+                None => {}
+            }
+        }
+    }
+    (migrations, migration_s)
+}
+
+/// Incremental re-pack for a live fleet: tenants already placed keep
+/// their board and option at zero cost whenever they still fit, and
+/// only joiners (or tenants displaced by a board-count or cap change)
+/// run first-fit into the residual capacity.  If anyone schedulable is
+/// still waiting afterwards, the packer computes a full
+/// [`first_fit_decreasing`] pack and adopts it **only** when it places
+/// strictly more tenants — churn is never paid for nothing.  Every
+/// adopted move away from a prior placement is a live migration
+/// charged its option's bitstream-swap cost.
+///
+/// `previous[i]` is demand `i`'s prior `(board, option)`, `None` for a
+/// joiner.  Like the full packer, the result is a pure function of its
+/// inputs — byte-identical across runs and pool sizes.
+pub fn incremental_repack(
+    demands: &[TenantDemand],
+    previous: &[Option<(usize, usize)>],
+    boards: usize,
+    cap: f64,
+    device: &Device,
+) -> RepackOutcome {
+    let boards = boards.max(1);
+    let mut state: Vec<BoardState> = (0..boards)
+        .map(|_| BoardState { used: Resources::ZERO, tenants: Vec::new() })
+        .collect();
+    let mut placements = provisional(demands);
+
+    // Phase 1 — keepers hold their boards, in submission order.
+    for i in 0..demands.len() {
+        if placements[i] != Placement::Queued {
+            continue;
+        }
+        let Some((pb, po)) = previous.get(i).copied().flatten() else { continue };
+        if pb >= boards {
+            continue; // the fleet shrank under this tenant
+        }
+        let d = &demands[i];
+        let Some(opt) = d.options.get(po) else { continue };
+        if !opt.is_schedulable() {
+            continue;
+        }
+        let combined = state[pb].used.add(&opt.resources);
+        if device.utilization(&combined) <= cap {
+            state[pb].used = combined;
+            state[pb].tenants.push(i);
+            placements[i] = Placement::Placed { board: pb, option: po, reconfig_s: 0.0 };
+        }
+    }
+
+    // Phase 2 — joiners and displaced tenants first-fit the residual.
+    let mut idx: Vec<usize> = (0..demands.len())
+        .filter(|&i| placements[i] == Placement::Queued)
+        .collect();
+    ffd_sort(&mut idx, demands);
+    for &di in &idx {
+        let d = &demands[di];
+        placements[di] = place_first_fit(di, d, &mut state, cap, device)
+            .unwrap_or_else(|| resolve_unplaced(d, cap, device));
+    }
+
+    let incremental = PackOutcome { boards: state, placements };
+
+    // Phase 3 — escalate only when a full re-pack places strictly more.
+    let waiting = incremental.placements.iter().any(|p| *p == Placement::Queued);
+    let (mut outcome, full) = if waiting {
+        let full_pack = first_fit_decreasing(demands, boards, cap, device);
+        if placed_count(&full_pack) > placed_count(&incremental) {
+            (full_pack, true)
+        } else {
+            (incremental, false)
+        }
+    } else {
+        (incremental, false)
+    };
+
+    let (migrations, migration_s) =
+        settle_migrations(demands, previous, &mut outcome.placements);
+    RepackOutcome { outcome, migrations, migration_s, full }
 }
 
 #[cfg(test)]
@@ -284,5 +443,121 @@ mod tests {
         assert_eq!(fwd, rev, "packing must not depend on slice order");
         assert_eq!(fwd[0], "c", "the 0.5 demand packs first (FFD)");
         assert_eq!(fwd[1], "b", "tie at 0.3 goes to the cheap IP link");
+    }
+
+    #[test]
+    fn keepers_hold_their_boards_at_zero_cost() {
+        let demands = vec![
+            tenant("a", 0, vec![opt(0.4, 3.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+            tenant("b", 1, vec![opt(0.4, 2.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+        ];
+        let previous = vec![Some((0, 0)), Some((1, 0))];
+        let out = incremental_repack(&demands, &previous, 2, 0.85, &ARRIA10_GX);
+        assert!(!out.full, "nothing to escalate for");
+        assert_eq!(out.migrations, 0);
+        assert_eq!(out.migration_s, 0.0);
+        for (i, p) in out.outcome.placements.iter().enumerate() {
+            match p {
+                Placement::Placed { board, option, reconfig_s } => {
+                    assert_eq!((*board, *option), previous[i].unwrap(), "keeper stays put");
+                    assert_eq!(*reconfig_s, 0.0, "resident bitstream is free");
+                }
+                other => panic!("keeper must stay placed: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn joiner_packs_into_residual_without_disturbing_keepers() {
+        let demands = vec![
+            tenant("keeper", 0, vec![opt(0.3, 3.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+            tenant("joiner", 1, vec![opt(0.3, 2.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+        ];
+        let previous = vec![Some((0, 0)), None];
+        let out = incremental_repack(&demands, &previous, 2, 0.85, &ARRIA10_GX);
+        assert!(!out.full);
+        assert_eq!(out.migrations, 0, "a fresh admission is not a migration");
+        assert!(matches!(
+            out.outcome.placements[0],
+            Placement::Placed { board: 0, option: 0, reconfig_s } if reconfig_s == 0.0
+        ));
+        match &out.outcome.placements[1] {
+            Placement::Placed { board: 0, reconfig_s, .. } => {
+                assert_eq!(
+                    *reconfig_s,
+                    3.0 * 3600.0,
+                    "joining occupied silicon pays the swap"
+                );
+            }
+            other => panic!("joiner must first-fit board 0: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_repack_adopted_only_when_it_places_strictly_more() {
+        // incremental leaves the joiner queued (the keeper's 0.5
+        // bitstream blocks the only board), but a full FFD re-pack
+        // packs the harder 0.55 joiner first and seats the keeper on
+        // its cheap IP fallback — strictly more tenants placed
+        let demands = vec![
+            tenant(
+                "keeper",
+                0,
+                vec![
+                    opt(0.5, 4.0, 3.0 * 3600.0, PlacementKind::Bitstream),
+                    opt(0.10, 2.0, 420.0, PlacementKind::IpLink),
+                ],
+            ),
+            tenant("joiner", 1, vec![opt(0.55, 3.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+        ];
+        let previous = vec![Some((0, 0)), None];
+        let out = incremental_repack(&demands, &previous, 1, 0.85, &ARRIA10_GX);
+        assert!(out.full, "escalation must fire: full pack seats both");
+        let placed = out
+            .outcome
+            .placements
+            .iter()
+            .filter(|p| matches!(p, Placement::Placed { .. }))
+            .count();
+        assert_eq!(placed, 2);
+        // the keeper moved off its resident bitstream: one migration,
+        // charged the adopted option's swap cost
+        assert_eq!(out.migrations, 1);
+        assert_eq!(out.migration_s, 420.0);
+        assert!(matches!(
+            out.outcome.placements[0],
+            Placement::Placed { option: 1, reconfig_s, .. } if reconfig_s == 420.0
+        ));
+    }
+
+    #[test]
+    fn shrinking_the_fleet_migrates_the_stranded_tenant() {
+        let demands =
+            vec![tenant("a", 0, vec![opt(0.3, 3.0, 3.0 * 3600.0, PlacementKind::Bitstream)])];
+        // previously on board 1; the fleet shrank to one board
+        let previous = vec![Some((1, 0))];
+        let out = incremental_repack(&demands, &previous, 1, 0.85, &ARRIA10_GX);
+        assert_eq!(out.migrations, 1, "the stranded tenant migrates");
+        assert_eq!(out.migration_s, 3.0 * 3600.0);
+        assert!(matches!(
+            out.outcome.placements[0],
+            Placement::Placed { board: 0, reconfig_s, .. } if reconfig_s == 3.0 * 3600.0
+        ));
+    }
+
+    #[test]
+    fn useless_escalation_is_not_adopted() {
+        // the joiner can never fit (0.9 alone blows the cap), so a full
+        // re-pack would place no more than the incremental one: the
+        // keeper must not be churned
+        let demands = vec![
+            tenant("keeper", 0, vec![opt(0.5, 4.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+            tenant("never", 1, vec![opt(0.9, 9.0, 3.0 * 3600.0, PlacementKind::Bitstream)]),
+        ];
+        let previous = vec![Some((0, 0)), None];
+        let out = incremental_repack(&demands, &previous, 1, 0.85, &ARRIA10_GX);
+        assert!(!out.full);
+        assert_eq!(out.migrations, 0);
+        assert_eq!(out.outcome.placements[1], Placement::Rejected);
     }
 }

@@ -25,6 +25,7 @@
 pub mod apps;
 pub mod backend;
 pub mod baselines;
+pub mod benchcmp;
 pub mod cache;
 pub mod config;
 pub mod coordinator;
@@ -40,6 +41,7 @@ pub mod ir;
 pub mod metrics;
 pub mod opencl;
 pub mod runtime;
+pub mod serve;
 pub mod service;
 pub mod util;
 

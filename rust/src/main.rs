@@ -14,6 +14,13 @@
 //! flopt verify <app>               PJRT numerics cross-check of the hot loop
 //! flopt compare <app>              proposed vs GA vs exhaustive vs naive
 //! flopt gen [--seed S --count N]   print N seeded MiniC programs
+//! flopt serve [opts]               long-lived offload daemon: Poisson (or
+//!                                  --trace) arrivals, tenant churn,
+//!                                  incremental re-pack + live migration,
+//!                                  DRR fairness, cache eviction
+//! flopt bench-compare --baseline <file> --report <file>
+//!                                  gate a bench report against a committed
+//!                                  baseline (exit 1 on regression)
 //! ```
 //!
 //! Options for `offload`/`batch`/`compare`: `--target {fpga,gpu,mixed}`
@@ -47,6 +54,7 @@ use flopt::cpu::XEON_3104;
 use flopt::fleet;
 use flopt::funcblock::BlockMode;
 use flopt::intensity;
+use flopt::util::json;
 use flopt::util::order;
 use flopt::runtime::{default_artifact_dir, Runtime};
 use flopt::service::{BatchRequest, BatchService};
@@ -69,11 +77,17 @@ fn usage() -> ! {
          \x20 blocks <app>              function-block detection + IP offers\n\
          \x20 adapt <app> [opts]        Steps 4-6: size, place, verify operation\n\
          \x20 gen [--seed S --count N]  print N seeded MiniC programs (fuzz corpus)\n\
+         \x20 serve [opts]              long-lived offload daemon (churn + re-pack)\n\
+         \x20 bench-compare --baseline <file> --report <file> [--diff <file>]\n\
+         \x20     [--bless <file>]      bench regression gate (exit 1 on regression)\n\
          opts: --target {{fpga,gpu,mixed}} --blocks {{off,on,only}}\n\
          \x20     --a N --b N --c N --d N --lanes N --boards N\n\
          \x20     --ga-pop N --ga-gen N --full-scale\n\
          \x20     --cache-dir <dir> --no-cache --pool N\n\
          \x20     --seed S --count N (gen only)\n\
+         \x20     --requests N --rate R --tenants N --epoch-hours H --no-churn\n\
+         \x20     --quota N --drr-quantum Q --cache-budget BYTES\n\
+         \x20     --cache-ttl-hours H --trace <file> (serve only)\n\
          (`flopt --target mixed` with no app searches all registered apps\n\
          \x20on one shared clock and reports the winning destination per app;\n\
          \x20`flopt batch --target mixed` submits every app x {{fpga,gpu}})"
@@ -92,6 +106,17 @@ struct Opts {
     boards: usize,
     seed: u64,
     count: usize,
+    // serve-only knobs
+    requests: usize,
+    rate_per_h: f64,
+    tenants: usize,
+    epoch_hours: f64,
+    no_churn: bool,
+    quota: u64,
+    drr_quantum: f64,
+    cache_budget: Option<u64>,
+    cache_ttl_hours: Option<f64>,
+    trace: Option<String>,
 }
 
 /// A flag was given without its required value: name the flag and exit 2
@@ -119,9 +144,36 @@ fn parse_opts(args: &[String]) -> Opts {
     let mut boards = 2;
     let mut seed: u64 = 42;
     let mut count = 5;
+    let mut requests = 2000;
+    let mut rate_per_h = 50.0;
+    let mut tenants = 6;
+    let mut epoch_hours = 4.0;
+    let mut no_churn = false;
+    let mut quota: u64 = 0;
+    let mut drr_quantum = 1.0;
+    let mut cache_budget: Option<u64> = None;
+    let mut cache_ttl_hours: Option<f64> = None;
+    let mut trace: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         let take = |i: &mut usize, flag: &str| -> usize {
+            *i += 1;
+            match args.get(*i) {
+                None => missing_value(flag),
+                Some(v) => v.parse().unwrap_or_else(|_| invalid_value(flag, v)),
+            }
+        };
+        let take_f64 = |i: &mut usize, flag: &str| -> f64 {
+            *i += 1;
+            match args.get(*i) {
+                None => missing_value(flag),
+                Some(v) => match v.parse::<f64>() {
+                    Ok(x) if x.is_finite() && x >= 0.0 => x,
+                    _ => invalid_value(flag, v),
+                },
+            }
+        };
+        let take_u64 = |i: &mut usize, flag: &str| -> u64 {
             *i += 1;
             match args.get(*i) {
                 None => missing_value(flag),
@@ -171,12 +223,47 @@ fn parse_opts(args: &[String]) -> Opts {
             }
             "--no-cache" => no_cache = true,
             "--full-scale" => full_scale = true,
+            "--requests" => requests = take(&mut i, "--requests").max(1),
+            "--rate" => rate_per_h = take_f64(&mut i, "--rate"),
+            "--tenants" => tenants = take(&mut i, "--tenants").max(2),
+            "--epoch-hours" => epoch_hours = take_f64(&mut i, "--epoch-hours"),
+            "--no-churn" => no_churn = true,
+            "--quota" => quota = take_u64(&mut i, "--quota"),
+            "--drr-quantum" => drr_quantum = take_f64(&mut i, "--drr-quantum"),
+            "--cache-budget" => cache_budget = Some(take_u64(&mut i, "--cache-budget")),
+            "--cache-ttl-hours" => cache_ttl_hours = Some(take_f64(&mut i, "--cache-ttl-hours")),
+            "--trace" => {
+                i += 1;
+                let Some(v) = args.get(i) else { missing_value("--trace") };
+                trace = Some(v.clone());
+            }
             s if !s.starts_with('-') && app.is_none() => app = Some(s.to_string()),
             _ => usage(),
         }
         i += 1;
     }
-    Opts { app, cfg, full_scale, target, cache_dir, no_cache, pool, boards, seed, count }
+    Opts {
+        app,
+        cfg,
+        full_scale,
+        target,
+        cache_dir,
+        no_cache,
+        pool,
+        boards,
+        seed,
+        count,
+        requests,
+        rate_per_h,
+        tenants,
+        epoch_hours,
+        no_churn,
+        quota,
+        drr_quantum,
+        cache_budget,
+        cache_ttl_hours,
+        trace,
+    }
 }
 
 /// The artifact cache this invocation routes searches through.
@@ -218,6 +305,71 @@ fn require_fpga_target(opts: &Opts, cmd: &str) {
     }
 }
 
+/// `flopt bench-compare`: gate a bench report against a committed
+/// baseline.  Exit 0 when every pinned metric is within tolerance,
+/// 1 on a regression or a pinned-but-missing metric, 2 on usage/IO
+/// errors.  Parses its own flags (they share nothing with `parse_opts`).
+fn run_bench_compare(args: &[String]) -> ! {
+    let mut baseline: Option<String> = None;
+    let mut report: Option<String> = None;
+    let mut diff: Option<String> = None;
+    let mut bless: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let slot = match args[i].as_str() {
+            "--baseline" => &mut baseline,
+            "--report" => &mut report,
+            "--diff" => &mut diff,
+            "--bless" => &mut bless,
+            other => {
+                eprintln!("bench-compare: unknown argument `{other}`");
+                std::process::exit(2);
+            }
+        };
+        let flag = args[i].clone();
+        i += 1;
+        let Some(v) = args.get(i) else { missing_value(&flag) };
+        *slot = Some(v.clone());
+        i += 1;
+    }
+    let (Some(bp), Some(rp)) = (baseline, report) else {
+        eprintln!("bench-compare: --baseline <file> and --report <file> are required");
+        std::process::exit(2);
+    };
+    let read = |p: &str| -> String {
+        std::fs::read_to_string(p).unwrap_or_else(|e| {
+            eprintln!("bench-compare: cannot read {p}: {e}");
+            std::process::exit(2);
+        })
+    };
+    let (cmp, blessed) = match flopt::benchcmp::run(&read(&bp), &read(&rp)) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("bench-compare: {e}");
+            std::process::exit(2);
+        }
+    };
+    print!("{}", cmp.render());
+    let write = |p: &str, text: String| {
+        if let Some(parent) = std::path::Path::new(p).parent() {
+            if !parent.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+        }
+        if let Err(e) = std::fs::write(p, text) {
+            eprintln!("bench-compare: cannot write {p}: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(dp) = diff {
+        write(&dp, json::to_string(&cmp.to_json()) + "\n");
+    }
+    if let Some(bp) = bless {
+        write(&bp, json::to_string(&blessed) + "\n");
+    }
+    std::process::exit(if cmp.failed() { 1 } else { 0 });
+}
+
 fn main() -> flopt::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(first) = args.first() else { usage() };
@@ -227,6 +379,9 @@ fn main() -> flopt::Result<()> {
     } else {
         (first.as_str(), &args[1..])
     };
+    if cmd == "bench-compare" {
+        run_bench_compare(rest);
+    }
     let opts = parse_opts(rest);
 
     match cmd {
@@ -527,6 +682,41 @@ fn main() -> flopt::Result<()> {
                     if c.passed { "PASS" } else { "FAIL" }
                 );
             }
+        }
+        "serve" => {
+            // persistent offload daemon on simulated time: arrivals,
+            // churn, incremental re-pack, DRR fairness, cache eviction
+            require_fpga_target(&opts, "serve");
+            let arrivals = match &opts.trace {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path).map_err(|e| {
+                        anyhow::anyhow!("cannot read --trace {path}: {e}")
+                    })?;
+                    Some(flopt::serve::parse_trace(&text)?)
+                }
+                None => None,
+            };
+            let sc = flopt::serve::ServeConfig {
+                seed: opts.seed,
+                requests: opts.requests,
+                rate_per_h: opts.rate_per_h,
+                tenants: opts.tenants,
+                boards: opts.boards,
+                epoch_s: opts.epoch_hours * 3600.0,
+                churn: !opts.no_churn,
+                quota: opts.quota,
+                drr_quantum: opts.drr_quantum,
+                pool: opts.pool,
+                lanes: opts.cfg.compile_parallelism,
+                cache_budget_bytes: opts.cache_budget,
+                cache_ttl_s: opts.cache_ttl_hours.map(|h| h * 3600.0),
+                cfg: opts.cfg.clone(),
+                test_scale: !opts.full_scale,
+                arrivals,
+                ..flopt::serve::ServeConfig::default()
+            };
+            let report = flopt::serve::run_serve(&sc, build_cache(&opts))?;
+            print!("{}", report.render());
         }
         "gen" => {
             // seeded MiniC corpus on stdout: program `i` depends only on

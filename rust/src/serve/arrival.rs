@@ -1,0 +1,106 @@
+//! Deterministic request-arrival generation.
+//!
+//! The daemon scenario needs an open-loop arrival process that is a
+//! pure function of the seed: a Poisson stream by default (exponential
+//! inter-arrival gaps from the repo's own xoshiro [`Rng`]), or a replay
+//! of a trace file (`flopt serve --trace <file>`).  Every stochastic
+//! decision a request needs later — which tenant it belongs to — is
+//! drawn **at generation time** and carried on the [`Arrival`], so the
+//! simulation itself consumes no RNG state and stays byte-identical for
+//! any worker-pool size.
+
+use crate::util::rng::Rng;
+
+/// One request arrival.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    /// Simulated arrival time, seconds from service start.
+    pub at_s: f64,
+    /// Tenant selector: `Some(i)` pins tenant index `i` (trace-driven
+    /// replay); `None` picks from the currently *active* tenant set
+    /// using `pick`.
+    pub tenant: Option<usize>,
+    /// Uniform draw in `[0,1)` for the weighted tenant pick when
+    /// `tenant` is `None`.
+    pub pick: f64,
+}
+
+/// Generate `n` Poisson arrivals at `rate_per_h` requests per simulated
+/// hour from a dedicated seeded stream (the stream is salted so it can
+/// never collide with the churn or generator streams sharing a seed).
+pub fn poisson_arrivals(seed: u64, n: usize, rate_per_h: f64) -> Vec<Arrival> {
+    let mut rng = Rng::new(seed ^ 0x4152_5249_5641_4c53); // "ARRIVALS"
+    let rate_per_s = (rate_per_h / 3600.0).max(1e-12);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let u = rng.f64();
+        // inverse-CDF exponential gap; (1-u) keeps ln() off exactly 0
+        t += -(1.0 - u).ln() / rate_per_s;
+        out.push(Arrival { at_s: t, tenant: None, pick: rng.f64() });
+    }
+    out
+}
+
+/// Parse a request trace: one arrival per line as
+/// `<seconds> <tenant-index>`, `#` comments and blank lines skipped.
+/// Arrival times must be non-decreasing.
+pub fn parse_trace(text: &str) -> crate::Result<Vec<Arrival>> {
+    let mut out = Vec::new();
+    let mut last = 0.0_f64;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(ts), Some(ten)) = (it.next(), it.next()) else {
+            anyhow::bail!("trace line {}: expected `<seconds> <tenant>`", ln + 1);
+        };
+        let at_s: f64 = ts
+            .parse()
+            .map_err(|e| anyhow::anyhow!("trace line {}: bad time `{ts}`: {e}", ln + 1))?;
+        let tenant: usize = ten
+            .parse()
+            .map_err(|e| anyhow::anyhow!("trace line {}: bad tenant `{ten}`: {e}", ln + 1))?;
+        if !at_s.is_finite() || at_s < last {
+            anyhow::bail!("trace line {}: arrival times must be non-decreasing", ln + 1);
+        }
+        last = at_s;
+        out.push(Arrival { at_s, tenant: Some(tenant), pick: 0.0 });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_seeded_and_sorted() {
+        let a = poisson_arrivals(42, 100, 50.0);
+        let b = poisson_arrivals(42, 100, 50.0);
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s, y.at_s, "same seed, same stream");
+            assert_eq!(x.pick, y.pick);
+        }
+        assert!(a.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        let c = poisson_arrivals(43, 100, 50.0);
+        assert!(a[0].at_s != c[0].at_s, "different seed, different stream");
+        // mean gap ≈ 72 s at 50/h; the 100-sample mean stays in range
+        let mean_gap = a.last().unwrap().at_s / 100.0;
+        assert!((20.0..300.0).contains(&mean_gap), "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn trace_parses_and_validates() {
+        let t = parse_trace("# comment\n0.5 0\n\n2 1\n2 0\n").unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].tenant, Some(0));
+        assert_eq!(t[1].at_s, 2.0);
+        assert!(parse_trace("5 0\n1 0\n").is_err(), "time must not go back");
+        assert!(parse_trace("nope 0\n").is_err());
+        assert!(parse_trace("1\n").is_err());
+    }
+}

@@ -1,0 +1,621 @@
+//! The long-lived offload daemon scenario (`flopt serve`).
+//!
+//! Every other `flopt` entry point is one-shot: all requests known up
+//! front, one pack, done.  A production offload service is a stream.
+//! This module composes every layer PRs 3–6 built into a persistent
+//! service simulated on the shared [`crate::metrics::SimClock`]:
+//!
+//! * **Arrivals** ([`arrival`]) — a seeded Poisson process (or a replay
+//!   trace) delivers thousands of requests over simulated time; each
+//!   request belongs to a tenant picked by seeded weight (tenant 0 is
+//!   the configurable heavy hitter).
+//! * **Churn** — tenants join and leave at epoch boundaries.  A joiner
+//!   is provisioned through the batch service ([`crate::service`]): a
+//!   cold join pays the full search makespan before its placement is
+//!   ready (requests run on the CPU meanwhile); a warm re-join finds
+//!   its artifacts in the cache and is ready instantly.
+//! * **Incremental re-pack** ([`crate::fleet::incremental_repack`]) —
+//!   at each epoch the packer keeps resident tenants in place, first-
+//!   fits joiners into residual capacity, and escalates to a full
+//!   re-pack only when that places strictly more tenants; every
+//!   placement moved off a resident bitstream is a live migration that
+//!   pays the swap cost in board downtime and compile-lane work.
+//! * **Fairness** ([`sched`]) — per-board deficit-round-robin keeps the
+//!   heavy tenant from starving co-residents, and per-tenant per-epoch
+//!   admission quotas (`--quota`) bound what it can admit at all.
+//! * **Eviction** — the artifact store runs under an
+//!   [`EvictionPolicy`] (`--cache-budget`, `--cache-ttl-hours`); the
+//!   service feeds it simulated time at each epoch so TTL expiry is
+//!   reproducible.
+//!
+//! The run is a pure function of [`ServeConfig`]: the [`ServeReport`]
+//! is byte-identical across worker-pool sizes (all randomness is drawn
+//! at generation time from seeded streams; the schedulers are
+//! hash-free state machines) — `rust/tests/serve.rs` pins this.
+
+pub mod arrival;
+pub mod report;
+pub mod sched;
+
+pub use arrival::{parse_trace, poisson_arrivals, Arrival};
+pub use report::{ServeReport, TenantRow};
+pub use sched::{BoardSched, Completion, QueuedReq};
+
+use std::sync::Arc;
+
+use crate::apps::{self, gen, App};
+use crate::backend::{Target, FPGA};
+use crate::cache::{self, CacheStore, EvictionPolicy};
+use crate::config::SearchConfig;
+use crate::coordinator::pipeline::offload_search;
+use crate::coordinator::verify_env::VerifyEnv;
+use crate::cpu::XEON_3104;
+use crate::fleet::{incremental_repack, tenant_from_trace, Placement, TenantDemand};
+use crate::fpga::device::Device;
+use crate::service::{BatchRequest, BatchService, CacheDisposition};
+use crate::util::rng::Rng;
+
+use report::percentile;
+
+/// Everything that determines a serve run (the report is a pure
+/// function of this struct).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Master seed for the arrival and churn streams.
+    pub seed: u64,
+    /// Poisson arrivals to generate (ignored when `arrivals` is set).
+    pub requests: usize,
+    /// Mean arrival rate, requests per simulated hour.
+    pub rate_per_h: f64,
+    /// Initially active tenants (clamped to at least 2).
+    pub tenants: usize,
+    /// FPGA boards in the fleet.
+    pub boards: usize,
+    /// Epoch length in simulated seconds (churn + re-pack cadence).
+    pub epoch_s: f64,
+    /// Tenants join/leave at epoch boundaries?
+    pub churn: bool,
+    /// Per-tenant admitted requests per epoch; 0 = unlimited.
+    pub quota: u64,
+    /// DRR quantum as a multiple of the slowest hosted service time.
+    pub drr_quantum: f64,
+    /// Arrival weight of tenant 0 relative to every other tenant.
+    pub heavy_weight: f64,
+    /// Batch-service worker pool (must not affect any output byte).
+    pub pool: usize,
+    /// Simulated compile lanes.
+    pub lanes: usize,
+    /// Memory-tier cache budget in bytes (`None` = unbounded).
+    pub cache_budget_bytes: Option<u64>,
+    /// Cache TTL in simulated seconds (`None` = no expiry).
+    pub cache_ttl_s: Option<f64>,
+    /// Search configuration for tenant provisioning.
+    pub cfg: SearchConfig,
+    /// Workload scale of the tenant searches.
+    pub test_scale: bool,
+    /// Trace-driven arrivals (overrides the Poisson stream).
+    pub arrivals: Option<Vec<Arrival>>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            seed: 42,
+            requests: 2000,
+            rate_per_h: 50.0,
+            tenants: 6,
+            boards: 2,
+            epoch_s: 4.0 * 3600.0,
+            churn: true,
+            quota: 0,
+            drr_quantum: 1.0,
+            heavy_weight: 4.0,
+            pool: 4,
+            lanes: 4,
+            cache_budget_bytes: None,
+            cache_ttl_s: None,
+            cfg: SearchConfig::default(),
+            test_scale: true,
+            arrivals: None,
+        }
+    }
+}
+
+/// One tenant's live state.
+struct Tenant {
+    app: &'static App,
+    active: bool,
+    /// Placement becomes usable at this simulated time (provisioning
+    /// latency of a cold join; 0 for the pre-provisioned initial set).
+    ready_at_s: f64,
+    demand: Option<TenantDemand>,
+    /// Current `(board, option)` placement, `None` = CPU.
+    placement: Option<(usize, usize)>,
+    /// This tenant's dedicated CPU server frees at this time.
+    cpu_busy_until_s: f64,
+    admitted_epoch: u64,
+    admitted: u64,
+    rejected_quota: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    epochs: u64,
+    joins: u64,
+    leaves: u64,
+    warm_joins: u64,
+    repacks: u64,
+    full_repacks: u64,
+    migrations: u64,
+    migration_s: f64,
+    rejected_quota: u64,
+    rejected_inactive: u64,
+}
+
+/// The tenant universe: the registered corpus first, extended with
+/// seeded generated apps when more tenants are requested than exist.
+fn universe(n: usize, seed: u64) -> Vec<&'static App> {
+    let mut u = apps::all();
+    let mut i = 0u64;
+    while u.len() < n {
+        u.push(gen::as_app(seed, i));
+        i += 1;
+    }
+    u.truncate(n);
+    u
+}
+
+/// Extract a tenant demand from the (now warm) trace of `app`.
+fn extract_demand(
+    service: &BatchService,
+    app: &'static App,
+    cfg: &SearchConfig,
+    test_scale: bool,
+    order: usize,
+) -> crate::Result<TenantDemand> {
+    let backend = &FPGA;
+    let tkey = cache::trace_key(app, test_scale, backend, cfg);
+    let t = match service.cache().get_trace(tkey) {
+        Some(t) => t,
+        None => {
+            // destination outcome was warm but its trace is not in this
+            // store: run the trace-level search on the shared cache +
+            // clock (warm stages make it cheap) — same fallback the
+            // fleet layer uses
+            let env = VerifyEnv::with_clock(
+                backend,
+                service.cpu(),
+                cfg.clone(),
+                Arc::clone(service.clock()),
+            )
+            .with_cache(Arc::clone(service.cache()));
+            offload_search(app, &env, test_scale)?
+        }
+    };
+    Ok(tenant_from_trace(&t, backend.device, order))
+}
+
+/// Provision one joining tenant through the batch service: returns its
+/// demand, the simulated seconds of provisioning makespan (its
+/// readiness latency), and whether the join was served warm.
+fn provision(
+    service: &BatchService,
+    app: &'static App,
+    cfg: &SearchConfig,
+    test_scale: bool,
+    order: usize,
+) -> crate::Result<(TenantDemand, f64, bool)> {
+    let before_s = service.clock().total_seconds();
+    let rep = service.run(&[BatchRequest {
+        app,
+        target: Target::Fpga,
+        cfg: cfg.clone(),
+        test_scale,
+    }])?;
+    let warm = rep.items[0].disposition != CacheDisposition::Cold;
+    let demand = extract_demand(service, app, cfg, test_scale, order)?;
+    let dt_s = service.clock().total_seconds() - before_s;
+    Ok((demand, dt_s, warm))
+}
+
+/// Weighted pick over the active tenants: tenant 0 carries
+/// `heavy_weight`, everyone else weight 1.
+fn weighted_pick(tenants: &[Tenant], pick: f64, heavy_weight: f64) -> Option<usize> {
+    let weight = |i: usize| if i == 0 { heavy_weight.max(0.0) } else { 1.0 };
+    let total: f64 = tenants
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.active)
+        .map(|(i, _)| weight(i))
+        .sum();
+    if total <= 0.0 {
+        return None;
+    }
+    let mut x = pick * total;
+    let mut last = None;
+    for (i, t) in tenants.iter().enumerate() {
+        if !t.active {
+            continue;
+        }
+        last = Some(i);
+        if x < weight(i) {
+            return Some(i);
+        }
+        x -= weight(i);
+    }
+    last // floating-point edge: the draw lands on the final tenant
+}
+
+/// Re-pack the ready tenants at `now_s` and rebuild the board
+/// schedulers: pumps old boards up to `now_s`, re-routes their pending
+/// (unstarted) requests under the new placements, charges every
+/// reconfiguration as board downtime plus compile-lane work.
+#[allow(clippy::too_many_arguments)]
+fn repack_boards(
+    now_s: f64,
+    tenants: &mut [Tenant],
+    boards_busy: &mut [f64],
+    scheds: &mut Vec<BoardSched>,
+    completions: &mut Vec<Completion>,
+    service: &BatchService,
+    c: &ServeConfig,
+    device: &Device,
+    stats: &mut Counters,
+) {
+    // finish what the old configuration can start before `now_s`, then
+    // pull the still-waiting requests for re-routing
+    let mut pending: Vec<QueuedReq> = Vec::new();
+    for (bi, s) in scheds.iter_mut().enumerate() {
+        s.pump(now_s, completions);
+        pending.extend(s.drain_pending());
+        boards_busy[bi] = s.busy_until_s;
+    }
+    pending.sort_by_key(|r| r.id);
+
+    // the placeable set: active, provisioned, and ready by now
+    let placeable: Vec<usize> = (0..tenants.len())
+        .filter(|&i| tenants[i].active && tenants[i].ready_at_s <= now_s && tenants[i].demand.is_some())
+        .collect();
+    let demands: Vec<TenantDemand> = placeable
+        .iter()
+        .map(|&i| tenants[i].demand.clone().expect("placeable has demand"))
+        .collect();
+    let previous: Vec<Option<(usize, usize)>> =
+        placeable.iter().map(|&i| tenants[i].placement).collect();
+
+    let rp = incremental_repack(&demands, &previous, boards_busy.len(), c.cfg.resource_cap, device);
+    stats.repacks += 1;
+    if rp.full {
+        stats.full_repacks += 1;
+    }
+    stats.migrations += rp.migrations as u64;
+    stats.migration_s += rp.migration_s;
+
+    for t in tenants.iter_mut() {
+        t.placement = None;
+    }
+    for (k, p) in rp.outcome.placements.iter().enumerate() {
+        let ti = placeable[k];
+        if let Placement::Placed { board, option, reconfig_s } = p {
+            tenants[ti].placement = Some((*board, *option));
+            if *reconfig_s > 0.0 {
+                // a bitstream swap is real compile-farm work AND board
+                // downtime: the board serves nothing while it flashes
+                service
+                    .clock()
+                    .schedule_compile(&format!("reconfig {}", demands[k].app_name), *reconfig_s);
+                let base = if boards_busy[*board] > now_s { boards_busy[*board] } else { now_s };
+                boards_busy[*board] = base + reconfig_s;
+            }
+        }
+    }
+
+    // rebuild one DRR scheduler per board under the new residency
+    scheds.clear();
+    for (bi, busy) in boards_busy.iter().enumerate() {
+        let hosted: Vec<usize> = (0..tenants.len())
+            .filter(|&i| matches!(tenants[i].placement, Some((b, _)) if b == bi))
+            .collect();
+        let max_service = hosted
+            .iter()
+            .filter_map(|&i| {
+                let (_, o) = tenants[i].placement?;
+                Some(tenants[i].demand.as_ref()?.options[o].time_s)
+            })
+            .fold(0.0_f64, f64::max);
+        let quantum = if max_service > 0.0 { c.drr_quantum * max_service } else { 1.0 };
+        scheds.push(BoardSched::new(hosted, quantum, *busy));
+    }
+
+    // re-route the pending requests under the new placements; a tenant
+    // that lost its board (or left) finishes on its CPU server
+    for req in pending {
+        let ti = req.tenant;
+        match tenants[ti].placement {
+            Some((b, o)) => {
+                let service_s =
+                    tenants[ti].demand.as_ref().expect("placed tenant has demand").options[o].time_s;
+                scheds[b].enqueue(QueuedReq { service_s, ..req });
+            }
+            None => {
+                let cpu_s = tenants[ti].demand.as_ref().map(|d| d.cpu_time_s).unwrap_or(1.0);
+                let base = if tenants[ti].cpu_busy_until_s > now_s {
+                    tenants[ti].cpu_busy_until_s
+                } else {
+                    now_s
+                };
+                let finish = base + cpu_s;
+                tenants[ti].cpu_busy_until_s = finish;
+                completions.push(Completion {
+                    id: req.id,
+                    tenant: ti,
+                    at_s: req.at_s,
+                    finish_s: finish,
+                });
+            }
+        }
+    }
+    for s in scheds.iter_mut() {
+        s.pump(now_s, completions);
+    }
+}
+
+/// Run the daemon scenario to completion and summarize it.
+///
+/// `cache` is the artifact store to serve from (a `--cache-dir` store
+/// makes re-joins warm across *processes*; the default fresh store
+/// still makes them warm within the run).  The report is a pure
+/// function of `c` — byte-identical for any `c.pool`.
+pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<ServeReport> {
+    let service = BatchService::new(c.pool, c.lanes, &XEON_3104).with_cache(cache);
+    let store = Arc::clone(service.cache());
+    store.set_policy(EvictionPolicy {
+        budget_bytes: c.cache_budget_bytes,
+        ttl_s: c.cache_ttl_s,
+    });
+    let backend = &FPGA;
+    let device = backend.device;
+
+    // ---- tenant universe -------------------------------------------
+    let initial_n = c.tenants.max(2);
+    let universe_n = initial_n + if c.churn { 2 } else { 0 };
+    let mut tenants: Vec<Tenant> = universe(universe_n, c.seed)
+        .into_iter()
+        .map(|app| Tenant {
+            app,
+            active: false,
+            ready_at_s: 0.0,
+            demand: None,
+            placement: None,
+            cpu_busy_until_s: 0.0,
+            admitted_epoch: 0,
+            admitted: 0,
+            rejected_quota: 0,
+        })
+        .collect();
+    let initial_n = initial_n.min(tenants.len());
+
+    // ---- initial provisioning (pre-deployed fleet, ready at t=0) ---
+    let reqs: Vec<BatchRequest> = tenants[..initial_n]
+        .iter()
+        .map(|t| BatchRequest {
+            app: t.app,
+            target: Target::Fpga,
+            cfg: c.cfg.clone(),
+            test_scale: c.test_scale,
+        })
+        .collect();
+    service.run(&reqs)?;
+    for i in 0..initial_n {
+        tenants[i].active = true;
+        tenants[i].demand = Some(extract_demand(&service, tenants[i].app, &c.cfg, c.test_scale, i)?);
+    }
+
+    let mut stats = Counters::default();
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut boards_busy = vec![0.0_f64; c.boards.max(1)];
+    let mut scheds: Vec<BoardSched> = Vec::new();
+    repack_boards(
+        0.0,
+        &mut tenants,
+        &mut boards_busy,
+        &mut scheds,
+        &mut completions,
+        &service,
+        c,
+        device,
+        &mut stats,
+    );
+
+    // ---- the arrival loop ------------------------------------------
+    let arrivals = match &c.arrivals {
+        Some(a) => a.clone(),
+        None => poisson_arrivals(c.seed, c.requests, c.rate_per_h),
+    };
+    let mut churn_rng = Rng::new(c.seed ^ 0x4348_5552_4e21_2121); // "CHURN!!!"
+    let mut next_epoch_s = c.epoch_s.max(1.0);
+    let mut epoch_index: u64 = 0;
+
+    for (id, a) in arrivals.iter().enumerate() {
+        // epoch boundaries strictly before this arrival fire first
+        while next_epoch_s <= a.at_s {
+            let t = next_epoch_s;
+            epoch_index += 1;
+            stats.epochs += 1;
+            store.set_now_sim_s(t);
+            for ten in tenants.iter_mut() {
+                ten.admitted_epoch = 0;
+            }
+
+            let mut joined: Option<usize> = None;
+            if c.churn {
+                if epoch_index % 2 == 1 {
+                    let candidates: Vec<usize> =
+                        (0..tenants.len()).filter(|&i| !tenants[i].active).collect();
+                    if !candidates.is_empty() {
+                        let pick = candidates[churn_rng.below(candidates.len() as u64) as usize];
+                        let (demand, dt_s, warm) =
+                            provision(&service, tenants[pick].app, &c.cfg, c.test_scale, pick)?;
+                        tenants[pick].active = true;
+                        tenants[pick].demand = Some(demand);
+                        tenants[pick].ready_at_s = t + dt_s;
+                        stats.joins += 1;
+                        if warm {
+                            stats.warm_joins += 1;
+                        }
+                        joined = Some(pick);
+                    }
+                }
+                if epoch_index % 3 == 0 {
+                    let candidates: Vec<usize> = (1..tenants.len())
+                        .filter(|&i| tenants[i].active && joined != Some(i))
+                        .collect();
+                    let active_count = tenants.iter().filter(|t| t.active).count();
+                    if active_count > 2 && !candidates.is_empty() {
+                        let pick = candidates[churn_rng.below(candidates.len() as u64) as usize];
+                        tenants[pick].active = false;
+                        tenants[pick].placement = None;
+                        stats.leaves += 1;
+                    }
+                }
+            }
+
+            repack_boards(
+                t,
+                &mut tenants,
+                &mut boards_busy,
+                &mut scheds,
+                &mut completions,
+                &service,
+                c,
+                device,
+                &mut stats,
+            );
+            next_epoch_s += c.epoch_s.max(1.0);
+        }
+
+        // resolve the request's tenant
+        let ti = match a.tenant {
+            Some(i) if i < tenants.len() && tenants[i].active => i,
+            Some(_) => {
+                stats.rejected_inactive += 1;
+                continue;
+            }
+            None => match weighted_pick(&tenants, a.pick, c.heavy_weight) {
+                Some(i) => i,
+                None => {
+                    stats.rejected_inactive += 1;
+                    continue;
+                }
+            },
+        };
+
+        // admission quota
+        if c.quota > 0 && tenants[ti].admitted_epoch >= c.quota {
+            tenants[ti].rejected_quota += 1;
+            stats.rejected_quota += 1;
+            continue;
+        }
+        tenants[ti].admitted_epoch += 1;
+        tenants[ti].admitted += 1;
+
+        // route: the board if placed and ready, the CPU otherwise
+        let routed = match tenants[ti].placement {
+            Some((b, o)) if tenants[ti].ready_at_s <= a.at_s => Some((b, o)),
+            _ => None,
+        };
+        match routed {
+            Some((b, o)) => {
+                let service_s =
+                    tenants[ti].demand.as_ref().expect("placed tenant has demand").options[o].time_s;
+                scheds[b].enqueue(QueuedReq { id, tenant: ti, at_s: a.at_s, service_s });
+                scheds[b].pump(a.at_s, &mut completions);
+            }
+            None => {
+                let cpu_s = tenants[ti].demand.as_ref().map(|d| d.cpu_time_s).unwrap_or(1.0);
+                let start = if tenants[ti].cpu_busy_until_s > a.at_s {
+                    tenants[ti].cpu_busy_until_s
+                } else {
+                    a.at_s
+                };
+                let finish = start + cpu_s;
+                tenants[ti].cpu_busy_until_s = finish;
+                completions.push(Completion { id, tenant: ti, at_s: a.at_s, finish_s: finish });
+            }
+        }
+    }
+
+    // drain every board
+    for s in scheds.iter_mut() {
+        s.pump(f64::INFINITY, &mut completions);
+    }
+
+    // ---- summarize --------------------------------------------------
+    let mut lat: Vec<f64> = completions.iter().map(|cm| cm.finish_s - cm.at_s).collect();
+    lat.sort_by(f64::total_cmp);
+    let duration_s = completions.iter().fold(0.0_f64, |m, cm| m.max(cm.finish_s));
+    let duration_h = duration_s / 3600.0;
+    let mean_s = if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 };
+
+    let mut per_lat: Vec<Vec<f64>> = vec![Vec::new(); tenants.len()];
+    let mut per_done: Vec<u64> = vec![0; tenants.len()];
+    for cm in &completions {
+        per_lat[cm.tenant].push(cm.finish_s - cm.at_s);
+        per_done[cm.tenant] += 1;
+    }
+    let rows: Vec<TenantRow> = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let mut l = per_lat[i].clone();
+            l.sort_by(f64::total_cmp);
+            TenantRow {
+                name: t.app.name.to_string(),
+                active: t.active,
+                placement: match t.placement {
+                    Some((b, o)) => {
+                        let label = t
+                            .demand
+                            .as_ref()
+                            .map(|d| d.options[o].label.as_str())
+                            .unwrap_or("?");
+                        format!("board {b} · {label}")
+                    }
+                    None => "cpu".to_string(),
+                },
+                admitted: t.admitted,
+                rejected_quota: t.rejected_quota,
+                completed: per_done[i],
+                p50_s: percentile(&l, 0.5),
+                p99_s: percentile(&l, 0.99),
+                mean_s: if l.is_empty() { 0.0 } else { l.iter().sum::<f64>() / l.len() as f64 },
+            }
+        })
+        .collect();
+
+    Ok(ServeReport {
+        seed: c.seed,
+        requests: arrivals.len(),
+        completed: completions.len(),
+        rejected_quota: stats.rejected_quota,
+        rejected_inactive: stats.rejected_inactive,
+        duration_h,
+        throughput_per_h: if duration_h > 0.0 { completions.len() as f64 / duration_h } else { 0.0 },
+        p50_s: percentile(&lat, 0.5),
+        p99_s: percentile(&lat, 0.99),
+        mean_s,
+        max_s: lat.last().copied().unwrap_or(0.0),
+        epochs: stats.epochs,
+        joins: stats.joins,
+        leaves: stats.leaves,
+        warm_joins: stats.warm_joins,
+        repacks: stats.repacks,
+        full_repacks: stats.full_repacks,
+        migrations: stats.migrations,
+        migration_hours: stats.migration_s / 3600.0,
+        search_hours: service.clock().total_hours(),
+        compile_hours: service.clock().compile_lane_seconds() / 3600.0,
+        cache: store.stats(),
+        tenants: rows,
+    })
+}

@@ -1,0 +1,189 @@
+//! The steady-state service report: the deterministic summary
+//! `flopt serve` prints and the serve tests pin byte-for-byte.
+
+use std::fmt::Write as _;
+
+use crate::cache::CacheStats;
+
+/// Per-tenant admission and latency statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantRow {
+    /// Tenant app name.
+    pub name: String,
+    /// Still active when the run ended?
+    pub active: bool,
+    /// Final placement label (`board N · <option>`), `cpu` if unplaced.
+    pub placement: String,
+    /// Requests admitted (passed the quota gate).
+    pub admitted: u64,
+    /// Requests turned away by the per-epoch admission quota.
+    pub rejected_quota: u64,
+    /// Requests completed (admitted work always completes).
+    pub completed: u64,
+    /// Median sojourn latency, seconds.
+    pub p50_s: f64,
+    /// 99th-percentile sojourn latency, seconds.
+    pub p99_s: f64,
+    /// Mean sojourn latency, seconds.
+    pub mean_s: f64,
+}
+
+/// The complete steady-state report (see [`crate::serve::run_serve`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    /// Seed the arrival/churn streams were derived from.
+    pub seed: u64,
+    /// Arrivals generated (requested load).
+    pub requests: usize,
+    /// Requests completed.
+    pub completed: usize,
+    /// Requests rejected by per-tenant admission quotas.
+    pub rejected_quota: u64,
+    /// Requests addressed to an inactive/unknown tenant (trace-driven).
+    pub rejected_inactive: u64,
+    /// Simulated span from first arrival to last completion, hours.
+    pub duration_h: f64,
+    /// Completed requests per simulated hour.
+    pub throughput_per_h: f64,
+    /// Global sojourn-latency percentiles and moments, seconds.
+    pub p50_s: f64,
+    /// 99th percentile.
+    pub p99_s: f64,
+    /// Mean.
+    pub mean_s: f64,
+    /// Maximum.
+    pub max_s: f64,
+    /// Epoch boundaries processed.
+    pub epochs: u64,
+    /// Tenant joins (mid-run, beyond the initial set).
+    pub joins: u64,
+    /// Tenant departures.
+    pub leaves: u64,
+    /// Joins provisioned entirely from warm cache artifacts.
+    pub warm_joins: u64,
+    /// Incremental re-packs run (one per epoch boundary + the initial).
+    pub repacks: u64,
+    /// Re-packs escalated to a full FFD pack.
+    pub full_repacks: u64,
+    /// Live migrations (placements moved off a resident bitstream).
+    pub migrations: u64,
+    /// Simulated hours of bitstream-swap work those migrations cost.
+    pub migration_hours: f64,
+    /// Total simulated automation hours on the shared clock (searches,
+    /// reconfigurations) — the provisioning cost of the whole run.
+    pub search_hours: f64,
+    /// Compile-lane hours within `search_hours`.
+    pub compile_hours: f64,
+    /// Artifact-cache counters at the end of the run.
+    pub cache: CacheStats,
+    /// Per-tenant rows, in tenant-table order.
+    pub tenants: Vec<TenantRow>,
+}
+
+/// `q`-th percentile of an ascending-sorted slice (nearest-rank on the
+/// rounded index — deterministic, no interpolation).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl ServeReport {
+    /// Render the deterministic report (what `flopt serve` prints).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "=== flopt serve — steady-state report ===");
+        let _ = writeln!(
+            s,
+            "seed {} · {} arrivals over {:.2} sim h · {} epochs",
+            self.seed, self.requests, self.duration_h, self.epochs
+        );
+        let _ = writeln!(s);
+        let _ = writeln!(
+            s,
+            "completed            {:>8}    throughput {:>10.2} req/h",
+            self.completed, self.throughput_per_h
+        );
+        let _ = writeln!(
+            s,
+            "rejected (quota)     {:>8}    latency p50  {:>8.3} s",
+            self.rejected_quota, self.p50_s
+        );
+        let _ = writeln!(
+            s,
+            "rejected (inactive)  {:>8}    latency p99  {:>8.3} s",
+            self.rejected_inactive, self.p99_s
+        );
+        let _ = writeln!(
+            s,
+            "joins {:>3} (warm {:>3})          latency mean {:>8.3} s",
+            self.joins, self.warm_joins, self.mean_s
+        );
+        let _ = writeln!(
+            s,
+            "leaves {:>2}                      latency max  {:>8.3} s",
+            self.leaves, self.max_s
+        );
+        let _ = writeln!(s);
+        let _ = writeln!(
+            s,
+            "re-packs {} (full {}) · migrations {} costing {:.2} h of swaps",
+            self.repacks, self.full_repacks, self.migrations, self.migration_hours
+        );
+        let _ = writeln!(
+            s,
+            "automation {:.2} sim h (compile lanes {:.2} h)",
+            self.search_hours, self.compile_hours
+        );
+        let _ = writeln!(
+            s,
+            "cache: {} mem hits · {} disk hits · {} misses · {} ttl + {} lru evictions",
+            self.cache.mem_hits,
+            self.cache.disk_hits,
+            self.cache.misses,
+            self.cache.ttl_evictions,
+            self.cache.lru_evictions
+        );
+        let _ = writeln!(s);
+        let _ = writeln!(
+            s,
+            "{:<14} {:<5} {:<34} {:>7} {:>7} {:>7} {:>9} {:>9}",
+            "tenant", "state", "placement", "adm", "rej", "done", "p50 s", "p99 s"
+        );
+        let _ = writeln!(s, "{}", "-".repeat(98));
+        for t in &self.tenants {
+            let _ = writeln!(
+                s,
+                "{:<14} {:<5} {:<34} {:>7} {:>7} {:>7} {:>9.3} {:>9.3}",
+                t.name,
+                if t.active { "on" } else { "off" },
+                t.placement,
+                t.admitted,
+                t.rejected_quota,
+                t.completed,
+                t.p50_s,
+                t.p99_s
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        // (99*0.5).round() = 50 → xs[50] = 51 (nearest-rank, not interpolated)
+        assert_eq!(percentile(&xs, 0.5), 51.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Bench-regression gate suite (PR 7): `flopt bench-compare` must pass
+//! a matching report, fail (exit 1) on an injected regression or a
+//! pinned-but-missing metric, exit 2 on usage/IO errors, and write
+//! usable diff and blessed-baseline artifacts — the exact contract the
+//! CI `bench-smoke` job gates on.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("flopt-benchcmp-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bench_compare(args: &[&str]) -> (Option<i32>, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_flopt"))
+        .arg("bench-compare")
+        .args(args)
+        .output()
+        .expect("run flopt bench-compare");
+    (
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+const BASELINE: &str = r#"{
+  "bench": "demo", "schema": 1,
+  "metrics": {
+    "speedup": {"value": 4.0, "tol_rel": 0.05, "direction": "higher_better"},
+    "hours":   {"value": 10.0, "tol_rel": 0.05, "direction": "lower_better"},
+    "count":   {"value": 7, "tol_rel": 0, "direction": "exact"}
+  }
+}"#;
+
+fn write(dir: &std::path::Path, name: &str, text: &str) -> String {
+    let p = dir.join(name);
+    std::fs::write(&p, text).unwrap();
+    p.to_string_lossy().into_owned()
+}
+
+#[test]
+fn matching_report_passes_with_exit_0() {
+    let dir = temp_dir("pass");
+    let b = write(&dir, "base.json", BASELINE);
+    let r = write(
+        &dir,
+        "report.json",
+        r#"{"bench":"demo","metrics":{"speedup":4.1,"hours":9.8,"count":7}}"#,
+    );
+    let (code, stdout, stderr) = bench_compare(&["--baseline", &b, "--report", &r]);
+    assert_eq!(code, Some(0), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("=> ok"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_regression_fails_with_exit_1_and_writes_the_diff() {
+    let dir = temp_dir("regress");
+    let b = write(&dir, "base.json", BASELINE);
+    // speedup collapses 4.0 -> 2.0: far outside the 5% tolerance
+    let r = write(
+        &dir,
+        "report.json",
+        r#"{"bench":"demo","metrics":{"speedup":2.0,"hours":10.0,"count":7}}"#,
+    );
+    let diff = dir.join("diffs").join("demo.json");
+    let (code, stdout, _) = bench_compare(&[
+        "--baseline",
+        &b,
+        "--report",
+        &r,
+        "--diff",
+        diff.to_str().unwrap(),
+    ]);
+    assert_eq!(code, Some(1), "a regression must gate with exit 1\n{stdout}");
+    assert!(stdout.contains("REGRESSED"), "{stdout}");
+    assert!(stdout.contains("FAIL"), "{stdout}");
+    let diff_text = std::fs::read_to_string(&diff).expect("diff artifact written");
+    assert!(diff_text.contains("\"failed\": true"), "{diff_text}");
+    assert!(diff_text.contains("REGRESSED"), "{diff_text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pinned_but_missing_metric_fails() {
+    let dir = temp_dir("missing");
+    let b = write(&dir, "base.json", BASELINE);
+    let r = write(&dir, "report.json", r#"{"bench":"demo","metrics":{"speedup":4.0}}"#);
+    let (code, stdout, _) = bench_compare(&["--baseline", &b, "--report", &r]);
+    assert_eq!(code, Some(1), "{stdout}");
+    assert!(stdout.contains("MISSING"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unblessed_baseline_passes_and_bless_writes_a_committable_one() {
+    let dir = temp_dir("bless");
+    let b = write(
+        &dir,
+        "base.json",
+        r#"{"bench":"demo","schema":1,"metrics":{
+            "speedup":{"value":null,"tol_rel":0.05,"direction":"higher_better"}}}"#,
+    );
+    let r = write(&dir, "report.json", r#"{"bench":"demo","metrics":{"speedup":4.25}}"#);
+    let blessed = dir.join("blessed.json");
+    let (code, stdout, _) = bench_compare(&[
+        "--baseline",
+        &b,
+        "--report",
+        &r,
+        "--bless",
+        blessed.to_str().unwrap(),
+    ]);
+    assert_eq!(code, Some(0), "unblessed pins must warn, not fail\n{stdout}");
+    assert!(stdout.contains("unblessed"), "{stdout}");
+
+    // the blessed copy now pins the observed value and gates for real
+    let (code, stdout, _) =
+        bench_compare(&["--baseline", blessed.to_str().unwrap(), "--report", &r]);
+    assert_eq!(code, Some(0), "{stdout}");
+    let r2 = write(&dir, "report2.json", r#"{"bench":"demo","metrics":{"speedup":3.0}}"#);
+    let (code, stdout, _) =
+        bench_compare(&["--baseline", blessed.to_str().unwrap(), "--report", &r2]);
+    assert_eq!(code, Some(1), "the blessed pin must catch the regression\n{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn usage_and_io_errors_exit_2() {
+    let dir = temp_dir("usage");
+    let b = write(&dir, "base.json", BASELINE);
+    let (code, _, stderr) = bench_compare(&["--baseline", &b]);
+    assert_eq!(code, Some(2), "{stderr}");
+    let (code, _, stderr) =
+        bench_compare(&["--baseline", &b, "--report", "/nonexistent/report.json"]);
+    assert_eq!(code, Some(2), "{stderr}");
+    assert!(stderr.contains("cannot read"), "{stderr}");
+    let bad = write(&dir, "bad.json", "not json at all");
+    let (code, _, stderr) = bench_compare(&["--baseline", &bad, "--report", &b]);
+    assert_eq!(code, Some(2), "{stderr}");
+    let mismatched = write(&dir, "other.json", r#"{"bench":"other","metrics":{}}"#);
+    let (code, _, stderr) = bench_compare(&["--baseline", &b, "--report", &mismatched]);
+    assert_eq!(code, Some(2), "bench-name mismatch is a usage error: {stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn committed_repo_baselines_parse_and_pin_every_bench() {
+    // the five BENCH_*.json files at the repo root must stay parseable
+    // and self-consistent (the `bench` field matches the filename)
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    for name in [
+        "fig4_speedup",
+        "service_throughput",
+        "funcblock_speedup",
+        "fleet_throughput",
+        "serve_daemon",
+    ] {
+        let path = root.join(format!("BENCH_{name}.json"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let doc = flopt::util::json::parse(&text).expect("baseline JSON");
+        let base = flopt::benchcmp::parse_baseline(&doc).expect("baseline schema");
+        assert_eq!(base.bench, name, "{}", path.display());
+        assert!(!base.metrics.is_empty(), "{name}: a baseline must pin metrics");
+    }
+}

@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use flopt::apps;
 use flopt::backend::FPGA;
-use flopt::cache::{codec, CacheStore};
+use flopt::cache::{codec, CacheStore, EvictionPolicy};
 use flopt::config::SearchConfig;
 use flopt::coordinator::pipeline::{offload_search, SearchTrace};
 use flopt::coordinator::verify_env::VerifyEnv;
@@ -175,4 +175,84 @@ fn stage_cache_shares_precompiles_across_d_configs() {
         events.iter().map(|e| e.label.clone()).collect::<Vec<_>>()
     );
     assert!(events.iter().any(|e| e.compile), "measurement must still compile");
+}
+
+#[test]
+fn ttl_expiry_recomputes_byte_identical_and_counts_evictions() {
+    // a reference trace from an unbounded store
+    let (reference, _, _) = run_with(&CacheStore::fresh(), &apps::TDFIR);
+
+    let store = CacheStore::fresh();
+    store.set_policy(EvictionPolicy { budget_bytes: None, ttl_s: Some(3600.0) });
+    let (cold, _, _) = run_with(&store, &apps::TDFIR);
+    assert_bit_identical("tdfir", &reference, &cold);
+
+    // within TTL: still warm and free
+    store.set_now_sim_s(1800.0);
+    let (warm, lane_s, _) = run_with(&store, &apps::TDFIR);
+    assert_eq!(lane_s, 0.0, "entries within TTL must serve warm");
+    assert_bit_identical("tdfir", &cold, &warm);
+
+    // past TTL: every search artifact expires — the re-run recomputes,
+    // burns compile-lane time again, and lands on identical bytes
+    store.set_now_sim_s(2.0 * 24.0 * 3600.0);
+    assert!(store.stats().ttl_evictions > 0, "the sweep must count expiries");
+    let (recomputed, lane_s, _) = run_with(&store, &apps::TDFIR);
+    assert!(lane_s > 0.0, "expired entries must recompute");
+    assert_bit_identical("tdfir", &cold, &recomputed);
+    assert!(store.stats().evictions() >= store.stats().ttl_evictions);
+}
+
+#[test]
+fn ttl_expiry_falls_back_to_the_disk_tier_when_one_exists() {
+    // with a disk mirror, TTL expiry only empties the memory tier: the
+    // re-run re-admits from disk — still free, still byte-identical
+    let dir = temp_dir("ttl-disk");
+    let store = CacheStore::with_dir(&dir);
+    store.set_policy(EvictionPolicy { budget_bytes: None, ttl_s: Some(3600.0) });
+    let (cold, _, _) = run_with(&store, &apps::MRIQ);
+
+    store.set_now_sim_s(7.0 * 24.0 * 3600.0);
+    assert!(store.stats().ttl_evictions > 0);
+    let disk_hits_before = store.stats().disk_hits;
+    let (warm, lane_s, _) = run_with(&store, &apps::MRIQ);
+    assert_eq!(lane_s, 0.0, "disk tier must absorb the expiry");
+    assert!(store.stats().disk_hits > disk_hits_before, "must re-admit from disk");
+    assert_bit_identical("mriq", &cold, &warm);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn budget_pressure_evicts_lru_but_never_changes_results() {
+    // reference traces from an unbounded store
+    let ref_tdfir = run_with(&CacheStore::fresh(), &apps::TDFIR).0;
+    let ref_mriq = run_with(&CacheStore::fresh(), &apps::MRIQ).0;
+
+    // a budget far too small to hold both apps' artifacts: the second
+    // search must evict the first's, and every re-run must recompute to
+    // byte-identical traces
+    let store = CacheStore::fresh();
+    store.set_policy(EvictionPolicy { budget_bytes: Some(2_000), ttl_s: None });
+    let (a, _, _) = run_with(&store, &apps::TDFIR);
+    let (b, _, _) = run_with(&store, &apps::MRIQ);
+    assert!(
+        store.stats().lru_evictions > 0,
+        "a 2 kB budget must force LRU evictions (resident {} B)",
+        store.resident_bytes()
+    );
+    assert!(
+        store.resident_bytes() <= 2_000,
+        "the memory tier must respect its budget"
+    );
+    assert_bit_identical("tdfir", &ref_tdfir, &a);
+    assert_bit_identical("mriq", &ref_mriq, &b);
+
+    let (a2, _, _) = run_with(&store, &apps::TDFIR);
+    let (b2, _, _) = run_with(&store, &apps::MRIQ);
+    assert_bit_identical("tdfir", &a, &a2);
+    assert_bit_identical("mriq", &b, &b2);
+    assert_eq!(
+        store.stats().evictions(),
+        store.stats().ttl_evictions + store.stats().lru_evictions
+    );
 }

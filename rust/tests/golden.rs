@@ -1,13 +1,14 @@
 //! Golden-file suite (rsjsonnet-style): CLI output is locked against
 //! files in `rust/tests/golden/`.
 //!
-//! Two goldens are **committed** and produced independently of the Rust
-//! code they check (see `rust/tests/golden/gen_port.py`): the `flopt
-//! gen` corpus for seed 42 and the `flopt apps` table.  A drift in the
-//! RNG, the generator's draw order, or the emitted text fails against
-//! bytes Rust never wrote — the suite cannot silently bless itself.
+//! Three goldens are **committed** and produced independently of the
+//! Rust code they check (see `rust/tests/golden/gen_port.py`): the
+//! `flopt gen` corpus for seed 42, the `flopt apps` table, and the
+//! `flopt env` report.  A drift in the RNG, the generator's draw order,
+//! or the emitted text fails against bytes Rust never wrote — the suite
+//! cannot silently bless itself.
 //!
-//! The remaining goldens (`env`, `analyze`, `blocks`) hold model-driven
+//! The remaining goldens (`analyze`, `blocks`) hold model-driven
 //! numbers that are impractical to hand-compute; they are blessed on
 //! first run (or with `FLOPT_BLESS=1`) and lock the output from then
 //! on.  See `rust/tests/golden/README.md` for the blessing workflow.
@@ -96,12 +97,20 @@ fn apps_cli_matches_the_committed_golden() {
     check_golden("apps.txt", &stdout);
 }
 
-// ----------------------------------------------------- blessed-once goldens
-
 #[test]
-fn env_cli_output_is_locked() {
-    check_golden("env.txt", &flopt(&["env"]));
+fn env_cli_matches_the_committed_golden() {
+    // fully static output (Fig 3 testbed + device model lines), so it is
+    // reproduced by the Python port rather than blessed from Rust
+    let stdout = flopt(&["env"]);
+    assert!(
+        golden_dir().join("env.txt").exists(),
+        "committed golden env.txt is missing — regenerate with \
+         rust/tests/golden/gen_port.py, do not bless from Rust"
+    );
+    check_golden("env.txt", &stdout);
 }
+
+// ----------------------------------------------------- blessed-once goldens
 
 #[test]
 fn analyze_matmul_output_is_locked() {

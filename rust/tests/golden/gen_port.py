@@ -1,16 +1,19 @@
 #!/usr/bin/env python3
 """Independent Python port of `flopt gen` used to produce the committed
-golden `gen_s42_n3.txt` (and the static `apps.txt` table).
+goldens `gen_s42_n3.txt`, the static `apps.txt` table, and the static
+`env.txt` environment report.
 
 This is deliberately a from-scratch reimplementation of
 `rust/src/util/rng.rs` (SplitMix64-seeded xoshiro256** with Lemire
 integer reduction) and `rust/src/apps/gen.rs`: the golden test then
 checks the Rust generator against bytes that were NOT produced by the
 Rust generator, so a silent behaviour drift in either the RNG or the
-emitter fails the suite instead of blessing itself.
+emitter fails the suite instead of blessing itself.  `env.txt` mirrors
+the fully static format strings of `flopt env` (config::fig3_table plus
+the backend description lines) for the same reason.
 
 Usage:
-    python3 gen_port.py            # rewrites gen_s42_n3.txt and apps.txt
+    python3 gen_port.py   # rewrites gen_s42_n3.txt, apps.txt, env.txt
 """
 
 import os
@@ -238,6 +241,74 @@ def apps_table():
     return "\n".join(out) + "\n"
 
 
+# (name, hardware, cpu, ram, fpga, os, accel_stack) rows of the paper's
+# Fig 3 testbed, mirroring config::FIG3_TESTBED.
+FIG3_TESTBED = [
+    (
+        "Verification machine",
+        "Dell PowerEdge R740",
+        "Intel Xeon Bronze 3104 (6C/1.7GHz)",
+        "32GB RDIMM DDR4-2666 x2",
+        "Intel PAC with Intel Arria10 GX FPGA",
+        "CentOS 7.4",
+        "Intel Acceleration Stack 1.2",
+    ),
+    (
+        "Running environment",
+        "Dell PowerEdge R740",
+        "Intel Xeon Bronze 3104 (6C/1.7GHz)",
+        "32GB RDIMM DDR4-2666 x2",
+        "Intel PAC with Intel Arria10 GX FPGA",
+        "CentOS 7.4",
+        "Intel Acceleration Stack 1.2",
+    ),
+    (
+        "Client",
+        "HP ProBook 470 G3",
+        "Intel Core i5-6200U @2.3GHz",
+        "8GB",
+        "-",
+        "Windows 7 Professional",
+        "-",
+    ),
+]
+
+# `{:<5} model: {}` lines in Target::Mixed.backends() order, then the
+# CPU model; the descriptions come from the static device constants
+# (fpga::device::ARRIA10_GX, backend::gpu's Tesla P100, cpu::XEON_3104).
+ENV_MODELS = [
+    (
+        "FPGA",
+        "Intel PAC with Intel Arria10 GX FPGA"
+        " | base fmax 280 MHz | PCIe 6.0 GB/s | full compile ~3 h",
+    ),
+    (
+        "GPU",
+        "NVIDIA Tesla P100 (PCIe, 16 GB)"
+        " | 56 SMs | PCIe 12.0 GB/s | full build ~2.5 min",
+    ),
+    ("CPU", "Intel Xeon Bronze 3104 @ 1.70GHz"),
+]
+
+
+def env_table():
+    out = [
+        "Name                   | Hardware               | CPU            "
+        "                    | RAM      | FPGA                            "
+        "       | OS         | Accel stack",
+        "-" * 150,
+    ]
+    for name, hw, cpu, ram, fpga, osname, accel in FIG3_TESTBED:
+        out.append(
+            f"{name:<22} | {hw:<22} | {cpu:<34} | {ram:<8} | {fpga:<38}"
+            f" | {osname:<10} | {accel}"
+        )
+    out.append("")  # println!("{}", fig3_table()) adds a blank line
+    for kind, desc in ENV_MODELS:
+        out.append(f"{kind:<5} model: {desc}")
+    return "\n".join(out) + "\n"
+
+
 def main():
     here = os.path.dirname(os.path.abspath(__file__))
     # `flopt gen --seed 42 --count 3`: programs separated by one blank line
@@ -246,7 +317,9 @@ def main():
         f.write(gen)
     with open(os.path.join(here, "apps.txt"), "w") as f:
         f.write(apps_table())
-    print("wrote gen_s42_n3.txt and apps.txt")
+    with open(os.path.join(here, "env.txt"), "w") as f:
+        f.write(env_table())
+    print("wrote gen_s42_n3.txt, apps.txt, and env.txt")
 
 
 if __name__ == "__main__":

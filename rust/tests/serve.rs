@@ -1,0 +1,149 @@
+//! Serve suite (PR 7): the long-lived offload daemon must be a pure
+//! function of its config — byte-identical across worker-pool sizes and
+//! reproducible from the seed — while demonstrating tenant churn with
+//! warm re-joins, quota fairness under a heavy hitter, and consistent
+//! live-migration accounting.
+
+use flopt::cache::CacheStore;
+use flopt::serve::{run_serve, Arrival, ServeConfig};
+
+/// A small-but-representative config: ~10 simulated hours of load over
+/// the default 6 tenants with churn on.
+fn base_cfg() -> ServeConfig {
+    ServeConfig { requests: 500, ..ServeConfig::default() }
+}
+
+#[test]
+fn report_is_byte_identical_across_pool_sizes() {
+    let mut renders = Vec::new();
+    for pool in [1usize, 2, 8] {
+        let cfg = ServeConfig { pool, ..base_cfg() };
+        let report = run_serve(&cfg, CacheStore::fresh()).unwrap();
+        renders.push((pool, report.render()));
+    }
+    let (_, first) = &renders[0];
+    for (pool, r) in &renders[1..] {
+        assert_eq!(r, first, "pool {pool} changed the serve report");
+    }
+}
+
+#[test]
+fn report_is_byte_identical_across_pools_with_quota_and_eviction() {
+    // the full composition: quotas, a cache TTL, and a memory budget
+    // must all stay deterministic under any worker count
+    let mut renders = Vec::new();
+    for pool in [1usize, 8] {
+        let cfg = ServeConfig {
+            pool,
+            quota: 15,
+            cache_ttl_s: Some(6.0 * 3600.0),
+            cache_budget_bytes: Some(64 * 1024),
+            ..base_cfg()
+        };
+        let report = run_serve(&cfg, CacheStore::fresh()).unwrap();
+        renders.push(report.render());
+    }
+    assert_eq!(renders[0], renders[1]);
+}
+
+#[test]
+fn same_seed_reproduces_and_different_seed_diverges() {
+    let a = run_serve(&base_cfg(), CacheStore::fresh()).unwrap();
+    let b = run_serve(&base_cfg(), CacheStore::fresh()).unwrap();
+    assert_eq!(a, b, "same seed must reproduce the full report struct");
+    assert_eq!(a.render(), b.render());
+
+    let c = run_serve(&ServeConfig { seed: 43, ..base_cfg() }, CacheStore::fresh()).unwrap();
+    assert_ne!(
+        a.render(),
+        c.render(),
+        "a different seed must produce a different arrival stream"
+    );
+}
+
+#[test]
+fn churn_joins_leave_and_rejoin_warm_on_a_pinned_trace() {
+    // 60 arrivals every half hour → 30 simulated hours → epoch
+    // boundaries at 4,8,...,28 h: joins fire at epochs 1,3,5,7 and
+    // leaves at 3,6.  By epoch 5 the only inactive tenant is one that
+    // already ran (epoch-3 leaver or an initial spare), so its re-join
+    // is served entirely from warm cache artifacts — same at epoch 7.
+    let arrivals: Vec<Arrival> = (0..60)
+        .map(|i| Arrival { at_s: (i + 1) as f64 * 1800.0, tenant: Some(0), pick: 0.0 })
+        .collect();
+    let cfg = ServeConfig { arrivals: Some(arrivals), ..ServeConfig::default() };
+    let report = run_serve(&cfg, CacheStore::fresh()).unwrap();
+
+    assert_eq!(report.epochs, 7);
+    assert_eq!(report.joins, 4, "joins at epochs 1, 3, 5, 7");
+    assert_eq!(report.leaves, 2, "leaves at epochs 3 and 6");
+    assert_eq!(report.warm_joins, 2, "epoch 5 and 7 re-joins are warm");
+    assert_eq!(report.rejected_inactive, 0, "tenant 0 never leaves");
+    assert_eq!(report.completed, 60);
+    assert_eq!(report.repacks, report.epochs + 1, "one re-pack per epoch + initial");
+}
+
+#[test]
+fn quota_caps_admissions_and_hits_the_heavy_tenant_hardest() {
+    let cfg = ServeConfig {
+        requests: 800,
+        quota: 10,
+        churn: false, // fixed 6-tenant population keeps the math clean
+        ..ServeConfig::default()
+    };
+    let report = run_serve(&cfg, CacheStore::fresh()).unwrap();
+
+    assert!(report.rejected_quota > 0, "800 arrivals must overflow 6x10/epoch");
+    let windows = report.epochs + 1;
+    for t in &report.tenants {
+        assert!(
+            t.admitted <= windows * cfg.quota,
+            "{}: admitted {} exceeds {} windows x quota {}",
+            t.name,
+            t.admitted,
+            windows,
+            cfg.quota
+        );
+        assert_eq!(
+            t.admitted, t.completed,
+            "{}: every admitted request must complete",
+            t.name
+        );
+    }
+    let heavy = &report.tenants[0];
+    let max_light = report.tenants[1..].iter().map(|t| t.rejected_quota).max().unwrap();
+    assert!(
+        heavy.rejected_quota > max_light,
+        "the weighted-heavy tenant must absorb the most quota rejections \
+         (heavy {} vs max light {})",
+        heavy.rejected_quota,
+        max_light
+    );
+    // accounting closes: every arrival is completed or rejected
+    assert_eq!(
+        report.completed as u64 + report.rejected_quota + report.rejected_inactive,
+        report.requests as u64
+    );
+}
+
+#[test]
+fn migration_accounting_is_consistent() {
+    let report = run_serve(&base_cfg(), CacheStore::fresh()).unwrap();
+    assert!(
+        report.migrations > 0 || report.migration_hours == 0.0,
+        "swap hours without a counted migration (count {}, hours {})",
+        report.migrations,
+        report.migration_hours
+    );
+    assert!(report.migration_hours >= 0.0);
+    assert!(report.full_repacks <= report.repacks);
+    assert_eq!(report.repacks, report.epochs + 1);
+    assert!(report.search_hours > 0.0, "provisioning must cost simulated time");
+    assert!(report.compile_hours > 0.0);
+    assert_eq!(
+        report.completed as u64 + report.rejected_quota + report.rejected_inactive,
+        report.requests as u64
+    );
+    assert!(report.throughput_per_h > 0.0);
+    assert!(report.p50_s <= report.p99_s && report.p99_s <= report.max_s);
+}
