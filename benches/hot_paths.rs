@@ -3,7 +3,19 @@
 //! whole search, and PJRT artifact execution latency.
 //!
 //! Run before/after optimization work; EXPERIMENTS.md §Perf records the
-//! iteration log.
+//! iteration log.  The report's `metrics` mix deterministic pipeline
+//! counters (loop counts, interpreter steps, patterns measured — gated
+//! by `flopt bench-compare` against `BENCH_hot_paths.json`) with
+//! wall-clock medians (left unblessed in the committed baseline so CI
+//! machine jitter never fails the gate).
+//!
+//! ```sh
+//! cargo bench --bench hot_paths                         # full paper scale
+//! cargo bench --bench hot_paths -- --test-scale \
+//!     --report reports/hot_paths.json                   # CI smoke + JSON
+//! ```
+
+use std::collections::BTreeMap;
 
 use flopt::apps;
 use flopt::backend::FPGA;
@@ -13,60 +25,118 @@ use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
 use flopt::fpga::ARRIA10_GX;
 use flopt::runtime::{default_artifact_dir, Runtime};
-use flopt::util::bench::{fmt_s, time_it};
-use flopt::{cparse, hls, intensity, interp, ir};
+use flopt::util::bench::{fmt_s, parse_bench_args, time_it, Timing};
+use flopt::util::json::{self, Json};
+use flopt::{cparse, hls, intensity, ir};
 
 fn main() {
+    let opts = parse_bench_args();
     let app = &apps::TDFIR;
+    let mut rows = Vec::new();
+    // flat, deterministic (simulated-model) numbers for bench-compare,
+    // plus wall-clock medians (unblessed in the committed baseline)
+    let mut metrics = BTreeMap::new();
+
+    let section = |name: &str, t: &Timing, rows: &mut Vec<Json>| {
+        println!("{:<35}{:>12}", format!("{name}:"), fmt_s(t.median_s));
+        let mut row = BTreeMap::new();
+        row.insert("section".to_string(), Json::Str(name.to_string()));
+        row.insert("median_s".to_string(), Json::Num(t.median_s));
+        row.insert("min_s".to_string(), Json::Num(t.min_s));
+        row.insert("max_s".to_string(), Json::Num(t.max_s));
+        row.insert("iters".to_string(), Json::Num(t.iters as f64));
+        rows.push(Json::Obj(row));
+        t.median_s
+    };
 
     let t = time_it(20, || cparse::parse(app.source).unwrap());
-    println!("parse tdfir (36 loops):            {:>12}", fmt_s(t.median_s));
+    let w = section("parse tdfir (36 loops)", &t, &mut rows);
+    metrics.insert("wall_parse_s".to_string(), Json::Num(w));
 
     let program = cparse::parse(app.source).unwrap();
+    metrics.insert(
+        "parse_loops_tdfir".to_string(),
+        Json::Num(program.loop_count() as f64),
+    );
+
     let t = time_it(20, || ir::analyze(&program));
-    println!("loop+dep analysis:                 {:>12}", fmt_s(t.median_s));
+    let w = section("loop+dep analysis", &t, &mut rows);
+    metrics.insert("wall_analyze_s".to_string(), Json::Num(w));
+    let loops = ir::analyze(&program);
+    metrics.insert("analyzed_loops".to_string(), Json::Num(loops.len() as f64));
 
     let t = time_it(5, || {
         let mut it = app.interp(&program, true);
         it.run_main().unwrap();
         it.into_profile()
     });
-    println!("profile (test scale):              {:>12}", fmt_s(t.median_s));
-
-    let t = time_it(3, || {
-        let mut it = app.interp(&program, false);
+    let w = section("profile (test scale)", &t, &mut rows);
+    metrics.insert("wall_profile_test_s".to_string(), Json::Num(w));
+    {
+        let mut it = app.interp(&program, true);
         it.run_main().unwrap();
-        it.into_profile()
-    });
-    println!("profile (full scale, 4096x128):    {:>12}", fmt_s(t.median_s));
+        let p = it.into_profile();
+        metrics.insert("profile_steps_test".to_string(), Json::Num(p.steps as f64));
+    }
 
-    let loops = ir::analyze(&program);
+    // the full-scale (4096x128) profile and search sections dominate the
+    // wall clock; CI smoke (`--test-scale`) profiles and searches at the
+    // apps' reduced workloads instead
+    if !opts.test_scale {
+        let t = time_it(3, || {
+            let mut it = app.interp(&program, false);
+            it.run_main().unwrap();
+            it.into_profile()
+        });
+        let w = section("profile (full scale, 4096x128)", &t, &mut rows);
+        metrics.insert("wall_profile_full_s".to_string(), Json::Num(w));
+    }
+
     let profile = {
-        let mut it = app.interp(&program, false);
+        let mut it = app.interp(&program, opts.test_scale);
         it.run_main().unwrap();
         it.into_profile()
     };
     let ints = intensity::analyze(&loops, &profile);
     let t = time_it(100, || intensity::top_a(&ints, &loops, 5));
-    println!("intensity ranking:                 {:>12}", fmt_s(t.median_s));
+    let w = section("intensity ranking", &t, &mut rows);
+    metrics.insert("wall_intensity_s".to_string(), Json::Num(w));
+    let top = intensity::top_a(&ints, &loops, 5);
+    metrics.insert("top_a_candidates".to_string(), Json::Num(top.len() as f64));
 
     let hot = loops.iter().find(|l| l.info.id.0 == 8).unwrap();
     let t = time_it(50, || hls::precompile(&program, hot, 1, &ARRIA10_GX));
-    println!("HLS pre-compile (hot loop):        {:>12}", fmt_s(t.median_s));
+    let w = section("HLS pre-compile (hot loop)", &t, &mut rows);
+    metrics.insert("wall_hls_precompile_s".to_string(), Json::Num(w));
 
-    let analysis = analyze_app(app, false).unwrap();
+    let analysis = analyze_app(app, opts.test_scale).unwrap();
     let cfg = SearchConfig::default();
-    let t = time_it(10, || {
+    let t = time_it(if opts.test_scale { 3 } else { 10 }, || {
         let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
         search_with_analysis(app, &analysis, &env, &cfg).unwrap()
     });
-    println!("search (post-analysis, full):      {:>12}", fmt_s(t.median_s));
+    let w = section("search (post-analysis)", &t, &mut rows);
+    metrics.insert("wall_search_s".to_string(), Json::Num(w));
+    {
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
+        let trace = search_with_analysis(app, &analysis, &env, &cfg).unwrap();
+        metrics.insert("search_speedup".to_string(), Json::Num(trace.speedup()));
+        metrics.insert(
+            "search_patterns_measured".to_string(),
+            Json::Num(trace.patterns_measured() as f64),
+        );
+        metrics.insert(
+            "search_compile_hours".to_string(),
+            Json::Num(trace.compile_hours),
+        );
+    }
 
     let t = time_it(3, || {
-        let mut it = interp::Interp::new(&program);
+        let mut it = app.interp(&program, opts.test_scale);
         it.run_main().unwrap()
     });
-    println!("interpreter end-to-end run:        {:>12}", fmt_s(t.median_s));
+    let w = section("interpreter end-to-end run", &t, &mut rows);
+    metrics.insert("wall_interp_run_s".to_string(), Json::Num(w));
 
     // PJRT path (needs `make artifacts`)
     match Runtime::load(default_artifact_dir()) {
@@ -79,10 +149,24 @@ fn main() {
                 .collect();
             // first call compiles the HLO
             let t = time_it(1, || rt.execute_f32("tdfir_fpga", &inputs).unwrap());
-            println!("PJRT first-call (incl. compile):   {:>12}", fmt_s(t.median_s));
+            section("PJRT first-call (incl. compile)", &t, &mut rows);
             let t = time_it(20, || rt.execute_f32("tdfir_fpga", &inputs).unwrap());
-            println!("PJRT steady-state execute:         {:>12}", fmt_s(t.median_s));
+            section("PJRT steady-state execute", &t, &mut rows);
         }
         Err(_) => println!("PJRT benches skipped (run `make artifacts`)"),
+    }
+
+    if let Some(path) = &opts.report {
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("hot_paths".to_string()));
+        doc.insert(
+            "scale".to_string(),
+            Json::Str(if opts.test_scale { "test" } else { "full" }.to_string()),
+        );
+        doc.insert("app".to_string(), Json::Str(app.name.to_string()));
+        doc.insert("rows".to_string(), Json::Arr(rows));
+        doc.insert("metrics".to_string(), Json::Obj(metrics));
+        std::fs::write(path, json::to_string(&Json::Obj(doc))).expect("write report");
+        println!("report written to {path}");
     }
 }

@@ -217,6 +217,32 @@ fn emit_construct(out: &mut String, rng: &mut Rng, kind: u64, c: i64, n: u64) {
     }
 }
 
+/// Opt-in deep-nesting workload: `depth` nested blocks each bumping a
+/// counter, plus a `depth`-deep parenthesized sum.  The stress fixture
+/// for the iterative evaluator (`rust/tests/regressions.rs`): execution
+/// depth no longer consumes host stack, so the program must run even on
+/// a tiny thread stack.  Set `FLOPT_GEN_DEEP` to sweep depths in the
+/// generative suite.  Draws nothing from [`Rng`], so the seeded streams
+/// above are untouched.  Expected outputs: `out[0] == depth`,
+/// `out[1] == depth + 1`.
+pub fn deep_source(depth: usize) -> String {
+    let mut src = String::from("float out[2];\n\nvoid main() {\n    int x;\n    x = 0;\n");
+    for _ in 0..depth {
+        src.push_str("    { x = x + 1;\n");
+    }
+    for _ in 0..depth {
+        src.push_str("    }\n");
+    }
+    let mut expr = String::from("1");
+    for _ in 0..depth {
+        expr = format!("(1 + {expr})");
+    }
+    src.push_str("    out[0] = x * 1.0;\n");
+    src.push_str(&format!("    out[1] = {expr} * 1.0;\n"));
+    src.push_str("}\n");
+    src
+}
+
 /// Wrap one source as a registered-app lookalike so the generated
 /// program can flow through everything that takes an [`App`] (the batch
 /// service, the fleet planner, the verification environment).  Leaks:
@@ -278,6 +304,16 @@ mod tests {
             assert!(p.loop_count() >= 1, "gen(1106, {idx}) has no loops");
             assert!(p.function("main").is_some());
         }
+    }
+
+    #[test]
+    fn deep_source_parses_and_runs_at_modest_depth() {
+        let src = deep_source(32);
+        let p = cparse::parse(&src).expect("deep_source(32) parses");
+        assert_eq!(p.loop_count(), 0);
+        let mut it = crate::interp::Interp::new(&p);
+        it.run_main().expect("runs");
+        assert_eq!(it.read_array("out").unwrap(), vec![32.0, 33.0]);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! the paper's "loop statement number".
 
 use super::error::Pos;
+use crate::util::intern::Symbol;
 
 /// Stable, source-ordered identifier of a loop statement.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -103,15 +104,15 @@ pub enum Expr {
     /// Floating-point literal.
     FloatLit(f64),
     /// Scalar variable reference.
-    Var(String),
+    Var(Symbol),
     /// `name[index]`
-    Index(String, Box<Expr>),
+    Index(Symbol, Box<Expr>),
     /// Unary operator application.
     Unary(UnOp, Box<Expr>),
     /// Binary operator application.
     Binary(BinOp, Box<Expr>, Box<Expr>),
     /// Function call (builtin or user-defined).
-    Call(String, Vec<Expr>),
+    Call(Symbol, Vec<Expr>),
 }
 
 impl Expr {
@@ -138,16 +139,16 @@ impl Expr {
 #[derive(Debug, Clone, PartialEq)]
 pub enum LValue {
     /// Scalar variable target.
-    Var(String),
+    Var(Symbol),
     /// Array element target (`name[index]`).
-    Index(String, Box<Expr>),
+    Index(Symbol, Box<Expr>),
 }
 
 impl LValue {
     /// The assigned variable or array name.
-    pub fn name(&self) -> &str {
+    pub fn name(&self) -> Symbol {
         match self {
-            LValue::Var(n) | LValue::Index(n, _) => n,
+            LValue::Var(n) | LValue::Index(n, _) => *n,
         }
     }
 }
@@ -158,7 +159,7 @@ pub struct Decl {
     /// Declared type.
     pub ty: Type,
     /// Declared name.
-    pub name: String,
+    pub name: Symbol,
     /// Optional initializer expression.
     pub init: Option<Expr>,
     /// Source position of the declaration.
@@ -277,7 +278,7 @@ pub struct Param {
     /// Parameter type (arrays pass by reference).
     pub ty: Type,
     /// Parameter name.
-    pub name: String,
+    pub name: Symbol,
 }
 
 /// Function definition.
@@ -286,7 +287,7 @@ pub struct Function {
     /// Return type.
     pub ret: Type,
     /// Function name.
-    pub name: String,
+    pub name: Symbol,
     /// Parameter list.
     pub params: Vec<Param>,
     /// Function body statements.
@@ -359,7 +360,7 @@ pub fn strip_positions(p: &Program) -> Program {
             .iter()
             .map(|f| Function {
                 ret: f.ret.clone(),
-                name: f.name.clone(),
+                name: f.name,
                 params: f.params.clone(),
                 body: stmts(&f.body),
                 pos: Pos::default(),

@@ -5,6 +5,7 @@
 //! all MiniC operators, and keywords.
 
 use super::error::{ParseError, Pos};
+use crate::util::intern::Symbol;
 
 /// Token kinds.
 #[derive(Debug, Clone, PartialEq)]
@@ -13,7 +14,7 @@ pub enum Tok {
     // literals / identifiers
     Int(i64),
     Float(f64),
-    Ident(String),
+    Ident(Symbol),
     // keywords
     KwVoid, KwInt, KwFloat, KwDouble, KwIf, KwElse, KwFor, KwWhile,
     KwReturn, KwConst,
@@ -175,7 +176,7 @@ impl<'a> Lexer<'a> {
             "while" => Tok::KwWhile,
             "return" => Tok::KwReturn,
             "const" => Tok::KwConst,
-            _ => Tok::Ident(text.to_string()),
+            _ => Tok::Ident(Symbol::intern(text)),
         }
     }
 

@@ -7,6 +7,7 @@
 use super::ast::*;
 use super::error::{ParseError, Pos};
 use super::lexer::{Tok, Token};
+use crate::util::intern::Symbol;
 
 /// Recursive-descent parser over a lexed token stream.
 pub struct Parser {
@@ -53,7 +54,7 @@ impl Parser {
         }
     }
 
-    fn expect_ident(&mut self, what: &str) -> Result<String, ParseError> {
+    fn expect_ident(&mut self, what: &str) -> Result<Symbol, ParseError> {
         match self.peek().clone() {
             Tok::Ident(n) => {
                 self.bump();
@@ -115,7 +116,7 @@ impl Parser {
     fn parse_function_rest(
         &mut self,
         ret: Type,
-        name: String,
+        name: Symbol,
         pos: Pos,
     ) -> Result<Function, ParseError> {
         self.expect(&Tok::LParen, "`(`")?;
@@ -152,7 +153,7 @@ impl Parser {
     }
 
     /// Declaration after `type name` has been consumed.
-    fn parse_decl_rest(&mut self, ty: Type, name: String, pos: Pos) -> Result<Decl, ParseError> {
+    fn parse_decl_rest(&mut self, ty: Type, name: Symbol, pos: Pos) -> Result<Decl, ParseError> {
         let ty = if *self.peek() == Tok::LBracket {
             self.bump();
             let len = match self.peek() {

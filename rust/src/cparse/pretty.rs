@@ -29,7 +29,7 @@ pub fn expr(e: &Expr) -> String {
                 format!("{v}")
             }
         }
-        Expr::Var(n) => n.clone(),
+        Expr::Var(n) => n.to_string(),
         Expr::Index(n, i) => format!("{n}[{}]", expr(i)),
         Expr::Unary(op, a) => {
             let o = match op {
@@ -91,7 +91,7 @@ pub fn stmt(s: &Stmt, depth: usize, out: &mut String) {
         Stmt::Assign { target, op, value, .. } => {
             indent(out, depth);
             let t = match target {
-                LValue::Var(n) => n.clone(),
+                LValue::Var(n) => n.to_string(),
                 LValue::Index(n, i) => format!("{n}[{}]", expr(i)),
             };
             let o = match op {
@@ -186,7 +186,7 @@ fn stmt_inline(s: &Stmt) -> String {
         }
         Stmt::Assign { target, op, value, .. } => {
             let t = match target {
-                LValue::Var(n) => n.clone(),
+                LValue::Var(n) => n.to_string(),
                 LValue::Index(n, i) => format!("{n}[{}]", expr(i)),
             };
             let o = match op {

@@ -34,6 +34,7 @@ use std::collections::BTreeSet;
 
 use crate::cparse::ast::*;
 use crate::ir::LoopAnalysis;
+use crate::util::intern::Symbol;
 
 /// Registry name of the FIR-convolution block shape.
 pub const FIR_FILTER: &str = "fir_filter";
@@ -128,18 +129,18 @@ fn nest_depth(body: &[Stmt]) -> u32 {
 /// a decreasing loop still has a counter) plus every nested `for`
 /// header's induction variable.  A `while` root contributes none: its
 /// counter is indistinguishable from ordinary state.
-fn nest_counters(la: &LoopAnalysis) -> BTreeSet<String> {
+fn nest_counters(la: &LoopAnalysis) -> BTreeSet<Symbol> {
     let mut counters = BTreeSet::new();
     if let Some(c) = &la.info.canonical {
-        counters.insert(c.var.clone());
+        counters.insert(c.var);
     }
     if let Some(h) = &la.info.header {
         match h.init.as_deref() {
             Some(Stmt::Decl(d)) => {
-                counters.insert(d.name.clone());
+                counters.insert(d.name);
             }
             Some(Stmt::Assign { target: LValue::Var(v), .. }) => {
-                counters.insert(v.clone());
+                counters.insert(*v);
             }
             _ => {}
         }
@@ -149,10 +150,10 @@ fn nest_counters(la: &LoopAnalysis) -> BTreeSet<String> {
             if let Stmt::For { header, .. } = s {
                 match header.init.as_deref() {
                     Some(Stmt::Decl(d)) => {
-                        counters.insert(d.name.clone());
+                        counters.insert(d.name);
                     }
                     Some(Stmt::Assign { target: LValue::Var(v), .. }) => {
-                        counters.insert(v.clone());
+                        counters.insert(*v);
                     }
                     _ => {}
                 }
@@ -162,21 +163,21 @@ fn nest_counters(la: &LoopAnalysis) -> BTreeSet<String> {
     counters
 }
 
-fn vars_in(e: &Expr) -> BTreeSet<String> {
+fn vars_in(e: &Expr) -> BTreeSet<Symbol> {
     let mut out = BTreeSet::new();
     e.walk(&mut |e| {
         if let Expr::Var(n) = e {
-            out.insert(n.clone());
+            out.insert(*n);
         }
     });
     out
 }
 
-fn arrays_read_in(e: &Expr) -> BTreeSet<String> {
+fn arrays_read_in(e: &Expr) -> BTreeSet<Symbol> {
     let mut out = BTreeSet::new();
     e.walk(&mut |e| {
         if let Expr::Index(n, _) = e {
-            out.insert(n.clone());
+            out.insert(*n);
         }
     });
     out
@@ -224,7 +225,7 @@ pub fn signature(la: &LoopAnalysis) -> NestSignature {
             } = s
             {
                 if !counters.contains(v) {
-                    accumulators.insert(v.clone());
+                    accumulators.insert(*v);
                 }
             }
             if matches!(s, Stmt::If { .. }) {
@@ -304,7 +305,7 @@ pub fn signature(la: &LoopAnalysis) -> NestSignature {
         let mut distinct: Vec<&Expr> = Vec::new();
         let mut touched = BTreeSet::new();
         for idx in indices {
-            let hits: Vec<String> = vars_in(idx)
+            let hits: Vec<Symbol> = vars_in(idx)
                 .into_iter()
                 .filter(|v| counters.contains(v))
                 .collect();

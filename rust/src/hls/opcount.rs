@@ -11,6 +11,7 @@ use crate::cparse::ast::*;
 use crate::cparse::Program;
 use crate::ir::LoopAnalysis;
 use crate::opencl::kernel::type_env;
+use crate::util::intern::Symbol;
 
 /// Datapath operator counts.
 #[derive(Debug, Clone, Default)]
@@ -52,9 +53,9 @@ impl OpCounts {
 }
 
 struct Counter<'e> {
-    env: &'e HashMap<String, Type>,
+    env: &'e HashMap<Symbol, Type>,
     c: OpCounts,
-    locals_float: HashMap<String, bool>,
+    locals_float: HashMap<Symbol, bool>,
 }
 
 impl<'e> Counter<'e> {
@@ -83,7 +84,7 @@ impl<'e> Counter<'e> {
                     false // comparisons/logicals yield int
                 }
             }
-            Expr::Call(f, _) => is_float_builtin(f),
+            Expr::Call(f, _) => is_float_builtin(f.as_str()),
         }
     }
 
@@ -134,7 +135,7 @@ impl<'e> Counter<'e> {
     fn count_stmt(&mut self, s: &Stmt) {
         match s {
             Stmt::Decl(d) => {
-                self.locals_float.insert(d.name.clone(), d.ty.is_float());
+                self.locals_float.insert(d.name, d.ty.is_float());
                 if let Some(e) = &d.init {
                     self.count_expr(e);
                 }
@@ -217,7 +218,7 @@ fn is_float_builtin(name: &str) -> bool {
 
 /// Count datapath operators for one offloaded loop.
 pub fn count(program: &Program, la: &LoopAnalysis) -> OpCounts {
-    let env = type_env(program, &la.info.function);
+    let env = type_env(program, la.info.function);
     let mut counter = Counter { env: &env, c: OpCounts::default(), locals_float: HashMap::new() };
     // the offloaded loop itself is one nest level
     counter.c.nest_depth = 1;

@@ -61,7 +61,7 @@ pub fn analyze(loops: &[LoopAnalysis], profile: &Profile) -> Vec<LoopIntensity> 
         };
         out.push(LoopIntensity {
             id: la.info.id,
-            function: la.info.function.clone(),
+            function: la.info.function.to_string(),
             trips: lp.iterations,
             flops,
             footprint_bytes: footprint,

@@ -1,14 +1,32 @@
-//! Tree-walking evaluator with profiling hooks.
+//! Iterative arena evaluator with profiling hooks.
 //!
-//! Arrays live in an arena and are passed to functions **by reference**
+//! `Interp::new` **lowers** the AST once into a flat arena ([`LProgram`]):
+//! every expression and statement becomes a small `Copy` record addressed
+//! by a `u32` handle, with child lists packed into shared pools.  Walking
+//! the program is then pointer-chasing-free and allocation-free — the hot
+//! profiling loop touches a handful of contiguous `Vec`s instead of a
+//! `Box`-linked tree.
+//!
+//! Execution is an **explicit-stack machine** (`ops` continuation stack +
+//! `vals` operand stack + `frames` call records), not recursive descent:
+//! MiniC recursion depth and statement nesting cost a few machine words
+//! each instead of a native stack frame, so deeply nested programs cannot
+//! overflow the interpreter's own call stack.  Name resolution compares
+//! interned [`Symbol`] ids (`u32` equality) against a spaghetti stack of
+//! local bindings — no string hashing or comparison on the hot path.
+//!
+//! Semantics are unchanged from the original tree-walking evaluator:
+//! arrays live in an arena and are passed to functions **by reference**
 //! (C array-parameter semantics); scalars are passed by value.  All
 //! numeric storage is `i64`/`f64`; `float` arrays round-trip through `f64`
 //! without loss for the value ranges MiniC apps use.
 
 use std::collections::HashMap;
+use std::marker::PhantomData;
 
 use crate::cparse::ast::*;
 use crate::cparse::error::Pos;
+use crate::util::intern::Symbol;
 
 use super::profile::{Footprint, LoopProfile, Profile};
 
@@ -88,27 +106,306 @@ enum Binding {
     Array(usize),
 }
 
-enum Flow {
-    Normal,
-    Return(Option<Value>),
-}
-
 /// Default interpreter step budget — generous for the paper workloads
 /// (tdfir full scale ≈ 5M ops) while still catching runaway loops.
 pub const DEFAULT_MAX_STEPS: u64 = 2_000_000_000;
 
+// ---- lowered arena IR ------------------------------------------------------
+
+/// Handle into [`LProgram::exprs`].
+type EId = u32;
+/// Handle into [`LProgram::stmts`].
+type SId = u32;
+
+/// A contiguous run inside one of the arena's shared list pools.
+#[derive(Clone, Copy)]
+struct ListRange {
+    start: u32,
+    len: u32,
+}
+
+/// Lowered expression node (`Copy`, 16 bytes of payload).
+#[derive(Clone, Copy)]
+enum LExpr {
+    Int(i64),
+    Float(f64),
+    Var(Symbol),
+    Index(Symbol, EId),
+    Unary(UnOp, EId),
+    Binary(BinOp, EId, EId),
+    Call(Symbol, ListRange),
+}
+
+/// Lowered assignment target.
+#[derive(Clone, Copy)]
+enum LTarget {
+    Var(Symbol),
+    Index(Symbol, EId),
+}
+
+/// Lowered statement node.  Loop statements keep their own `SId` implicit:
+/// the machine re-reads the node each iteration, so the record must carry
+/// everything the header needs.
+#[derive(Clone, Copy)]
+enum LStmt {
+    Decl(u32),
+    Assign { target: LTarget, op: AssignOp, value: EId, pos: Pos },
+    If { cond: EId, then_: ListRange, else_: ListRange, pos: Pos },
+    For {
+        id: u32,
+        init: Option<SId>,
+        cond: Option<EId>,
+        step: Option<SId>,
+        body: ListRange,
+        pos: Pos,
+    },
+    While { id: u32, cond: EId, body: ListRange, pos: Pos },
+    Return(Option<EId>, Pos),
+    Expr(EId, Pos),
+    Block(ListRange),
+}
+
+/// Lowered declaration (shared by globals and locals; array initializers
+/// are ignored, matching the tree evaluator).
+#[derive(Clone, Copy)]
+struct LDecl {
+    name: Symbol,
+    is_array: bool,
+    is_float: bool,
+    arr_len: Option<usize>,
+    init: Option<EId>,
+    pos: Pos,
+}
+
+/// Lowered function parameter.
+#[derive(Clone, Copy)]
+struct LParam {
+    name: Symbol,
+    is_array: bool,
+    is_float: bool,
+}
+
+/// Lowered function.
+struct LFunc {
+    name: Symbol,
+    params: Vec<LParam>,
+    body: ListRange,
+}
+
+/// The whole program, flattened: nodes in dense `Vec`s, child lists packed
+/// into the `stmt_lists`/`expr_lists` pools as [`ListRange`]s.
+#[derive(Default)]
+struct LProgram {
+    exprs: Vec<LExpr>,
+    stmts: Vec<LStmt>,
+    stmt_lists: Vec<SId>,
+    expr_lists: Vec<EId>,
+    decls: Vec<LDecl>,
+    funcs: Vec<LFunc>,
+    globals: Vec<u32>,
+    max_loop: u32,
+}
+
+impl LProgram {
+    fn lower(program: &Program) -> Self {
+        let mut lp = LProgram::default();
+        for d in &program.globals {
+            let di = lp.lower_decl(d);
+            lp.globals.push(di);
+        }
+        for f in &program.functions {
+            let params = f
+                .params
+                .iter()
+                .map(|p| LParam {
+                    name: p.name,
+                    is_array: p.ty.is_array(),
+                    is_float: p.ty.is_float(),
+                })
+                .collect();
+            let body = lp.lower_body(&f.body);
+            lp.funcs.push(LFunc { name: f.name, params, body });
+        }
+        lp
+    }
+
+    fn lower_decl(&mut self, d: &Decl) -> u32 {
+        let ld = match &d.ty {
+            Type::Array(elem, len) => LDecl {
+                name: d.name,
+                is_array: true,
+                is_float: elem.is_float(),
+                arr_len: *len,
+                init: None,
+                pos: d.pos,
+            },
+            ty => LDecl {
+                name: d.name,
+                is_array: false,
+                is_float: ty.is_float(),
+                arr_len: None,
+                init: d.init.as_ref().map(|e| self.lower_expr(e)),
+                pos: d.pos,
+            },
+        };
+        let di = self.decls.len() as u32;
+        self.decls.push(ld);
+        di
+    }
+
+    fn lower_body(&mut self, body: &[Stmt]) -> ListRange {
+        let ids: Vec<SId> = body.iter().map(|s| self.lower_stmt(s)).collect();
+        let start = self.stmt_lists.len() as u32;
+        self.stmt_lists.extend(ids);
+        ListRange { start, len: body.len() as u32 }
+    }
+
+    fn lower_stmt(&mut self, s: &Stmt) -> SId {
+        let ls = match s {
+            Stmt::Decl(d) => LStmt::Decl(self.lower_decl(d)),
+            Stmt::Assign { target, op, value, pos } => {
+                let target = match target {
+                    LValue::Var(n) => LTarget::Var(*n),
+                    LValue::Index(n, i) => LTarget::Index(*n, self.lower_expr(i)),
+                };
+                LStmt::Assign { target, op: *op, value: self.lower_expr(value), pos: *pos }
+            }
+            Stmt::If { cond, then_branch, else_branch, pos } => {
+                let cond = self.lower_expr(cond);
+                let then_ = self.lower_body(then_branch);
+                let else_ = self.lower_body(else_branch);
+                LStmt::If { cond, then_, else_, pos: *pos }
+            }
+            Stmt::For { id, header, body, pos } => {
+                self.max_loop = self.max_loop.max(id.0 + 1);
+                let init = header.init.as_deref().map(|s| self.lower_stmt(s));
+                let cond = header.cond.as_ref().map(|e| self.lower_expr(e));
+                let step = header.step.as_deref().map(|s| self.lower_stmt(s));
+                let body = self.lower_body(body);
+                LStmt::For { id: id.0, init, cond, step, body, pos: *pos }
+            }
+            Stmt::While { id, cond, body, pos } => {
+                self.max_loop = self.max_loop.max(id.0 + 1);
+                let cond = self.lower_expr(cond);
+                let body = self.lower_body(body);
+                LStmt::While { id: id.0, cond, body, pos: *pos }
+            }
+            Stmt::Return(e, pos) => {
+                LStmt::Return(e.as_ref().map(|e| self.lower_expr(e)), *pos)
+            }
+            Stmt::Expr(e, pos) => LStmt::Expr(self.lower_expr(e), *pos),
+            Stmt::Block(body) => LStmt::Block(self.lower_body(body)),
+        };
+        let sid = self.stmts.len() as u32;
+        self.stmts.push(ls);
+        sid
+    }
+
+    fn lower_expr(&mut self, e: &Expr) -> EId {
+        let le = match e {
+            Expr::IntLit(n) => LExpr::Int(*n),
+            Expr::FloatLit(v) => LExpr::Float(*v),
+            Expr::Var(n) => LExpr::Var(*n),
+            Expr::Index(n, i) => LExpr::Index(*n, self.lower_expr(i)),
+            Expr::Unary(op, a) => LExpr::Unary(*op, self.lower_expr(a)),
+            Expr::Binary(op, a, b) => {
+                let ae = self.lower_expr(a);
+                let be = self.lower_expr(b);
+                LExpr::Binary(*op, ae, be)
+            }
+            Expr::Call(f, args) => {
+                let ids: Vec<EId> = args.iter().map(|a| self.lower_expr(a)).collect();
+                let start = self.expr_lists.len() as u32;
+                self.expr_lists.extend(ids);
+                LExpr::Call(*f, ListRange { start, len: args.len() as u32 })
+            }
+        };
+        let eid = self.exprs.len() as u32;
+        self.exprs.push(le);
+        eid
+    }
+}
+
+// ---- the machine -----------------------------------------------------------
+
+/// One continuation on the machine's `ops` stack.  Statements and
+/// expressions decompose into these; control flow (loops, calls, scopes)
+/// is expressed by pushing the right continuation sequence.
+#[derive(Clone, Copy)]
+enum Op {
+    /// Execute one statement.
+    Stmt(SId),
+    /// Evaluate one expression, pushing its value onto `vals`.
+    Eval(EId),
+    /// Truncate `locals` back to a scope mark.
+    ScopeEnd(u32),
+    /// Pop the innermost loop id off the profiling loop stack.
+    PopLoop,
+    /// Drop the value of an expression statement.
+    Discard,
+    /// Branch on the just-evaluated `if` condition.
+    IfCheck { then_: ListRange, else_: ListRange },
+    /// Evaluate the `for` condition (or iterate immediately if absent).
+    ForCond(SId),
+    /// Branch on the just-evaluated `for` condition.
+    ForCheck(SId),
+    /// Evaluate the `while` condition.
+    WhileCond(SId),
+    /// Branch on the just-evaluated `while` condition.
+    WhileCheck(SId),
+    /// Bind a scalar declaration to its just-evaluated initializer.
+    DeclBind(u32),
+    /// Finish a scalar assignment with the just-evaluated RHS.
+    AssignVar { name: Symbol, op: AssignOp, pos: Pos },
+    /// Finish an array-element assignment (pops index, then RHS).
+    AssignIndex { name: Symbol, op: AssignOp, pos: Pos },
+    /// Apply a unary operator to the top of `vals`.
+    Unary(UnOp),
+    /// Apply a binary operator to the top two values.
+    Binary(BinOp),
+    /// `&&`/`||`: inspect LHS, short-circuit or schedule the RHS.
+    ShortCircuit { op: BinOp, rhs: EId },
+    /// Normalize the RHS of a non-short-circuited `&&`/`||` to 0/1.
+    BoolCast,
+    /// Read one array element with the just-evaluated index.
+    IndexRead(Symbol),
+    /// Apply a builtin math function to its evaluated arguments.
+    Builtin { name: Symbol, argc: u32 },
+    /// Coerce + bind one evaluated scalar argument, then resume binding
+    /// the remaining parameters of the call.
+    CallBound { func: u32, name: Symbol, param: u32, args: ListRange, bind_base: u32 },
+    /// Unwind the current frame with the just-evaluated return value.
+    ReturnVal,
+    /// Fall off the end of a function body (implicit return).
+    CallEnd,
+}
+
+/// One call frame: base offsets into the machine stacks, recorded at
+/// entry so `return` can unwind everything with four truncates.
+struct Frame {
+    ops_base: u32,
+    vals_base: u32,
+    locals_base: u32,
+    loop_base: u32,
+    is_expr: bool,
+}
+
 /// The interpreter. One instance per program run.
 pub struct Interp<'p> {
-    program: &'p Program,
+    code: LProgram,
     arrays: Vec<ArrayObj>,
-    globals: HashMap<String, Binding>,
+    globals: HashMap<Symbol, Binding>,
     /// local bindings as one spaghetti stack: frames/scopes are just
-    /// truncation marks and names borrow from the AST, so loop
-    /// iterations allocate nothing
-    locals: Vec<(&'p str, Binding)>,
-    /// per-call-frame base offsets into `locals` (lookup boundary)
-    frame_bases: Vec<usize>,
-    overrides: HashMap<String, Value>,
+    /// truncation marks, so loop iterations allocate nothing
+    locals: Vec<(Symbol, Binding)>,
+    frames: Vec<Frame>,
+    /// continuation stack (the machine's control state)
+    ops: Vec<Op>,
+    /// operand stack (evaluated sub-expression values)
+    vals: Vec<Value>,
+    /// argument bindings being assembled for an in-progress call
+    pending: Vec<(Symbol, Binding)>,
+    overrides: HashMap<Symbol, Value>,
     // profiling
     loop_counters: Vec<LoopProfile>,
     loop_stack: Vec<u32>,
@@ -116,30 +413,25 @@ pub struct Interp<'p> {
     steps: u64,
     max_steps: u64,
     globals_ready: bool,
+    result: Option<Value>,
+    _ast: PhantomData<&'p Program>,
 }
 
 impl<'p> Interp<'p> {
-    /// Build an interpreter for one run of `program`.
+    /// Build an interpreter for one run of `program` (lowers the AST into
+    /// the flat execution arena once, up front).
     pub fn new(program: &'p Program) -> Self {
-        let max_loop = {
-            let mut m = 0u32;
-            for f in &program.functions {
-                for s in &f.body {
-                    s.walk(&mut |s| {
-                        if let Stmt::For { id, .. } | Stmt::While { id, .. } = s {
-                            m = m.max(id.0 + 1);
-                        }
-                    });
-                }
-            }
-            m
-        };
+        let code = LProgram::lower(program);
+        let max_loop = code.max_loop;
         Self {
-            program,
+            code,
             arrays: Vec::new(),
             globals: HashMap::new(),
             locals: Vec::new(),
-            frame_bases: Vec::new(),
+            frames: Vec::new(),
+            ops: Vec::new(),
+            vals: Vec::new(),
+            pending: Vec::new(),
             overrides: HashMap::new(),
             loop_counters: vec![LoopProfile::default(); max_loop as usize],
             loop_stack: Vec::new(),
@@ -147,13 +439,15 @@ impl<'p> Interp<'p> {
             steps: 0,
             max_steps: DEFAULT_MAX_STEPS,
             globals_ready: false,
+            result: None,
+            _ast: PhantomData,
         }
     }
 
     /// Override a global scalar before the run (e.g. shrink a problem-size
     /// constant for tests: `set_global("N", Value::Int(64))`).
     pub fn set_global(&mut self, name: &str, value: Value) {
-        self.overrides.insert(name.to_string(), value);
+        self.overrides.insert(Symbol::intern(name), value);
     }
 
     /// Override the runaway-loop step budget.
@@ -169,30 +463,38 @@ impl<'p> Interp<'p> {
     /// Call a function by name with scalar arguments.
     pub fn call(&mut self, name: &str, args: &[Value]) -> Result<Option<Value>, InterpError> {
         self.init_globals()?;
-        let program: &'p Program = self.program;
-        let func = program
-            .function(name)
+        let fi = self
+            .code
+            .funcs
+            .iter()
+            .position(|f| f.name == name)
             .ok_or_else(|| InterpError::new(format!("no function `{name}`")))?;
-        if func.params.len() != args.len() {
+        let nparams = self.code.funcs[fi].params.len();
+        if nparams != args.len() {
             return Err(InterpError::new(format!(
                 "`{name}` expects {} args, got {}",
-                func.params.len(),
+                nparams,
                 args.len()
             )));
         }
-        let bindings: Vec<(&'p str, Binding)> = func
-            .params
-            .iter()
-            .zip(args)
-            .map(|(p, v)| (p.name.as_str(), Binding::Scalar(*v)))
-            .collect();
-        self.call_with_bindings(func, bindings)
+        self.ops.clear();
+        self.vals.clear();
+        self.frames.clear();
+        self.pending.clear();
+        self.locals.clear();
+        self.result = None;
+        for (i, v) in args.iter().enumerate() {
+            let pname = self.code.funcs[fi].params[i].name;
+            self.pending.push((pname, Binding::Scalar(*v)));
+        }
+        self.enter_frame(fi as u32, 0, false)?;
+        self.run()
     }
 
     /// Read a global array's contents (output capture for verification).
     pub fn read_array(&mut self, name: &str) -> Result<Vec<f64>, InterpError> {
         self.init_globals()?;
-        match self.globals.get(name) {
+        match self.globals.get(&Symbol::intern(name)) {
             Some(Binding::Array(h)) => Ok(self.arrays[*h].data.clone()),
             Some(Binding::Scalar(_)) => {
                 Err(InterpError::new(format!("`{name}` is a scalar, not an array")))
@@ -204,7 +506,7 @@ impl<'p> Interp<'p> {
     /// Read a global scalar.
     pub fn read_scalar(&mut self, name: &str) -> Result<Value, InterpError> {
         self.init_globals()?;
-        match self.globals.get(name) {
+        match self.globals.get(&Symbol::intern(name)) {
             Some(Binding::Scalar(v)) => Ok(*v),
             _ => Err(InterpError::new(format!("no scalar global `{name}`"))),
         }
@@ -221,32 +523,19 @@ impl<'p> Interp<'p> {
         self.totals
     }
 
-    // ---- internals --------------------------------------------------------
+    // ---- globals -----------------------------------------------------------
 
     fn init_globals(&mut self) -> Result<(), InterpError> {
         if self.globals_ready {
             return Ok(());
         }
         self.globals_ready = true;
-        let program: &'p Program = self.program;
-        for d in &program.globals {
-            let b = self.make_binding(d)?;
-            // apply override after the declared initializer
-            let b = match (self.overrides.get(&d.name), &b) {
-                (Some(v), Binding::Scalar(_)) => Binding::Scalar(*v),
-                _ => b,
-            };
-            self.globals.insert(d.name.clone(), b);
-        }
-        Ok(())
-    }
-
-    fn make_binding(&mut self, d: &'p Decl) -> Result<Binding, InterpError> {
-        match &d.ty {
-            Type::Array(elem, len) => {
-                // array lengths may reference already-bound globals
-                let n = match len {
-                    Some(n) => *n,
+        for gi in 0..self.code.globals.len() {
+            let di = self.code.globals[gi];
+            let d = self.code.decls[di as usize];
+            let b = if d.is_array {
+                let n = match d.arr_len {
+                    Some(n) => n,
                     None => {
                         return Err(InterpError::at(
                             format!("array `{}` needs a length", d.name),
@@ -255,65 +544,550 @@ impl<'p> Interp<'p> {
                     }
                 };
                 let h = self.arrays.len();
-                self.arrays.push(ArrayObj { is_float: elem.is_float(), data: vec![0.0; n] });
-                Ok(Binding::Array(h))
-            }
-            ty => {
-                let v = match &d.init {
-                    Some(e) => self.eval(e)?,
+                self.arrays.push(ArrayObj { is_float: d.is_float, data: vec![0.0; n] });
+                Binding::Array(h)
+            } else {
+                let v = match d.init {
+                    Some(e) => self.eval_const(e)?,
                     None => Value::Int(0),
                 };
-                let v = if ty.is_float() {
+                let v = if d.is_float {
                     Value::Float(v.as_f64())
                 } else {
                     Value::Int(v.as_i64())
                 };
-                Ok(Binding::Scalar(v))
-            }
+                Binding::Scalar(v)
+            };
+            // apply override after the declared initializer
+            let b = match (self.overrides.get(&d.name), b) {
+                (Some(v), Binding::Scalar(_)) => Binding::Scalar(*v),
+                _ => b,
+            };
+            self.globals.insert(d.name, b);
         }
+        Ok(())
     }
 
-    fn call_with_bindings(
+    /// Evaluate one global-initializer expression with a bounded run of
+    /// the machine (globals initialize before any frame exists).
+    fn eval_const(&mut self, e: EId) -> Result<Value, InterpError> {
+        let ops_base = self.ops.len();
+        self.ops.push(Op::Eval(e));
+        while self.ops.len() > ops_base {
+            let op = self.ops.pop().expect("op stack underflow");
+            self.step(op)?;
+        }
+        Ok(self.vals.pop().expect("global initializer produced no value"))
+    }
+
+    // ---- machine core ------------------------------------------------------
+
+    fn run(&mut self) -> Result<Option<Value>, InterpError> {
+        while let Some(op) = self.ops.pop() {
+            self.step(op)?;
+        }
+        Ok(self.result.take())
+    }
+
+    /// Push a call frame and schedule the function body.  Parameter
+    /// bindings for this call sit at `pending[bind_base..]`.
+    fn enter_frame(
         &mut self,
-        func: &'p Function,
-        bindings: Vec<(&'p str, Binding)>,
-    ) -> Result<Option<Value>, InterpError> {
-        if self.frame_bases.len() > 64 {
+        fi: u32,
+        bind_base: usize,
+        is_expr: bool,
+    ) -> Result<(), InterpError> {
+        if self.frames.len() > 64 {
             return Err(InterpError::new("call stack overflow (depth > 64)"));
         }
-        let base = self.locals.len();
-        self.frame_bases.push(base);
-        for (n, b) in bindings {
-            self.locals.push((n, b));
-        }
-        let mut ret = None;
-        for s in &func.body {
-            if let Flow::Return(v) = self.exec(s)? {
-                ret = v;
-                break;
-            }
-        }
-        self.locals.truncate(base);
-        self.frame_bases.pop();
-        Ok(ret)
+        self.frames.push(Frame {
+            ops_base: self.ops.len() as u32,
+            vals_base: self.vals.len() as u32,
+            locals_base: self.locals.len() as u32,
+            loop_base: self.loop_stack.len() as u32,
+            is_expr,
+        });
+        self.ops.push(Op::CallEnd);
+        let body = self.code.funcs[fi as usize].body;
+        self.push_body_rev(body);
+        let n = self.pending.len();
+        self.locals.extend(self.pending.drain(bind_base..n));
+        Ok(())
     }
 
-    fn lookup(&self, name: &str) -> Option<Binding> {
-        let base = self.frame_bases.last().copied().unwrap_or(0);
+    /// Unwind the current frame on `return`: four truncates restore every
+    /// machine stack to its at-entry state, whatever was in flight.
+    fn return_unwind(&mut self, v: Option<Value>) {
+        let frame = self.frames.pop().expect("return outside a call frame");
+        self.ops.truncate(frame.ops_base as usize);
+        self.vals.truncate(frame.vals_base as usize);
+        self.locals.truncate(frame.locals_base as usize);
+        self.loop_stack.truncate(frame.loop_base as usize);
+        if frame.is_expr {
+            self.vals.push(v.unwrap_or(Value::Int(0)));
+        } else {
+            self.result = v;
+        }
+    }
+
+    /// Schedule a statement list for execution (reversed: `ops` is LIFO).
+    fn push_body_rev(&mut self, body: ListRange) {
+        let start = body.start as usize;
+        for i in (start..start + body.len as usize).rev() {
+            let sid = self.code.stmt_lists[i];
+            self.ops.push(Op::Stmt(sid));
+        }
+    }
+
+    fn step(&mut self, op: Op) -> Result<(), InterpError> {
+        match op {
+            Op::Stmt(sid) => return self.step_stmt(sid),
+            Op::Eval(eid) => return self.step_eval(eid),
+            Op::ScopeEnd(mark) => self.locals.truncate(mark as usize),
+            Op::PopLoop => {
+                self.loop_stack.pop();
+            }
+            Op::Discard => {
+                self.vals.pop();
+            }
+            Op::IfCheck { then_, else_ } => {
+                let c = self.vals.pop().expect("if condition value");
+                self.ops.push(Op::ScopeEnd(self.locals.len() as u32));
+                self.push_body_rev(if c.truthy() { then_ } else { else_ });
+            }
+            Op::ForCond(sid) => {
+                let LStmt::For { cond, .. } = self.code.stmts[sid as usize] else {
+                    unreachable!("ForCond on non-for statement");
+                };
+                match cond {
+                    Some(c) => {
+                        self.ops.push(Op::ForCheck(sid));
+                        self.ops.push(Op::Eval(c));
+                    }
+                    None => self.for_iterate(sid),
+                }
+            }
+            Op::ForCheck(sid) => {
+                let v = self.vals.pop().expect("for condition value");
+                if v.truthy() {
+                    self.for_iterate(sid);
+                }
+            }
+            Op::WhileCond(sid) => {
+                let LStmt::While { cond, .. } = self.code.stmts[sid as usize] else {
+                    unreachable!("WhileCond on non-while statement");
+                };
+                self.ops.push(Op::WhileCheck(sid));
+                self.ops.push(Op::Eval(cond));
+            }
+            Op::WhileCheck(sid) => {
+                let v = self.vals.pop().expect("while condition value");
+                if v.truthy() {
+                    let LStmt::While { id, body, .. } = self.code.stmts[sid as usize] else {
+                        unreachable!("WhileCheck on non-while statement");
+                    };
+                    self.loop_counters[id as usize].iterations += 1;
+                    self.loop_stack.push(id);
+                    self.ops.push(Op::WhileCond(sid));
+                    self.ops.push(Op::PopLoop);
+                    self.ops.push(Op::ScopeEnd(self.locals.len() as u32));
+                    self.push_body_rev(body);
+                }
+            }
+            Op::DeclBind(di) => {
+                let d = self.code.decls[di as usize];
+                let v = self.vals.pop().expect("declaration initializer value");
+                let v = if d.is_float {
+                    Value::Float(v.as_f64())
+                } else {
+                    Value::Int(v.as_i64())
+                };
+                self.locals.push((d.name, Binding::Scalar(v)));
+            }
+            Op::AssignVar { name, op, pos } => {
+                let rhs = self.vals.pop().expect("assignment RHS value");
+                let new = if op == AssignOp::Assign {
+                    rhs
+                } else {
+                    let old = match self.lookup(name) {
+                        Some(Binding::Scalar(v)) => v,
+                        _ => return Err(InterpError::at(format!("no scalar `{name}`"), pos)),
+                    };
+                    self.apply_compound(old, op, rhs)
+                };
+                self.set_scalar(name, new, pos)?;
+            }
+            Op::AssignIndex { name, op, pos } => {
+                let i = self.vals.pop().expect("assignment index value").as_i64();
+                let rhs = self.vals.pop().expect("assignment RHS value");
+                let h = match self.lookup(name) {
+                    Some(Binding::Array(h)) => h,
+                    _ => return Err(InterpError::at(format!("no array `{name}`"), pos)),
+                };
+                let (len, is_float) = (self.arrays[h].data.len(), self.arrays[h].is_float);
+                if i < 0 || i as usize >= len {
+                    return Err(InterpError::at(
+                        format!("index {i} out of bounds for `{name}[{len}]`"),
+                        pos,
+                    ));
+                }
+                let elem_bytes = 4;
+                let new = if op == AssignOp::Assign {
+                    rhs
+                } else {
+                    let old = self.arrays[h].data[i as usize];
+                    self.count_access(name, i, elem_bytes, false);
+                    let old = if is_float { Value::Float(old) } else { Value::Int(old as i64) };
+                    self.apply_compound(old, op, rhs)
+                };
+                self.count_access(name, i, elem_bytes, true);
+                self.arrays[h].data[i as usize] = if is_float {
+                    new.as_f64()
+                } else {
+                    new.as_i64() as f64
+                };
+            }
+            Op::Unary(op) => {
+                let v = self.vals.pop().expect("unary operand value");
+                let r = match op {
+                    UnOp::Neg => match v {
+                        Value::Int(n) => {
+                            self.count_int_ops(1);
+                            Value::Int(-n)
+                        }
+                        Value::Float(f) => {
+                            self.count_flops(1);
+                            Value::Float(-f)
+                        }
+                    },
+                    UnOp::Not => {
+                        self.count_int_ops(1);
+                        Value::Int(!v.truthy() as i64)
+                    }
+                };
+                self.vals.push(r);
+            }
+            Op::Binary(op) => {
+                let vb = self.vals.pop().expect("binary RHS value");
+                let va = self.vals.pop().expect("binary LHS value");
+                let r = self.apply_bin(op, va, vb);
+                self.vals.push(r);
+            }
+            Op::ShortCircuit { op, rhs } => {
+                let va = self.vals.pop().expect("short-circuit LHS value");
+                self.count_int_ops(1);
+                match (op, va.truthy()) {
+                    (BinOp::And, false) => self.vals.push(Value::Int(0)),
+                    (BinOp::Or, true) => self.vals.push(Value::Int(1)),
+                    _ => {
+                        self.ops.push(Op::BoolCast);
+                        self.ops.push(Op::Eval(rhs));
+                    }
+                }
+            }
+            Op::BoolCast => {
+                let v = self.vals.pop().expect("boolean operand value");
+                self.vals.push(Value::Int(v.truthy() as i64));
+            }
+            Op::IndexRead(name) => {
+                let i = self.vals.pop().expect("index value").as_i64();
+                let h = match self.lookup(name) {
+                    Some(Binding::Array(h)) => h,
+                    _ => return Err(InterpError::new(format!("no array `{name}`"))),
+                };
+                let arr = &self.arrays[h];
+                let len = arr.data.len();
+                if i < 0 || i as usize >= len {
+                    return Err(InterpError::new(format!(
+                        "index {i} out of bounds for `{name}[{len}]`"
+                    )));
+                }
+                let is_float = arr.is_float;
+                let v = arr.data[i as usize];
+                self.count_access(name, i, 4, false);
+                self.vals.push(if is_float { Value::Float(v) } else { Value::Int(v as i64) });
+            }
+            Op::Builtin { name, argc } => {
+                let base = self.vals.len() - argc as usize;
+                self.count_math();
+                let v = {
+                    let a = |i: usize| self.vals[base + i].as_f64();
+                    match (name.as_str(), argc) {
+                        ("sin", 1) => a(0).sin(),
+                        ("cos", 1) => a(0).cos(),
+                        ("sqrt", 1) => a(0).sqrt(),
+                        ("fabs", 1) => a(0).abs(),
+                        ("exp", 1) => a(0).exp(),
+                        ("floor", 1) => a(0).floor(),
+                        ("fmin", 2) => a(0).min(a(1)),
+                        ("fmax", 2) => a(0).max(a(1)),
+                        _ => {
+                            return Err(InterpError::new(format!(
+                                "builtin `{name}` called with {argc} args"
+                            )))
+                        }
+                    }
+                };
+                self.vals.truncate(base);
+                self.vals.push(Value::Float(v));
+            }
+            Op::CallBound { func, name, param, args, bind_base } => {
+                let v = self.vals.pop().expect("call argument value");
+                let p = self.code.funcs[func as usize].params[param as usize];
+                let v = if p.is_float {
+                    Value::Float(v.as_f64())
+                } else {
+                    Value::Int(v.as_i64())
+                };
+                self.pending.push((p.name, Binding::Scalar(v)));
+                self.continue_call(func, name, param + 1, args, bind_base)?;
+            }
+            Op::ReturnVal => {
+                let v = self.vals.pop().expect("return value");
+                self.return_unwind(Some(v));
+            }
+            Op::CallEnd => {
+                let frame = self.frames.pop().expect("unbalanced call frame");
+                self.locals.truncate(frame.locals_base as usize);
+                if frame.is_expr {
+                    self.vals.push(Value::Int(0));
+                } else {
+                    self.result = None;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn step_stmt(&mut self, sid: SId) -> Result<(), InterpError> {
+        let s = self.code.stmts[sid as usize];
+        match s {
+            LStmt::Decl(di) => {
+                let d = self.code.decls[di as usize];
+                self.tick(d.pos)?;
+                if d.is_array {
+                    let n = match d.arr_len {
+                        Some(n) => n,
+                        None => {
+                            return Err(InterpError::at(
+                                format!("array `{}` needs a length", d.name),
+                                d.pos,
+                            ))
+                        }
+                    };
+                    // a fresh array object per execution of the declaration
+                    let h = self.arrays.len();
+                    self.arrays.push(ArrayObj { is_float: d.is_float, data: vec![0.0; n] });
+                    self.locals.push((d.name, Binding::Array(h)));
+                } else if let Some(init) = d.init {
+                    self.ops.push(Op::DeclBind(di));
+                    self.ops.push(Op::Eval(init));
+                } else {
+                    let v = if d.is_float { Value::Float(0.0) } else { Value::Int(0) };
+                    self.locals.push((d.name, Binding::Scalar(v)));
+                }
+            }
+            LStmt::Assign { target, op, value, pos } => {
+                self.tick(pos)?;
+                match target {
+                    LTarget::Var(name) => {
+                        self.ops.push(Op::AssignVar { name, op, pos });
+                        self.ops.push(Op::Eval(value));
+                    }
+                    LTarget::Index(name, idx) => {
+                        // RHS evaluates first, then the index (tree-eval order)
+                        self.ops.push(Op::AssignIndex { name, op, pos });
+                        self.ops.push(Op::Eval(idx));
+                        self.ops.push(Op::Eval(value));
+                    }
+                }
+            }
+            LStmt::If { cond, then_, else_, pos } => {
+                self.tick(pos)?;
+                self.ops.push(Op::IfCheck { then_, else_ });
+                self.ops.push(Op::Eval(cond));
+            }
+            LStmt::For { id, init, pos, .. } => {
+                self.tick(pos)?;
+                self.loop_counters[id as usize].entries += 1;
+                // header scope (for decl-in-init) closes when the loop ends
+                self.ops.push(Op::ScopeEnd(self.locals.len() as u32));
+                self.ops.push(Op::ForCond(sid));
+                if let Some(init) = init {
+                    self.ops.push(Op::Stmt(init));
+                }
+            }
+            LStmt::While { id, pos, .. } => {
+                self.tick(pos)?;
+                self.loop_counters[id as usize].entries += 1;
+                self.ops.push(Op::WhileCond(sid));
+            }
+            LStmt::Return(e, pos) => {
+                self.tick(pos)?;
+                match e {
+                    Some(e) => {
+                        self.ops.push(Op::ReturnVal);
+                        self.ops.push(Op::Eval(e));
+                    }
+                    None => self.return_unwind(None),
+                }
+            }
+            LStmt::Expr(e, pos) => {
+                self.tick(pos)?;
+                self.ops.push(Op::Discard);
+                self.ops.push(Op::Eval(e));
+            }
+            LStmt::Block(body) => {
+                self.ops.push(Op::ScopeEnd(self.locals.len() as u32));
+                self.push_body_rev(body);
+            }
+        }
+        Ok(())
+    }
+
+    /// One loop-body iteration: count it, push the loop id for profiling
+    /// attribution, and schedule body + step + re-check.
+    fn for_iterate(&mut self, sid: SId) {
+        let LStmt::For { id, step, body, .. } = self.code.stmts[sid as usize] else {
+            unreachable!("for_iterate on non-for statement");
+        };
+        self.loop_counters[id as usize].iterations += 1;
+        self.loop_stack.push(id);
+        self.ops.push(Op::ForCond(sid));
+        self.ops.push(Op::PopLoop);
+        if let Some(step) = step {
+            self.ops.push(Op::Stmt(step));
+        }
+        self.ops.push(Op::ScopeEnd(self.locals.len() as u32));
+        self.push_body_rev(body);
+    }
+
+    fn step_eval(&mut self, eid: EId) -> Result<(), InterpError> {
+        let e = self.code.exprs[eid as usize];
+        match e {
+            LExpr::Int(n) => self.vals.push(Value::Int(n)),
+            LExpr::Float(v) => self.vals.push(Value::Float(v)),
+            LExpr::Var(name) => match self.lookup(name) {
+                Some(Binding::Scalar(v)) => self.vals.push(v),
+                Some(Binding::Array(_)) => {
+                    return Err(InterpError::new(format!("array `{name}` used as scalar")))
+                }
+                None => {
+                    return Err(InterpError::new(format!("undeclared variable `{name}`")))
+                }
+            },
+            LExpr::Index(name, idx) => {
+                self.ops.push(Op::IndexRead(name));
+                self.ops.push(Op::Eval(idx));
+            }
+            LExpr::Unary(op, a) => {
+                self.ops.push(Op::Unary(op));
+                self.ops.push(Op::Eval(a));
+            }
+            LExpr::Binary(op, a, b) => {
+                if matches!(op, BinOp::And | BinOp::Or) {
+                    self.ops.push(Op::ShortCircuit { op, rhs: b });
+                    self.ops.push(Op::Eval(a));
+                } else {
+                    self.ops.push(Op::Binary(op));
+                    self.ops.push(Op::Eval(b));
+                    self.ops.push(Op::Eval(a));
+                }
+            }
+            LExpr::Call(name, args) => self.begin_call(name, args)?,
+        }
+        Ok(())
+    }
+
+    /// Start a call expression: builtins schedule their arguments and a
+    /// fold; user calls bind parameters left-to-right via `continue_call`.
+    fn begin_call(&mut self, name: Symbol, args: ListRange) -> Result<(), InterpError> {
+        if crate::ir::varref::is_builtin(name.as_str()) {
+            self.ops.push(Op::Builtin { name, argc: args.len });
+            let start = args.start as usize;
+            for i in (start..start + args.len as usize).rev() {
+                let eid = self.code.expr_lists[i];
+                self.ops.push(Op::Eval(eid));
+            }
+            return Ok(());
+        }
+        let fi = self
+            .code
+            .funcs
+            .iter()
+            .position(|f| f.name == name)
+            .ok_or_else(|| InterpError::new(format!("no function `{name}`")))?;
+        let nparams = self.code.funcs[fi].params.len() as u32;
+        if nparams != args.len {
+            return Err(InterpError::new(format!(
+                "`{name}` expects {nparams} args, got {}",
+                args.len
+            )));
+        }
+        let bind_base = self.pending.len() as u32;
+        self.continue_call(fi as u32, name, 0, args, bind_base)
+    }
+
+    /// Bind parameters starting at `param`; array parameters bind
+    /// immediately (by reference), scalar parameters schedule an argument
+    /// evaluation and resume via [`Op::CallBound`].
+    fn continue_call(
+        &mut self,
+        fi: u32,
+        name: Symbol,
+        mut param: u32,
+        args: ListRange,
+        bind_base: u32,
+    ) -> Result<(), InterpError> {
+        loop {
+            let nparams = self.code.funcs[fi as usize].params.len() as u32;
+            if param == nparams {
+                return self.enter_frame(fi, bind_base as usize, true);
+            }
+            let p = self.code.funcs[fi as usize].params[param as usize];
+            let arg_eid = self.code.expr_lists[(args.start + param) as usize];
+            if p.is_array {
+                // arrays pass by reference: argument must be a bare name
+                match self.code.exprs[arg_eid as usize] {
+                    LExpr::Var(an) => match self.lookup(an) {
+                        Some(b @ Binding::Array(_)) => {
+                            self.pending.push((p.name, b));
+                            param += 1;
+                        }
+                        _ => {
+                            return Err(InterpError::new(format!(
+                                "`{an}` is not an array (argument to `{name}`)"
+                            )))
+                        }
+                    },
+                    _ => {
+                        return Err(InterpError::new(format!(
+                            "array argument to `{name}` must be a variable"
+                        )))
+                    }
+                }
+            } else {
+                self.ops.push(Op::CallBound { func: fi, name, param, args, bind_base });
+                self.ops.push(Op::Eval(arg_eid));
+                return Ok(());
+            }
+        }
+    }
+
+    // ---- environment -------------------------------------------------------
+
+    fn lookup(&self, name: Symbol) -> Option<Binding> {
+        let base = self.frames.last().map(|f| f.locals_base as usize).unwrap_or(0);
         for (n, b) in self.locals[base..].iter().rev() {
             if *n == name {
                 return Some(*b);
             }
         }
-        self.globals.get(name).copied()
+        self.globals.get(&name).copied()
     }
 
-    fn bind_local(&mut self, name: &'p str, b: Binding) {
-        self.locals.push((name, b));
-    }
-
-    fn set_scalar(&mut self, name: &str, v: Value, pos: Pos) -> Result<(), InterpError> {
-        let base = self.frame_bases.last().copied().unwrap_or(0);
+    fn set_scalar(&mut self, name: Symbol, v: Value, pos: Pos) -> Result<(), InterpError> {
+        let base = self.frames.last().map(|f| f.locals_base as usize).unwrap_or(0);
         for (n, b) in self.locals[base..].iter_mut().rev() {
             if *n == name {
                 match b {
@@ -334,7 +1108,7 @@ impl<'p> Interp<'p> {
                 }
             }
         }
-        if let Some(Binding::Scalar(old)) = self.globals.get_mut(name) {
+        if let Some(Binding::Scalar(old)) = self.globals.get_mut(&name) {
             *old = match old {
                 Value::Int(_) => Value::Int(v.as_i64()),
                 Value::Float(_) => Value::Float(v.as_f64()),
@@ -381,7 +1155,7 @@ impl<'p> Interp<'p> {
         }
     }
 
-    fn count_access(&mut self, array: &str, idx: i64, elem_bytes: u64, write: bool) {
+    fn count_access(&mut self, array: Symbol, idx: i64, elem_bytes: u64, write: bool) {
         if write {
             self.totals.total_mem_writes += 1;
         } else {
@@ -394,206 +1168,20 @@ impl<'p> Interp<'p> {
             } else {
                 lp.mem_reads += 1;
             }
-            // hot path: avoid allocating the key on every access — only
-            // the first touch of an array inside a loop inserts
-            if let Some(fp) = lp.footprints.get_mut(array) {
+            if let Some(fp) = lp.footprints.get_mut(&array) {
                 fp.min_idx = fp.min_idx.min(idx);
                 fp.max_idx = fp.max_idx.max(idx);
                 fp.accesses += 1;
             } else {
                 lp.footprints.insert(
-                    array.to_string(),
+                    array,
                     Footprint { min_idx: idx, max_idx: idx, elem_bytes, accesses: 1 },
                 );
             }
         }
     }
 
-    // execution --------------------------------------------------------------
-
-    fn exec(&mut self, s: &'p Stmt) -> Result<Flow, InterpError> {
-        match s {
-            Stmt::Decl(d) => {
-                self.tick(d.pos)?;
-                let b = self.make_binding(d)?;
-                self.bind_local(&d.name, b);
-                Ok(Flow::Normal)
-            }
-            Stmt::Assign { target, op, value, pos } => {
-                self.tick(*pos)?;
-                self.exec_assign(target, *op, value, *pos)?;
-                Ok(Flow::Normal)
-            }
-            Stmt::If { cond, then_branch, else_branch, pos } => {
-                self.tick(*pos)?;
-                let c = self.eval(cond)?;
-                let branch = if c.truthy() { then_branch } else { else_branch };
-                self.exec_scoped(branch)
-            }
-            Stmt::For { id, header, body, pos } => {
-                self.tick(*pos)?;
-                self.exec_for(*id, header, body, *pos)
-            }
-            Stmt::While { id, cond, body, pos } => {
-                self.tick(*pos)?;
-                self.exec_while(*id, cond, body, *pos)
-            }
-            Stmt::Return(e, pos) => {
-                self.tick(*pos)?;
-                let v = match e {
-                    Some(e) => Some(self.eval(e)?),
-                    None => None,
-                };
-                Ok(Flow::Return(v))
-            }
-            Stmt::Expr(e, pos) => {
-                self.tick(*pos)?;
-                self.eval(e)?;
-                Ok(Flow::Normal)
-            }
-            Stmt::Block(body) => self.exec_scoped(body),
-        }
-    }
-
-    fn exec_scoped(&mut self, body: &'p [Stmt]) -> Result<Flow, InterpError> {
-        let mark = self.locals.len();
-        let mut flow = Flow::Normal;
-        for s in body {
-            match self.exec(s)? {
-                Flow::Normal => {}
-                r @ Flow::Return(_) => {
-                    flow = r;
-                    break;
-                }
-            }
-        }
-        self.locals.truncate(mark);
-        Ok(flow)
-    }
-
-    fn exec_for(
-        &mut self,
-        id: LoopId,
-        header: &'p ForHeader,
-        body: &'p [Stmt],
-        _pos: Pos,
-    ) -> Result<Flow, InterpError> {
-        self.loop_counters[id.0 as usize].entries += 1;
-        // header scope (for decl-in-init)
-        let mark = self.locals.len();
-        let mut flow = Flow::Normal;
-        if let Some(init) = &header.init {
-            if let Flow::Return(v) = self.exec(init)? {
-                self.locals.truncate(mark);
-                return Ok(Flow::Return(v));
-            }
-        }
-        loop {
-            if let Some(cond) = &header.cond {
-                if !self.eval(cond)?.truthy() {
-                    break;
-                }
-            }
-            self.loop_counters[id.0 as usize].iterations += 1;
-            self.loop_stack.push(id.0);
-            let f = self.exec_scoped(body);
-            self.loop_stack.pop();
-            match f? {
-                Flow::Normal => {}
-                r @ Flow::Return(_) => {
-                    flow = r;
-                    break;
-                }
-            }
-            if let Some(step) = &header.step {
-                self.loop_stack.push(id.0);
-                let f = self.exec(step);
-                self.loop_stack.pop();
-                if let Flow::Return(v) = f? {
-                    flow = Flow::Return(v);
-                    break;
-                }
-            }
-        }
-        self.locals.truncate(mark);
-        Ok(flow)
-    }
-
-    fn exec_while(
-        &mut self,
-        id: LoopId,
-        cond: &'p Expr,
-        body: &'p [Stmt],
-        _pos: Pos,
-    ) -> Result<Flow, InterpError> {
-        self.loop_counters[id.0 as usize].entries += 1;
-        loop {
-            if !self.eval(cond)?.truthy() {
-                return Ok(Flow::Normal);
-            }
-            self.loop_counters[id.0 as usize].iterations += 1;
-            self.loop_stack.push(id.0);
-            let f = self.exec_scoped(body);
-            self.loop_stack.pop();
-            if let r @ Flow::Return(_) = f? {
-                return Ok(r);
-            }
-        }
-    }
-
-    fn exec_assign(
-        &mut self,
-        target: &LValue,
-        op: AssignOp,
-        value: &Expr,
-        pos: Pos,
-    ) -> Result<(), InterpError> {
-        let rhs = self.eval(value)?;
-        match target {
-            LValue::Var(name) => {
-                let new = if op == AssignOp::Assign {
-                    rhs
-                } else {
-                    let old = match self.lookup(name) {
-                        Some(Binding::Scalar(v)) => v,
-                        _ => return Err(InterpError::at(format!("no scalar `{name}`"), pos)),
-                    };
-                    self.apply_compound(old, op, rhs)
-                };
-                self.set_scalar(name, new, pos)
-            }
-            LValue::Index(name, idx) => {
-                let i = self.eval(idx)?.as_i64();
-                let h = match self.lookup(name) {
-                    Some(Binding::Array(h)) => h,
-                    _ => return Err(InterpError::at(format!("no array `{name}`"), pos)),
-                };
-                let (len, is_float) = (self.arrays[h].data.len(), self.arrays[h].is_float);
-                if i < 0 || i as usize >= len {
-                    return Err(InterpError::at(
-                        format!("index {i} out of bounds for `{name}[{len}]`"),
-                        pos,
-                    ));
-                }
-                let elem_bytes = if is_float { 4 } else { 4 };
-                let new = if op == AssignOp::Assign {
-                    rhs
-                } else {
-                    let old = self.arrays[h].data[i as usize];
-                    self.count_access(name, i, elem_bytes, false);
-                    let old = if is_float { Value::Float(old) } else { Value::Int(old as i64) };
-                    self.apply_compound(old, op, rhs)
-                };
-                self.count_access(name, i, elem_bytes, true);
-                self.arrays[h].data[i as usize] = if is_float {
-                    new.as_f64()
-                } else {
-                    new.as_i64() as f64
-                };
-                Ok(())
-            }
-        }
-    }
+    // arithmetic -------------------------------------------------------------
 
     fn apply_compound(&mut self, old: Value, op: AssignOp, rhs: Value) -> Value {
         let bop = match op {
@@ -669,144 +1257,6 @@ impl<'p> Interp<'p> {
             Value::Int(t as i64)
         }
     }
-
-    fn eval(&mut self, e: &Expr) -> Result<Value, InterpError> {
-        match e {
-            Expr::IntLit(n) => Ok(Value::Int(*n)),
-            Expr::FloatLit(v) => Ok(Value::Float(*v)),
-            Expr::Var(name) => match self.lookup(name) {
-                Some(Binding::Scalar(v)) => Ok(v),
-                Some(Binding::Array(_)) => {
-                    Err(InterpError::new(format!("array `{name}` used as scalar")))
-                }
-                None => Err(InterpError::new(format!("undeclared variable `{name}`"))),
-            },
-            Expr::Index(name, idx) => {
-                let i = self.eval(idx)?.as_i64();
-                let h = match self.lookup(name) {
-                    Some(Binding::Array(h)) => h,
-                    _ => return Err(InterpError::new(format!("no array `{name}`"))),
-                };
-                let arr = &self.arrays[h];
-                let len = arr.data.len();
-                if i < 0 || i as usize >= len {
-                    return Err(InterpError::new(format!(
-                        "index {i} out of bounds for `{name}[{len}]`"
-                    )));
-                }
-                let is_float = arr.is_float;
-                let v = arr.data[i as usize];
-                self.count_access(name, i, 4, false);
-                Ok(if is_float { Value::Float(v) } else { Value::Int(v as i64) })
-            }
-            Expr::Unary(op, a) => {
-                let v = self.eval(a)?;
-                match op {
-                    UnOp::Neg => match v {
-                        Value::Int(n) => {
-                            self.count_int_ops(1);
-                            Ok(Value::Int(-n))
-                        }
-                        Value::Float(f) => {
-                            self.count_flops(1);
-                            Ok(Value::Float(-f))
-                        }
-                    },
-                    UnOp::Not => {
-                        self.count_int_ops(1);
-                        Ok(Value::Int(!v.truthy() as i64))
-                    }
-                }
-            }
-            Expr::Binary(op, a, b) => {
-                // short-circuit logical ops
-                if matches!(op, BinOp::And | BinOp::Or) {
-                    let va = self.eval(a)?;
-                    self.count_int_ops(1);
-                    return Ok(match (op, va.truthy()) {
-                        (BinOp::And, false) => Value::Int(0),
-                        (BinOp::Or, true) => Value::Int(1),
-                        _ => Value::Int(self.eval(b)?.truthy() as i64),
-                    });
-                }
-                let va = self.eval(a)?;
-                let vb = self.eval(b)?;
-                Ok(self.apply_bin(*op, va, vb))
-            }
-            Expr::Call(name, args) => self.eval_call(name, args),
-        }
-    }
-
-    fn eval_call(&mut self, name: &str, args: &[Expr]) -> Result<Value, InterpError> {
-        // builtins first
-        if crate::ir::varref::is_builtin(name) {
-            let mut vals = Vec::with_capacity(args.len());
-            for a in args {
-                vals.push(self.eval(a)?.as_f64());
-            }
-            self.count_math();
-            let v = match (name, vals.as_slice()) {
-                ("sin", [x]) => x.sin(),
-                ("cos", [x]) => x.cos(),
-                ("sqrt", [x]) => x.sqrt(),
-                ("fabs", [x]) => x.abs(),
-                ("exp", [x]) => x.exp(),
-                ("floor", [x]) => x.floor(),
-                ("fmin", [x, y]) => x.min(*y),
-                ("fmax", [x, y]) => x.max(*y),
-                _ => {
-                    return Err(InterpError::new(format!(
-                        "builtin `{name}` called with {} args",
-                        vals.len()
-                    )))
-                }
-            };
-            return Ok(Value::Float(v));
-        }
-        let program: &'p Program = self.program;
-        let func = program
-            .function(name)
-            .ok_or_else(|| InterpError::new(format!("no function `{name}`")))?;
-        if func.params.len() != args.len() {
-            return Err(InterpError::new(format!(
-                "`{name}` expects {} args, got {}",
-                func.params.len(),
-                args.len()
-            )));
-        }
-        let mut bindings = Vec::with_capacity(args.len());
-        for (p, a) in func.params.iter().zip(args) {
-            let b = if p.ty.is_array() {
-                // arrays pass by reference: argument must be a bare name
-                match a {
-                    Expr::Var(an) => match self.lookup(an) {
-                        Some(b @ Binding::Array(_)) => b,
-                        _ => {
-                            return Err(InterpError::new(format!(
-                                "`{an}` is not an array (argument to `{name}`)"
-                            )))
-                        }
-                    },
-                    _ => {
-                        return Err(InterpError::new(format!(
-                            "array argument to `{name}` must be a variable"
-                        )))
-                    }
-                }
-            } else {
-                let v = self.eval(a)?;
-                let v = if p.ty.is_float() {
-                    Value::Float(v.as_f64())
-                } else {
-                    Value::Int(v.as_i64())
-                };
-                Binding::Scalar(v)
-            };
-            bindings.push((p.name.as_str(), b));
-        }
-        let ret = self.call_with_bindings(func, bindings)?;
-        Ok(ret.unwrap_or(Value::Int(0)))
-    }
 }
 
 #[cfg(test)]
@@ -855,7 +1305,7 @@ mod tests {
              for (i = 10; i < 20; i++) { out[i] = 1.0; } }",
         );
         let l0 = prof.loop_profile(LoopId(0)).unwrap();
-        let fp = &l0.footprints["out"];
+        let fp = &l0.footprints[&Symbol::intern("out")];
         assert_eq!((fp.min_idx, fp.max_idx), (10, 19));
         assert_eq!(fp.bytes(), 40);
         assert_eq!(l0.mem_writes, 10);
@@ -952,5 +1402,34 @@ mod tests {
              if (i < 2 && i / 0 > 0) { out[0] = 1.0; } else { out[1] = 1.0; } }",
         );
         assert_eq!(out[1], 1.0);
+    }
+
+    #[test]
+    fn scoped_locals_shadow_and_expire() {
+        // a block-local redeclaration shadows, then expires at scope end
+        let (_, out) = run_owned(
+            "float out[2]; void main() { int x; x = 1; \
+             { int x; x = 9; out[0] = x; } out[1] = x; }",
+        );
+        assert_eq!(out, vec![9.0, 1.0]);
+    }
+
+    #[test]
+    fn return_unwinds_nested_loops() {
+        // `return` from inside a double loop must fully unwind the frame's
+        // loop/scope state and still let the caller keep profiling cleanly
+        let (prof, out) = run_owned(
+            "float out[1]; \
+             int find(int n) { int i; int j; \
+               for (i = 0; i < n; i++) { for (j = 0; j < n; j++) { \
+                 if (i * 10 + j == 23) { return i * 100 + j; } } } \
+               return 0 - 1; } \
+             void main() { int i; \
+               for (i = 0; i < 3; i++) { out[0] += find(30); } }",
+        );
+        assert_eq!(out[0], 3.0 * 203.0);
+        // the caller's loop profile is intact (3 iterations)
+        let l = prof.loop_profile(LoopId(2)).unwrap();
+        assert_eq!(l.iterations, 3);
     }
 }

@@ -7,6 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::cparse::ast::LoopId;
+use crate::util::intern::Symbol;
 
 /// Footprint of one array inside one loop: contiguous index range touched.
 /// (min..=max is the right approximation for the affine accesses MiniC
@@ -52,8 +53,8 @@ pub struct LoopProfile {
     pub mem_reads: u64,
     /// Array element writes.
     pub mem_writes: u64,
-    /// per-array footprint (index ranges)
-    pub footprints: BTreeMap<String, Footprint>,
+    /// per-array footprint (index ranges, keyed by the access-site name)
+    pub footprints: BTreeMap<Symbol, Footprint>,
 }
 
 impl LoopProfile {

@@ -24,6 +24,7 @@
 use std::collections::BTreeSet;
 
 use crate::cparse::ast::*;
+use crate::util::intern::Symbol;
 
 use super::loops::LoopInfo;
 use super::varref::LoopRefs;
@@ -32,7 +33,7 @@ use super::varref::LoopRefs;
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Reduction {
     /// The reduced scalar variable.
-    pub var: String,
+    pub var: Symbol,
     /// `+` or `*`.
     pub op: char,
 }
@@ -49,11 +50,11 @@ pub struct DepAnalysis {
     pub reductions: Vec<Reduction>,
 }
 
-fn expr_contains_var(e: &Expr, var: &str) -> bool {
+fn expr_contains_var(e: &Expr, var: Symbol) -> bool {
     let mut found = false;
     e.walk(&mut |e| {
         if let Expr::Var(n) = e {
-            if n == var {
+            if *n == var {
                 found = true;
             }
         }
@@ -97,7 +98,7 @@ fn assignments(body: &[Stmt]) -> Vec<(LValue, AssignOp, Expr)> {
 }
 
 /// Try to recognize `var` as a reduction over the body's assignments.
-fn recognize_reduction(var: &str, assigns: &[(LValue, AssignOp, Expr)]) -> Option<Reduction> {
+fn recognize_reduction(var: Symbol, assigns: &[(LValue, AssignOp, Expr)]) -> Option<Reduction> {
     let mut op: Option<char> = None;
     for (target, aop, value) in assigns {
         if target.name() != var {
@@ -112,10 +113,10 @@ fn recognize_reduction(var: &str, assigns: &[(LValue, AssignOp, Expr)]) -> Optio
             AssignOp::Assign => match value {
                 // s = s + e  /  s = e + s
                 Expr::Binary(BinOp::Add, a, b)
-                    if **a == Expr::Var(var.into()) || **b == Expr::Var(var.into()) => '+',
-                Expr::Binary(BinOp::Sub, a, _) if **a == Expr::Var(var.into()) => '+',
+                    if **a == Expr::Var(var) || **b == Expr::Var(var) => '+',
+                Expr::Binary(BinOp::Sub, a, _) if **a == Expr::Var(var) => '+',
                 Expr::Binary(BinOp::Mul, a, b)
-                    if **a == Expr::Var(var.into()) || **b == Expr::Var(var.into()) => '*',
+                    if **a == Expr::Var(var) || **b == Expr::Var(var) => '*',
                 _ => return None,
             },
             _ => return None,
@@ -132,7 +133,7 @@ fn recognize_reduction(var: &str, assigns: &[(LValue, AssignOp, Expr)]) -> Optio
             Some(_) => return None, // mixed ops
         }
     }
-    op.map(|op| Reduction { var: var.into(), op })
+    op.map(|op| Reduction { var, op })
 }
 
 /// Count uses of a recognized reduction variable *outside* its own
@@ -140,12 +141,12 @@ fn recognize_reduction(var: &str, assigns: &[(LValue, AssignOp, Expr)]) -> Optio
 /// ends; any other read (stored to an array, tested in a guard, fed to
 /// another assignment) observes the running value and orders the
 /// iterations — the prefix-sum trap the generative suite fuzzes.
-fn reduction_extra_uses(var: &str, body: &[Stmt]) -> usize {
-    fn count_in(e: &Expr, var: &str) -> usize {
+fn reduction_extra_uses(var: Symbol, body: &[Stmt]) -> usize {
+    fn count_in(e: &Expr, var: Symbol) -> usize {
         let mut n = 0;
         e.walk(&mut |e| {
             if let Expr::Var(v) = e {
-                if v == var {
+                if *v == var {
                     n += 1;
                 }
             }
@@ -163,7 +164,7 @@ fn reduction_extra_uses(var: &str, body: &[Stmt]) -> usize {
                 // `s = s + e` carries one structural self-reference the
                 // recognizer already accepted; a second (`s = s + s`)
                 // still counts
-                if matches!(target, LValue::Var(t) if t == var) && *op == AssignOp::Assign {
+                if matches!(target, LValue::Var(t) if *t == var) && *op == AssignOp::Assign {
                     in_value = in_value.saturating_sub(1);
                 }
                 uses += in_value;
@@ -231,7 +232,7 @@ pub fn analyze(info: &LoopInfo, refs: &LoopRefs) -> DepAnalysis {
     // (3) array dependence test
     for (arr, writes) in &refs.array_writes {
         for w in writes {
-            if !expr_contains_var(w, &canon.var) {
+            if !expr_contains_var(w, canon.var) {
                 return reject("array written at loop-invariant index");
             }
             // `a[idx[i]]` contains the counter yet the subscript values
@@ -253,13 +254,13 @@ pub fn analyze(info: &LoopInfo, refs: &LoopRefs) -> DepAnalysis {
     let carried: BTreeSet<_> = refs
         .scalar_writes
         .intersection(&refs.scalar_reads)
-        .filter(|v| !refs.locals.contains(*v) && *v != &canon.var)
-        .cloned()
+        .filter(|v| !refs.locals.contains(*v) && **v != canon.var)
+        .copied()
         .collect();
     for var in carried {
-        match recognize_reduction(&var, &assigns) {
+        match recognize_reduction(var, &assigns) {
             Some(r) => {
-                if reduction_extra_uses(&var, &info.body) > 0 {
+                if reduction_extra_uses(var, &info.body) > 0 {
                     return reject("reduction value consumed inside the loop");
                 }
                 out.reductions.push(r);

@@ -19,6 +19,7 @@ use std::collections::BTreeMap;
 
 use crate::cparse::ast::*;
 use crate::ir::LoopAnalysis;
+use crate::util::intern::Symbol;
 
 /// Feature vector over a loop nest (the Deckard-style characteristic
 /// vector, adapted to MiniC).
@@ -118,19 +119,19 @@ pub fn fingerprint(la: &LoopAnalysis) -> Fingerprint {
     };
 
     // collect loop counter names in the nest (self + nested headers)
-    let mut counters: Vec<String> = Vec::new();
+    let mut counters: Vec<Symbol> = Vec::new();
     if let Some(c) = &la.info.canonical {
-        counters.push(c.var.clone());
+        counters.push(c.var);
     }
     for s in &la.info.body {
         s.walk(&mut |s| {
             if let Stmt::For { header, .. } = s {
                 if let Some(Stmt::Decl(d)) = header.init.as_deref() {
-                    counters.push(d.name.clone());
+                    counters.push(d.name);
                 } else if let Some(Stmt::Assign { target: LValue::Var(v), .. }) =
                     header.init.as_deref()
                 {
-                    counters.push(v.clone());
+                    counters.push(*v);
                 }
             }
         });
@@ -163,7 +164,7 @@ pub fn fingerprint(la: &LoopAnalysis) -> Fingerprint {
                     Expr::Index(_, idx) => {
                         let mut hits = 0usize;
                         for c in &counters {
-                            if expr_mentions(idx, c) {
+                            if expr_mentions(idx, *c) {
                                 hits += 1;
                             }
                         }
@@ -217,11 +218,11 @@ fn count_reductions(la: &LoopAnalysis) -> f64 {
     n.min(4) as f64
 }
 
-fn expr_mentions(e: &Expr, var: &str) -> bool {
+fn expr_mentions(e: &Expr, var: Symbol) -> bool {
     let mut f = false;
     e.walk(&mut |e| {
         if let Expr::Var(n) = e {
-            if n == var {
+            if *n == var {
                 f = true;
             }
         }

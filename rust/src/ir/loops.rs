@@ -5,6 +5,7 @@
 
 use crate::cparse::ast::*;
 use crate::cparse::error::Pos;
+use crate::util::intern::Symbol;
 
 /// Kind of loop statement.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,7 +20,7 @@ pub enum LoopKind {
 #[derive(Debug, Clone, PartialEq)]
 pub struct CanonicalLoop {
     /// The loop counter variable.
-    pub var: String,
+    pub var: Symbol,
     /// Initial counter value.
     pub lo: Expr,
     /// Loop bound.
@@ -38,7 +39,7 @@ pub struct LoopInfo {
     /// `for` or `while`.
     pub kind: LoopKind,
     /// Enclosing function name.
-    pub function: String,
+    pub function: Symbol,
     /// Nesting depth inside the function (0 = outermost loop).
     pub depth: u32,
     /// Immediately enclosing loop, if any.
@@ -70,17 +71,17 @@ fn canonicalize(header: &ForHeader) -> Option<CanonicalLoop> {
     // init: `v = lo` (assignment or declaration with init)
     let (var, lo) = match header.init.as_deref() {
         Some(Stmt::Assign { target: LValue::Var(v), op: AssignOp::Assign, value, .. }) => {
-            (v.clone(), value.clone())
+            (*v, value.clone())
         }
-        Some(Stmt::Decl(d)) => (d.name.clone(), d.init.clone()?),
+        Some(Stmt::Decl(d)) => (d.name, d.init.clone()?),
         _ => return None,
     };
     // cond: `v < hi` or `v <= hi`
     let (hi, inclusive) = match &header.cond {
-        Some(Expr::Binary(BinOp::Lt, a, b)) if **a == Expr::Var(var.clone()) => {
+        Some(Expr::Binary(BinOp::Lt, a, b)) if **a == Expr::Var(var) => {
             ((**b).clone(), false)
         }
-        Some(Expr::Binary(BinOp::Le, a, b)) if **a == Expr::Var(var.clone()) => {
+        Some(Expr::Binary(BinOp::Le, a, b)) if **a == Expr::Var(var) => {
             ((**b).clone(), true)
         }
         _ => return None,
@@ -92,7 +93,7 @@ fn canonicalize(header: &ForHeader) -> Option<CanonicalLoop> {
         Some(Stmt::Assign { target: LValue::Var(v), op: AssignOp::Assign, value, .. }) if *v == var => {
             match value {
                 Expr::Binary(BinOp::Add, a, b)
-                    if **a == Expr::Var(var.clone()) =>
+                    if **a == Expr::Var(var) =>
                 {
                     if let Expr::IntLit(k) = **b { k } else { return None }
                 }
@@ -117,7 +118,7 @@ fn count_stmts(body: &[Stmt]) -> usize {
 
 struct Walker {
     out: Vec<LoopInfo>,
-    function: String,
+    function: Symbol,
     stack: Vec<LoopId>,
 }
 
@@ -134,7 +135,7 @@ impl Walker {
                 self.push_loop(LoopInfo {
                     id: *id,
                     kind: LoopKind::For,
-                    function: self.function.clone(),
+                    function: self.function,
                     depth: self.stack.len() as u32,
                     parent: self.stack.last().copied(),
                     children: Vec::new(),
@@ -153,7 +154,7 @@ impl Walker {
                 self.push_loop(LoopInfo {
                     id: *id,
                     kind: LoopKind::While,
-                    function: self.function.clone(),
+                    function: self.function,
                     depth: self.stack.len() as u32,
                     parent: self.stack.last().copied(),
                     children: Vec::new(),
@@ -189,10 +190,14 @@ impl Walker {
 
 /// Extract every loop statement in the program, in source (LoopId) order.
 pub fn extract(program: &Program) -> Vec<LoopInfo> {
-    let mut w = Walker { out: Vec::new(), function: String::new(), stack: Vec::new() };
+    let mut w = Walker {
+        out: Vec::new(),
+        function: Symbol::intern(""),
+        stack: Vec::new(),
+    };
     for f in &program.functions {
         self_assert_stack_empty(&w);
-        w.function = f.name.clone();
+        w.function = f.name;
         w.visit_all(&f.body);
     }
     w.out.sort_by_key(|l| l.id);

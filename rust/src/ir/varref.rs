@@ -9,24 +9,30 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::cparse::ast::*;
+use crate::util::intern::Symbol;
 
 use super::loops::LoopInfo;
 
 /// Reference sets of one loop body (including nested loops).
+///
+/// Keys are interned [`Symbol`]s: membership tests and map lookups are
+/// integer comparisons, while `BTreeMap`/`BTreeSet` iteration stays in
+/// the lexicographic order the old `String` keys had (`Symbol`'s `Ord`
+/// compares resolved spellings).
 #[derive(Debug, Clone, Default)]
 pub struct LoopRefs {
     /// array name -> index expressions used in reads
-    pub array_reads: BTreeMap<String, Vec<Expr>>,
+    pub array_reads: BTreeMap<Symbol, Vec<Expr>>,
     /// array name -> index expressions used in writes
-    pub array_writes: BTreeMap<String, Vec<Expr>>,
+    pub array_writes: BTreeMap<Symbol, Vec<Expr>>,
     /// Scalars read anywhere in the body.
-    pub scalar_reads: BTreeSet<String>,
+    pub scalar_reads: BTreeSet<Symbol>,
     /// Scalars written anywhere in the body.
-    pub scalar_writes: BTreeSet<String>,
+    pub scalar_writes: BTreeSet<Symbol>,
     /// scalars declared inside the loop body (private per iteration)
-    pub locals: BTreeSet<String>,
+    pub locals: BTreeSet<Symbol>,
     /// called function names (including math builtins)
-    pub calls: BTreeSet<String>,
+    pub calls: BTreeSet<Symbol>,
 }
 
 /// Math builtins the interpreter / OpenCL / HLS all understand.
@@ -41,43 +47,43 @@ pub fn is_builtin(name: &str) -> bool {
 
 impl LoopRefs {
     /// All arrays touched (read or written).
-    pub fn arrays(&self) -> BTreeSet<String> {
+    pub fn arrays(&self) -> BTreeSet<Symbol> {
         self.array_reads
             .keys()
             .chain(self.array_writes.keys())
-            .cloned()
+            .copied()
             .collect()
     }
 
     /// Scalars read before any write and not declared locally —
     /// these must be passed *into* a generated kernel.
-    pub fn free_scalars(&self) -> BTreeSet<String> {
+    pub fn free_scalars(&self) -> BTreeSet<Symbol> {
         self.scalar_reads
             .union(&self.scalar_writes)
             .filter(|s| !self.locals.contains(*s))
-            .cloned()
+            .copied()
             .collect()
     }
 
     /// Non-builtin calls — a loop making these cannot be offloaded.
-    pub fn non_builtin_calls(&self) -> BTreeSet<String> {
+    pub fn non_builtin_calls(&self) -> BTreeSet<Symbol> {
         self.calls
             .iter()
-            .filter(|c| !is_builtin(c))
-            .cloned()
+            .filter(|c| !is_builtin(c.as_str()))
+            .copied()
             .collect()
     }
 
     fn read_expr(&mut self, e: &Expr) {
         e.walk(&mut |e| match e {
             Expr::Var(n) => {
-                self.scalar_reads.insert(n.clone());
+                self.scalar_reads.insert(*n);
             }
             Expr::Index(n, i) => {
-                self.array_reads.entry(n.clone()).or_default().push((**i).clone());
+                self.array_reads.entry(*n).or_default().push((**i).clone());
             }
             Expr::Call(f, _) => {
-                self.calls.insert(f.clone());
+                self.calls.insert(*f);
             }
             _ => {}
         });
@@ -86,7 +92,7 @@ impl LoopRefs {
     fn visit(&mut self, s: &Stmt) {
         match s {
             Stmt::Decl(d) => {
-                self.locals.insert(d.name.clone());
+                self.locals.insert(d.name);
                 if let Some(init) = &d.init {
                     self.read_expr(init);
                 }
@@ -95,17 +101,17 @@ impl LoopRefs {
                 self.read_expr(value);
                 match target {
                     LValue::Var(n) => {
-                        self.scalar_writes.insert(n.clone());
+                        self.scalar_writes.insert(*n);
                         // compound assignment also reads the target
                         if *op != AssignOp::Assign {
-                            self.scalar_reads.insert(n.clone());
+                            self.scalar_reads.insert(*n);
                         }
                     }
                     LValue::Index(n, i) => {
                         self.read_expr(i);
-                        self.array_writes.entry(n.clone()).or_default().push((**i).clone());
+                        self.array_writes.entry(*n).or_default().push((**i).clone());
                         if *op != AssignOp::Assign {
-                            self.array_reads.entry(n.clone()).or_default().push((**i).clone());
+                            self.array_reads.entry(*n).or_default().push((**i).clone());
                         }
                     }
                 }
@@ -156,7 +162,7 @@ pub fn collect(info: &LoopInfo) -> LoopRefs {
     let mut refs = LoopRefs::default();
     // the loop's own counter is a local of the loop for kernel purposes
     if let Some(c) = &info.canonical {
-        refs.locals.insert(c.var.clone());
+        refs.locals.insert(c.var);
         refs.read_expr(&c.lo);
         refs.read_expr(&c.hi);
     }
@@ -178,6 +184,10 @@ mod tests {
         collect(&l[idx])
     }
 
+    fn sym(n: &str) -> Symbol {
+        Symbol::intern(n)
+    }
+
     #[test]
     fn collects_array_reads_and_writes() {
         let r = refs_of(
@@ -185,9 +195,9 @@ mod tests {
              for (i = 0; i < n; i++) { a[i] = b[i] * 2.0; } }",
             0,
         );
-        assert!(r.array_writes.contains_key("a"));
-        assert!(r.array_reads.contains_key("b"));
-        assert!(!r.array_reads.contains_key("a"));
+        assert!(r.array_writes.contains_key(&sym("a")));
+        assert!(r.array_reads.contains_key(&sym("b")));
+        assert!(!r.array_reads.contains_key(&sym("a")));
         assert_eq!(r.arrays().len(), 2);
     }
 
@@ -198,8 +208,8 @@ mod tests {
              for (i = 0; i < n; i++) { a[i] += 1.0; } }",
             0,
         );
-        assert!(r.array_reads.contains_key("a"));
-        assert!(r.array_writes.contains_key("a"));
+        assert!(r.array_reads.contains_key(&sym("a")));
+        assert!(r.array_writes.contains_key(&sym("a")));
     }
 
     #[test]
@@ -209,10 +219,10 @@ mod tests {
              for (i = 0; i < n; i++) { float t; t = a[i]; a[i] = t * t; } }",
             0,
         );
-        assert!(r.locals.contains("t"));
-        assert!(r.locals.contains("i"), "loop counter is private");
-        assert!(!r.free_scalars().contains("t"));
-        assert!(r.free_scalars().contains("n"));
+        assert!(r.locals.contains(&sym("t")));
+        assert!(r.locals.contains(&sym("i")), "loop counter is private");
+        assert!(!r.free_scalars().contains(&sym("t")));
+        assert!(r.free_scalars().contains(&sym("n")));
     }
 
     #[test]
@@ -222,7 +232,7 @@ mod tests {
              for (i = 0; i < n; i++) { a[i] = sin(a[i]) + helper(i); } }",
             0,
         );
-        assert!(r.calls.contains("sin"));
+        assert!(r.calls.contains(&sym("sin")));
         assert_eq!(r.non_builtin_calls().into_iter().collect::<Vec<_>>(), vec!["helper"]);
     }
 
@@ -235,8 +245,8 @@ mod tests {
             0,
         );
         assert_eq!(r.arrays().len(), 3);
-        assert!(r.locals.contains("i"));
+        assert!(r.locals.contains(&sym("i")));
         // j is declared outside both loops, so it is free for the outer loop
-        assert!(r.free_scalars().contains("j"));
+        assert!(r.free_scalars().contains(&sym("j")));
     }
 }

@@ -16,6 +16,7 @@ use crate::cparse::ast::{LoopId, Type};
 use crate::cparse::pretty;
 use crate::cparse::Program;
 use crate::ir::LoopAnalysis;
+use crate::util::intern::Symbol;
 
 /// Shift-register depth used for reduction rewriting (fp32 add latency on
 /// Arria10 is ~3-4 cycles; 8 gives headroom, matching Intel's examples).
@@ -54,19 +55,19 @@ pub struct KernelSource {
 
 /// Map every name visible in `function` to its type (globals shadowed by
 /// params shadowed by locals — good enough for MiniC's flat scoping).
-pub fn type_env(program: &Program, function: &str) -> HashMap<String, Type> {
+pub fn type_env(program: &Program, function: Symbol) -> HashMap<Symbol, Type> {
     let mut env = HashMap::new();
     for g in &program.globals {
-        env.insert(g.name.clone(), g.ty.clone());
+        env.insert(g.name, g.ty.clone());
     }
-    if let Some(f) = program.function(function) {
+    if let Some(f) = program.function(function.as_str()) {
         for p in &f.params {
-            env.insert(p.name.clone(), p.ty.clone());
+            env.insert(p.name, p.ty.clone());
         }
         for s in &f.body {
             s.walk(&mut |s| {
                 if let crate::cparse::Stmt::Decl(d) = s {
-                    env.insert(d.name.clone(), d.ty.clone());
+                    env.insert(d.name, d.ty.clone());
                 }
             });
         }
@@ -90,7 +91,7 @@ pub fn generate_kernel(
     la: &LoopAnalysis,
     unroll: usize,
 ) -> KernelSource {
-    let env = type_env(program, &la.info.function);
+    let env = type_env(program, la.info.function);
     let name = format!("loop_{}", la.info.id.0);
 
     // -- arguments: every touched array, then every free scalar ----------
@@ -106,7 +107,7 @@ pub fn generate_kernel(
         };
         args.push(KernelArg {
             decl: format!("__global {}* restrict {}", ocl_scalar_type(&e), arr),
-            name: arr,
+            name: arr.to_string(),
             is_array: true,
             elem: e,
         });
@@ -115,7 +116,7 @@ pub fn generate_kernel(
         let ty = env.get(&s).cloned().unwrap_or(Type::Int);
         args.push(KernelArg {
             decl: format!("const {} {}", ocl_scalar_type(&ty), s),
-            name: s,
+            name: s.to_string(),
             is_array: false,
             elem: ty,
         });
@@ -126,7 +127,7 @@ pub fn generate_kernel(
     // shift-register reductions (II=1 idiom)
     let sr_reds: Vec<String> = la.deps.reductions.iter()
         .filter(|r| r.op == '+')
-        .map(|r| r.var.clone())
+        .map(|r| r.var.to_string())
         .collect();
     for var in &sr_reds {
         body.push_str(&format!(

@@ -1,0 +1,190 @@
+//! Global string interner: [`Symbol`] is a `u32` handle to a unique,
+//! leaked string.  Identifiers are interned once by the lexer and flow
+//! through the AST, the IR analyses, and the interpreter as plain
+//! integers — equality and hashing are integer operations, and the maps
+//! that used to key on `String` key on `Symbol` instead.
+//!
+//! Two properties are load-bearing for byte-identity of all downstream
+//! output (see DESIGN.md §3h):
+//!
+//! * `Ord` compares the *resolved strings* (with an id fast path for
+//!   equality), so every `BTreeMap<Symbol, _>` / `BTreeSet<Symbol>`
+//!   iterates in exactly the lexicographic order the `String`-keyed
+//!   maps did.  The interner guarantees distinct ids ⇔ distinct
+//!   strings, so the fast path agrees with the string comparison.
+//! * `Display`/`Debug` render the original spelling, so pretty-printed
+//!   source, kernels, and reports are unchanged.
+//!
+//! `Symbol` deliberately does **not** implement `Borrow<str>`: it
+//! hashes by id while `str` hashes by content, and a `Borrow` impl
+//! would silently break `HashMap` lookups.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Mutex, OnceLock};
+
+/// Interned identifier: a cheap, `Copy` handle to a unique string.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Symbol(u32);
+
+struct Interner {
+    map: HashMap<&'static str, u32>,
+    strs: Vec<&'static str>,
+}
+
+fn interner() -> &'static Mutex<Interner> {
+    static INTERNER: OnceLock<Mutex<Interner>> = OnceLock::new();
+    INTERNER.get_or_init(|| {
+        Mutex::new(Interner { map: HashMap::new(), strs: Vec::new() })
+    })
+}
+
+impl Symbol {
+    /// Intern `name`, returning the canonical handle for its spelling.
+    /// Interning the same spelling twice returns the same `Symbol`.
+    pub fn intern(name: &str) -> Symbol {
+        let mut it = interner().lock().expect("interner lock poisoned");
+        if let Some(&id) = it.map.get(name) {
+            return Symbol(id);
+        }
+        let id = u32::try_from(it.strs.len()).expect("interner overflow");
+        // Leak one copy per distinct spelling; identifiers are a small,
+        // bounded set for the process lifetime.
+        let leaked: &'static str = Box::leak(name.to_owned().into_boxed_str());
+        it.strs.push(leaked);
+        it.map.insert(leaked, id);
+        Symbol(id)
+    }
+
+    /// The original spelling this symbol was interned from.
+    pub fn as_str(self) -> &'static str {
+        interner().lock().expect("interner lock poisoned").strs[self.0 as usize]
+    }
+}
+
+impl Ord for Symbol {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Fast path: same id ⇔ same string (interner invariant), so the
+        // two branches can never disagree.
+        if self.0 == other.0 {
+            return std::cmp::Ordering::Equal;
+        }
+        self.as_str().cmp(other.as_str())
+    }
+}
+
+impl PartialOrd for Symbol {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl fmt::Display for Symbol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl fmt::Debug for Symbol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.as_str())
+    }
+}
+
+impl From<&str> for Symbol {
+    fn from(s: &str) -> Symbol {
+        Symbol::intern(s)
+    }
+}
+
+impl From<&String> for Symbol {
+    fn from(s: &String) -> Symbol {
+        Symbol::intern(s)
+    }
+}
+
+impl From<String> for Symbol {
+    fn from(s: String) -> Symbol {
+        Symbol::intern(&s)
+    }
+}
+
+impl PartialEq<str> for Symbol {
+    fn eq(&self, other: &str) -> bool {
+        self.as_str() == other
+    }
+}
+
+impl PartialEq<&str> for Symbol {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
+impl PartialEq<Symbol> for str {
+    fn eq(&self, other: &Symbol) -> bool {
+        self == other.as_str()
+    }
+}
+
+impl PartialEq<Symbol> for &str {
+    fn eq(&self, other: &Symbol) -> bool {
+        *self == other.as_str()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent() {
+        let a = Symbol::intern("alpha_interner_test");
+        let b = Symbol::intern("alpha_interner_test");
+        assert_eq!(a, b);
+        assert_eq!(a.as_str(), "alpha_interner_test");
+    }
+
+    #[test]
+    fn distinct_spellings_get_distinct_symbols() {
+        assert_ne!(Symbol::intern("intern_x"), Symbol::intern("intern_y"));
+    }
+
+    #[test]
+    fn ord_is_lexicographic_regardless_of_intern_order() {
+        // interned in reverse lexicographic order on purpose
+        let z = Symbol::intern("zz_intern_ord");
+        let a = Symbol::intern("aa_intern_ord");
+        let m = Symbol::intern("mm_intern_ord");
+        let mut v = [z, a, m];
+        v.sort();
+        let spelled: Vec<&str> = v.iter().map(|s| s.as_str()).collect();
+        assert_eq!(spelled, vec!["aa_intern_ord", "mm_intern_ord", "zz_intern_ord"]);
+    }
+
+    #[test]
+    fn btree_iteration_matches_string_order() {
+        use std::collections::BTreeSet;
+        let names = ["out", "acc", "in", "taps", "a0"];
+        let syms: BTreeSet<Symbol> = names.iter().map(|n| Symbol::intern(n)).collect();
+        let mut sorted = names.to_vec();
+        sorted.sort_unstable();
+        let resolved: Vec<&str> = syms.iter().map(|s| s.as_str()).collect();
+        assert_eq!(resolved, sorted);
+    }
+
+    #[test]
+    fn display_and_debug_render_the_spelling() {
+        let s = Symbol::intern("spelled_out");
+        assert_eq!(format!("{s}"), "spelled_out");
+        assert_eq!(format!("{s:?}"), "\"spelled_out\"");
+    }
+
+    #[test]
+    fn compares_with_plain_strs() {
+        let s = Symbol::intern("cmp_me");
+        assert!(s == "cmp_me");
+        assert!("cmp_me" == s);
+        assert!(s != "cmp_you");
+    }
+}

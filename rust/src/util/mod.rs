@@ -12,9 +12,12 @@
 //! * [`bench`] — tiny measurement harness (criterion stand-in) used by
 //!   `benches/*.rs`;
 //! * [`order`] — NaN-safe total-order comparators and the deterministic
-//!   winner-selection rule every selection hot path routes through.
+//!   winner-selection rule every selection hot path routes through;
+//! * [`intern`] — the global identifier interner ([`intern::Symbol`])
+//!   the whole analysis front end keys on.
 
 pub mod bench;
+pub mod intern;
 pub mod json;
 pub mod order;
 pub mod pool;

@@ -151,7 +151,7 @@ fn usage_and_io_errors_exit_2() {
 
 #[test]
 fn committed_repo_baselines_parse_and_pin_every_bench() {
-    // the five BENCH_*.json files at the repo root must stay parseable
+    // the six BENCH_*.json files at the repo root must stay parseable
     // and self-consistent (the `bench` field matches the filename)
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     for name in [
@@ -160,6 +160,7 @@ fn committed_repo_baselines_parse_and_pin_every_bench() {
         "funcblock_speedup",
         "fleet_throughput",
         "serve_daemon",
+        "hot_paths",
     ] {
         let path = root.join(format!("BENCH_{name}.json"));
         let text = std::fs::read_to_string(&path)

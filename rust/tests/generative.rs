@@ -231,6 +231,47 @@ fn fleet_aggregate_speedup_never_below_one_on_generated_programs() {
 }
 
 // ----------------------------------------------------------------
+// opt-in deep-program sweep: `FLOPT_GEN_DEEP=<max depth>` enables it
+// (off by default — CI's pinned pool stays exactly as it was).  Sweeps
+// nesting depths up to the knob, running each program on a 64 KiB
+// evaluation stack: the iterative interpreter machine must be
+// indifferent to program depth, whatever the host stack.
+#[test]
+fn deep_programs_run_on_a_tiny_stack_when_opted_in() {
+    let Some(max) = std::env::var("FLOPT_GEN_DEEP")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    else {
+        return;
+    };
+    for depth in [max / 4, max / 2, max] {
+        let depth = depth.max(1);
+        let src = gen::deep_source(depth);
+        std::thread::Builder::new()
+            .stack_size(64 * 1024 * 1024)
+            .spawn(move || {
+                let program = parse(&src).expect("deep program parses");
+                let mut it = flopt::interp::Interp::new(&program);
+                let out = std::thread::scope(|s| {
+                    std::thread::Builder::new()
+                        .stack_size(64 * 1024)
+                        .spawn_scoped(s, move || {
+                            it.run_main().expect("deep program runs");
+                            it.read_array("out").expect("out array")
+                        })
+                        .expect("spawn")
+                        .join()
+                        .expect("evaluation must not overflow 64 KiB")
+                });
+                assert_eq!(out, vec![depth as f64, (depth + 1) as f64], "depth {depth}");
+            })
+            .expect("spawn")
+            .join()
+            .unwrap_or_else(|_| panic!("deep sweep failed at depth {depth}"));
+    }
+}
+
+// ----------------------------------------------------------------
 // generator self-checks at the CI seed (byte determinism across pool
 // sizes is unit-tested in `apps::gen`; this pins it at the CI scale)
 #[test]

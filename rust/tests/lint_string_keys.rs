@@ -1,0 +1,81 @@
+//! Source lint: the analysis front end (`ir/`) and the interpreter
+//! (`interp/`) are `Symbol`-keyed by design — identifier maps on their
+//! hot paths hash a `u32`, never string bytes.  This test greps the
+//! sources so a `HashMap<String, _>` (or `&str`-keyed) map can't creep
+//! back in unnoticed; a genuinely cold, deliberate exception can opt
+//! out with a `lint-allow: string-key` comment on the same line.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Directories whose identifier maps must be `Symbol`-keyed.
+const SCANNED_DIRS: &[&str] = &["rust/src/ir", "rust/src/interp"];
+
+/// Map/set types keyed by owned or borrowed strings (matched with all
+/// whitespace stripped, so spacing variants can't dodge the lint).
+const BANNED: &[&str] = &[
+    "HashMap<String",
+    "BTreeMap<String",
+    "HashSet<String",
+    "BTreeSet<String",
+    "HashMap<&",
+    "BTreeMap<&",
+    "HashSet<&",
+    "BTreeSet<&",
+];
+
+const ALLOW_MARKER: &str = "lint-allow: string-key";
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries =
+        fs::read_dir(dir).unwrap_or_else(|e| panic!("read_dir {}: {e}", dir.display()));
+    for entry in entries {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn ir_and_interp_hot_paths_stay_symbol_keyed() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut files = Vec::new();
+    for dir in SCANNED_DIRS {
+        rs_files(&root.join(dir), &mut files);
+    }
+    assert!(
+        files.len() >= 5,
+        "lint scanned only {} files — directory layout changed?",
+        files.len()
+    );
+
+    let mut violations = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        for (lineno, line) in src.lines().enumerate() {
+            if line.contains(ALLOW_MARKER) {
+                continue;
+            }
+            let flat: String = line.chars().filter(|c| !c.is_whitespace()).collect();
+            if BANNED.iter().any(|b| flat.contains(b)) {
+                violations.push(format!(
+                    "{}:{}: {}",
+                    path.display(),
+                    lineno + 1,
+                    line.trim()
+                ));
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "string-keyed map on a Symbol-keyed hot path — key by \
+         `crate::util::intern::Symbol` instead (or justify with a \
+         `{ALLOW_MARKER}` comment):\n{}",
+        violations.join("\n")
+    );
+}

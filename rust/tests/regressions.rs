@@ -93,6 +93,42 @@ fn fixtures_run_under_the_interpreter() {
 }
 
 #[test]
+fn deep_nesting_runs_on_a_tiny_thread_stack() {
+    // 500 nested blocks each bumping a counter, plus a 500-deep
+    // parenthesized sum.  The old recursive evaluator burned a host
+    // stack frame per nesting level and overflowed far shallower than
+    // this; the iterative machine keeps its continuation/operand stacks
+    // on the heap, so execution must complete on a 64 KiB thread stack.
+    // Parsing and lowering still recurse over the AST, so they get a
+    // deliberately roomy stack — only `run_main` moves to the tiny one.
+    const DEPTH: usize = 500;
+    let src = flopt::apps::gen::deep_source(DEPTH);
+    std::thread::Builder::new()
+        .name("deep-parse".into())
+        .stack_size(32 * 1024 * 1024)
+        .spawn(move || {
+            let program = parse(&src).expect("deep fixture parses");
+            let mut it = flopt::interp::Interp::new(&program);
+            let out = std::thread::scope(|s| {
+                std::thread::Builder::new()
+                    .name("tiny-stack-eval".into())
+                    .stack_size(64 * 1024)
+                    .spawn_scoped(s, move || {
+                        it.run_main().expect("deep program runs");
+                        it.read_array("out").expect("out array")
+                    })
+                    .expect("spawn tiny-stack thread")
+                    .join()
+                    .expect("evaluation must not overflow 64 KiB")
+            });
+            assert_eq!(out, vec![DEPTH as f64, (DEPTH + 1) as f64]);
+        })
+        .expect("spawn parse thread")
+        .join()
+        .expect("deep-nest fixture");
+}
+
+#[test]
 fn search_completes_end_to_end_on_both_fixtures() {
     // neither fixture may panic the pipeline; whatever wins (a block
     // offer or staying on the CPU) must never lose to all-CPU

@@ -51,6 +51,39 @@ fn loop_ids_survive_the_round_trip() {
 }
 
 #[test]
+fn interned_symbols_render_their_original_spelling() {
+    // the AST stores identifiers as interned `Symbol`s; printing must
+    // resolve every one back to the source spelling, byte for byte —
+    // the interner may never canonicalize, truncate, or rename
+    let src = "float weights_Out1[8];\n\
+               float _tmp[8];\n\n\
+               void main() {\n\
+               \x20   int loopVar_2;\n\
+               \x20   for (loopVar_2 = 0; loopVar_2 < 8; loopVar_2++) {\n\
+               \x20       weights_Out1[loopVar_2] = _tmp[loopVar_2] * 2.0;\n\
+               \x20   }\n\
+               }\n";
+    let p = parse(src).expect("parse");
+    let printed = pretty::program(&p);
+    for name in ["weights_Out1", "_tmp", "loopVar_2", "main"] {
+        assert!(
+            printed.contains(name),
+            "printed source lost the spelling of `{name}`:\n{printed}"
+        );
+        let sym = flopt::util::intern::Symbol::intern(name);
+        assert_eq!(sym.as_str(), name, "Symbol round-trip for `{name}`");
+        assert_eq!(sym.to_string(), name, "Display for `{name}`");
+    }
+    // and the printed spelling reparses to the same interned symbols
+    let p2 = parse(&printed).expect("reparse");
+    assert_eq!(
+        strip_positions(&p),
+        strip_positions(&p2),
+        "spelling-preserving print must reparse identically"
+    );
+}
+
+#[test]
 fn round_tripped_programs_behave_identically() {
     // the reparse of the printed source must produce the same dynamic
     // profile (trip counts) as the original at test scale
