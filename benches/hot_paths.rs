@@ -16,6 +16,7 @@
 //! ```
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use flopt::apps;
 use flopt::backend::FPGA;
@@ -24,6 +25,7 @@ use flopt::coordinator::pipeline::{analyze_app, search_with_analysis};
 use flopt::coordinator::verify_env::VerifyEnv;
 use flopt::cpu::XEON_3104;
 use flopt::fpga::ARRIA10_GX;
+use flopt::metrics::SimClock;
 use flopt::runtime::{default_artifact_dir, Runtime};
 use flopt::util::bench::{fmt_s, parse_bench_args, time_it, Timing};
 use flopt::util::json::{self, Json};
@@ -130,6 +132,30 @@ fn main() {
             Json::Num(trace.compile_hours),
         );
     }
+
+    // tracing tax: the identical search on a traced vs an untraced
+    // clock.  The ratio (not the raw medians — jitter hits both sides
+    // alike) is pinned at <= 1.05 in BENCH_hot_paths.json, gating the
+    // observability layer's overhead on the search hot path at 5%.
+    let obs_iters = if opts.test_scale { 5 } else { 10 };
+    let traced = time_it(obs_iters, || {
+        let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg.clone());
+        search_with_analysis(app, &analysis, &env, &cfg).unwrap()
+    });
+    section("search (traced clock)", &traced, &mut rows);
+    let untraced = time_it(obs_iters, || {
+        let clock = Arc::new(SimClock::new_untraced(cfg.compile_parallelism));
+        let env = VerifyEnv::with_clock(&FPGA, &XEON_3104, cfg.clone(), clock);
+        search_with_analysis(app, &analysis, &env, &cfg).unwrap()
+    });
+    section("search (untraced clock)", &untraced, &mut rows);
+    let overhead = if untraced.median_s > 0.0 {
+        traced.median_s / untraced.median_s
+    } else {
+        1.0
+    };
+    println!("{:<35}{:>11.3}x", "obs overhead (traced/untraced):", overhead);
+    metrics.insert("obs_overhead".to_string(), Json::Num(overhead));
 
     let t = time_it(3, || {
         let mut it = app.interp(&program, opts.test_scale);

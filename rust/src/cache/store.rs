@@ -51,7 +51,7 @@ use super::codec;
 use super::key::CacheKey;
 
 /// Hit/miss counters (diagnostics; not part of any cache key).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Artifacts served from memory.
     pub mem_hits: u64,

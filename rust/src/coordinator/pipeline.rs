@@ -277,6 +277,7 @@ pub fn charge_analysis(
     cpu: &crate::cpu::CpuModel,
     analysis: &AppAnalysis,
 ) {
+    let sp = clock.span("stage.analyze", "pipeline");
     // Step 1: code analysis (sim: parse + libClang-equivalent walk)
     clock.advance_serial("code analysis", 30.0);
     // Step 2: profiling + intensity analysis (sim: one instrumented run
@@ -285,6 +286,14 @@ pub fn charge_analysis(
         "intensity analysis",
         120.0 + cpu.program_time_s(&analysis.profile),
     );
+    clock.span_end(sp);
+}
+
+/// Record a cache hit on the clock's recorder: an instant marker span
+/// plus a counter under the same dotted name (`cache.hit.<artifact>`).
+pub(crate) fn cache_hit(clock: &crate::metrics::SimClock, name: &str) {
+    clock.mark(name, "cache");
+    clock.obs().count(name, 1);
 }
 
 /// Run the paper's full offload search for one app.
@@ -300,8 +309,10 @@ pub fn offload_search(
 ) -> crate::Result<SearchTrace> {
     let trace_key = cache::trace_key(app, test_scale, env.backend, env.config());
     if let Some(t) = env.cache.get_trace(trace_key) {
+        cache_hit(&env.clock, "cache.hit.trace");
         return Ok(t);
     }
+    env.clock.obs().count("cache.miss.trace", 1);
     let cfg: SearchConfig = env.config().clone();
     let analysis = stage_analyze(app, test_scale, &env.cache, env.cpu, Some(&env.clock))?;
     let mut t = search_with_analysis(app, &analysis, env, &cfg)?;
@@ -330,7 +341,10 @@ fn stamp_canonical_times(
     analysis_cost: Option<(&crate::cpu::CpuModel, &AppAnalysis)>,
     lanes: usize,
 ) {
-    let clock = crate::metrics::SimClock::new(lanes.max(1));
+    // untraced: this clock exists only to total the canonical charges —
+    // the spans for the work live on the recorder of the clock that
+    // actually performed it
+    let clock = crate::metrics::SimClock::new_untraced(lanes.max(1));
     if let Some((cpu, analysis)) = analysis_cost {
         charge_analysis(&clock, cpu, analysis);
     }
@@ -374,7 +388,10 @@ pub fn search_with_analysis(
 
     // ---- intensity cut (top a): pure, always recomputed ----------------
     let cut = if loops_enabled {
-        stage_intensity_narrow(analysis, env.backend, cfg.a_intensity)
+        let sp = env.clock.span("stage.intensity_narrow", "pipeline");
+        let cut = stage_intensity_narrow(analysis, env.backend, cfg.a_intensity);
+        env.clock.span_end(sp);
+        cut
     } else {
         IntensityCut { top_a: Vec::new() }
     };
@@ -382,24 +399,38 @@ pub fn search_with_analysis(
     // ---- kernel generation + backend pre-compile (minutes each) --------
     let pre_key = cache::precompile_key(app, analysis, env.backend, cfg);
     let pre = match env.cache.get_precompile(pre_key) {
-        Some(p) => p,
+        Some(p) => {
+            cache_hit(&env.clock, "cache.hit.precompile");
+            p
+        }
         None => {
+            env.clock.obs().count("cache.miss.precompile", 1);
+            let sp = env.clock.span("stage.precompile", "pipeline");
             let p = stage_precompile(analysis, &cut, env.backend, cfg.b_unroll);
             charge_precompile(&env.clock, &p);
+            env.clock.span_end(sp);
             env.cache.put_precompile(pre_key, &p);
             p
         }
     };
 
     // ---- resource-efficiency cut (top c): pure --------------------------
+    let sp = env.clock.span("stage.efficiency_narrow", "pipeline");
     let eff = stage_efficiency_narrow(&pre, cfg.c_efficiency);
+    env.clock.span_end(sp);
 
     // ---- two measured rounds on the verification environment ------------
     let meas_key = cache::measure_key(app, analysis, env.backend, cfg);
     let meas = match env.cache.get_measure(meas_key) {
-        Some(m) => m,
+        Some(m) => {
+            cache_hit(&env.clock, "cache.hit.measure");
+            m
+        }
         None => {
+            env.clock.obs().count("cache.miss.measure", 1);
+            let sp = env.clock.span("stage.measure_rounds", "pipeline");
             let m = stage_measure_rounds(analysis, &pre, &eff, env, cfg);
+            env.clock.span_end(sp);
             env.cache.put_measure(meas_key, &m);
             m
         }
@@ -411,10 +442,18 @@ pub fn search_with_analysis(
     } else {
         let blocks_key = cache::blocks_key(app, analysis, env.backend, cfg);
         match env.cache.get_blocks(blocks_key) {
-            Some(b) => b,
+            Some(b) => {
+                cache_hit(&env.clock, "cache.hit.blocks");
+                b
+            }
             None => {
+                env.clock.obs().count("cache.miss.blocks", 1);
+                let sp = env.clock.span("stage.block_narrow", "pipeline");
                 let offers = stage_block_narrow(analysis, env.backend, env.cpu, cfg.block_mode);
+                env.clock.span_end(sp);
+                let sp = env.clock.span("stage.measure_blocks", "pipeline");
                 let b = stage_measure_blocks(analysis, &pre, &meas, &offers, env, cfg);
+                env.clock.span_end(sp);
                 env.cache.put_blocks(blocks_key, &b);
                 b
             }
@@ -422,6 +461,7 @@ pub fn search_with_analysis(
     };
 
     // ---- solution --------------------------------------------------------
+    let sp = env.clock.span("stage.select", "pipeline");
     let mut t = stage_select(
         analysis,
         env.backend.destination(),
@@ -433,6 +473,7 @@ pub fn search_with_analysis(
     );
     t.block_mode = cfg.block_mode;
     stamp_canonical_times(&mut t, None, cfg.compile_parallelism);
+    env.clock.span_end(sp);
     Ok(t)
 }
 

@@ -120,10 +120,14 @@ pub fn stage_analyze(
 ) -> crate::Result<Arc<AppAnalysis>> {
     let key = cache::analyze_key(app, test_scale);
     if let Some(a) = cache.get_analysis(key) {
+        if let Some(clock) = clock {
+            super::pipeline::cache_hit(clock, "cache.hit.analysis");
+        }
         return Ok(a);
     }
     let analysis = Arc::new(analyze_app(app, test_scale)?);
     if let Some(clock) = clock {
+        clock.obs().count("cache.miss.analysis", 1);
         charge_analysis(clock, cpu, &analysis);
     }
     cache.put_analysis(key, Arc::clone(&analysis));

@@ -233,8 +233,10 @@ pub fn fleet_search(
     let backend = &FPGA;
     let key = cache::fleet_key(apps, test_scale, backend, cfg, boards);
     if let Some(r) = service.cache().get_fleet(key) {
+        crate::coordinator::pipeline::cache_hit(service.clock(), "cache.hit.fleet");
         return Ok(r);
     }
+    service.clock().obs().count("cache.miss.fleet", 1);
 
     // per-app winners through the batch service (shared clock + cache).
     // The service's store is always live — `BatchService::new` creates a
@@ -280,18 +282,33 @@ pub fn fleet_search(
         .enumerate()
         .map(|(i, t)| tenant_from_trace(t, device, i))
         .collect();
+    let pack_span = service.clock().span("fleet.pack", "fleet");
     let outcome = pack::first_fit_decreasing(&demands, boards, cfg.resource_cap, device);
+    service.clock().span_end(pack_span);
 
     // every bitstream swap is real compile-farm work on the shared clock
+    let mut reconfigs: u64 = 0;
     for (di, p) in outcome.placements.iter().enumerate() {
         if let Placement::Placed { reconfig_s, .. } = p {
             if *reconfig_s > 0.0 {
+                reconfigs += 1;
                 service.clock().schedule_compile(
                     &format!("reconfig {}", demands[di].app_name),
                     *reconfig_s,
                 );
             }
         }
+    }
+    {
+        let obs = service.clock().obs();
+        obs.count("fleet.tenants", demands.len() as u64);
+        let placed = outcome
+            .placements
+            .iter()
+            .filter(|p| matches!(p, Placement::Placed { .. }))
+            .count();
+        obs.count("fleet.packed_tenants", placed as u64);
+        obs.count("fleet.reconfigs", reconfigs);
     }
 
     // canonical automation hours: the artifact-derived cost of the

@@ -39,6 +39,7 @@ pub mod intensity;
 pub mod interp;
 pub mod ir;
 pub mod metrics;
+pub mod obs;
 pub mod opencl;
 pub mod runtime;
 pub mod serve;

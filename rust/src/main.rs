@@ -34,6 +34,10 @@
 //! searches burn zero additional simulated compile-hours; `--no-cache`
 //! disables artifact reuse entirely.  `--pool N` sets the batch
 //! service's worker count (output is identical for any pool size).
+//! Observability: `--trace-out <file>` writes the deterministic span
+//! log (Chrome `trace_event` JSON when the path ends in `.json`, JSON
+//! lines otherwise); `--metrics-out <file>` on `batch`/`serve` writes a
+//! Prometheus-style metrics snapshot (see DESIGN.md §3i).
 //!
 //! `flopt --target mixed` (no app) runs **all** registered apps through
 //! both backends on one shared simulated clock and reports the winning
@@ -88,6 +92,9 @@ fn usage() -> ! {
          \x20     --requests N --rate R --tenants N --epoch-hours H --no-churn\n\
          \x20     --quota N --drr-quantum Q --cache-budget BYTES\n\
          \x20     --cache-ttl-hours H --trace <file> (serve only)\n\
+         \x20     --trace-out <file> (span log: .json = Chrome trace_event,\n\
+         \x20     \x20 else JSON lines) --metrics-out <file> (batch/serve:\n\
+         \x20     \x20 Prometheus-style metrics snapshot)\n\
          (`flopt --target mixed` with no app searches all registered apps\n\
          \x20on one shared clock and reports the winning destination per app;\n\
          \x20`flopt batch --target mixed` submits every app x {{fpga,gpu}})"
@@ -117,6 +124,9 @@ struct Opts {
     cache_budget: Option<u64>,
     cache_ttl_hours: Option<f64>,
     trace: Option<String>,
+    // observability sinks (DESIGN.md §3i)
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
 }
 
 /// A flag was given without its required value: name the flag and exit 2
@@ -154,6 +164,8 @@ fn parse_opts(args: &[String]) -> Opts {
     let mut cache_budget: Option<u64> = None;
     let mut cache_ttl_hours: Option<f64> = None;
     let mut trace: Option<String> = None;
+    let mut trace_out: Option<String> = None;
+    let mut metrics_out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         let take = |i: &mut usize, flag: &str| -> usize {
@@ -237,6 +249,16 @@ fn parse_opts(args: &[String]) -> Opts {
                 let Some(v) = args.get(i) else { missing_value("--trace") };
                 trace = Some(v.clone());
             }
+            "--trace-out" => {
+                i += 1;
+                let Some(v) = args.get(i) else { missing_value("--trace-out") };
+                trace_out = Some(v.clone());
+            }
+            "--metrics-out" => {
+                i += 1;
+                let Some(v) = args.get(i) else { missing_value("--metrics-out") };
+                metrics_out = Some(v.clone());
+            }
             s if !s.starts_with('-') && app.is_none() => app = Some(s.to_string()),
             _ => usage(),
         }
@@ -263,7 +285,36 @@ fn parse_opts(args: &[String]) -> Opts {
         cache_budget,
         cache_ttl_hours,
         trace,
+        trace_out,
+        metrics_out,
     }
+}
+
+/// Honor `--trace-out`: write the span log accumulated on `rec`
+/// (`.json` selects Chrome `trace_event` format, anything else the
+/// JSON-lines log).  A command that never advances a clock writes an
+/// empty-but-valid log.
+fn export_trace(opts: &Opts, rec: &flopt::obs::Recorder) -> flopt::Result<()> {
+    if let Some(path) = &opts.trace_out {
+        flopt::obs::export::write_trace(path, rec)
+            .map_err(|e| anyhow::anyhow!("cannot write --trace-out {path}: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Honor `--metrics-out` (batch/serve): write the Prometheus-style
+/// snapshot, folding the store's [`flopt::cache::CacheStats`] into the
+/// counter section.
+fn export_metrics(
+    opts: &Opts,
+    rec: &flopt::obs::Recorder,
+    cache: Option<&flopt::cache::CacheStats>,
+) -> flopt::Result<()> {
+    if let Some(path) = &opts.metrics_out {
+        flopt::obs::export::write_metrics(path, rec, cache)
+            .map_err(|e| anyhow::anyhow!("cannot write --metrics-out {path}: {e}"))?;
+    }
+    Ok(())
 }
 
 /// The artifact cache this invocation routes searches through.
@@ -398,6 +449,7 @@ fn main() -> flopt::Result<()> {
                         .unwrap_or_default()
                 );
             }
+            export_trace(&opts, &flopt::obs::Recorder::new(true))?;
         }
         "env" => {
             println!("{}", fig3_table());
@@ -405,6 +457,7 @@ fn main() -> flopt::Result<()> {
                 println!("{:<5} model: {}", b.name(), b.description());
             }
             println!("CPU   model: {}", XEON_3104.name);
+            export_trace(&opts, &flopt::obs::Recorder::new(true))?;
         }
         "analyze" => {
             let app = get_app(&opts);
@@ -440,6 +493,7 @@ fn main() -> flopt::Result<()> {
                 opts.cfg.a_intensity,
                 top.iter().map(|l| l.id.to_string()).collect::<Vec<_>>()
             );
+            export_trace(&opts, &flopt::obs::Recorder::new(true))?;
         }
         "offload" => match opts.target {
             Target::Fpga => {
@@ -448,18 +502,29 @@ fn main() -> flopt::Result<()> {
                     .with_cache(build_cache(&opts));
                 let trace = offload_search(app, &env, !opts.full_scale)?;
                 println!("{}", trace.render());
+                export_trace(&opts, env.clock.obs())?;
             }
             Target::Gpu => {
                 let app = get_app(&opts);
                 let store = build_cache(&opts);
+                let clock =
+                    Arc::new(flopt::metrics::SimClock::new(opts.cfg.compile_parallelism.max(1)));
                 let key =
                     cache::destination_key(app, !opts.full_scale, &backend::GPU, &opts.cfg);
                 if let Some(ds) = store.get_destination(key) {
+                    clock.mark("cache.hit.destination", "cache");
+                    clock.obs().count("cache.hit.destination", 1);
                     println!("{}", ds.render());
                     println!("automation time: 0.0 h simulated (served from cache)");
                 } else {
-                    let env = VerifyEnv::new(&backend::GPU, &XEON_3104, opts.cfg.clone())
-                        .with_cache(Arc::clone(&store));
+                    clock.obs().count("cache.miss.destination", 1);
+                    let env = VerifyEnv::with_clock(
+                        &backend::GPU,
+                        &XEON_3104,
+                        opts.cfg.clone(),
+                        Arc::clone(&clock),
+                    )
+                    .with_cache(Arc::clone(&store));
                     let analysis = analyze_app(app, !opts.full_scale)?;
                     charge_analysis(&env.clock, env.cpu, &analysis);
                     let ds = destination_search(app, &analysis, &env, &opts.cfg)?;
@@ -470,6 +535,7 @@ fn main() -> flopt::Result<()> {
                         env.clock.total_hours()
                     );
                 }
+                export_trace(&opts, clock.obs())?;
             }
             Target::Mixed => {
                 // one app when named, the whole registry otherwise —
@@ -496,6 +562,7 @@ fn main() -> flopt::Result<()> {
                     "total automation time (shared clock): {:.1} h simulated",
                     traces.last().map(|t| t.sim_hours).unwrap_or(0.0)
                 );
+                export_trace(&opts, service.clock().obs())?;
             }
         },
         "batch" => {
@@ -525,6 +592,8 @@ fn main() -> flopt::Result<()> {
                     .with_cache(build_cache(&opts));
             let report = service.run(&requests)?;
             print!("{}", report.render());
+            export_trace(&opts, service.clock().obs())?;
+            export_metrics(&opts, service.clock().obs(), Some(&report.cache))?;
         }
         "fleet" => {
             // multi-tenant placement: every app's winner onto a bounded
@@ -545,6 +614,7 @@ fn main() -> flopt::Result<()> {
                 !opts.full_scale,
             )?;
             print!("{}", report.render());
+            export_trace(&opts, service.clock().obs())?;
         }
         "opencl" => {
             let app = get_app(&opts);
@@ -566,6 +636,7 @@ fn main() -> flopt::Result<()> {
                 }
                 None => println!("no improving pattern found"),
             }
+            export_trace(&opts, env.clock.obs())?;
         }
         "verify" => {
             let app = get_app(&opts);
@@ -581,6 +652,7 @@ fn main() -> flopt::Result<()> {
                 check.max_abs_err_vs_cpu_artifact,
                 if check.passed { "PASS" } else { "FAIL" }
             );
+            export_trace(&opts, env.clock.obs())?;
             if !check.passed {
                 std::process::exit(1);
             }
@@ -638,6 +710,7 @@ fn main() -> flopt::Result<()> {
                     }
                 }
             }
+            export_trace(&opts, &flopt::obs::Recorder::new(true))?;
         }
         "adapt" => {
             let app = get_app(&opts);
@@ -647,6 +720,7 @@ fn main() -> flopt::Result<()> {
             let trace = offload_search(app, &env, !opts.full_scale)?;
             let Some(best) = &trace.best else {
                 println!("no improving pattern — nothing to deploy");
+                export_trace(&opts, env.clock.obs())?;
                 return Ok(());
             };
             println!("solution pattern: {} ({:.2}x)", best.pattern, best.speedup);
@@ -682,6 +756,7 @@ fn main() -> flopt::Result<()> {
                     if c.passed { "PASS" } else { "FAIL" }
                 );
             }
+            export_trace(&opts, env.clock.obs())?;
         }
         "serve" => {
             // persistent offload daemon on simulated time: arrivals,
@@ -715,8 +790,10 @@ fn main() -> flopt::Result<()> {
                 arrivals,
                 ..flopt::serve::ServeConfig::default()
             };
-            let report = flopt::serve::run_serve(&sc, build_cache(&opts))?;
+            let (report, clock) = flopt::serve::run_serve_with_clock(&sc, build_cache(&opts))?;
             print!("{}", report.render());
+            export_trace(&opts, clock.obs())?;
+            export_metrics(&opts, clock.obs(), Some(&report.cache))?;
         }
         "gen" => {
             // seeded MiniC corpus on stdout: program `i` depends only on
@@ -727,6 +804,7 @@ fn main() -> flopt::Result<()> {
                 }
                 print!("{}", apps::gen::gen_source(opts.seed, idx as u64));
             }
+            export_trace(&opts, &flopt::obs::Recorder::new(true))?;
         }
         "compare" => {
             let app = get_app(&opts);
@@ -737,10 +815,10 @@ fn main() -> flopt::Result<()> {
                 "{:<12} {:>9} {:>8} {:>14}",
                 "method", "speedup", "evals", "compile-hours"
             );
+            let proposed_env = VerifyEnv::new(be, &XEON_3104, opts.cfg.clone())
+                .with_cache(build_cache(&opts));
             {
-                let env = VerifyEnv::new(be, &XEON_3104, opts.cfg.clone())
-                    .with_cache(build_cache(&opts));
-                let t = search_with_analysis(app, &analysis, &env, &opts.cfg)?;
+                let t = search_with_analysis(app, &analysis, &proposed_env, &opts.cfg)?;
                 println!(
                     "{:<12} {:>9.2} {:>8} {:>14.1}",
                     "proposed",
@@ -776,6 +854,7 @@ fn main() -> flopt::Result<()> {
                     out.compile_hours
                 );
             }
+            export_trace(&opts, proposed_env.clock.obs())?;
         }
         _ => usage(),
     }

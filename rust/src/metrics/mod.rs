@@ -4,14 +4,25 @@
 //! ≈half a day for 4 patterns) is tracked on a simulated clock, decoupled
 //! from the milliseconds the simulators actually take.  The compile farm
 //! models makespan over `lanes` parallel compile slots (paper: 1 lane).
+//!
+//! Every clock carries an [`obs::Recorder`] (DESIGN.md §3i): direct
+//! charges double as spans on the simulated timeline (serial work on
+//! the wall-clock axis, compile jobs on their lane's occupancy axis),
+//! while [`SimClock::replay`] re-accounts time *silently* — replayed
+//! work was already recorded by the clock that performed it, and the
+//! batch service folds those recorders in with
+//! [`obs::Recorder::merge_from`] instead of re-emitting spans.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+use crate::obs::{self, Recorder};
+use crate::util::intern::Symbol;
 
 /// A named simulated-time event.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct Event {
-    /// What the time was spent on.
-    pub label: String,
+    /// What the time was spent on (interned — replay never reallocates).
+    pub label: Symbol,
     /// Simulated duration in seconds.
     pub sim_seconds: f64,
     /// lane the event ran on (compile farm), 0 for serial phases
@@ -24,6 +35,7 @@ pub struct Event {
 #[derive(Debug)]
 pub struct SimClock {
     inner: Mutex<Inner>,
+    obs: Arc<Recorder>,
 }
 
 #[derive(Debug)]
@@ -38,6 +50,18 @@ struct Inner {
 impl SimClock {
     /// A clock with `lanes` parallel compile slots (`lanes >= 1`).
     pub fn new(lanes: usize) -> Self {
+        Self::with_recorder(lanes, Arc::new(Recorder::new(true)))
+    }
+
+    /// A clock whose recorder is disabled: every span/metric call is a
+    /// cheap no-op.  The `obs_overhead` bench prices tracing by running
+    /// the same search on a traced and an untraced clock.
+    pub fn new_untraced(lanes: usize) -> Self {
+        Self::with_recorder(lanes, Arc::new(Recorder::new(false)))
+    }
+
+    /// A clock sharing an existing recorder.
+    pub fn with_recorder(lanes: usize, obs: Arc<Recorder>) -> Self {
         assert!(lanes >= 1);
         Self {
             inner: Mutex::new(Inner {
@@ -45,18 +69,44 @@ impl SimClock {
                 serial: 0.0,
                 events: Vec::new(),
             }),
+            obs,
         }
     }
 
-    /// Record serial work (code analysis, precompile, measurement, ...).
-    pub fn advance_serial(&self, label: &str, sim_seconds: f64) {
-        let mut g = self.inner.lock().expect("poisoned");
-        g.serial += sim_seconds;
-        g.events.push(Event { label: label.into(), sim_seconds, lane: 0, compile: false });
+    /// The clock's span/metrics recorder.
+    pub fn obs(&self) -> &Arc<Recorder> {
+        &self.obs
     }
 
-    /// Schedule a compile job on the earliest-free lane; returns the lane.
-    pub fn schedule_compile(&self, label: &str, sim_seconds: f64) -> usize {
+    /// Open a span at the current simulated time (close it with
+    /// [`SimClock::span_end`]).
+    pub fn span(&self, name: &str, cat: &str) -> obs::OpenSpan {
+        self.obs.begin(name, cat, self.total_seconds())
+    }
+
+    /// Close a span opened by [`SimClock::span`] at the current
+    /// simulated time.
+    pub fn span_end(&self, span: obs::OpenSpan) {
+        self.obs.end(span, self.total_seconds());
+    }
+
+    /// Record an instant marker span at the current simulated time
+    /// (cache hits, admission decisions, …).
+    pub fn mark(&self, name: &str, cat: &str) {
+        self.obs.mark(name, cat, self.total_seconds());
+    }
+
+    fn charge_serial(&self, label: Symbol, sim_seconds: f64, trace: bool) {
+        let mut g = self.inner.lock().expect("poisoned");
+        if trace {
+            let start = g.serial + g.lanes.iter().cloned().fold(0.0, f64::max);
+            self.obs.record(label, "clock.serial", start, sim_seconds, 0);
+        }
+        g.serial += sim_seconds;
+        g.events.push(Event { label, sim_seconds, lane: 0, compile: false });
+    }
+
+    fn charge_compile(&self, label: Symbol, sim_seconds: f64, trace: bool) -> usize {
         let mut g = self.inner.lock().expect("poisoned");
         // total_cmp: lane times are always finite, but the scheduler must
         // never be able to panic; ties keep the first (lowest-index) lane
@@ -67,9 +117,24 @@ impl SimClock {
             .min_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap();
+        if trace {
+            let start = g.lanes[lane];
+            self.obs
+                .record(label, "clock.compile", start, sim_seconds, lane as u32 + 1);
+        }
         g.lanes[lane] += sim_seconds;
-        g.events.push(Event { label: label.into(), sim_seconds, lane, compile: true });
+        g.events.push(Event { label, sim_seconds, lane, compile: true });
         lane
+    }
+
+    /// Record serial work (code analysis, precompile, measurement, ...).
+    pub fn advance_serial(&self, label: &str, sim_seconds: f64) {
+        self.charge_serial(Symbol::intern(label), sim_seconds, true);
+    }
+
+    /// Schedule a compile job on the earliest-free lane; returns the lane.
+    pub fn schedule_compile(&self, label: &str, sim_seconds: f64) -> usize {
+        self.charge_compile(Symbol::intern(label), sim_seconds, true)
     }
 
     /// Re-account a recorded event stream onto this clock, preserving
@@ -77,12 +142,16 @@ impl SimClock {
     /// on a private clock and replays the events of the work it actually
     /// performed onto the shared batch clock in deterministic submission
     /// order, so batch accounting is independent of worker count.
+    ///
+    /// Replay is span-silent: labels are already interned `Symbol`s
+    /// (nothing allocates on this hot path) and the spans for the
+    /// replayed work live on the recorder of the clock that ran it.
     pub fn replay(&self, events: &[Event]) {
         for e in events {
             if e.compile {
-                self.schedule_compile(&e.label, e.sim_seconds);
+                self.charge_compile(e.label, e.sim_seconds, false);
             } else {
-                self.advance_serial(&e.label, e.sim_seconds);
+                self.charge_serial(e.label, e.sim_seconds, false);
             }
         }
     }
@@ -264,5 +333,40 @@ mod tests {
         assert_eq!(m.lane_seconds(), 7200.0);
         assert!((m.lane_hours() - 2.0).abs() < 1e-12);
         assert!((m.total_hours() - (7230.0 / 3600.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn charges_double_as_spans_and_replay_is_silent() {
+        let c = SimClock::new(2);
+        c.advance_serial("analysis", 60.0);
+        c.schedule_compile("compile p1", 3600.0);
+        let spans = c.obs().spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "analysis");
+        assert_eq!(spans[0].cat, "clock.serial");
+        assert_eq!(spans[0].lane, 0);
+        assert_eq!(spans[1].name, "compile p1");
+        assert_eq!(spans[1].cat, "clock.compile");
+        assert_eq!(spans[1].lane, 1);
+        assert_eq!(spans[1].dur_s, 3600.0);
+
+        let dst = SimClock::new(2);
+        dst.replay(&c.events());
+        assert_eq!(dst.total_seconds(), c.total_seconds());
+        assert!(dst.obs().spans().is_empty(), "replay must not re-emit spans");
+    }
+
+    #[test]
+    fn untraced_clock_accounts_time_but_records_nothing() {
+        let c = SimClock::new_untraced(1);
+        c.advance_serial("analysis", 60.0);
+        let sp = c.span("stage.analyze", "pipeline");
+        c.span_end(sp);
+        c.mark("cache.hit", "cache");
+        c.obs().count("cache.hit.trace", 1);
+        assert_eq!(c.total_seconds(), 60.0);
+        assert_eq!(c.events().len(), 1);
+        assert!(c.obs().spans().is_empty());
+        assert_eq!(c.obs().counter("cache.hit.trace"), 0);
     }
 }

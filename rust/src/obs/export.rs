@@ -1,0 +1,221 @@
+//! Exporters for the [`Recorder`]: a JSON-lines span log, Chrome
+//! `trace_event` JSON (load it at `chrome://tracing` or in Perfetto),
+//! and a Prometheus-style text metrics snapshot.
+//!
+//! All output is derived from symbol *spellings* and simulated times —
+//! never wall time or symbol ids — so the bytes are deterministic
+//! across runs, pool sizes, and interning order.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::cache::CacheStats;
+use crate::util::intern::Symbol;
+use crate::util::json::{self, Json};
+
+use super::{Recorder, Span};
+
+fn span_obj(s: &Span) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(s.name.as_str().to_string()));
+    o.insert("cat".to_string(), Json::Str(s.cat.as_str().to_string()));
+    o.insert("start_s".to_string(), Json::Num(s.start_s));
+    o.insert("dur_s".to_string(), Json::Num(s.dur_s));
+    o.insert("depth".to_string(), Json::Num(f64::from(s.depth)));
+    o.insert("track".to_string(), Json::Num(f64::from(s.track)));
+    o.insert("lane".to_string(), Json::Num(f64::from(s.lane)));
+    Json::Obj(o)
+}
+
+/// Render the span log as JSON lines: one object per span, in recorded
+/// (for batch runs: submission-merge) order.
+pub fn render_jsonl(rec: &Recorder) -> String {
+    let mut out = String::new();
+    for s in rec.spans() {
+        out.push_str(&json::to_string(&span_obj(&s)));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render the span log in Chrome `trace_event` format: complete
+/// (`ph: "X"`) events with microsecond timestamps, `pid` = span track
+/// (0 = shared clock, `1 + i` = batch unit `i`) and `tid` = lane
+/// (0 = serial timeline, `1 + l` = compile lane `l`).
+pub fn render_chrome(rec: &Recorder) -> String {
+    let mut events = Vec::new();
+    for s in rec.spans() {
+        let mut e = BTreeMap::new();
+        e.insert("ph".to_string(), Json::Str("X".to_string()));
+        e.insert("name".to_string(), Json::Str(s.name.as_str().to_string()));
+        e.insert("cat".to_string(), Json::Str(s.cat.as_str().to_string()));
+        e.insert("ts".to_string(), Json::Num(s.start_s * 1e6));
+        e.insert("dur".to_string(), Json::Num(s.dur_s * 1e6));
+        e.insert("pid".to_string(), Json::Num(f64::from(s.track)));
+        e.insert("tid".to_string(), Json::Num(f64::from(s.lane)));
+        let mut args = BTreeMap::new();
+        args.insert("depth".to_string(), Json::Num(f64::from(s.depth)));
+        e.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(e));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    json::to_string(&Json::Obj(doc))
+}
+
+/// `cache.misses` → `flopt_cache_misses`.
+fn metric_name(spelling: &str) -> String {
+    let mut n = String::from("flopt_");
+    n.extend(
+        spelling
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }),
+    );
+    n
+}
+
+/// Deterministic number rendering shared with `util::json`: integral
+/// values print without a fractional part.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render the metrics snapshot as Prometheus-style text.  `cache`
+/// folds the store's [`CacheStats`] (hits, misses, evictions,
+/// corrupt-entry recomputes) into the counter section at export time,
+/// so the store's own counting stays untouched.  Ordering is the
+/// lexicographic `BTreeMap<Symbol, _>` order — byte-identical across
+/// pool sizes and runs.
+pub fn render_prometheus(rec: &Recorder, cache: Option<&CacheStats>) -> String {
+    let mut counters = rec.counters();
+    if let Some(c) = cache {
+        for (name, v) in [
+            ("cache.corrupt_recomputes", c.corrupt_recomputes()),
+            ("cache.disk_hits", c.disk_hits),
+            ("cache.disk_read_errors", c.disk_read_errors),
+            ("cache.disk_rejects", c.disk_rejects),
+            ("cache.evictions_lru", c.lru_evictions),
+            ("cache.evictions_ttl", c.ttl_evictions),
+            ("cache.mem_hits", c.mem_hits),
+            ("cache.misses", c.misses),
+        ] {
+            *counters.entry(Symbol::intern(name)).or_insert(0) += v;
+        }
+    }
+    let mut out = String::from("# flopt metrics snapshot (deterministic, simulated time)\n");
+    for (k, v) in &counters {
+        let n = metric_name(k.as_str());
+        let _ = writeln!(out, "# TYPE {n} counter\n{n} {v}");
+    }
+    for (k, v) in rec.gauges() {
+        let n = metric_name(k.as_str());
+        let _ = writeln!(out, "# TYPE {n} gauge\n{n} {}", fmt_value(v));
+    }
+    for (k, h) in rec.histograms() {
+        let n = metric_name(k.as_str());
+        let _ = writeln!(out, "# TYPE {n} summary");
+        let _ = writeln!(out, "{n}_count {}", h.count);
+        let _ = writeln!(out, "{n}_sum {}", fmt_value(h.sum));
+        let _ = writeln!(out, "{n}_min {}", fmt_value(h.min));
+        let _ = writeln!(out, "{n}_max {}", fmt_value(h.max));
+    }
+    out
+}
+
+/// Write the span log to `path`; `.json` extension selects the Chrome
+/// `trace_event` format, anything else the JSON-lines log.
+pub fn write_trace(path: &str, rec: &Recorder) -> std::io::Result<()> {
+    let body = if path.ends_with(".json") {
+        render_chrome(rec)
+    } else {
+        render_jsonl(rec)
+    };
+    std::fs::write(path, body)
+}
+
+/// Write the Prometheus-style metrics snapshot to `path`.
+pub fn write_metrics(path: &str, rec: &Recorder, cache: Option<&CacheStats>) -> std::io::Result<()> {
+    std::fs::write(path, render_prometheus(rec, cache))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Recorder {
+        let r = Recorder::new(true);
+        let s = r.begin("stage.analyze", "pipeline", 0.0);
+        r.end(s, 30.0);
+        r.count("cache.miss.trace", 1);
+        r.gauge("serve.active_tenants", 4.0);
+        r.observe("pool.map_batch", 3.0);
+        r
+    }
+
+    #[test]
+    fn jsonl_is_one_parseable_object_per_span() {
+        let r = sample();
+        let text = render_jsonl(&r);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let v = json::parse(lines[0]).expect("jsonl line parses");
+        match v {
+            Json::Obj(o) => {
+                assert_eq!(o.get("name"), Some(&Json::Str("stage.analyze".into())));
+                assert_eq!(o.get("dur_s"), Some(&Json::Num(30.0)));
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_wellformed() {
+        let r = sample();
+        let v = json::parse(&render_chrome(&r)).expect("chrome trace parses");
+        let Json::Obj(o) = v else {
+            panic!("expected object")
+        };
+        let Some(Json::Arr(events)) = o.get("traceEvents") else {
+            panic!("missing traceEvents")
+        };
+        assert_eq!(events.len(), 1);
+        let Json::Obj(e) = &events[0] else {
+            panic!("expected event object")
+        };
+        assert_eq!(e.get("ph"), Some(&Json::Str("X".into())));
+        assert_eq!(e.get("ts"), Some(&Json::Num(0.0)));
+        assert_eq!(e.get("dur"), Some(&Json::Num(30.0 * 1e6)));
+    }
+
+    #[test]
+    fn prometheus_folds_cache_stats() {
+        let r = sample();
+        let stats = CacheStats {
+            mem_hits: 2,
+            disk_hits: 1,
+            misses: 3,
+            disk_rejects: 1,
+            disk_read_errors: 1,
+            ttl_evictions: 0,
+            lru_evictions: 4,
+        };
+        let text = render_prometheus(&r, Some(&stats));
+        assert!(text.contains("flopt_cache_mem_hits 2\n"));
+        assert!(text.contains("flopt_cache_corrupt_recomputes 2\n"));
+        assert!(text.contains("flopt_cache_evictions_lru 4\n"));
+        assert!(text.contains("flopt_cache_miss_trace 1\n"));
+        assert!(text.contains("flopt_serve_active_tenants 4\n"));
+        assert!(text.contains("flopt_pool_map_batch_count 1\n"));
+        assert!(text.contains("flopt_pool_map_batch_sum 3\n"));
+        // counters precede gauges precede histograms, each sorted
+        let c = text.find("flopt_cache_corrupt_recomputes").unwrap();
+        let g = text.find("flopt_serve_active_tenants").unwrap();
+        let h = text.find("flopt_pool_map_batch_count").unwrap();
+        assert!(c < g && g < h);
+    }
+}

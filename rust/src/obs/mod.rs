@@ -1,0 +1,396 @@
+//! Deterministic observability: a hierarchical span tracer and a
+//! metrics registry threaded through every layer of the coordinator
+//! (DESIGN.md §3i).
+//!
+//! Spans are stamped in **simulated** time read off the owning
+//! [`crate::metrics::SimClock`], never the wall clock, so a trace is a
+//! pure function of the inputs: byte-identical across `--pool 1/2/8`
+//! and across repeated runs.  Metrics are counters, gauges, and summary
+//! histograms keyed on interned [`Symbol`]s (PR-8 style — snapshot
+//! ordering is the lexicographic `BTreeMap<Symbol, _>` order, and the
+//! exporters only ever see spellings, never unstable symbol ids).
+//!
+//! Concurrency contract: `begin`/`end` span pairs are only issued from
+//! single-threaded phases (a batch unit's private clock, or the shared
+//! clock's sequential merge loop), so span order is deterministic.
+//! Counter/gauge/histogram updates are commutative, so the parallel
+//! phase may update them from worker threads without perturbing the
+//! exported snapshot.  [`Recorder::merge_from`] folds a unit recorder
+//! into the shared one *in submission order*, re-tracking the unit's
+//! spans instead of rebasing timestamps (the Chrome exporter maps
+//! tracks to pid rows).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::intern::Symbol;
+
+pub mod export;
+
+/// A finished span: one named piece of work on a simulated timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    /// What ran (e.g. `stage.analyze`, `compile fir_filter_L8_d4`).
+    pub name: Symbol,
+    /// Subsystem category (`pipeline`, `cache`, `clock.compile`, …).
+    pub cat: Symbol,
+    /// Start time, simulated seconds on the owning clock's timeline.
+    pub start_s: f64,
+    /// Duration, simulated seconds (0 for instant markers).
+    pub dur_s: f64,
+    /// Nesting depth when the span opened (0 = top level).
+    pub depth: u32,
+    /// Export track: 0 is the clock that recorded the span; a batch
+    /// unit's spans are re-tracked to `1 + submission index` when
+    /// merged into the shared recorder (Chrome `pid`).
+    pub track: u32,
+    /// Sub-track (Chrome `tid`): 0 for serial work, `1 + lane` for
+    /// work charged to a compile lane (lane-occupancy timeline).
+    pub lane: u32,
+}
+
+/// Handle for an in-flight span returned by [`Recorder::begin`]; hand
+/// it back to [`Recorder::end`] when the work completes.
+#[derive(Debug, Clone, Copy)]
+pub struct OpenSpan {
+    /// `(name, cat)`; `None` when the recorder is disabled.
+    key: Option<(Symbol, Symbol)>,
+    start_s: f64,
+    depth: u32,
+}
+
+/// Summary histogram: count / sum / min / max of the observed values.
+/// Merging two histograms is commutative, which keeps merged snapshots
+/// independent of worker interleaving.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Histogram {
+    /// Number of observations.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: f64,
+    /// Smallest observed value (0 when empty).
+    pub min: f64,
+    /// Largest observed value (0 when empty).
+    pub max: f64,
+}
+
+impl Histogram {
+    fn observe(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            if v < self.min {
+                self.min = v;
+            }
+            if v > self.max {
+                self.max = v;
+            }
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = *other;
+            return;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    spans: Vec<Span>,
+    depth: u32,
+    counters: BTreeMap<Symbol, u64>,
+    gauges: BTreeMap<Symbol, f64>,
+    hists: BTreeMap<Symbol, Histogram>,
+}
+
+/// The span + metrics sink.  One recorder lives inside every
+/// [`crate::metrics::SimClock`]; a disabled recorder (see
+/// [`crate::metrics::SimClock::new_untraced`]) turns every call into a
+/// cheap no-op so the `obs_overhead` bench can price the tracing tax.
+pub struct Recorder {
+    enabled: bool,
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    /// A recorder; pass `enabled = false` for the no-op variant.
+    pub fn new(enabled: bool) -> Self {
+        Recorder {
+            enabled,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// Is this recorder collecting anything?
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open a span at `start_s` (simulated seconds).  Nested opens
+    /// record increasing depths; close with [`Recorder::end`].
+    pub fn begin(&self, name: &str, cat: &str, start_s: f64) -> OpenSpan {
+        if !self.enabled {
+            return OpenSpan {
+                key: None,
+                start_s: 0.0,
+                depth: 0,
+            };
+        }
+        let key = (Symbol::intern(name), Symbol::intern(cat));
+        let mut inner = self.inner.lock().unwrap();
+        let depth = inner.depth;
+        inner.depth += 1;
+        OpenSpan {
+            key: Some(key),
+            start_s,
+            depth,
+        }
+    }
+
+    /// Close `span` at `end_s`, recording it on track 0 / lane 0.
+    pub fn end(&self, span: OpenSpan, end_s: f64) {
+        let Some((name, cat)) = span.key else {
+            return;
+        };
+        let mut inner = self.inner.lock().unwrap();
+        inner.depth = inner.depth.saturating_sub(1);
+        inner.spans.push(Span {
+            name,
+            cat,
+            start_s: span.start_s,
+            dur_s: (end_s - span.start_s).max(0.0),
+            depth: span.depth,
+            track: 0,
+            lane: 0,
+        });
+    }
+
+    /// Record a complete span in one call (used by the clock charges,
+    /// which know both endpoints; `lane` picks the Chrome sub-track).
+    pub fn record(&self, name: Symbol, cat: &str, start_s: f64, dur_s: f64, lane: u32) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let depth = inner.depth;
+        inner.spans.push(Span {
+            name,
+            cat: Symbol::intern(cat),
+            start_s,
+            dur_s,
+            depth,
+            track: 0,
+            lane,
+        });
+    }
+
+    /// Record an instant (zero-duration) marker span at `at_s`.
+    pub fn mark(&self, name: &str, cat: &str, at_s: f64) {
+        if !self.enabled {
+            return;
+        }
+        let sym = Symbol::intern(name);
+        self.record(sym, cat, at_s, 0.0, 0);
+    }
+
+    /// Add `delta` to the counter `name`.
+    pub fn count(&self, name: &str, delta: u64) {
+        if !self.enabled {
+            return;
+        }
+        let sym = Symbol::intern(name);
+        let mut inner = self.inner.lock().unwrap();
+        *inner.counters.entry(sym).or_insert(0) += delta;
+    }
+
+    /// Set the gauge `name` to `value` (merges take the maximum, so
+    /// merged snapshots stay order-independent).
+    pub fn gauge(&self, name: &str, value: f64) {
+        if !self.enabled {
+            return;
+        }
+        let sym = Symbol::intern(name);
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.insert(sym, value);
+    }
+
+    /// Fold `value` into the summary histogram `name`.
+    pub fn observe(&self, name: &str, value: f64) {
+        if !self.enabled {
+            return;
+        }
+        let sym = Symbol::intern(name);
+        let mut inner = self.inner.lock().unwrap();
+        inner.hists.entry(sym).or_default().observe(value);
+    }
+
+    /// Fold a unit recorder into this one.  Spans are appended in the
+    /// unit's own order with their track rewritten to `track` (call in
+    /// submission order for deterministic span logs); counters add,
+    /// gauges take the max, histograms merge — all commutative.
+    pub fn merge_from(&self, other: &Recorder, track: u32) {
+        if !self.enabled || !other.enabled {
+            return;
+        }
+        let theirs = {
+            let o = other.inner.lock().unwrap();
+            (
+                o.spans.clone(),
+                o.counters.clone(),
+                o.gauges.clone(),
+                o.hists.clone(),
+            )
+        };
+        let mut inner = self.inner.lock().unwrap();
+        for mut s in theirs.0 {
+            s.track = track;
+            inner.spans.push(s);
+        }
+        for (k, v) in theirs.1 {
+            *inner.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in theirs.2 {
+            let g = inner.gauges.entry(k).or_insert(v);
+            if v > *g {
+                *g = v;
+            }
+        }
+        for (k, v) in theirs.3 {
+            inner.hists.entry(k).or_default().merge(&v);
+        }
+    }
+
+    /// Snapshot of the finished spans, in recorded order.
+    pub fn spans(&self) -> Vec<Span> {
+        self.inner.lock().unwrap().spans.clone()
+    }
+
+    /// Snapshot of the counters (lexicographic by spelling).
+    pub fn counters(&self) -> BTreeMap<Symbol, u64> {
+        self.inner.lock().unwrap().counters.clone()
+    }
+
+    /// Snapshot of the gauges (lexicographic by spelling).
+    pub fn gauges(&self) -> BTreeMap<Symbol, f64> {
+        self.inner.lock().unwrap().gauges.clone()
+    }
+
+    /// Snapshot of the histograms (lexicographic by spelling).
+    pub fn histograms(&self) -> BTreeMap<Symbol, Histogram> {
+        self.inner.lock().unwrap().hists.clone()
+    }
+
+    /// Current value of one counter (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        let sym = Symbol::intern(name);
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(&sym)
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("Recorder")
+            .field("enabled", &self.enabled)
+            .field("spans", &inner.spans.len())
+            .field("counters", &inner.counters.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_record_depth() {
+        let r = Recorder::new(true);
+        let outer = r.begin("outer", "test", 0.0);
+        let inner = r.begin("inner", "test", 1.0);
+        r.end(inner, 2.0);
+        r.end(outer, 3.0);
+        let spans = r.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "inner");
+        assert_eq!(spans[0].depth, 1);
+        assert_eq!(spans[0].dur_s, 1.0);
+        assert_eq!(spans[1].name, "outer");
+        assert_eq!(spans[1].depth, 0);
+        assert_eq!(spans[1].dur_s, 3.0);
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let r = Recorder::new(false);
+        let s = r.begin("x", "test", 0.0);
+        r.end(s, 5.0);
+        r.count("c", 3);
+        r.observe("h", 1.0);
+        assert!(r.spans().is_empty());
+        assert_eq!(r.counter("c"), 0);
+        assert!(r.histograms().is_empty());
+    }
+
+    #[test]
+    fn merge_is_commutative_on_metrics() {
+        let a = Recorder::new(true);
+        let b = Recorder::new(true);
+        a.count("c", 2);
+        b.count("c", 3);
+        a.observe("h", 1.0);
+        b.observe("h", 5.0);
+        a.gauge("g", 2.0);
+        b.gauge("g", 7.0);
+
+        let ab = Recorder::new(true);
+        ab.merge_from(&a, 1);
+        ab.merge_from(&b, 2);
+        let ba = Recorder::new(true);
+        ba.merge_from(&b, 2);
+        ba.merge_from(&a, 1);
+
+        assert_eq!(ab.counter("c"), 5);
+        assert_eq!(ba.counter("c"), 5);
+        assert_eq!(ab.histograms(), ba.histograms());
+        assert_eq!(ab.gauges(), ba.gauges());
+        let h = ab.histograms();
+        let (_, hist) = h.iter().next().unwrap();
+        assert_eq!(hist.count, 2);
+        assert_eq!(hist.min, 1.0);
+        assert_eq!(hist.max, 5.0);
+    }
+
+    #[test]
+    fn merge_retracks_spans_in_submission_order() {
+        let unit = Recorder::new(true);
+        let s = unit.begin("work", "test", 0.0);
+        unit.end(s, 1.0);
+        let shared = Recorder::new(true);
+        shared.merge_from(&unit, 4);
+        let spans = shared.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].track, 4);
+    }
+}

@@ -150,6 +150,9 @@ struct Counters {
     migration_s: f64,
     rejected_quota: u64,
     rejected_inactive: u64,
+    /// DRR dequeue decisions, harvested from each scheduler before a
+    /// re-pack (or the final drain) discards it.
+    drr_decisions: u64,
 }
 
 /// The tenant universe: the registered corpus first, extended with
@@ -269,6 +272,7 @@ fn repack_boards(
         s.pump(now_s, completions);
         pending.extend(s.drain_pending());
         boards_busy[bi] = s.busy_until_s;
+        stats.drr_decisions += s.decisions;
     }
     pending.sort_by_key(|r| r.id);
 
@@ -290,6 +294,17 @@ fn repack_boards(
     }
     stats.migrations += rp.migrations as u64;
     stats.migration_s += rp.migration_s;
+    {
+        // re-pack telemetry, stamped on the arrival timeline (`now_s` is
+        // a pure function of the config, never of the worker pool)
+        let obs = service.clock().obs();
+        obs.mark("serve.repack", "serve", now_s);
+        obs.count("serve.repacks", 1);
+        if rp.full {
+            obs.count("serve.full_repacks", 1);
+        }
+        obs.count("serve.migrations", rp.migrations as u64);
+    }
 
     for t in tenants.iter_mut() {
         t.placement = None;
@@ -367,6 +382,16 @@ fn repack_boards(
 /// still makes them warm within the run).  The report is a pure
 /// function of `c` — byte-identical for any `c.pool`.
 pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<ServeReport> {
+    run_serve_with_clock(c, cache).map(|(r, _)| r)
+}
+
+/// [`run_serve`], additionally returning the service's shared
+/// [`crate::metrics::SimClock`] so callers can export the accumulated
+/// trace spans and metrics (`flopt serve --trace-out/--metrics-out`).
+pub fn run_serve_with_clock(
+    c: &ServeConfig,
+    cache: Arc<CacheStore>,
+) -> crate::Result<(ServeReport, Arc<crate::metrics::SimClock>)> {
     let service = BatchService::new(c.pool, c.lanes, &XEON_3104).with_cache(cache);
     let store = Arc::clone(service.cache());
     store.set_policy(EvictionPolicy {
@@ -442,6 +467,8 @@ pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<Serve
             let t = next_epoch_s;
             epoch_index += 1;
             stats.epochs += 1;
+            service.clock().obs().mark("serve.epoch", "serve", t);
+            service.clock().obs().count("serve.epochs", 1);
             store.set_now_sim_s(t);
             for ten in tenants.iter_mut() {
                 ten.admitted_epoch = 0;
@@ -460,8 +487,12 @@ pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<Serve
                         tenants[pick].demand = Some(demand);
                         tenants[pick].ready_at_s = t + dt_s;
                         stats.joins += 1;
+                        let obs = service.clock().obs();
+                        obs.mark("serve.join", "serve", t);
+                        obs.count("serve.joins", 1);
                         if warm {
                             stats.warm_joins += 1;
+                            obs.count("serve.warm_joins", 1);
                         }
                         joined = Some(pick);
                     }
@@ -476,6 +507,8 @@ pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<Serve
                         tenants[pick].active = false;
                         tenants[pick].placement = None;
                         stats.leaves += 1;
+                        service.clock().obs().mark("serve.leave", "serve", t);
+                        service.clock().obs().count("serve.leaves", 1);
                     }
                 }
             }
@@ -495,16 +528,19 @@ pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<Serve
         }
 
         // resolve the request's tenant
+        service.clock().obs().count("serve.arrivals", 1);
         let ti = match a.tenant {
             Some(i) if i < tenants.len() && tenants[i].active => i,
             Some(_) => {
                 stats.rejected_inactive += 1;
+                service.clock().obs().count("serve.rejected_inactive", 1);
                 continue;
             }
             None => match weighted_pick(&tenants, a.pick, c.heavy_weight) {
                 Some(i) => i,
                 None => {
                     stats.rejected_inactive += 1;
+                    service.clock().obs().count("serve.rejected_inactive", 1);
                     continue;
                 }
             },
@@ -514,6 +550,7 @@ pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<Serve
         if c.quota > 0 && tenants[ti].admitted_epoch >= c.quota {
             tenants[ti].rejected_quota += 1;
             stats.rejected_quota += 1;
+            service.clock().obs().count("serve.rejected_quota", 1);
             continue;
         }
         tenants[ti].admitted_epoch += 1;
@@ -528,10 +565,12 @@ pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<Serve
             Some((b, o)) => {
                 let service_s =
                     tenants[ti].demand.as_ref().expect("placed tenant has demand").options[o].time_s;
+                service.clock().obs().count("serve.routed_fpga", 1);
                 scheds[b].enqueue(QueuedReq { id, tenant: ti, at_s: a.at_s, service_s });
                 scheds[b].pump(a.at_s, &mut completions);
             }
             None => {
+                service.clock().obs().count("serve.routed_cpu", 1);
                 let cpu_s = tenants[ti].demand.as_ref().map(|d| d.cpu_time_s).unwrap_or(1.0);
                 let start = if tenants[ti].cpu_busy_until_s > a.at_s {
                     tenants[ti].cpu_busy_until_s
@@ -548,7 +587,9 @@ pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<Serve
     // drain every board
     for s in scheds.iter_mut() {
         s.pump(f64::INFINITY, &mut completions);
+        stats.drr_decisions += s.decisions;
     }
+    service.clock().obs().count("serve.drr_decisions", stats.drr_decisions);
 
     // ---- summarize --------------------------------------------------
     let mut lat: Vec<f64> = completions.iter().map(|cm| cm.finish_s - cm.at_s).collect();
@@ -593,7 +634,8 @@ pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<Serve
         })
         .collect();
 
-    Ok(ServeReport {
+    let clock = Arc::clone(service.clock());
+    let report = ServeReport {
         seed: c.seed,
         requests: arrivals.len(),
         completed: completions.len(),
@@ -617,5 +659,6 @@ pub fn run_serve(c: &ServeConfig, cache: Arc<CacheStore>) -> crate::Result<Serve
         compile_hours: service.clock().compile_lane_seconds() / 3600.0,
         cache: store.stats(),
         tenants: rows,
-    })
+    };
+    Ok((report, clock))
 }

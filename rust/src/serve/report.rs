@@ -139,12 +139,15 @@ impl ServeReport {
         );
         let _ = writeln!(
             s,
-            "cache: {} mem hits · {} disk hits · {} misses · {} ttl + {} lru evictions",
+            "cache: {} mem hits · {} disk hits · {} misses · {} ttl + {} lru evictions · \
+             {} disk read errors · {} corrupt recomputes",
             self.cache.mem_hits,
             self.cache.disk_hits,
             self.cache.misses,
             self.cache.ttl_evictions,
-            self.cache.lru_evictions
+            self.cache.lru_evictions,
+            self.cache.disk_read_errors,
+            self.cache.corrupt_recomputes()
         );
         let _ = writeln!(s);
         let _ = writeln!(

@@ -58,6 +58,10 @@ pub struct BoardSched {
     /// The board is occupied until this simulated time (carried across
     /// re-packs; reconfiguration downtime pushes it forward).
     pub busy_until_s: f64,
+    /// DRR decisions taken (requests dequeued to run) — a pure function
+    /// of the enqueue sequence, harvested into the serve-level metrics
+    /// before a re-pack discards the scheduler.
+    pub decisions: u64,
 }
 
 impl BoardSched {
@@ -74,6 +78,7 @@ impl BoardSched {
             quantum_s: if quantum_s > 0.0 { quantum_s } else { 1.0 },
             cursor: 0,
             busy_until_s,
+            decisions: 0,
         }
     }
 
@@ -132,6 +137,7 @@ impl BoardSched {
             if self.deficit[i] + 1e-9 >= cost {
                 self.deficit[i] -= cost;
                 let _ = visit;
+                self.decisions += 1;
                 return Some(self.queues[i].pop_front().expect("non-empty"));
             }
         }
@@ -139,6 +145,7 @@ impl BoardSched {
         // than spin (can only trigger with a pathological quantum).
         let i = (0..n).find(|&i| !self.queues[i].is_empty())?;
         self.deficit[i] = 0.0;
+        self.decisions += 1;
         self.queues[i].pop_front()
     }
 

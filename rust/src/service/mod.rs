@@ -28,7 +28,7 @@ use std::sync::Arc;
 
 use crate::apps::App;
 use crate::backend::{OffloadBackend, SearchMethod, Target};
-use crate::cache::{self, CacheKey, CacheStore};
+use crate::cache::{self, CacheKey, CacheStats, CacheStore};
 use crate::config::SearchConfig;
 use crate::coordinator::mixed::{ga_destination_search, DestinationSearch};
 use crate::coordinator::pipeline::{offload_search, AppAnalysis, SearchTrace};
@@ -110,6 +110,8 @@ pub struct BatchReport {
     pub compile_hours: f64,
     /// Compile-lane hours *not* burned thanks to cache hits + dedupe.
     pub saved_compile_hours: f64,
+    /// Shared artifact-cache counters after the batch completed.
+    pub cache: CacheStats,
 }
 
 impl BatchReport {
@@ -149,6 +151,16 @@ impl BatchReport {
             "shared-clock makespan: {:.1} h simulated\n",
             self.sim_hours
         ));
+        out.push_str(&format!(
+            "cache: {} mem + {} disk hits · {} misses · {} evictions · \
+             {} disk read errors · {} corrupt recomputes\n",
+            self.cache.mem_hits,
+            self.cache.disk_hits,
+            self.cache.misses,
+            self.cache.evictions(),
+            self.cache.disk_read_errors,
+            self.cache.corrupt_recomputes()
+        ));
         out
     }
 }
@@ -174,6 +186,9 @@ struct ColdUnit {
     outcome: DestinationSearch,
     events: Vec<Event>,
     trace: Option<SearchTrace>,
+    /// The unit clock's span/metrics recorder, folded into the shared
+    /// recorder (in submission order) when the unit is merged.
+    obs: Arc<crate::obs::Recorder>,
 }
 
 /// The batch offload scheduler (see module docs).
@@ -264,6 +279,7 @@ impl BatchService {
             .iter()
             .map(|u| {
                 if let Some(d) = self.cache.get_destination(u.key) {
+                    crate::coordinator::pipeline::cache_hit(&self.clock, "cache.hit.destination");
                     return Some(UnitState::Warm(d));
                 }
                 // a narrowed-flow unit whose full trace is already
@@ -273,6 +289,7 @@ impl BatchService {
                 if u.backend.search_method() == SearchMethod::NarrowedTwoRound {
                     let tkey = cache::trace_key(u.app, u.test_scale, u.backend, &u.cfg);
                     if let Some(t) = self.cache.get_trace(tkey) {
+                        crate::coordinator::pipeline::cache_hit(&self.clock, "cache.hit.trace");
                         let d = destination_from_trace(&t);
                         self.cache.put_destination(u.key, &d);
                         return Some(UnitState::Warm(d));
@@ -296,7 +313,7 @@ impl BatchService {
                 analyze_specs.push((akey, u.app, u.test_scale));
             }
         }
-        let pool = Pool::new(self.workers);
+        let pool = Pool::with_obs(self.workers, Arc::clone(self.clock.obs()));
         let mut analyses: HashMap<CacheKey, (Arc<AppAnalysis>, bool)> = HashMap::new();
         {
             // split warm-vs-compute *before* the parallel phase so the
@@ -377,8 +394,9 @@ impl BatchService {
             execute_unit(spec, &cpu).map(|r| (idx, r)).map_err(|e| format!("{e}"))
         });
         for r in executed {
-            let (idx, (outcome, events, trace)) = r.map_err(|e| anyhow::anyhow!("{e}"))?;
-            states[idx] = Some(UnitState::Cold(Box::new(ColdUnit { outcome, events, trace })));
+            let (idx, (outcome, events, trace, obs)) = r.map_err(|e| anyhow::anyhow!("{e}"))?;
+            states[idx] =
+                Some(UnitState::Cold(Box::new(ColdUnit { outcome, events, trace, obs })));
         }
 
         // ---- deterministic merge in submission order -------------------
@@ -397,7 +415,7 @@ impl BatchService {
                     (o.clone(), CacheDisposition::Warm)
                 }
                 UnitState::Cold(cold) => {
-                    let ColdUnit { outcome, events, trace } = cold.as_ref();
+                    let ColdUnit { outcome, events, trace, obs } = cold.as_ref();
                     if replayed.insert(idx) {
                         // first occurrence: account the unit on the
                         // shared clock (analysis once per app, only if
@@ -413,6 +431,11 @@ impl BatchService {
                             }
                         }
                         self.clock.replay(events);
+                        // fold the unit's spans/metrics into the shared
+                        // recorder, re-tracked to `1 + unit index` — same
+                        // submission order as the replay above, so the
+                        // merged span log is pool-size independent
+                        self.clock.obs().merge_from(obs, idx as u32 + 1);
                         // publish the unit's artifacts to the shared cache
                         self.cache.put_destination(u.key, outcome);
                         if let Some(t) = trace {
@@ -452,6 +475,12 @@ impl BatchService {
             }
         }
 
+        let obs = self.clock.obs();
+        obs.count("batch.requests", requests.len() as u64);
+        obs.count("batch.cold_units", unique_cold as u64);
+        obs.count("batch.warm_hits", warm_hits as u64);
+        obs.count("batch.deduped", deduped as u64);
+
         Ok(BatchReport {
             items,
             unique_cold,
@@ -460,6 +489,7 @@ impl BatchService {
             sim_hours: span.total_hours(),
             compile_hours: span.lane_hours(),
             saved_compile_hours: saved_lane_s / 3600.0,
+            cache: self.cache.stats(),
         })
     }
 }
@@ -499,7 +529,12 @@ struct UnitSpec {
 fn execute_unit(
     spec: UnitSpec,
     cpu: &CpuModel,
-) -> crate::Result<(DestinationSearch, Vec<Event>, Option<SearchTrace>)> {
+) -> crate::Result<(
+    DestinationSearch,
+    Vec<Event>,
+    Option<SearchTrace>,
+    Arc<crate::obs::Recorder>,
+)> {
     let clock = Arc::new(SimClock::new(spec.cfg.compile_parallelism.max(1)));
     let env = VerifyEnv::with_clock(spec.backend, cpu, spec.cfg.clone(), Arc::clone(&clock))
         .with_cache(Arc::clone(&spec.store));
@@ -517,7 +552,8 @@ fn execute_unit(
             (outcome, None)
         }
     };
-    Ok((outcome, clock.events(), trace))
+    let obs = Arc::clone(clock.obs());
+    Ok((outcome, clock.events(), trace, obs))
 }
 
 #[cfg(test)]

@@ -14,17 +14,36 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
+use crate::obs::Recorder;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A fixed pool of worker threads executing boxed jobs FIFO.
 pub struct Pool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
+    /// Job-scheduling metrics sink.  Counters only, updated from the
+    /// *submitting* thread, so the exported totals are independent of
+    /// worker count and interleaving.
+    obs: Option<Arc<Recorder>>,
 }
 
 impl Pool {
     /// Spawn `n` workers (`n >= 1`).
     pub fn new(n: usize) -> Self {
+        Self::build(n, None)
+    }
+
+    /// Spawn `n` workers that report job-scheduling metrics
+    /// (`pool.jobs_submitted`, `pool.jobs_completed`, `pool.map_batch`)
+    /// to `obs`.  Deliberately no worker-count metric: job totals are a
+    /// function of the workload, so the snapshot stays byte-identical
+    /// across `--pool` sizes.
+    pub fn with_obs(n: usize, obs: Arc<Recorder>) -> Self {
+        Self::build(n, Some(obs))
+    }
+
+    fn build(n: usize, obs: Option<Arc<Recorder>>) -> Self {
         assert!(n >= 1, "pool needs at least one worker");
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -48,12 +67,15 @@ impl Pool {
                     .expect("spawn worker")
             })
             .collect();
-        Self { tx: Some(tx), workers }
+        Self { tx: Some(tx), workers, obs }
     }
 
     /// Submit a job.  A panic inside the job is caught by the worker
     /// (use [`Pool::map`] when the submitter must observe failures).
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        if let Some(obs) = &self.obs {
+            obs.count("pool.jobs_submitted", 1);
+        }
         self.tx
             .as_ref()
             .expect("pool shut down")
@@ -100,6 +122,10 @@ impl Pool {
                 Ok(r) => results.push(r),
                 Err(payload) => resume_unwind(payload),
             }
+        }
+        if let Some(obs) = &self.obs {
+            obs.count("pool.jobs_completed", n as u64);
+            obs.observe("pool.map_batch", n as f64);
         }
         results
     }
@@ -158,6 +184,20 @@ mod tests {
         let out = pool.map(vec![10, 20, 30], |x| x + 1);
         assert_eq!(out, vec![11, 21, 31]);
         drop(pool); // must join cleanly, not hang
+    }
+
+    #[test]
+    fn with_obs_counts_jobs_from_the_submitting_thread() {
+        let rec = Arc::new(Recorder::new(true));
+        let pool = Pool::with_obs(3, Arc::clone(&rec));
+        let out = pool.map((0..10).collect(), |x: i32| x + 1);
+        assert_eq!(out.len(), 10);
+        assert_eq!(rec.counter("pool.jobs_submitted"), 10);
+        assert_eq!(rec.counter("pool.jobs_completed"), 10);
+        let h = rec.histograms();
+        let batch = h.iter().next().expect("map_batch histogram").1;
+        assert_eq!(batch.count, 1);
+        assert_eq!(batch.sum, 10.0);
     }
 
     #[test]

@@ -168,11 +168,11 @@ fn stage_cache_shares_precompiles_across_d_configs() {
     // its clock shows only compile + measurement time
     let events = env2.clock.events();
     assert!(
-        events.iter().all(|e| !e.label.starts_with("precompile")
+        events.iter().all(|e| !e.label.as_str().starts_with("precompile")
             && e.label != "code analysis"
             && e.label != "intensity analysis"),
         "warm stages must not re-charge: {:?}",
-        events.iter().map(|e| e.label.clone()).collect::<Vec<_>>()
+        events.iter().map(|e| e.label).collect::<Vec<_>>()
     );
     assert!(events.iter().any(|e| e.compile), "measurement must still compile");
 }

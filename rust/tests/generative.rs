@@ -1,13 +1,14 @@
 //! Generative property suite (PR 6): hundreds of seeded MiniC programs
 //! from [`flopt::apps::gen`] are pushed through parse → analyze → search
-//! on both backends, asserting the five search invariants the rest of
+//! on both backends, asserting the six search invariants the rest of
 //! the test suite pins only on the hand-written corpus:
 //!
 //! 1. pretty-print → reparse is the identity (modulo positions);
 //! 2. combined block+loop search never loses to loop-only (per backend);
 //! 3. mixed placement never loses to staying all-CPU;
 //! 4. a warm-cache re-run is byte-identical and burns zero simulated time;
-//! 5. fleet placement's aggregate speedup never drops below 1.0.
+//! 5. fleet placement's aggregate speedup never drops below 1.0;
+//! 6. two cold runs export byte-identical span logs (trace determinism).
 //!
 //! The seed/count are pinned in CI (`FLOPT_GEN_SEED` / `FLOPT_GEN_COUNT`,
 //! defaults 1106/200) so failures reproduce exactly; every failing
@@ -228,6 +229,28 @@ fn fleet_aggregate_speedup_never_below_one_on_generated_programs() {
             chunk[0].name
         );
     }
+}
+
+// ---------------------------------------------------------------- 6
+#[test]
+fn trace_export_is_deterministic_across_cold_runs_on_generated_programs() {
+    run_invariant("trace-determinism", |index, src| {
+        let app = gen::leak_app(format!("gobs-{}-{index}", ci_seed()), src.to_string());
+        let run = || {
+            let env = VerifyEnv::new(&backend::FPGA, &XEON_3104, small_cfg(BlockMode::On))
+                .with_cache(CacheStore::fresh());
+            offload_search(app, &env, true).map_err(|e| format!("offload search: {e}"))?;
+            Ok::<_, String>(flopt::obs::export::render_jsonl(env.clock.obs()))
+        };
+        let a = run()?;
+        if a.is_empty() {
+            return Err("cold run exported an empty span log".into());
+        }
+        if a != run()? {
+            return Err("two cold runs exported different span logs".into());
+        }
+        Ok(())
+    });
 }
 
 // ----------------------------------------------------------------

@@ -1,15 +1,18 @@
-//! Source lint: the analysis front end (`ir/`) and the interpreter
-//! (`interp/`) are `Symbol`-keyed by design — identifier maps on their
-//! hot paths hash a `u32`, never string bytes.  This test greps the
-//! sources so a `HashMap<String, _>` (or `&str`-keyed) map can't creep
-//! back in unnoticed; a genuinely cold, deliberate exception can opt
-//! out with a `lint-allow: string-key` comment on the same line.
+//! Source lint: the analysis front end (`ir/`), the interpreter
+//! (`interp/`), the simulated clock (`metrics/`), and the observability
+//! layer (`obs/`) are `Symbol`-keyed by design — identifier/metric maps
+//! on their hot paths hash a `u32`, never string bytes.  This test
+//! greps the sources so a `HashMap<String, _>` (or `&str`-keyed) map
+//! can't creep back in unnoticed; a genuinely cold, deliberate
+//! exception can opt out with a `lint-allow: string-key` comment on the
+//! same line.
 
 use std::fs;
 use std::path::{Path, PathBuf};
 
 /// Directories whose identifier maps must be `Symbol`-keyed.
-const SCANNED_DIRS: &[&str] = &["rust/src/ir", "rust/src/interp"];
+const SCANNED_DIRS: &[&str] =
+    &["rust/src/ir", "rust/src/interp", "rust/src/metrics", "rust/src/obs"];
 
 /// Map/set types keyed by owned or borrowed strings (matched with all
 /// whitespace stripped, so spacing variants can't dodge the lint).

@@ -1,0 +1,169 @@
+//! Observability suite (PR 9): the span tracer and metrics registry are
+//! stamped in **simulated** time, so every export is a pure function of
+//! the inputs.  Pinned here:
+//!
+//! 1. a cold search emits exactly one span per pipeline stage;
+//! 2. trace and metrics exports are byte-identical across pool sizes
+//!    1, 2, and 8;
+//! 3. a warm re-run adds only cache-hit marker spans and zero new
+//!    compile-lane seconds;
+//! 4. the Chrome `trace_event` export is well-formed JSON.
+
+use std::sync::Arc;
+
+use flopt::apps;
+use flopt::backend::{Target, FPGA};
+use flopt::cache::CacheStore;
+use flopt::config::SearchConfig;
+use flopt::coordinator::pipeline::offload_search;
+use flopt::coordinator::verify_env::VerifyEnv;
+use flopt::cpu::XEON_3104;
+use flopt::funcblock::BlockMode;
+use flopt::obs::export::{render_chrome, render_jsonl, render_prometheus};
+use flopt::service::{BatchRequest, BatchService};
+use flopt::util::json::{self, Json};
+
+/// The six coordinator stages plus the two function-block stages — the
+/// full staged pipeline a cold blocks-on search walks exactly once.
+const STAGES: &[&str] = &[
+    "stage.analyze",
+    "stage.intensity_narrow",
+    "stage.precompile",
+    "stage.efficiency_narrow",
+    "stage.measure_rounds",
+    "stage.block_narrow",
+    "stage.measure_blocks",
+    "stage.select",
+];
+
+fn all_apps_both_targets() -> Vec<BatchRequest> {
+    let mut reqs = Vec::new();
+    for app in apps::all() {
+        for target in [Target::Fpga, Target::Gpu] {
+            reqs.push(BatchRequest::new(app, target, /*test_scale=*/ true));
+        }
+    }
+    reqs
+}
+
+// ---------------------------------------------------------------- 1
+#[test]
+fn cold_search_emits_exactly_one_span_per_pipeline_stage() {
+    let cfg = SearchConfig {
+        block_mode: BlockMode::On,
+        ..SearchConfig::default()
+    };
+    let env = VerifyEnv::new(&FPGA, &XEON_3104, cfg).with_cache(CacheStore::fresh());
+    offload_search(&apps::TDFIR, &env, true).unwrap();
+    let spans = env.clock.obs().spans();
+    for stage in STAGES {
+        let n = spans.iter().filter(|s| s.name.as_str() == *stage).count();
+        assert_eq!(n, 1, "{stage}: expected exactly one span, saw {n}");
+    }
+    // every stage span is categorized under the pipeline, and no stage
+    // name outside the pinned list sneaks in
+    for s in spans.iter().filter(|s| s.name.as_str().starts_with("stage.")) {
+        assert_eq!(s.cat.as_str(), "pipeline", "{}", s.name.as_str());
+        assert!(
+            STAGES.contains(&s.name.as_str()),
+            "unknown stage span {}",
+            s.name.as_str()
+        );
+    }
+    // a cold run hits nothing and misses every cacheable stage once
+    let obs = env.clock.obs();
+    assert_eq!(obs.counter("cache.miss.trace"), 1);
+    assert_eq!(obs.counter("cache.miss.analysis"), 1);
+    assert_eq!(obs.counter("cache.miss.precompile"), 1);
+    assert_eq!(obs.counter("cache.miss.measure"), 1);
+    assert_eq!(obs.counter("cache.miss.blocks"), 1);
+    assert!(spans.iter().all(|s| s.cat.as_str() != "cache"));
+}
+
+// ---------------------------------------------------------------- 2
+#[test]
+fn trace_and_metrics_exports_are_byte_identical_across_pool_sizes() {
+    let requests = all_apps_both_targets();
+    let mut exports = Vec::new();
+    for workers in [1usize, 2, 8] {
+        let svc = BatchService::new(workers, 2, &XEON_3104);
+        let report = svc.run(&requests).unwrap();
+        let rec = svc.clock().obs();
+        exports.push((
+            workers,
+            render_jsonl(rec),
+            render_chrome(rec),
+            render_prometheus(rec, Some(&report.cache)),
+        ));
+    }
+    let (_, ref_jsonl, ref_chrome, ref_prom) = &exports[0];
+    assert!(!ref_jsonl.is_empty(), "the span log must not be empty");
+    for (workers, jsonl, chrome, prom) in &exports[1..] {
+        assert_eq!(jsonl, ref_jsonl, "pool {workers}: span log diverged");
+        assert_eq!(chrome, ref_chrome, "pool {workers}: Chrome trace diverged");
+        assert_eq!(prom, ref_prom, "pool {workers}: metrics snapshot diverged");
+    }
+    // deliberately no per-pool gauge exists: the snapshot must not
+    // encode the worker count anywhere
+    assert!(!ref_prom.contains("workers"), "snapshot leaks the pool size");
+}
+
+// ---------------------------------------------------------------- 3
+#[test]
+fn warm_rerun_adds_only_cache_hit_marks_and_no_lane_time() {
+    let requests = all_apps_both_targets();
+    let svc = BatchService::new(4, 2, &XEON_3104);
+    svc.run(&requests).unwrap();
+    let rec = svc.clock().obs();
+    let cold_spans = rec.spans().len();
+    let cold_lane_s = svc.clock().compile_lane_seconds();
+    assert!(cold_lane_s > 0.0, "cold batch must burn compile-lane time");
+    assert_eq!(rec.counter("cache.hit.trace"), 0, "cold batch cannot hit");
+
+    svc.run(&requests).unwrap();
+    assert_eq!(
+        svc.clock().compile_lane_seconds(),
+        cold_lane_s,
+        "warm batch burned new compile-lane seconds"
+    );
+    let spans = rec.spans();
+    assert!(spans.len() > cold_spans, "warm hits must leave marker spans");
+    for s in &spans[cold_spans..] {
+        assert_eq!(
+            s.cat.as_str(),
+            "cache",
+            "non-cache span {} appeared on a fully warm re-run",
+            s.name.as_str()
+        );
+        assert_eq!(s.dur_s, 0.0, "cache-hit marks are instant");
+    }
+    let hits = rec.counter("cache.hit.destination") + rec.counter("cache.hit.trace");
+    assert_eq!(hits, requests.len() as u64, "every warm request must count a hit");
+}
+
+// ---------------------------------------------------------------- 4
+#[test]
+fn chrome_trace_export_is_wellformed_json() {
+    let store = CacheStore::fresh();
+    let env = VerifyEnv::new(&FPGA, &XEON_3104, SearchConfig::default())
+        .with_cache(Arc::clone(&store));
+    offload_search(&apps::MRIQ, &env, true).unwrap();
+    let text = render_chrome(env.clock.obs());
+    let doc = json::parse(&text).expect("chrome trace parses");
+    let Json::Obj(o) = doc else {
+        panic!("trace document must be an object")
+    };
+    let Some(Json::Arr(events)) = o.get("traceEvents") else {
+        panic!("missing traceEvents array")
+    };
+    assert!(!events.is_empty());
+    for e in events {
+        let Json::Obj(e) = e else {
+            panic!("every trace event must be an object")
+        };
+        assert_eq!(e.get("ph"), Some(&Json::Str("X".into())));
+        for field in ["name", "cat", "ts", "dur", "pid", "tid"] {
+            assert!(e.contains_key(field), "event missing {field}");
+        }
+    }
+}
