@@ -67,6 +67,92 @@ fn main() {
     let loops = ir::analyze(&program);
     metrics.insert("analyzed_loops".to_string(), Json::Num(loops.len() as f64));
 
+    // dependence engine vs the legacy gates: per-loop verdicts on the
+    // same extraction, timed head-to-head.  The ratio (machine speed
+    // cancels out) is pinned at <= 1.10 in BENCH_hot_paths.json — the
+    // subscript tests may not make the Analyze stage more than 10%
+    // slower than the ad-hoc walks they replaced.
+    let infos = flopt::ir::loops::extract(&program);
+    let engine_t = time_it(20, || {
+        infos
+            .iter()
+            .filter(|i| {
+                let refs = flopt::ir::varref::collect(i);
+                flopt::analyze::analyze_loop(i, &refs).offloadable()
+            })
+            .count()
+    });
+    section("dep analysis (engine)", &engine_t, &mut rows);
+    let legacy_t = time_it(20, || {
+        infos
+            .iter()
+            .filter(|i| {
+                let refs = flopt::ir::varref::collect(i);
+                flopt::ir::deps::analyze_legacy(i, &refs).offloadable
+            })
+            .count()
+    });
+    section("dep analysis (legacy gates)", &legacy_t, &mut rows);
+    let analyze_overhead = if legacy_t.median_s > 0.0 {
+        engine_t.median_s / legacy_t.median_s
+    } else {
+        1.0
+    };
+    println!("{:<35}{:>11.3}x", "analyze overhead (engine/legacy):", analyze_overhead);
+    metrics.insert("analyze_overhead".to_string(), Json::Num(analyze_overhead));
+
+    let t = time_it(20, || {
+        flopt::analyze::explain_program(app.name, &program).artifact()
+    });
+    let w = section("explain artifact (tdfir)", &t, &mut rows);
+    metrics.insert("wall_explain_s".to_string(), Json::Num(w));
+
+    // dependence counters over all nine apps: verdict mix, optimistic
+    // notes, and which subscript tests fire how often.  Every counter is
+    // emitted even when zero so the bench-compare baseline can pin the
+    // full set without missing-metric failures.
+    {
+        use flopt::analyze::{DepTest, LoopVerdict};
+        const ALL_TESTS: &[DepTest] = &[
+            DepTest::Ziv,
+            DepTest::SivStrong,
+            DepTest::SivSymbolic,
+            DepTest::BanerjeeSymbolic,
+            DepTest::Gcd,
+            DepTest::Banerjee,
+            DepTest::MivBanerjee,
+            DepTest::MivSymbolic,
+        ];
+        let (mut par, mut red, mut seqn, mut unk, mut notes) = (0u64, 0u64, 0u64, 0u64, 0u64);
+        let mut fired: BTreeMap<DepTest, u64> = ALL_TESTS.iter().map(|t| (*t, 0)).collect();
+        for a in apps::all() {
+            let rep = flopt::analyze::explain_program(a.name, &a.parse());
+            for l in &rep.loops {
+                match &l.deps.verdict {
+                    LoopVerdict::Parallel => par += 1,
+                    LoopVerdict::Reduction(_) => red += 1,
+                    LoopVerdict::Sequential(_) => seqn += 1,
+                    LoopVerdict::Unknown(_) => unk += 1,
+                }
+                notes += l.deps.notes.len() as u64;
+                for (t, c) in &l.deps.tests {
+                    *fired.entry(*t).or_insert(0) += *c as u64;
+                }
+            }
+        }
+        metrics.insert("deps_verdict_parallel".to_string(), Json::Num(par as f64));
+        metrics.insert("deps_verdict_reduction".to_string(), Json::Num(red as f64));
+        metrics.insert("deps_verdict_sequential".to_string(), Json::Num(seqn as f64));
+        metrics.insert("deps_verdict_unknown".to_string(), Json::Num(unk as f64));
+        metrics.insert("deps_notes".to_string(), Json::Num(notes as f64));
+        for (t, c) in &fired {
+            metrics.insert(
+                format!("deps_test_{}", t.as_str().replace('-', "_")),
+                Json::Num(*c as f64),
+            );
+        }
+    }
+
     let t = time_it(5, || {
         let mut it = app.interp(&program, true);
         it.run_main().unwrap();

@@ -1,0 +1,251 @@
+//! `flopt explain` diagnostics: span-anchored dependence reports.
+//!
+//! [`explain_program`] runs the engine over every loop of a program and
+//! packages the verdicts, dependence facts, optimistic notes, and test
+//! counters into an [`ExplainReport`].  The report renders two ways —
+//! human text ([`ExplainReport::render`]) and a JSON document
+//! ([`ExplainReport::to_json`]) — and both are deterministic byte
+//! streams so the serve cache can store the pair as one artifact and
+//! return byte-identical answers warm or cold, at any pool width.
+
+use std::collections::BTreeMap;
+
+use crate::cparse::ast::LoopId;
+use crate::cparse::error::Pos;
+use crate::cparse::{pretty, Program};
+use crate::ir::loops::LoopInfo;
+use crate::ir::{loops, varref};
+use crate::util::intern::Symbol;
+use crate::util::json::{self, Json};
+
+use super::{engine, LoopDeps, LoopVerdict};
+
+/// Engine output for one loop, anchored to its source span.
+#[derive(Debug, Clone)]
+pub struct LoopExplain {
+    /// Loop id (`L0`, `L1`, … in extraction order).
+    pub id: LoopId,
+    /// Enclosing function.
+    pub function: Symbol,
+    /// Source position of the loop statement.
+    pub pos: Pos,
+    /// Full engine output.
+    pub deps: LoopDeps,
+}
+
+/// Dependence diagnostics for every loop of one application.
+#[derive(Debug, Clone)]
+pub struct ExplainReport {
+    /// Application name.
+    pub app: String,
+    /// Per-loop diagnostics in extraction order.
+    pub loops: Vec<LoopExplain>,
+}
+
+/// The cacheable artifact: both renderings of one report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExplainArtifact {
+    /// Human-readable rendering.
+    pub text: String,
+    /// JSON rendering (one serialized document).
+    pub json: String,
+}
+
+/// Run the dependence engine over every loop of `program`.
+pub fn explain_program(app: &str, program: &Program) -> ExplainReport {
+    let mut out = Vec::new();
+    for info in loops::extract(program) {
+        let refs = varref::collect(&info);
+        let deps = engine::analyze_loop(&info, &refs);
+        out.push(explain_one(&info, deps));
+    }
+    ExplainReport { app: app.to_string(), loops: out }
+}
+
+fn explain_one(info: &LoopInfo, deps: LoopDeps) -> LoopExplain {
+    LoopExplain { id: info.id, function: info.function, pos: info.pos, deps }
+}
+
+impl ExplainReport {
+    /// Render both artifact forms.
+    pub fn artifact(&self) -> ExplainArtifact {
+        ExplainArtifact { text: self.render(), json: json::to_string(&self.to_json()) }
+    }
+
+    /// Human-readable diagnostics.
+    pub fn render(&self) -> String {
+        let mut s = format!("=== explain: {} ===\n", self.app);
+        for l in &self.loops {
+            let d = &l.deps;
+            s.push_str(&format!("{} in {} @{}: {}", l.id, l.function, l.pos, d.verdict.tag()));
+            match &d.verdict {
+                LoopVerdict::Sequential(r) | LoopVerdict::Unknown(r) => {
+                    s.push_str(&format!(" -- {r}"));
+                }
+                _ => {}
+            }
+            s.push('\n');
+            if !d.reductions.is_empty() {
+                let vars: Vec<String> =
+                    d.reductions.iter().map(|r| format!("{}({})", r.var, r.op)).collect();
+                s.push_str(&format!("  reductions: {}\n", vars.join(" ")));
+            }
+            for dep in &d.deps {
+                s.push_str(&format!(
+                    "  dep: {} on {}: {} vs {} [{}]\n",
+                    dep.class.as_str(),
+                    dep.array,
+                    pretty::expr(&dep.source),
+                    pretty::expr(&dep.sink),
+                    dep.test
+                ));
+            }
+            for n in &d.notes {
+                let subs: Vec<String> = n.subscripts.iter().map(|e| pretty::expr(e)).collect();
+                s.push_str(&format!(
+                    "  note: {} on {}: {}\n",
+                    n.kind.as_str(),
+                    n.array,
+                    subs.join(", ")
+                ));
+            }
+            if !d.tests.is_empty() {
+                let counts: Vec<String> =
+                    d.tests.iter().map(|(t, c)| format!("{t}={c}")).collect();
+                s.push_str(&format!("  tests: {}\n", counts.join(" ")));
+            }
+        }
+        s
+    }
+
+    /// JSON document (sorted object keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        let mut doc = BTreeMap::new();
+        doc.insert("app".to_string(), Json::Str(self.app.clone()));
+        let mut loops = Vec::new();
+        for l in &self.loops {
+            let d = &l.deps;
+            let mut o = BTreeMap::new();
+            o.insert("id".to_string(), Json::Str(l.id.to_string()));
+            o.insert("function".to_string(), Json::Str(l.function.to_string()));
+            o.insert("pos".to_string(), Json::Str(l.pos.to_string()));
+            o.insert("verdict".to_string(), Json::Str(d.verdict.tag().to_string()));
+            o.insert(
+                "reason".to_string(),
+                match d.verdict.reject_reason() {
+                    Some(r) => Json::Str(r.to_string()),
+                    None => Json::Null,
+                },
+            );
+            o.insert("offloadable".to_string(), Json::Bool(d.offloadable()));
+            let reds = d
+                .reductions
+                .iter()
+                .map(|r| {
+                    let mut ro = BTreeMap::new();
+                    ro.insert("var".to_string(), Json::Str(r.var.to_string()));
+                    ro.insert("op".to_string(), Json::Str(r.op.to_string()));
+                    Json::Obj(ro)
+                })
+                .collect();
+            o.insert("reductions".to_string(), Json::Arr(reds));
+            let deps = d
+                .deps
+                .iter()
+                .map(|dep| {
+                    let mut dobj = BTreeMap::new();
+                    dobj.insert("class".to_string(), Json::Str(dep.class.as_str().to_string()));
+                    dobj.insert("array".to_string(), Json::Str(dep.array.to_string()));
+                    dobj.insert("source".to_string(), Json::Str(pretty::expr(&dep.source)));
+                    dobj.insert(
+                        "source_pos".to_string(),
+                        Json::Str(dep.source.pos.to_string()),
+                    );
+                    dobj.insert("sink".to_string(), Json::Str(pretty::expr(&dep.sink)));
+                    dobj.insert("sink_pos".to_string(), Json::Str(dep.sink.pos.to_string()));
+                    dobj.insert("test".to_string(), Json::Str(dep.test.to_string()));
+                    Json::Obj(dobj)
+                })
+                .collect();
+            o.insert("deps".to_string(), Json::Arr(deps));
+            let notes = d
+                .notes
+                .iter()
+                .map(|n| {
+                    let mut nobj = BTreeMap::new();
+                    nobj.insert("kind".to_string(), Json::Str(n.kind.as_str().to_string()));
+                    nobj.insert("array".to_string(), Json::Str(n.array.to_string()));
+                    nobj.insert(
+                        "subscripts".to_string(),
+                        Json::Arr(
+                            n.subscripts.iter().map(|e| Json::Str(pretty::expr(e))).collect(),
+                        ),
+                    );
+                    Json::Obj(nobj)
+                })
+                .collect();
+            o.insert("notes".to_string(), Json::Arr(notes));
+            let mut tobj = BTreeMap::new();
+            for (t, c) in &d.tests {
+                tobj.insert(t.to_string(), Json::Num(f64::from(*c)));
+            }
+            o.insert("tests".to_string(), Json::Obj(tobj));
+            loops.push(Json::Obj(o));
+        }
+        doc.insert("loops".to_string(), Json::Arr(loops));
+        Json::Obj(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+
+    const SRC: &str = "void f(float a[], float out[], int n) { int i; float s; s = 0.0; \
+         for (i = 1; i < n; i++) { out[i] = a[i - 1]; } \
+         for (i = 0; i < n; i++) { s += a[i]; } }";
+
+    #[test]
+    fn report_covers_every_loop_in_order() {
+        let p = parse(SRC).unwrap();
+        let r = explain_program("demo", &p);
+        assert_eq!(r.loops.len(), 2);
+        assert_eq!(r.loops[0].id.to_string(), "L0");
+        assert!(r.loops[0].deps.offloadable());
+        assert!(matches!(r.loops[1].deps.verdict, LoopVerdict::Reduction(_)));
+    }
+
+    #[test]
+    fn render_names_test_and_subscripts_for_a_dep() {
+        let p = parse(
+            "void f(float a[], int n) { int i; \
+             for (i = 1; i < n; i++) { a[i] = a[i - 1]; } }",
+        )
+        .unwrap();
+        let r = explain_program("rec", &p).render();
+        assert!(r.contains("sequential -- array read/write index mismatch"), "{r}");
+        assert!(r.contains("dep: flow/anti on a: a[i] vs a[(i - 1)] [siv-strong]"), "{r}");
+    }
+
+    #[test]
+    fn json_roundtrips_and_anchors_spans() {
+        let p = parse(SRC).unwrap();
+        let rep = explain_program("demo", &p);
+        let text = json::to_string(&rep.to_json());
+        let doc = json::parse(&text).unwrap();
+        assert_eq!(doc.get("app").and_then(|j| j.as_str()), Some("demo"));
+        let loops = doc.get("loops").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(loops.len(), 2);
+        let pos = loops[0].get("pos").and_then(|j| j.as_str()).unwrap();
+        assert!(pos.contains(':'), "span is line:col, got {pos}");
+    }
+
+    #[test]
+    fn artifact_is_deterministic() {
+        let p = parse(SRC).unwrap();
+        let a1 = explain_program("demo", &p).artifact();
+        let a2 = explain_program("demo", &p).artifact();
+        assert_eq!(a1, a2);
+    }
+}

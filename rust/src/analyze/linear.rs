@@ -1,0 +1,284 @@
+//! Affine subscript forms over a loop counter.
+//!
+//! A subscript expression is abstracted as `a·i + c + Σ coeffₖ·termₖ`
+//! where `i` is the loop counter, `c` a constant, and each symbolic
+//! term a *product* of non-counter variables (so `b * span + j` and
+//! `NP - 1 - i` both stay exact).  Anything the grammar cannot express
+//! affinely — a counter multiplied by a non-constant, a division, a
+//! call — has no form, and the engine falls back to its conservative
+//! or optimistic tiers.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cparse::ast::{BinOp, Expr, ExprKind, UnOp};
+use crate::ir::CanonicalLoop;
+use crate::util::intern::Symbol;
+
+/// Affine form of one subscript in a given loop counter.
+///
+/// Symbolic term keys are sorted products of interned [`Symbol`]s, so
+/// `b*span` and `span*b` collapse to one term and comparison is exact.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct LinearForm {
+    /// Coefficient of the loop counter.
+    pub a: i64,
+    /// Constant part.
+    pub c: i64,
+    /// Symbolic part: sorted product-of-symbols key → coefficient.
+    pub terms: BTreeMap<Vec<Symbol>, i64>,
+}
+
+impl LinearForm {
+    /// The constant form `c`.
+    pub fn constant(c: i64) -> LinearForm {
+        LinearForm { a: 0, c, terms: BTreeMap::new() }
+    }
+
+    /// Is this form free of both the counter and symbolic terms?
+    pub fn is_const(&self) -> bool {
+        self.a == 0 && self.terms.is_empty()
+    }
+
+    /// Every symbol mentioned by a symbolic term.
+    pub fn syms(&self) -> BTreeSet<Symbol> {
+        self.terms.keys().flatten().copied().collect()
+    }
+
+    fn normalized(mut self) -> LinearForm {
+        self.terms.retain(|_, v| *v != 0);
+        self
+    }
+
+    /// `self + r`.
+    pub fn add(&self, r: &LinearForm) -> LinearForm {
+        let mut terms = self.terms.clone();
+        for (k, v) in &r.terms {
+            *terms.entry(k.clone()).or_insert(0) += v;
+        }
+        LinearForm { a: self.a + r.a, c: self.c + r.c, terms }.normalized()
+    }
+
+    /// `-self`.
+    pub fn neg(&self) -> LinearForm {
+        LinearForm {
+            a: -self.a,
+            c: -self.c,
+            terms: self.terms.iter().map(|(k, v)| (k.clone(), -v)).collect(),
+        }
+    }
+
+    /// `self · k`.
+    pub fn scale(&self, k: i64) -> LinearForm {
+        LinearForm {
+            a: self.a * k,
+            c: self.c * k,
+            terms: self.terms.iter().map(|(key, v)| (key.clone(), v * k)).collect(),
+        }
+        .normalized()
+    }
+
+    /// `self · r`, or `None` when the product mentions the counter
+    /// non-linearly (counter × non-constant).
+    pub fn mul(&self, r: &LinearForm) -> Option<LinearForm> {
+        if self.is_const() {
+            return Some(r.scale(self.c));
+        }
+        if r.is_const() {
+            return Some(self.scale(r.c));
+        }
+        if self.a != 0 || r.a != 0 {
+            return None; // counter times a non-constant: nonlinear
+        }
+        let mut terms: BTreeMap<Vec<Symbol>, i64> = BTreeMap::new();
+        for (k1, v1) in &self.terms {
+            for (k2, v2) in &r.terms {
+                let mut key: Vec<Symbol> = k1.iter().chain(k2.iter()).copied().collect();
+                key.sort();
+                *terms.entry(key).or_insert(0) += v1 * v2;
+            }
+            if r.c != 0 {
+                *terms.entry(k1.clone()).or_insert(0) += v1 * r.c;
+            }
+        }
+        if self.c != 0 {
+            for (k2, v2) in &r.terms {
+                *terms.entry(k2.clone()).or_insert(0) += v2 * self.c;
+            }
+        }
+        Some(LinearForm { a: 0, c: self.c * r.c, terms }.normalized())
+    }
+}
+
+/// Affine form of `e` in `counter`, or `None` when nonlinear.
+pub fn parse_linear(e: &Expr, counter: Symbol) -> Option<LinearForm> {
+    match &e.kind {
+        ExprKind::IntLit(k) => Some(LinearForm::constant(*k)),
+        ExprKind::Var(n) if *n == counter => {
+            Some(LinearForm { a: 1, c: 0, terms: BTreeMap::new() })
+        }
+        ExprKind::Var(n) => {
+            let mut terms = BTreeMap::new();
+            terms.insert(vec![*n], 1);
+            Some(LinearForm { a: 0, c: 0, terms })
+        }
+        ExprKind::Unary(UnOp::Neg, x) => Some(parse_linear(x, counter)?.neg()),
+        ExprKind::Binary(op @ (BinOp::Add | BinOp::Sub | BinOp::Mul), l, r) => {
+            let lf = parse_linear(l, counter)?;
+            let rf = parse_linear(r, counter)?;
+            match op {
+                BinOp::Add => Some(lf.add(&rf)),
+                BinOp::Sub => Some(lf.add(&rf.neg())),
+                _ => lf.mul(&rf),
+            }
+        }
+        _ => None,
+    }
+}
+
+/// What the dependence tests know about one loop's iteration space.
+#[derive(Debug, Clone, Default)]
+pub struct Bounds {
+    /// Canonical counter increment (always positive).
+    pub step: i64,
+    /// `max − min` counter value, floored to a step multiple, when both
+    /// bounds are integer constants (0 for a provably zero-trip loop).
+    pub width: Option<i64>,
+    /// `hi − lo` as a symbolic form — only for a *strict* (`<`) bound,
+    /// where `|i − i′| < hi − lo` holds exactly.
+    pub span: Option<LinearForm>,
+    /// Concrete initial counter value, when `lo` is constant.
+    pub lo: Option<i64>,
+}
+
+impl Bounds {
+    /// Derive the iteration-space facts of one canonical loop.
+    pub fn of(can: &CanonicalLoop) -> Bounds {
+        let strict = !can.inclusive;
+        let mut b = Bounds { step: can.step, width: None, span: None, lo: None };
+        let lo_f = parse_linear(&can.lo, can.var);
+        if let Some(f) = &lo_f {
+            if f.is_const() {
+                b.lo = Some(f.c);
+            }
+        }
+        let hi_f = parse_linear(&can.hi, can.var);
+        let (Some(lo_f), Some(hi_f)) = (lo_f, hi_f) else { return b };
+        if lo_f.a != 0 || hi_f.a != 0 {
+            return b;
+        }
+        let span = hi_f.add(&lo_f.neg());
+        if span.terms.is_empty() {
+            let w = span.c - if strict { 1 } else { 0 };
+            b.width = Some(if w >= 0 { (w / can.step) * can.step } else { 0 });
+        } else if strict {
+            b.span = Some(span);
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cparse::parse;
+    use crate::ir::loops;
+
+    fn form(src_expr: &str, counter: &str) -> Option<LinearForm> {
+        // wrap the subscript in a tiny program so the real parser builds it
+        let src = format!(
+            "float a[10]; void f(int i, int n, int b, int s) {{ a[{src_expr}] = 0.0; }}"
+        );
+        let p = parse(&src).expect("expr parses");
+        let mut out = None;
+        for f in &p.functions {
+            for st in &f.body {
+                st.walk(&mut |s| {
+                    if let crate::cparse::ast::Stmt::Assign {
+                        target: crate::cparse::ast::LValue::Index(_, idx),
+                        ..
+                    } = s
+                    {
+                        out = Some((**idx).clone());
+                    }
+                });
+            }
+        }
+        parse_linear(&out.expect("found subscript"), Symbol::intern(counter))
+    }
+
+    #[test]
+    fn constant_and_counter_forms() {
+        let f = form("7", "i").unwrap();
+        assert_eq!((f.a, f.c), (0, 7));
+        assert!(f.terms.is_empty());
+        let f = form("i", "i").unwrap();
+        assert_eq!((f.a, f.c), (1, 0));
+    }
+
+    #[test]
+    fn affine_combination() {
+        // 2*i + n - 3
+        let f = form("2 * i + n - 3", "i").unwrap();
+        assert_eq!((f.a, f.c), (2, -3));
+        assert_eq!(f.terms.get(&vec![Symbol::intern("n")]), Some(&1));
+    }
+
+    #[test]
+    fn symbol_products_sort() {
+        // b*s and s*b are one term
+        let f1 = form("b * s", "i").unwrap();
+        let f2 = form("s * b", "i").unwrap();
+        assert_eq!(f1, f2);
+        assert_eq!(f1.terms.len(), 1);
+    }
+
+    #[test]
+    fn counter_times_symbol_is_nonlinear() {
+        assert!(form("i * n", "i").is_none());
+        assert!(form("n * i", "i").is_none());
+        // counter times a constant stays linear
+        assert_eq!(form("i * 4", "i").unwrap().a, 4);
+    }
+
+    #[test]
+    fn cancellation_normalizes() {
+        let f = form("n - n + i", "i").unwrap();
+        assert!(f.terms.is_empty());
+        assert_eq!((f.a, f.c), (1, 0));
+    }
+
+    fn bounds_of(src: &str) -> Bounds {
+        let p = parse(src).expect("parses");
+        let l = loops::extract(&p);
+        Bounds::of(l[0].canonical.as_ref().expect("canonical"))
+    }
+
+    #[test]
+    fn concrete_bounds_have_width_and_lo() {
+        let b = bounds_of("void f() { for (int i = 2; i < 10; i++) { } }");
+        assert_eq!(b.width, Some(7));
+        assert_eq!(b.lo, Some(2));
+        assert!(b.span.is_none());
+    }
+
+    #[test]
+    fn width_floors_to_step_multiple() {
+        let b = bounds_of("void f() { for (int i = 0; i <= 10; i += 3) { } }");
+        assert_eq!(b.width, Some(9));
+    }
+
+    #[test]
+    fn symbolic_strict_bound_keeps_span() {
+        let b = bounds_of("void f(int n) { for (int i = 0; i < n; i++) { } }");
+        assert!(b.width.is_none());
+        let span = b.span.expect("span form");
+        assert_eq!(span.terms.get(&vec![Symbol::intern("n")]), Some(&1));
+        assert_eq!(b.lo, Some(0));
+    }
+
+    #[test]
+    fn zero_trip_loop_width_is_zero() {
+        let b = bounds_of("void f() { for (int i = 5; i < 3; i++) { } }");
+        assert_eq!(b.width, Some(0));
+    }
+}

@@ -1,0 +1,254 @@
+//! Loop-carried dependence engine.
+//!
+//! This module decides, per canonical loop, whether iterations may run
+//! in parallel — the verdict the offload pipeline previously derived
+//! from a set of ad-hoc syntactic gates in [`crate::ir::deps`].  The
+//! engine keeps the legacy gate *order* (so diagnostics stay stable)
+//! but proves each array verdict with classical subscript dependence
+//! tests over affine forms ([`linear`]), pairwise classification
+//! ([`pairs`]), and records every dependence fact, optimistic
+//! assumption, and fired test for the `flopt explain` diagnostics
+//! ([`explain`]).
+//!
+//! The contract with the rest of the pipeline is
+//! [`LoopDeps::to_dep_analysis`]: verdicts collapse onto the legacy
+//! `offloadable` / `reject_reason` pair consumed by the Analyze and
+//! IntensityNarrow stages, and are validated against a dynamic
+//! dependence oracle (`interp::oracle`) by the generative suite's
+//! seventh invariant.
+
+pub mod engine;
+pub mod explain;
+pub mod linear;
+pub mod pairs;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::ir::Reduction;
+use crate::util::intern::Symbol;
+
+pub use engine::analyze_loop;
+pub use explain::{explain_program, ExplainArtifact, ExplainReport, LoopExplain};
+pub use linear::{parse_linear, Bounds, LinearForm};
+pub use pairs::{classify_pair, DepTest, PairKind};
+
+/// Why a loop was rejected (or left undecided) for offload.
+///
+/// One variant per diagnostic the pipeline can emit; the [`fmt::Display`]
+/// strings are load-bearing — they appear in golden analyze reports,
+/// regression pins, and `flopt explain` output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RejectReason {
+    /// The loop has no canonical counted header (`for (i = lo; i < hi; i += s)`).
+    NoCanonicalHeader,
+    /// A variable in the loop bound is written inside the body.
+    BoundWritten,
+    /// The body calls a function that is not a known builtin.
+    NonBuiltinCall,
+    /// The body contains a `return`.
+    BodyReturn,
+    /// An array is written at an index that never mentions the counter.
+    InvariantWriteIndex,
+    /// An array is written at an index loaded from another array.
+    DataDependentWriteIndex,
+    /// A write/read subscript pair may touch the same element across
+    /// iterations (flow or anti dependence).
+    ReadWriteMismatch,
+    /// A scalar is both read and written without forming a reduction.
+    CarriedScalar,
+    /// A reduction variable's running value is consumed inside the loop.
+    ReductionConsumed,
+    /// Two write subscripts may store to the same element across
+    /// iterations (output dependence).
+    WwOverlap,
+}
+
+impl RejectReason {
+    /// The exact legacy diagnostic string for this reason.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectReason::NoCanonicalHeader => "no canonical counted header",
+            RejectReason::BoundWritten => "loop bound written inside body",
+            RejectReason::NonBuiltinCall => "calls non-builtin function",
+            RejectReason::BodyReturn => "body contains return",
+            RejectReason::InvariantWriteIndex => "array written at loop-invariant index",
+            RejectReason::DataDependentWriteIndex => "array written at data-dependent index",
+            RejectReason::ReadWriteMismatch => {
+                "array read/write index mismatch (possible cross-iteration dependence)"
+            }
+            RejectReason::CarriedScalar => "loop-carried scalar dependence (not a reduction)",
+            RejectReason::ReductionConsumed => "reduction value consumed inside the loop",
+            RejectReason::WwOverlap => "array write/write overlap across iterations",
+        }
+    }
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The engine's verdict for one loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LoopVerdict {
+    /// Iterations are independent; the loop may be offloaded.
+    Parallel,
+    /// Iterations are independent except for the named reduction
+    /// variables; offloadable with reduction support.
+    Reduction(Vec<Symbol>),
+    /// A proven dependence (or hard structural property) serializes the
+    /// loop.
+    Sequential(RejectReason),
+    /// The engine could not decide; treated as not offloadable.
+    Unknown(RejectReason),
+}
+
+impl LoopVerdict {
+    /// Lowercase tag used in diagnostics and JSON.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LoopVerdict::Parallel => "parallel",
+            LoopVerdict::Reduction(_) => "reduction",
+            LoopVerdict::Sequential(_) => "sequential",
+            LoopVerdict::Unknown(_) => "unknown",
+        }
+    }
+
+    /// May the loop be offloaded?
+    pub fn offloadable(&self) -> bool {
+        matches!(self, LoopVerdict::Parallel | LoopVerdict::Reduction(_))
+    }
+
+    /// The reject reason, for non-offloadable verdicts.
+    pub fn reject_reason(&self) -> Option<RejectReason> {
+        match self {
+            LoopVerdict::Sequential(r) | LoopVerdict::Unknown(r) => Some(*r),
+            _ => None,
+        }
+    }
+}
+
+/// Dependence class of a recorded fact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepClass {
+    /// Write/read conflict (flow or anti — the engine does not orient
+    /// the pair, it only needs existence).
+    FlowAnti,
+    /// Write/write conflict.
+    Output,
+}
+
+impl DepClass {
+    /// Stable tag for diagnostics.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DepClass::FlowAnti => "flow/anti",
+            DepClass::Output => "output",
+        }
+    }
+}
+
+/// One dependence the engine proved or had to assume.
+#[derive(Debug, Clone)]
+pub struct DepFact {
+    /// Flow/anti or output.
+    pub class: DepClass,
+    /// The array involved.
+    pub array: Symbol,
+    /// Source subscript expression (a write).
+    pub source: crate::cparse::ast::Expr,
+    /// Sink subscript expression (read for flow/anti, write for output).
+    pub sink: crate::cparse::ast::Expr,
+    /// The test that fired.
+    pub test: DepTest,
+}
+
+/// Kind of optimistic assumption recorded as a [`Note`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoteKind {
+    /// A write/read pair was proven independent by a subscript test
+    /// (strictly better than the legacy structural-equality gate).
+    ReadProvedIndependent,
+    /// A non-affine write subscript was assumed injective across
+    /// iterations (legacy behaviour, kept for parity).
+    AssumedInjective,
+    /// Two write subscripts with a non-affine member were assumed
+    /// disjoint (legacy behaviour, kept for parity).
+    AssumedDisjoint,
+}
+
+impl NoteKind {
+    /// Stable kebab-case tag for diagnostics.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            NoteKind::ReadProvedIndependent => "read-proved-independent",
+            NoteKind::AssumedInjective => "assumed-injective",
+            NoteKind::AssumedDisjoint => "assumed-disjoint",
+        }
+    }
+}
+
+/// An optimistic assumption or extra proof the engine wants surfaced in
+/// diagnostics without affecting the verdict.
+#[derive(Debug, Clone)]
+pub struct Note {
+    /// What was assumed or proved.
+    pub kind: NoteKind,
+    /// The array involved.
+    pub array: Symbol,
+    /// The subscript expressions involved (one or two).
+    pub subscripts: Vec<crate::cparse::ast::Expr>,
+}
+
+/// Full dependence analysis of one loop.
+#[derive(Debug, Clone)]
+pub struct LoopDeps {
+    /// The verdict.
+    pub verdict: LoopVerdict,
+    /// Recognized reductions (verdict [`LoopVerdict::Reduction`] lists
+    /// the same variables).
+    pub reductions: Vec<Reduction>,
+    /// Dependences proved or assumed (the first fatal one ends the
+    /// analysis, so rejection verdicts carry exactly the fact that
+    /// fired).
+    pub deps: Vec<DepFact>,
+    /// Optimistic-tier notes.
+    pub notes: Vec<Note>,
+    /// How often each subscript test fired.
+    pub tests: BTreeMap<DepTest, u32>,
+}
+
+impl Default for LoopDeps {
+    fn default() -> LoopDeps {
+        LoopDeps {
+            verdict: LoopVerdict::Parallel,
+            reductions: Vec::new(),
+            deps: Vec::new(),
+            notes: Vec::new(),
+            tests: BTreeMap::new(),
+        }
+    }
+}
+
+impl LoopDeps {
+    /// May the loop be offloaded?
+    pub fn offloadable(&self) -> bool {
+        self.verdict.offloadable()
+    }
+
+    /// The reject reason, for non-offloadable verdicts.
+    pub fn reject_reason(&self) -> Option<RejectReason> {
+        self.verdict.reject_reason()
+    }
+
+    /// Collapse onto the legacy pipeline contract.
+    pub fn to_dep_analysis(&self) -> crate::ir::DepAnalysis {
+        crate::ir::DepAnalysis {
+            offloadable: self.offloadable(),
+            reject_reason: self.reject_reason(),
+            reductions: self.reductions.clone(),
+        }
+    }
+}

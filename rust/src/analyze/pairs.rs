@@ -1,0 +1,296 @@
+//! Pairwise subscript dependence tests.
+//!
+//! Given two affine subscripts `f(i)` and `g(i′)` of the same array and
+//! the loop's [`Bounds`], [`classify_pair`] decides whether the conflict
+//! equation `f(i) = g(i′)` can hold for distinct iterations `i ≠ i′`.
+//! The test hierarchy is classical: ZIV for counter-free pairs, strong
+//! SIV for equal coefficients, a GCD filter and a Banerjee bounds check
+//! for the MIV shapes our subscript grammar can produce, plus a
+//! symbolic-span Banerjee variant for strict counted loops with
+//! symbolic bounds.
+
+use std::fmt;
+
+use super::linear::{Bounds, LinearForm};
+
+/// Which dependence test decided (or gave up on) a subscript pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DepTest {
+    /// Zero-index-variable: neither subscript mentions the counter.
+    Ziv,
+    /// Strong single-index-variable: equal counter coefficients,
+    /// constant difference.
+    SivStrong,
+    /// Equal coefficients but a symbolic difference the span could not
+    /// discharge.
+    SivSymbolic,
+    /// Symbolic difference proved out of range by the strict-bound span
+    /// (`|i − i′| < hi − lo`).
+    BanerjeeSymbolic,
+    /// Differing coefficients, constant difference not divisible by
+    /// their GCD.
+    Gcd,
+    /// Differing coefficients, difference outside the Banerjee value
+    /// bounds of `a₁·i − a₂·i′`.
+    Banerjee,
+    /// Differing coefficients within Banerjee bounds: assumed carried.
+    MivBanerjee,
+    /// Differing coefficients with symbolic parts or symbolic loop
+    /// bounds: no verdict.
+    MivSymbolic,
+}
+
+impl DepTest {
+    /// Stable kebab-case name used in diagnostics and counters.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DepTest::Ziv => "ziv",
+            DepTest::SivStrong => "siv-strong",
+            DepTest::SivSymbolic => "siv-symbolic",
+            DepTest::BanerjeeSymbolic => "banerjee-symbolic",
+            DepTest::Gcd => "gcd",
+            DepTest::Banerjee => "banerjee",
+            DepTest::MivBanerjee => "miv-banerjee",
+            DepTest::MivSymbolic => "miv-symbolic",
+        }
+    }
+}
+
+impl fmt::Display for DepTest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Outcome of one subscript-pair test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PairKind {
+    /// The two subscripts can never touch the same element in distinct
+    /// iterations.
+    Independent,
+    /// They coincide only within a single iteration (distance zero).
+    SameIter,
+    /// A loop-carried conflict exists (or must be assumed).
+    Carried,
+    /// The tests could not decide.
+    Unknown,
+}
+
+fn gcd64(mut a: i64, mut b: i64) -> i64 {
+    a = a.abs();
+    b = b.abs();
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Can `f(i) == g(i′)` hold for iterations `i ≠ i′` of the loop?
+///
+/// The dependence equation is `f.a·i − g.a·i′ = R` with
+/// `R = (g − f)` restricted to its counter-free part.
+pub fn classify_pair(f: &LinearForm, g: &LinearForm, bnd: &Bounds) -> (PairKind, DepTest) {
+    let r_form = LinearForm { a: 0, c: g.c, terms: g.terms.clone() }
+        .add(&LinearForm { a: 0, c: f.c, terms: f.terms.clone() }.neg());
+    let (a1, a2) = (f.a, g.a);
+    if a1 == a2 {
+        let a = a1;
+        if !r_form.terms.is_empty() {
+            // Symbolic delta.  Banerjee with symbolic bounds: for a
+            // strict counted loop, |i − i′| <= (hi−lo) − 1 < hi−lo, so
+            // a delta of exactly ±a·(hi−lo) can never be matched.
+            if a != 0 {
+                if let Some(span) = &bnd.span {
+                    let scaled = span.scale(a);
+                    if r_form == scaled || r_form == scaled.neg() {
+                        return (PairKind::Independent, DepTest::BanerjeeSymbolic);
+                    }
+                }
+            }
+            return (PairKind::Unknown, DepTest::SivSymbolic);
+        }
+        let r = r_form.c;
+        if a == 0 {
+            return if r == 0 {
+                (PairKind::Carried, DepTest::Ziv)
+            } else {
+                (PairKind::Independent, DepTest::Ziv)
+            };
+        }
+        if r % a != 0 {
+            return (PairKind::Independent, DepTest::SivStrong);
+        }
+        let d = r / a; // i − i′ in counter units
+        if d == 0 {
+            return (PairKind::SameIter, DepTest::SivStrong);
+        }
+        if d % bnd.step != 0 {
+            return (PairKind::Independent, DepTest::SivStrong);
+        }
+        if let Some(width) = bnd.width {
+            if d.abs() > width {
+                return (PairKind::Independent, DepTest::SivStrong);
+            }
+        }
+        // symbolic bounds: assume the range covers |d|
+        return (PairKind::Carried, DepTest::SivStrong);
+    }
+    // MIV-style: differing counter coefficients.
+    if !r_form.terms.is_empty() {
+        return (PairKind::Unknown, DepTest::MivSymbolic);
+    }
+    let r = r_form.c;
+    let g_ = gcd64(a1, a2);
+    if g_ != 0 && r % g_ != 0 {
+        return (PairKind::Independent, DepTest::Gcd);
+    }
+    if let (Some(lo), Some(width)) = (bnd.lo, bnd.width) {
+        // Banerjee value bounds of a1·i − a2·i′ with both counters
+        // ranging over {lo, lo+width} (linear ⇒ extremes at endpoints).
+        let pts = [lo, lo + width];
+        let min1 = pts.iter().map(|v| a1 * v).min().unwrap();
+        let max1 = pts.iter().map(|v| a1 * v).max().unwrap();
+        let min2 = pts.iter().map(|v| a2 * v).min().unwrap();
+        let max2 = pts.iter().map(|v| a2 * v).max().unwrap();
+        if r < min1 - max2 || r > max1 - min2 {
+            return (PairKind::Independent, DepTest::Banerjee);
+        }
+        return (PairKind::Carried, DepTest::MivBanerjee);
+    }
+    (PairKind::Unknown, DepTest::MivSymbolic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::intern::Symbol;
+    use std::collections::BTreeMap;
+
+    fn af(a: i64, c: i64) -> LinearForm {
+        LinearForm { a, c, terms: BTreeMap::new() }
+    }
+
+    fn sym(name: &str, coeff: i64) -> LinearForm {
+        let mut terms = BTreeMap::new();
+        terms.insert(vec![Symbol::intern(name)], coeff);
+        LinearForm { a: 0, c: 0, terms }
+    }
+
+    fn concrete(step: i64, lo: i64, width: i64) -> Bounds {
+        Bounds { step, width: Some(width), span: None, lo: Some(lo) }
+    }
+
+    #[test]
+    fn ziv_distinct_constants_independent() {
+        let b = concrete(1, 0, 9);
+        assert_eq!(
+            classify_pair(&af(0, 3), &af(0, 7), &b),
+            (PairKind::Independent, DepTest::Ziv)
+        );
+        assert_eq!(
+            classify_pair(&af(0, 3), &af(0, 3), &b),
+            (PairKind::Carried, DepTest::Ziv)
+        );
+    }
+
+    #[test]
+    fn strong_siv_distance() {
+        let b = concrete(1, 0, 9);
+        // a[i] vs a[i] — same iteration only
+        assert_eq!(
+            classify_pair(&af(1, 0), &af(1, 0), &b),
+            (PairKind::SameIter, DepTest::SivStrong)
+        );
+        // a[i] vs a[i-1] — carried at distance 1
+        assert_eq!(
+            classify_pair(&af(1, 0), &af(1, -1), &b),
+            (PairKind::Carried, DepTest::SivStrong)
+        );
+        // 2i vs 2i+1 — parity never matches
+        assert_eq!(
+            classify_pair(&af(2, 0), &af(2, 1), &b),
+            (PairKind::Independent, DepTest::SivStrong)
+        );
+    }
+
+    #[test]
+    fn strong_siv_width_prunes_far_distances() {
+        let b = concrete(1, 0, 4);
+        // distance 7 over a width-4 space: unreachable
+        assert_eq!(
+            classify_pair(&af(1, 0), &af(1, -7), &b),
+            (PairKind::Independent, DepTest::SivStrong)
+        );
+    }
+
+    #[test]
+    fn strong_siv_step_filters_off_grid() {
+        let b = concrete(4, 0, 16);
+        // distance 2 with step 4: counters differ by multiples of 4
+        assert_eq!(
+            classify_pair(&af(1, 0), &af(1, -2), &b),
+            (PairKind::Independent, DepTest::SivStrong)
+        );
+    }
+
+    #[test]
+    fn gcd_filter() {
+        let b = Bounds { step: 1, width: None, span: None, lo: None };
+        // 2i vs 4i'+1: gcd 2 does not divide 1
+        assert_eq!(
+            classify_pair(&af(2, 0), &af(4, 1), &b),
+            (PairKind::Independent, DepTest::Gcd)
+        );
+    }
+
+    #[test]
+    fn banerjee_bounds() {
+        let b = concrete(1, 0, 4);
+        // i vs 2i'+100 over [0,4]: value sets [0,4] vs [100,108] disjoint
+        assert_eq!(
+            classify_pair(&af(1, 0), &af(2, 100), &b),
+            (PairKind::Independent, DepTest::Banerjee)
+        );
+        // i vs 2i' over [0,4]: overlap, assumed carried
+        assert_eq!(
+            classify_pair(&af(1, 0), &af(2, 0), &b),
+            (PairKind::Carried, DepTest::MivBanerjee)
+        );
+    }
+
+    #[test]
+    fn banerjee_symbolic_span_discharges_exact_offset() {
+        // loop i in [base, base+half) writing x[i] and x[i+half]:
+        // delta == span ⇒ never reachable for i ≠ i′ (and the engine
+        // separately skips the structurally-equal same-iteration pair)
+        let b = Bounds { step: 1, width: None, span: Some(sym("half", 1)), lo: None };
+        let f = af(1, 0);
+        let g = af(1, 0).add(&sym("half", 1));
+        assert_eq!(
+            classify_pair(&f, &g, &b),
+            (PairKind::Independent, DepTest::BanerjeeSymbolic)
+        );
+        assert_eq!(
+            classify_pair(&g, &f, &b),
+            (PairKind::Independent, DepTest::BanerjeeSymbolic)
+        );
+        // a different symbolic offset stays undecided
+        let h = af(1, 0).add(&sym("quarter", 1));
+        assert_eq!(
+            classify_pair(&f, &h, &b),
+            (PairKind::Unknown, DepTest::SivSymbolic)
+        );
+    }
+
+    #[test]
+    fn miv_with_symbols_is_unknown() {
+        let b = concrete(1, 0, 9);
+        let g = af(2, 0).add(&sym("n", 1));
+        assert_eq!(
+            classify_pair(&af(1, 0), &g, &b),
+            (PairKind::Unknown, DepTest::MivSymbolic)
+        );
+    }
+}

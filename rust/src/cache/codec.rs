@@ -8,6 +8,7 @@
 //! returns `Option` — a corrupt or truncated payload yields `None` and
 //! the caller recomputes; the cache never fabricates a result.
 
+use crate::analyze::ExplainArtifact;
 use crate::backend::gpu::GpuKernelReport;
 use crate::backend::{BackendReport, Destination, ReportDetail};
 use crate::coordinator::mixed::DestinationSearch;
@@ -845,6 +846,25 @@ pub fn destination_from_json(j: &Json) -> Option<DestinationSearch> {
     })
 }
 
+/// Encode an `flopt explain` artifact (both renderings, pre-serialized).
+pub fn explain_to_json(a: &ExplainArtifact) -> Json {
+    obj(vec![
+        ("kind", Json::Str("explain".to_string())),
+        ("v", Json::Num(VERSION)),
+        ("text", Json::Str(a.text.clone())),
+        ("json", Json::Str(a.json.clone())),
+    ])
+}
+
+/// Decode an `flopt explain` artifact.
+pub fn explain_from_json(j: &Json) -> Option<ExplainArtifact> {
+    check_header(j, "explain")?;
+    Some(ExplainArtifact {
+        text: get_str(j, "text")?.to_string(),
+        json: get_str(j, "json")?.to_string(),
+    })
+}
+
 /// Canonical string form of a trace — the definition of "bit-identical"
 /// the cache tests compare by.
 pub fn trace_to_string(t: &SearchTrace) -> String {
@@ -930,6 +950,19 @@ mod tests {
         assert_eq!(back, r, "decode must be the identity on every field");
         assert_eq!(back.render(), r.render());
         assert!(fleet_from_json(&Json::Null).is_none());
+    }
+
+    #[test]
+    fn explain_artifact_roundtrips() {
+        let program = apps::TDFIR.parse();
+        let a = crate::analyze::explain_program("tdfir", &program).artifact();
+        let j = explain_to_json(&a);
+        let back = explain_from_json(&j).expect("decode");
+        assert_eq!(back, a);
+        assert!(explain_from_json(&Json::Null).is_none());
+        assert!(
+            explain_from_json(&obj(vec![("kind", Json::Str("explain".into()))])).is_none()
+        );
     }
 
     #[test]

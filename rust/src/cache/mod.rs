@@ -24,6 +24,7 @@
 //! blocks_key   = H("blocks",     measure inputs, block_mode)
 //! trace_key    = H("trace",      app_fp, backend_fp, full SearchConfig)
 //! dest_key     = H("destination", app_fp, backend_fp, full SearchConfig)
+//! explain_key  = H("explain",    app.name, app.source)   // scale-free
 //! ```
 //!
 //! `loops?` is the loops-enabled flag: `--blocks only` empties the loop
@@ -200,6 +201,17 @@ pub fn trace_key(
         .write_u64(backend_fingerprint(backend));
     mix_full_config(&mut h, cfg);
     h.finish()
+}
+
+/// Key of an `flopt explain` artifact.  Dependence diagnostics are pure
+/// static analysis — they depend only on the source text, never on the
+/// workload scale, the backend, or the search config, so the key digests
+/// the app name and source alone.
+pub fn explain_key(app: &App) -> CacheKey {
+    KeyHasher::new("explain")
+        .write_str(app.name)
+        .write_str(app.source)
+        .finish()
 }
 
 /// Key of a complete fleet placement report ([`crate::fleet`]): the

@@ -41,6 +41,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
+use crate::analyze::ExplainArtifact;
 use crate::coordinator::mixed::DestinationSearch;
 use crate::coordinator::pipeline::{AppAnalysis, SearchTrace};
 use crate::coordinator::stages::{BlockMeasureArtifact, MeasureArtifact, PrecompileArtifact};
@@ -123,6 +124,7 @@ struct Mem {
     traces: HashMap<CacheKey, Slot<SearchTrace>>,
     destinations: HashMap<CacheKey, Slot<DestinationSearch>>,
     fleets: HashMap<CacheKey, Slot<FleetReport>>,
+    explains: HashMap<CacheKey, Slot<ExplainArtifact>>,
     /// Next access sequence number (shared by every evictable map).
     seq: u64,
     /// Current simulated time; only ever advances (monotonic max).
@@ -156,6 +158,9 @@ fn mem_destinations(m: &mut Mem) -> &mut HashMap<CacheKey, Slot<DestinationSearc
 }
 fn mem_fleets(m: &mut Mem) -> &mut HashMap<CacheKey, Slot<FleetReport>> {
     &mut m.fleets
+}
+fn mem_explains(m: &mut Mem) -> &mut HashMap<CacheKey, Slot<ExplainArtifact>> {
+    &mut m.explains
 }
 
 /// Touch one slot: expire it if the TTL lapsed, otherwise refresh its
@@ -235,6 +240,7 @@ impl Mem {
         scan_oldest(&self.traces, 3, &mut best);
         scan_oldest(&self.destinations, 4, &mut best);
         scan_oldest(&self.fleets, 5, &mut best);
+        scan_oldest(&self.explains, 6, &mut best);
         best.map(|(_, kind, key)| (kind, key))
     }
 
@@ -245,7 +251,8 @@ impl Mem {
             2 => self.blocks.remove(&key).map(|s| s.bytes),
             3 => self.traces.remove(&key).map(|s| s.bytes),
             4 => self.destinations.remove(&key).map(|s| s.bytes),
-            _ => self.fleets.remove(&key).map(|s| s.bytes),
+            5 => self.fleets.remove(&key).map(|s| s.bytes),
+            _ => self.explains.remove(&key).map(|s| s.bytes),
         }
         .unwrap_or(0);
         self.resident = self.resident.saturating_sub(bytes);
@@ -351,6 +358,7 @@ impl CacheStore {
                 sweep(&mut m.traces, now, ttl),
                 sweep(&mut m.destinations, now, ttl),
                 sweep(&mut m.fleets, now, ttl),
+                sweep(&mut m.explains, now, ttl),
             ] {
                 count += c;
                 bytes += b;
@@ -729,6 +737,40 @@ impl CacheStore {
         let payload = codec::fleet_to_json(f);
         self.admit(key, f.clone(), json::to_string(&payload).len() as u64, mem_fleets);
         self.disk_put("fleet", key, &payload);
+    }
+
+    // --------------------------------------------------------- explains
+
+    /// Fetch an `flopt explain` artifact (memory, then disk).
+    pub fn get_explain(&self, key: CacheKey) -> Option<ExplainArtifact> {
+        if !self.enabled {
+            return None;
+        }
+        match self.mem_get(key, mem_explains) {
+            Touched::Hit(a) => {
+                self.note_mem_hit();
+                return Some(a);
+            }
+            Touched::Expired => self.note_ttl_eviction(),
+            Touched::Miss => {}
+        }
+        if let Some(a) = self.disk_get("explain", key, codec::explain_from_json) {
+            let bytes = json::to_string(&codec::explain_to_json(&a)).len() as u64;
+            self.admit(key, a.clone(), bytes, mem_explains);
+            return Some(a);
+        }
+        self.note_miss();
+        None
+    }
+
+    /// Store an `flopt explain` artifact.
+    pub fn put_explain(&self, key: CacheKey, a: &ExplainArtifact) {
+        if !self.enabled {
+            return;
+        }
+        let payload = codec::explain_to_json(a);
+        self.admit(key, a.clone(), json::to_string(&payload).len() as u64, mem_explains);
+        self.disk_put("explain", key, &payload);
     }
 }
 

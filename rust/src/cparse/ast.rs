@@ -96,9 +96,29 @@ pub enum AssignOp {
     DivAssign,
 }
 
-/// Expressions.
+/// Expression node: a shape ([`ExprKind`]) plus the source position of
+/// its first token, so diagnostics (`flopt explain`) can point at the
+/// offending subscript.  Equality ignores the position — two exprs are
+/// equal iff their kinds are structurally equal — which keeps the
+/// syntactic-equality logic in the dependence analyses and the
+/// round-trip tests position-blind.
+#[derive(Debug, Clone)]
+pub struct Expr {
+    /// The expression shape.
+    pub kind: ExprKind,
+    /// Source position of the expression's first token.
+    pub pos: Pos,
+}
+
+impl PartialEq for Expr {
+    fn eq(&self, other: &Expr) -> bool {
+        self.kind == other.kind
+    }
+}
+
+/// Expression shapes.
 #[derive(Debug, Clone, PartialEq)]
-pub enum Expr {
+pub enum ExprKind {
     /// Integer literal.
     IntLit(i64),
     /// Floating-point literal.
@@ -116,22 +136,39 @@ pub enum Expr {
 }
 
 impl Expr {
+    /// Build an expression at a known source position.
+    pub fn new(kind: ExprKind, pos: Pos) -> Expr {
+        Expr { kind, pos }
+    }
+
+    /// Build a synthetic expression (no meaningful source position);
+    /// used by tests and generated code.
+    pub fn synth(kind: ExprKind) -> Expr {
+        Expr { kind, pos: Pos::default() }
+    }
+
     /// Walk the expression tree, calling `f` on every node.
     pub fn walk(&self, f: &mut impl FnMut(&Expr)) {
         f(self);
-        match self {
-            Expr::Index(_, e) | Expr::Unary(_, e) => e.walk(f),
-            Expr::Binary(_, a, b) => {
+        match &self.kind {
+            ExprKind::Index(_, e) | ExprKind::Unary(_, e) => e.walk(f),
+            ExprKind::Binary(_, a, b) => {
                 a.walk(f);
                 b.walk(f);
             }
-            Expr::Call(_, args) => {
+            ExprKind::Call(_, args) => {
                 for a in args {
                     a.walk(f);
                 }
             }
             _ => {}
         }
+    }
+}
+
+impl From<ExprKind> for Expr {
+    fn from(kind: ExprKind) -> Expr {
+        Expr::synth(kind)
     }
 }
 
@@ -311,8 +348,38 @@ pub struct Program {
 /// property suite compare reparsed programs with this — positions
 /// necessarily differ after printing, nothing else may.
 pub fn strip_positions(p: &Program) -> Program {
+    fn expr(e: &Expr) -> Expr {
+        let kind = match &e.kind {
+            ExprKind::IntLit(v) => ExprKind::IntLit(*v),
+            ExprKind::FloatLit(v) => ExprKind::FloatLit(*v),
+            ExprKind::Var(n) => ExprKind::Var(*n),
+            ExprKind::Index(n, i) => ExprKind::Index(*n, Box::new(expr(i))),
+            ExprKind::Unary(op, a) => ExprKind::Unary(*op, Box::new(expr(a))),
+            ExprKind::Binary(op, a, b) => {
+                ExprKind::Binary(*op, Box::new(expr(a)), Box::new(expr(b)))
+            }
+            ExprKind::Call(n, args) => {
+                ExprKind::Call(*n, args.iter().map(expr).collect())
+            }
+        };
+        Expr::synth(kind)
+    }
+    fn opt_expr(e: &Option<Expr>) -> Option<Expr> {
+        e.as_ref().map(expr)
+    }
+    fn lvalue(lv: &LValue) -> LValue {
+        match lv {
+            LValue::Var(n) => LValue::Var(*n),
+            LValue::Index(n, i) => LValue::Index(*n, Box::new(expr(i))),
+        }
+    }
     fn decl(d: &Decl) -> Decl {
-        Decl { pos: Pos::default(), ..d.clone() }
+        Decl {
+            ty: d.ty.clone(),
+            name: d.name,
+            init: opt_expr(&d.init),
+            pos: Pos::default(),
+        }
     }
     fn stmts(body: &[Stmt]) -> Vec<Stmt> {
         body.iter().map(stmt).collect()
@@ -321,13 +388,13 @@ pub fn strip_positions(p: &Program) -> Program {
         match s {
             Stmt::Decl(d) => Stmt::Decl(decl(d)),
             Stmt::Assign { target, op, value, .. } => Stmt::Assign {
-                target: target.clone(),
+                target: lvalue(target),
                 op: *op,
-                value: value.clone(),
+                value: expr(value),
                 pos: Pos::default(),
             },
             Stmt::If { cond, then_branch, else_branch, .. } => Stmt::If {
-                cond: cond.clone(),
+                cond: expr(cond),
                 then_branch: stmts(then_branch),
                 else_branch: stmts(else_branch),
                 pos: Pos::default(),
@@ -336,7 +403,7 @@ pub fn strip_positions(p: &Program) -> Program {
                 id: *id,
                 header: ForHeader {
                     init: header.init.as_deref().map(|s| Box::new(stmt(s))),
-                    cond: header.cond.clone(),
+                    cond: opt_expr(&header.cond),
                     step: header.step.as_deref().map(|s| Box::new(stmt(s))),
                 },
                 body: stmts(body),
@@ -344,12 +411,14 @@ pub fn strip_positions(p: &Program) -> Program {
             },
             Stmt::While { id, cond, body, .. } => Stmt::While {
                 id: *id,
-                cond: cond.clone(),
+                cond: expr(cond),
                 body: stmts(body),
                 pos: Pos::default(),
             },
-            Stmt::Return(e, _) => Stmt::Return(e.clone(), Pos::default()),
-            Stmt::Expr(e, _) => Stmt::Expr(e.clone(), Pos::default()),
+            Stmt::Return(e, _) => {
+                Stmt::Return(e.as_ref().map(expr), Pos::default())
+            }
+            Stmt::Expr(e, _) => Stmt::Expr(expr(e), Pos::default()),
             Stmt::Block(body) => Stmt::Block(stmts(body)),
         }
     }

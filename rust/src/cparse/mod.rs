@@ -24,7 +24,7 @@ pub mod lexer;
 pub mod parser;
 pub mod pretty;
 
-pub use ast::{Expr, Function, LoopId, Program, Stmt, Type};
+pub use ast::{Expr, ExprKind, Function, LoopId, Program, Stmt, Type};
 pub use error::ParseError;
 
 /// Parse a MiniC translation unit into a [`Program`].

@@ -257,7 +257,7 @@ impl Parser {
                     return Ok(Stmt::Assign {
                         target: LValue::Var(name),
                         op,
-                        value: Expr::IntLit(1),
+                        value: Expr::new(ExprKind::IntLit(1), pos),
                         pos,
                     });
                 }
@@ -296,7 +296,7 @@ impl Parser {
             return Ok(Stmt::Assign {
                 target: LValue::Var(name),
                 op: if inc { AssignOp::AddAssign } else { AssignOp::SubAssign },
-                value: Expr::IntLit(1),
+                value: Expr::new(ExprKind::IntLit(1), pos),
                 pos,
             });
         }
@@ -428,34 +428,39 @@ impl Parser {
             }
             self.bump();
             let rhs = self.parse_bin(bp + 1)?;
-            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+            let pos = lhs.pos;
+            lhs = Expr::new(ExprKind::Binary(op, Box::new(lhs), Box::new(rhs)), pos);
         }
         Ok(lhs)
     }
 
     fn parse_unary(&mut self) -> Result<Expr, ParseError> {
+        let pos = self.pos();
         match self.peek() {
             Tok::Minus => {
                 self.bump();
-                Ok(Expr::Unary(UnOp::Neg, Box::new(self.parse_unary()?)))
+                let inner = self.parse_unary()?;
+                Ok(Expr::new(ExprKind::Unary(UnOp::Neg, Box::new(inner)), pos))
             }
             Tok::Bang => {
                 self.bump();
-                Ok(Expr::Unary(UnOp::Not, Box::new(self.parse_unary()?)))
+                let inner = self.parse_unary()?;
+                Ok(Expr::new(ExprKind::Unary(UnOp::Not, Box::new(inner)), pos))
             }
             _ => self.parse_postfix(),
         }
     }
 
     fn parse_postfix(&mut self) -> Result<Expr, ParseError> {
+        let pos = self.pos();
         match self.peek().clone() {
             Tok::Int(n) => {
                 self.bump();
-                Ok(Expr::IntLit(n))
+                Ok(Expr::new(ExprKind::IntLit(n), pos))
             }
             Tok::Float(v) => {
                 self.bump();
-                Ok(Expr::FloatLit(v))
+                Ok(Expr::new(ExprKind::FloatLit(v), pos))
             }
             Tok::LParen => {
                 self.bump();
@@ -480,15 +485,15 @@ impl Parser {
                             }
                         }
                         self.expect(&Tok::RParen, "`)`")?;
-                        Ok(Expr::Call(name, args))
+                        Ok(Expr::new(ExprKind::Call(name, args), pos))
                     }
                     Tok::LBracket => {
                         self.bump();
                         let idx = self.parse_expr()?;
                         self.expect(&Tok::RBracket, "`]`")?;
-                        Ok(Expr::Index(name, Box::new(idx)))
+                        Ok(Expr::new(ExprKind::Index(name, Box::new(idx)), pos))
                     }
-                    _ => Ok(Expr::Var(name)),
+                    _ => Ok(Expr::new(ExprKind::Var(name), pos)),
                 }
             }
             other => Err(ParseError::new(
@@ -509,19 +514,19 @@ mod tests {
         Parser::new(toks).parse_expr().unwrap()
     }
 
+    fn var(name: &str) -> Expr {
+        Expr::synth(ExprKind::Var(name.into()))
+    }
+
+    fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+        Expr::synth(ExprKind::Binary(op, Box::new(a), Box::new(b)))
+    }
+
     #[test]
     fn precedence_mul_over_add() {
         assert_eq!(
             expr("a + b * c"),
-            Expr::Binary(
-                BinOp::Add,
-                Box::new(Expr::Var("a".into())),
-                Box::new(Expr::Binary(
-                    BinOp::Mul,
-                    Box::new(Expr::Var("b".into())),
-                    Box::new(Expr::Var("c".into())),
-                )),
-            )
+            bin(BinOp::Add, var("a"), bin(BinOp::Mul, var("b"), var("c")))
         );
     }
 
@@ -529,15 +534,7 @@ mod tests {
     fn parens_override_precedence() {
         assert_eq!(
             expr("(a + b) * c"),
-            Expr::Binary(
-                BinOp::Mul,
-                Box::new(Expr::Binary(
-                    BinOp::Add,
-                    Box::new(Expr::Var("a".into())),
-                    Box::new(Expr::Var("b".into())),
-                )),
-                Box::new(Expr::Var("c".into())),
-            )
+            bin(BinOp::Mul, bin(BinOp::Add, var("a"), var("b")), var("c"))
         );
     }
 
@@ -545,16 +542,29 @@ mod tests {
     fn comparison_binds_looser_than_arith() {
         assert_eq!(
             expr("i < n + 1"),
-            Expr::Binary(
+            bin(
                 BinOp::Lt,
-                Box::new(Expr::Var("i".into())),
-                Box::new(Expr::Binary(
-                    BinOp::Add,
-                    Box::new(Expr::Var("n".into())),
-                    Box::new(Expr::IntLit(1)),
-                )),
+                var("i"),
+                bin(BinOp::Add, var("n"), Expr::synth(ExprKind::IntLit(1))),
             )
         );
+    }
+
+    #[test]
+    fn exprs_carry_source_positions() {
+        let e = expr("a + b * c");
+        assert_eq!((e.pos.line, e.pos.col), (1, 1));
+        if let ExprKind::Binary(_, lhs, rhs) = &e.kind {
+            assert_eq!((lhs.pos.line, lhs.pos.col), (1, 1));
+            assert_eq!((rhs.pos.line, rhs.pos.col), (1, 5));
+        } else {
+            panic!("expected binary expr");
+        }
+    }
+
+    #[test]
+    fn equality_ignores_positions() {
+        assert_eq!(expr("x + 1"), expr("  x   + 1"));
     }
 
     #[test]
@@ -607,14 +617,17 @@ mod tests {
     fn parse_globals() {
         let p = parse("const int N = 64; float buf[128]; void main() { }").unwrap();
         assert_eq!(p.globals.len(), 2);
-        assert_eq!(p.globals[0].init, Some(Expr::IntLit(64)));
+        assert_eq!(p.globals[0].init, Some(Expr::synth(ExprKind::IntLit(64))));
         assert!(p.globals[1].ty.is_array());
     }
 
     #[test]
     fn parse_call_statement() {
         let p = parse("void main() { init(1, 2.0); }").unwrap();
-        assert!(matches!(p.functions[0].body[0], Stmt::Expr(Expr::Call(..), _)));
+        assert!(matches!(
+            &p.functions[0].body[0],
+            Stmt::Expr(Expr { kind: ExprKind::Call(..), .. }, _)
+        ));
     }
 
     #[test]

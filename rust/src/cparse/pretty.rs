@@ -19,9 +19,9 @@ pub fn type_str(ty: &Type) -> String {
 
 /// Render an expression.
 pub fn expr(e: &Expr) -> String {
-    match e {
-        Expr::IntLit(n) => n.to_string(),
-        Expr::FloatLit(v) => {
+    match &e.kind {
+        ExprKind::IntLit(n) => n.to_string(),
+        ExprKind::FloatLit(v) => {
             // keep floats recognizably floating-point on re-parse
             if v.fract() == 0.0 && v.abs() < 1e15 {
                 format!("{v:.1}")
@@ -29,16 +29,16 @@ pub fn expr(e: &Expr) -> String {
                 format!("{v}")
             }
         }
-        Expr::Var(n) => n.to_string(),
-        Expr::Index(n, i) => format!("{n}[{}]", expr(i)),
-        Expr::Unary(op, a) => {
+        ExprKind::Var(n) => n.to_string(),
+        ExprKind::Index(n, i) => format!("{n}[{}]", expr(i)),
+        ExprKind::Unary(op, a) => {
             let o = match op {
                 UnOp::Neg => "-",
                 UnOp::Not => "!",
             };
             format!("{o}({})", expr(a))
         }
-        Expr::Binary(op, a, b) => {
+        ExprKind::Binary(op, a, b) => {
             let o = match op {
                 BinOp::Add => "+",
                 BinOp::Sub => "-",
@@ -56,7 +56,7 @@ pub fn expr(e: &Expr) -> String {
             };
             format!("({} {o} {})", expr(a), expr(b))
         }
-        Expr::Call(f, args) => {
+        ExprKind::Call(f, args) => {
             let a: Vec<_> = args.iter().map(expr).collect();
             format!("{f}({})", a.join(", "))
         }

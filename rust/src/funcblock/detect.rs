@@ -166,7 +166,7 @@ fn nest_counters(la: &LoopAnalysis) -> BTreeSet<Symbol> {
 fn vars_in(e: &Expr) -> BTreeSet<Symbol> {
     let mut out = BTreeSet::new();
     e.walk(&mut |e| {
-        if let Expr::Var(n) = e {
+        if let ExprKind::Var(n) = &e.kind {
             out.insert(*n);
         }
     });
@@ -176,7 +176,7 @@ fn vars_in(e: &Expr) -> BTreeSet<Symbol> {
 fn arrays_read_in(e: &Expr) -> BTreeSet<Symbol> {
     let mut out = BTreeSet::new();
     e.walk(&mut |e| {
-        if let Expr::Index(n, _) = e {
+        if let ExprKind::Index(n, _) = &e.kind {
             out.insert(*n);
         }
     });
@@ -239,9 +239,9 @@ pub fn signature(la: &LoopAnalysis) -> NestSignature {
     for s in &la.info.body {
         s.walk(&mut |s| {
             for e in stmt_exprs(s) {
-                e.walk(&mut |e| match e {
-                    Expr::Call(f, _) if f == "sin" || f == "cos" => sig.trig_calls += 1,
-                    Expr::Index(_, idx) => {
+                e.walk(&mut |e| match &e.kind {
+                    ExprKind::Call(f, _) if f == "sin" || f == "cos" => sig.trig_calls += 1,
+                    ExprKind::Index(_, idx) => {
                         let hits = vars_in(idx)
                             .iter()
                             .filter(|v| counters.contains(*v))
@@ -249,11 +249,11 @@ pub fn signature(la: &LoopAnalysis) -> NestSignature {
                         if hits >= 2 {
                             sig.cross_indexed_reads += 1;
                         }
-                        if matches!(**idx, Expr::Binary(BinOp::Add | BinOp::Sub, ..)) {
+                        if matches!(idx.kind, ExprKind::Binary(BinOp::Add | BinOp::Sub, ..)) {
                             sig.offset_reads += 1;
                         }
                     }
-                    Expr::Binary(BinOp::Mul, a, b) => {
+                    ExprKind::Binary(BinOp::Mul, a, b) => {
                         let ra = arrays_read_in(a);
                         let rb = arrays_read_in(b);
                         if ra.iter().any(|x| rb.iter().any(|y| x != y)) {
@@ -276,7 +276,7 @@ pub fn signature(la: &LoopAnalysis) -> NestSignature {
         let vars = vars_in(idx);
         let mut reads_array = false;
         idx.walk(&mut |e| {
-            if matches!(e, Expr::Index(..)) {
+            if matches!(e.kind, ExprKind::Index(..)) {
                 reads_array = true;
             }
         });

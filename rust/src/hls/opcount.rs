@@ -60,15 +60,15 @@ struct Counter<'e> {
 
 impl<'e> Counter<'e> {
     fn is_float_expr(&self, e: &Expr) -> bool {
-        match e {
-            Expr::IntLit(_) => false,
-            Expr::FloatLit(_) => true,
-            Expr::Var(n) => self
+        match &e.kind {
+            ExprKind::IntLit(_) => false,
+            ExprKind::FloatLit(_) => true,
+            ExprKind::Var(n) => self
                 .locals_float
                 .get(n)
                 .copied()
                 .unwrap_or_else(|| self.env.get(n).map(|t| t.is_float()).unwrap_or(false)),
-            Expr::Index(n, _) => self
+            ExprKind::Index(n, _) => self
                 .env
                 .get(n)
                 .map(|t| match t {
@@ -76,30 +76,30 @@ impl<'e> Counter<'e> {
                     t => t.is_float(),
                 })
                 .unwrap_or(true),
-            Expr::Unary(_, a) => self.is_float_expr(a),
-            Expr::Binary(op, a, b) => {
+            ExprKind::Unary(_, a) => self.is_float_expr(a),
+            ExprKind::Binary(op, a, b) => {
                 if op.is_arith() {
                     self.is_float_expr(a) || self.is_float_expr(b)
                 } else {
                     false // comparisons/logicals yield int
                 }
             }
-            Expr::Call(f, _) => is_float_builtin(f.as_str()),
+            ExprKind::Call(f, _) => is_float_builtin(f.as_str()),
         }
     }
 
     fn count_expr(&mut self, e: &Expr) {
-        match e {
-            Expr::IntLit(_) | Expr::FloatLit(_) | Expr::Var(_) => {}
-            Expr::Index(_, i) => self.count_expr(i),
-            Expr::Unary(op, a) => {
+        match &e.kind {
+            ExprKind::IntLit(_) | ExprKind::FloatLit(_) | ExprKind::Var(_) => {}
+            ExprKind::Index(_, i) => self.count_expr(i),
+            ExprKind::Unary(op, a) => {
                 self.count_expr(a);
                 match op {
                     UnOp::Neg if self.is_float_expr(a) => self.c.fmisc += 1,
                     _ => self.c.int_ops += 1,
                 }
             }
-            Expr::Binary(op, a, b) => {
+            ExprKind::Binary(op, a, b) => {
                 self.count_expr(a);
                 self.count_expr(b);
                 if op.is_arith() {
@@ -117,7 +117,7 @@ impl<'e> Counter<'e> {
                     self.c.cmps += 1;
                 }
             }
-            Expr::Call(f, args) => {
+            ExprKind::Call(f, args) => {
                 for a in args {
                     self.count_expr(a);
                 }

@@ -28,6 +28,7 @@ use crate::cparse::ast::*;
 use crate::cparse::error::Pos;
 use crate::util::intern::Symbol;
 
+use super::oracle::{LoopConflicts, OracleState};
 use super::profile::{Footprint, LoopProfile, Profile};
 
 /// Runtime scalar value.
@@ -302,18 +303,18 @@ impl LProgram {
     }
 
     fn lower_expr(&mut self, e: &Expr) -> EId {
-        let le = match e {
-            Expr::IntLit(n) => LExpr::Int(*n),
-            Expr::FloatLit(v) => LExpr::Float(*v),
-            Expr::Var(n) => LExpr::Var(*n),
-            Expr::Index(n, i) => LExpr::Index(*n, self.lower_expr(i)),
-            Expr::Unary(op, a) => LExpr::Unary(*op, self.lower_expr(a)),
-            Expr::Binary(op, a, b) => {
+        let le = match &e.kind {
+            ExprKind::IntLit(n) => LExpr::Int(*n),
+            ExprKind::FloatLit(v) => LExpr::Float(*v),
+            ExprKind::Var(n) => LExpr::Var(*n),
+            ExprKind::Index(n, i) => LExpr::Index(*n, self.lower_expr(i)),
+            ExprKind::Unary(op, a) => LExpr::Unary(*op, self.lower_expr(a)),
+            ExprKind::Binary(op, a, b) => {
                 let ae = self.lower_expr(a);
                 let be = self.lower_expr(b);
                 LExpr::Binary(*op, ae, be)
             }
-            Expr::Call(f, args) => {
+            ExprKind::Call(f, args) => {
                 let ids: Vec<EId> = args.iter().map(|a| self.lower_expr(a)).collect();
                 let start = self.expr_lists.len() as u32;
                 self.expr_lists.extend(ids);
@@ -341,6 +342,9 @@ enum Op {
     ScopeEnd(u32),
     /// Pop the innermost loop id off the profiling loop stack.
     PopLoop,
+    /// Pop the innermost dynamic-oracle recording frame (only ever
+    /// scheduled while the oracle is enabled).
+    PopOracleFrame,
     /// Drop the value of an expression statement.
     Discard,
     /// Branch on the just-evaluated `if` condition.
@@ -387,6 +391,7 @@ struct Frame {
     vals_base: u32,
     locals_base: u32,
     loop_base: u32,
+    oracle_base: u32,
     is_expr: bool,
 }
 
@@ -406,6 +411,8 @@ pub struct Interp<'p> {
     /// argument bindings being assembled for an in-progress call
     pending: Vec<(Symbol, Binding)>,
     overrides: HashMap<Symbol, Value>,
+    // dynamic dependence oracle (None unless enabled for this run)
+    oracle: Option<OracleState>,
     // profiling
     loop_counters: Vec<LoopProfile>,
     loop_stack: Vec<u32>,
@@ -433,6 +440,7 @@ impl<'p> Interp<'p> {
             vals: Vec::new(),
             pending: Vec::new(),
             overrides: HashMap::new(),
+            oracle: None,
             loop_counters: vec![LoopProfile::default(); max_loop as usize],
             loop_stack: Vec::new(),
             totals: Profile::default(),
@@ -453,6 +461,24 @@ impl<'p> Interp<'p> {
     /// Override the runaway-loop step budget.
     pub fn set_max_steps(&mut self, max: u64) {
         self.max_steps = max;
+    }
+
+    /// Enable the dynamic dependence oracle for this run: every loop
+    /// records per-iteration read/write sets and flags loop-carried
+    /// conflicts (see [`super::oracle`]).  Call before [`Self::call`].
+    pub fn enable_oracle(&mut self, program: &Program) {
+        self.oracle = Some(OracleState::new(program, self.code.max_loop));
+    }
+
+    /// Conflicts the oracle observed for one loop (`None` when the
+    /// oracle was never enabled).
+    pub fn oracle_conflicts(&self, id: LoopId) -> Option<&LoopConflicts> {
+        self.oracle.as_ref().and_then(|o| o.conflicts_for(id))
+    }
+
+    /// Every loop the oracle saw at least one conflict in.
+    pub fn oracle_report(&self) -> Vec<(LoopId, LoopConflicts)> {
+        self.oracle.as_ref().map(|o| o.all_conflicts()).unwrap_or_default()
     }
 
     /// Run `main()`.
@@ -605,6 +631,7 @@ impl<'p> Interp<'p> {
             vals_base: self.vals.len() as u32,
             locals_base: self.locals.len() as u32,
             loop_base: self.loop_stack.len() as u32,
+            oracle_base: self.oracle.as_ref().map_or(0, |o| o.frames_len()) as u32,
             is_expr,
         });
         self.ops.push(Op::CallEnd);
@@ -623,6 +650,10 @@ impl<'p> Interp<'p> {
         self.vals.truncate(frame.vals_base as usize);
         self.locals.truncate(frame.locals_base as usize);
         self.loop_stack.truncate(frame.loop_base as usize);
+        if let Some(o) = &mut self.oracle {
+            // PopOracleFrame continuations vanished with ops.truncate
+            o.truncate_frames(frame.oracle_base as usize);
+        }
         if frame.is_expr {
             self.vals.push(v.unwrap_or(Value::Int(0)));
         } else {
@@ -646,6 +677,11 @@ impl<'p> Interp<'p> {
             Op::ScopeEnd(mark) => self.locals.truncate(mark as usize),
             Op::PopLoop => {
                 self.loop_stack.pop();
+            }
+            Op::PopOracleFrame => {
+                if let Some(o) = &mut self.oracle {
+                    o.pop_frame();
+                }
             }
             Op::Discard => {
                 self.vals.pop();
@@ -688,6 +724,9 @@ impl<'p> Interp<'p> {
                     };
                     self.loop_counters[id as usize].iterations += 1;
                     self.loop_stack.push(id);
+                    if let Some(o) = &mut self.oracle {
+                        o.bump_iter(id);
+                    }
                     self.ops.push(Op::WhileCond(sid));
                     self.ops.push(Op::PopLoop);
                     self.ops.push(Op::ScopeEnd(self.locals.len() as u32));
@@ -713,8 +752,14 @@ impl<'p> Interp<'p> {
                         Some(Binding::Scalar(v)) => v,
                         _ => return Err(InterpError::at(format!("no scalar `{name}`"), pos)),
                     };
+                    if let Some(o) = &mut self.oracle {
+                        o.scalar_read(name);
+                    }
                     self.apply_compound(old, op, rhs)
                 };
+                if let Some(o) = &mut self.oracle {
+                    o.scalar_write(name);
+                }
                 self.set_scalar(name, new, pos)?;
             }
             Op::AssignIndex { name, op, pos } => {
@@ -737,10 +782,16 @@ impl<'p> Interp<'p> {
                 } else {
                     let old = self.arrays[h].data[i as usize];
                     self.count_access(name, i, elem_bytes, false);
+                    if let Some(o) = &mut self.oracle {
+                        o.array_read(name, h, i);
+                    }
                     let old = if is_float { Value::Float(old) } else { Value::Int(old as i64) };
                     self.apply_compound(old, op, rhs)
                 };
                 self.count_access(name, i, elem_bytes, true);
+                if let Some(o) = &mut self.oracle {
+                    o.array_write(name, h, i);
+                }
                 self.arrays[h].data[i as usize] = if is_float {
                     new.as_f64()
                 } else {
@@ -805,6 +856,9 @@ impl<'p> Interp<'p> {
                 let is_float = arr.is_float;
                 let v = arr.data[i as usize];
                 self.count_access(name, i, 4, false);
+                if let Some(o) = &mut self.oracle {
+                    o.array_read(name, h, i);
+                }
                 self.vals.push(if is_float { Value::Float(v) } else { Value::Int(v as i64) });
             }
             Op::Builtin { name, argc } => {
@@ -865,6 +919,10 @@ impl<'p> Interp<'p> {
             LStmt::Decl(di) => {
                 let d = self.code.decls[di as usize];
                 self.tick(d.pos)?;
+                if let Some(o) = &mut self.oracle {
+                    // declared inside the loop body: private per iteration
+                    o.mark_private(d.name);
+                }
                 if d.is_array {
                     let n = match d.arr_len {
                         Some(n) => n,
@@ -910,6 +968,11 @@ impl<'p> Interp<'p> {
             LStmt::For { id, init, pos, .. } => {
                 self.tick(pos)?;
                 self.loop_counters[id as usize].entries += 1;
+                if let Some(o) = &mut self.oracle {
+                    o.push_frame(id);
+                    // pushed below ScopeEnd so it runs after the loop ends
+                    self.ops.push(Op::PopOracleFrame);
+                }
                 // header scope (for decl-in-init) closes when the loop ends
                 self.ops.push(Op::ScopeEnd(self.locals.len() as u32));
                 self.ops.push(Op::ForCond(sid));
@@ -920,6 +983,10 @@ impl<'p> Interp<'p> {
             LStmt::While { id, pos, .. } => {
                 self.tick(pos)?;
                 self.loop_counters[id as usize].entries += 1;
+                if let Some(o) = &mut self.oracle {
+                    o.push_frame(id);
+                    self.ops.push(Op::PopOracleFrame);
+                }
                 self.ops.push(Op::WhileCond(sid));
             }
             LStmt::Return(e, pos) => {
@@ -953,6 +1020,9 @@ impl<'p> Interp<'p> {
         };
         self.loop_counters[id as usize].iterations += 1;
         self.loop_stack.push(id);
+        if let Some(o) = &mut self.oracle {
+            o.bump_iter(id);
+        }
         self.ops.push(Op::ForCond(sid));
         self.ops.push(Op::PopLoop);
         if let Some(step) = step {
@@ -967,15 +1037,20 @@ impl<'p> Interp<'p> {
         match e {
             LExpr::Int(n) => self.vals.push(Value::Int(n)),
             LExpr::Float(v) => self.vals.push(Value::Float(v)),
-            LExpr::Var(name) => match self.lookup(name) {
-                Some(Binding::Scalar(v)) => self.vals.push(v),
-                Some(Binding::Array(_)) => {
-                    return Err(InterpError::new(format!("array `{name}` used as scalar")))
+            LExpr::Var(name) => {
+                if let Some(o) = &mut self.oracle {
+                    o.scalar_read(name);
                 }
-                None => {
-                    return Err(InterpError::new(format!("undeclared variable `{name}`")))
+                match self.lookup(name) {
+                    Some(Binding::Scalar(v)) => self.vals.push(v),
+                    Some(Binding::Array(_)) => {
+                        return Err(InterpError::new(format!("array `{name}` used as scalar")))
+                    }
+                    None => {
+                        return Err(InterpError::new(format!("undeclared variable `{name}`")))
+                    }
                 }
-            },
+            }
             LExpr::Index(name, idx) => {
                 self.ops.push(Op::IndexRead(name));
                 self.ops.push(Op::Eval(idx));

@@ -11,11 +11,17 @@
 //! 2. **CPU-side numerics** for the verification environment: the
 //!    interpreter's outputs are the all-CPU reference the FPGA-offloaded
 //!    (PJRT-executed) variant must match.
+//! 3. **Dynamic dependence oracle** ([`oracle`]): opt-in per-iteration
+//!    read/write set recording that observes loop-carried conflicts —
+//!    the ground truth the generative suite validates the static
+//!    dependence engine ([`crate::analyze`]) against.
 
 pub mod eval;
+pub mod oracle;
 pub mod profile;
 
 pub use eval::{Interp, InterpError, Value};
+pub use oracle::LoopConflicts;
 pub use profile::{LoopProfile, Profile};
 
 use crate::cparse::Program;

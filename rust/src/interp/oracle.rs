@@ -1,0 +1,326 @@
+//! Dynamic dependence oracle: per-iteration read/write set recording.
+//!
+//! When enabled on an [`super::Interp`], every loop entry pushes an
+//! oracle frame that maps each touched location — `(array, index)`
+//! cells and scalar names — to the iteration that last read/wrote it.
+//! A read of a cell written in an *earlier* iteration of the same loop
+//! is an observed flow dependence; a write over an earlier read is an
+//! anti dependence; a write over an earlier write is an output
+//! dependence.  Scalar write/write pairs are deliberately *not*
+//! flagged: last-value scalar escape is legal for a parallel counted
+//! loop in this model, and the loop counter itself is exempt inside
+//! its own frame.
+//!
+//! The oracle is ground truth for the static engine's soundness: a loop
+//! the engine calls `Parallel` must show **no** conflicts in any run,
+//! and a `Reduction` loop may conflict only on its reduction scalars.
+//! The generative suite enforces exactly that as its seventh invariant.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+use crate::cparse::ast::LoopId;
+use crate::cparse::Program;
+use crate::ir::loops;
+use crate::util::intern::Symbol;
+
+/// Loop-carried conflicts the oracle observed for one loop.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LoopConflicts {
+    /// Arrays with an observed cross-iteration flow/anti/output conflict.
+    pub arrays: BTreeSet<Symbol>,
+    /// Scalars with an observed cross-iteration flow/anti conflict.
+    pub scalars: BTreeSet<Symbol>,
+}
+
+impl LoopConflicts {
+    /// No conflicts at all?
+    pub fn is_empty(&self) -> bool {
+        self.arrays.is_empty() && self.scalars.is_empty()
+    }
+}
+
+/// One active loop's recording frame.
+struct OFrame {
+    lid: u32,
+    /// Current iteration (−1 while the header init/first check runs).
+    iter: i64,
+    /// The loop's own counter, exempt from scalar tracking.
+    counter: Option<Symbol>,
+    /// `(array handle, index)` → last writing / reading iteration.
+    array_writes: HashMap<(usize, i64), i64>,
+    array_reads: HashMap<(usize, i64), i64>,
+    scalar_writes: HashMap<Symbol, i64>,
+    scalar_reads: HashMap<Symbol, i64>,
+    /// Names declared inside the loop body: private, never tracked.
+    private: HashSet<Symbol>,
+}
+
+/// Recording state attached to an interpreter run.
+pub(super) struct OracleState {
+    frames: Vec<OFrame>,
+    /// Per-loop conflict sets, indexed by `LoopId` value.
+    conflicts: Vec<LoopConflicts>,
+    /// Per-loop canonical counter, indexed by `LoopId` value.
+    counters: Vec<Option<Symbol>>,
+}
+
+impl OracleState {
+    pub(super) fn new(program: &Program, max_loop: u32) -> OracleState {
+        let mut counters = vec![None; max_loop as usize];
+        for info in loops::extract(program) {
+            if let Some(can) = &info.canonical {
+                counters[info.id.0 as usize] = Some(can.var);
+            }
+        }
+        OracleState {
+            frames: Vec::new(),
+            conflicts: vec![LoopConflicts::default(); max_loop as usize],
+            counters,
+        }
+    }
+
+    pub(super) fn frames_len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub(super) fn truncate_frames(&mut self, len: usize) {
+        self.frames.truncate(len);
+    }
+
+    pub(super) fn push_frame(&mut self, lid: u32) {
+        self.frames.push(OFrame {
+            lid,
+            iter: -1,
+            counter: self.counters.get(lid as usize).copied().flatten(),
+            array_writes: HashMap::new(),
+            array_reads: HashMap::new(),
+            scalar_writes: HashMap::new(),
+            scalar_reads: HashMap::new(),
+            private: HashSet::new(),
+        });
+    }
+
+    pub(super) fn pop_frame(&mut self) {
+        self.frames.pop();
+    }
+
+    /// Begin the next iteration of the innermost active frame for `lid`.
+    pub(super) fn bump_iter(&mut self, lid: u32) {
+        if let Some(f) = self.frames.iter_mut().rev().find(|f| f.lid == lid) {
+            f.iter += 1;
+        }
+    }
+
+    /// A declaration executed: the name is private to every active loop.
+    pub(super) fn mark_private(&mut self, name: Symbol) {
+        for f in &mut self.frames {
+            f.private.insert(name);
+        }
+    }
+
+    pub(super) fn array_read(&mut self, name: Symbol, handle: usize, idx: i64) {
+        for fi in 0..self.frames.len() {
+            let f = &mut self.frames[fi];
+            if f.private.contains(&name) {
+                continue;
+            }
+            let key = (handle, idx);
+            let cur = f.iter;
+            let (lid, hit) = (f.lid, f.array_writes.get(&key).map_or(false, |w| *w != cur));
+            f.array_reads.insert(key, cur);
+            if hit {
+                self.conflicts[lid as usize].arrays.insert(name); // flow
+            }
+        }
+    }
+
+    pub(super) fn array_write(&mut self, name: Symbol, handle: usize, idx: i64) {
+        for fi in 0..self.frames.len() {
+            let f = &mut self.frames[fi];
+            if f.private.contains(&name) {
+                continue;
+            }
+            let key = (handle, idx);
+            let cur = f.iter;
+            // anti (earlier read) or output (earlier write)
+            let hit = f.array_reads.get(&key).map_or(false, |r| *r != cur)
+                || f.array_writes.get(&key).map_or(false, |w| *w != cur);
+            let lid = f.lid;
+            f.array_writes.insert(key, cur);
+            if hit {
+                self.conflicts[lid as usize].arrays.insert(name);
+            }
+        }
+    }
+
+    pub(super) fn scalar_read(&mut self, name: Symbol) {
+        for fi in 0..self.frames.len() {
+            let f = &mut self.frames[fi];
+            if f.private.contains(&name) || f.counter == Some(name) {
+                continue;
+            }
+            let cur = f.iter;
+            let (lid, hit) = (f.lid, f.scalar_writes.get(&name).map_or(false, |w| *w != cur));
+            f.scalar_reads.insert(name, cur);
+            if hit {
+                self.conflicts[lid as usize].scalars.insert(name); // flow
+            }
+        }
+    }
+
+    pub(super) fn scalar_write(&mut self, name: Symbol) {
+        for fi in 0..self.frames.len() {
+            let f = &mut self.frames[fi];
+            if f.private.contains(&name) || f.counter == Some(name) {
+                continue;
+            }
+            let cur = f.iter;
+            let (lid, hit) = (f.lid, f.scalar_reads.get(&name).map_or(false, |r| *r != cur));
+            f.scalar_writes.insert(name, cur);
+            // scalar write/write is NOT a conflict: last-value escape is
+            // legal for a parallel loop in this model
+            if hit {
+                self.conflicts[lid as usize].scalars.insert(name); // anti
+            }
+        }
+    }
+
+    /// Conflicts observed for one loop (empty set if none).
+    pub(super) fn conflicts_for(&self, lid: LoopId) -> Option<&LoopConflicts> {
+        self.conflicts.get(lid.0 as usize)
+    }
+
+    /// All loops with at least one observed conflict.
+    pub(super) fn all_conflicts(&self) -> Vec<(LoopId, LoopConflicts)> {
+        self.conflicts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| !c.is_empty())
+            .map(|(i, c)| (LoopId(i as u32), c.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Interp;
+    use super::*;
+    use crate::cparse::parse;
+
+    fn conflicts(src: &str) -> Vec<(LoopId, LoopConflicts)> {
+        let p = parse(src).unwrap();
+        let mut it = Interp::new(&p);
+        it.enable_oracle(&p);
+        it.run_main().unwrap();
+        it.oracle_report()
+    }
+
+    #[test]
+    fn elementwise_loop_is_clean() {
+        let r = conflicts(
+            "float out[8]; void main() { int i; \
+             for (i = 0; i < 8; i++) { out[i] = i * 2.0; } }",
+        );
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn recurrence_flags_a_flow_conflict() {
+        let r = conflicts(
+            "float a[8]; void main() { int i; a[0] = 1.0; \
+             for (i = 1; i < 8; i++) { a[i] = a[i - 1]; } }",
+        );
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].0, LoopId(0));
+        assert!(r[0].1.arrays.contains(&Symbol::intern("a")), "{r:?}");
+        assert!(r[0].1.scalars.is_empty());
+    }
+
+    #[test]
+    fn reduction_conflicts_only_on_the_accumulator() {
+        let r = conflicts(
+            "float a[8]; float s; void main() { int i; \
+             for (i = 0; i < 8; i++) { a[i] = 1.0; } \
+             for (i = 0; i < 8; i++) { s += a[i]; } }",
+        );
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].0, LoopId(1));
+        assert!(r[0].1.arrays.is_empty(), "{r:?}");
+        assert_eq!(
+            r[0].1.scalars.iter().copied().collect::<Vec<_>>(),
+            vec![Symbol::intern("s")]
+        );
+    }
+
+    #[test]
+    fn decl_in_init_counters_stay_private_to_outer_frames() {
+        // matmul-style nest: inner counters declared in the for-init are
+        // re-declared every outer iteration, so the outer loop must not
+        // see their churn as a carried scalar dependence
+        let r = conflicts(
+            "float c[16]; float acc; void main() { int i; \
+             for (i = 0; i < 4; i++) { \
+               for (int j = 0; j < 4; j++) { float t; t = i * 4.0 + j; \
+                 c[i * 4 + j] = t; } } }",
+        );
+        assert!(
+            !r.iter().any(|(id, _)| *id == LoopId(0)),
+            "outer loop must be clean: {r:?}"
+        );
+    }
+
+    #[test]
+    fn function_top_counter_is_carried_for_the_outer_loop() {
+        // same nest, but `j` lives at function scope: every outer
+        // iteration rewrites a scalar the previous iteration read
+        let r = conflicts(
+            "float c[16]; void main() { int i; int j; \
+             for (i = 0; i < 4; i++) { \
+               for (j = 0; j < 4; j++) { c[i * 4 + j] = 1.0; } } }",
+        );
+        let outer = r.iter().find(|(id, _)| *id == LoopId(0)).expect("outer conflict");
+        assert!(outer.1.scalars.contains(&Symbol::intern("j")), "{r:?}");
+    }
+
+    #[test]
+    fn while_recurrence_flags_the_scalar() {
+        let r = conflicts(
+            "float out[1]; void main() { int n; n = 5; \
+             while (n > 0) { n -= 1; } out[0] = n; }",
+        );
+        assert_eq!(r.len(), 1);
+        assert!(r[0].1.scalars.contains(&Symbol::intern("n")), "{r:?}");
+    }
+
+    #[test]
+    fn return_inside_a_loop_unwinds_oracle_frames() {
+        // find() returns out of a running loop; the caller's loop then
+        // continues — frame bookkeeping must stay balanced and the
+        // caller's elementwise writes must stay clean
+        let r = conflicts(
+            "float out[4]; \
+             int find(int n) { int i; \
+               for (i = 0; i < n; i++) { if (i == 2) { return i; } } \
+               return 0 - 1; } \
+             void main() { int i; \
+               for (i = 0; i < 4; i++) { out[i] = find(10); } }",
+        );
+        assert!(
+            !r.iter().any(|(id, _)| *id == LoopId(1)),
+            "caller loop must be clean: {r:?}"
+        );
+    }
+
+    #[test]
+    fn disabled_oracle_reports_nothing() {
+        let p = parse(
+            "float a[4]; void main() { int i; \
+             for (i = 1; i < 4; i++) { a[i] = a[i - 1]; } }",
+        )
+        .unwrap();
+        let mut it = Interp::new(&p);
+        it.run_main().unwrap();
+        assert!(it.oracle_report().is_empty());
+        assert!(it.oracle_conflicts(LoopId(0)).is_none());
+    }
+}

@@ -20,9 +20,18 @@
 //!    whose running value is never consumed elsewhere in the body — a
 //!    prefix sum (`t = t + x; out[i] = t;`) updates like a reduction but
 //!    each iteration observes the previous one's total.
+//!
+//! [`analyze`] now delegates to the subscript dependence engine in
+//! [`crate::analyze`], which keeps this gate order but *proves* the
+//! array cases with ZIV/SIV/MIV tests and adds a write/write overlap
+//! check.  The original syntactic rules survive verbatim as
+//! [`analyze_legacy`] — the differential baseline the engine was
+//! validated against and the denominator of the Analyze-stage overhead
+//! benchmark.
 
 use std::collections::BTreeSet;
 
+use crate::analyze::RejectReason;
 use crate::cparse::ast::*;
 use crate::util::intern::Symbol;
 
@@ -45,15 +54,15 @@ pub struct DepAnalysis {
     /// recognized reductions)?
     pub offloadable: bool,
     /// First reason the loop was rejected, for diagnostics.
-    pub reject_reason: Option<String>,
+    pub reject_reason: Option<RejectReason>,
     /// Recognized reductions (empty for fully parallel loops).
     pub reductions: Vec<Reduction>,
 }
 
-fn expr_contains_var(e: &Expr, var: Symbol) -> bool {
+pub(crate) fn expr_contains_var(e: &Expr, var: Symbol) -> bool {
     let mut found = false;
     e.walk(&mut |e| {
-        if let Expr::Var(n) = e {
+        if let ExprKind::Var(n) = &e.kind {
             if *n == var {
                 found = true;
             }
@@ -62,17 +71,17 @@ fn expr_contains_var(e: &Expr, var: Symbol) -> bool {
     found
 }
 
-fn expr_contains_index(e: &Expr) -> bool {
+pub(crate) fn expr_contains_index(e: &Expr) -> bool {
     let mut found = false;
     e.walk(&mut |e| {
-        if matches!(e, Expr::Index(..)) {
+        if matches!(e.kind, ExprKind::Index(..)) {
             found = true;
         }
     });
     found
 }
 
-fn body_has_return(body: &[Stmt]) -> bool {
+pub(crate) fn body_has_return(body: &[Stmt]) -> bool {
     let mut found = false;
     for s in body {
         s.walk(&mut |s| {
@@ -85,7 +94,7 @@ fn body_has_return(body: &[Stmt]) -> bool {
 }
 
 /// Collect every `Assign` in the body subtree.
-fn assignments(body: &[Stmt]) -> Vec<(LValue, AssignOp, Expr)> {
+pub(crate) fn assignments(body: &[Stmt]) -> Vec<(LValue, AssignOp, Expr)> {
     let mut out = Vec::new();
     for s in body {
         s.walk(&mut |s| {
@@ -98,7 +107,7 @@ fn assignments(body: &[Stmt]) -> Vec<(LValue, AssignOp, Expr)> {
 }
 
 /// Try to recognize `var` as a reduction over the body's assignments.
-fn recognize_reduction(var: Symbol, assigns: &[(LValue, AssignOp, Expr)]) -> Option<Reduction> {
+pub(crate) fn recognize_reduction(var: Symbol, assigns: &[(LValue, AssignOp, Expr)]) -> Option<Reduction> {
     let mut op: Option<char> = None;
     for (target, aop, value) in assigns {
         if target.name() != var {
@@ -110,13 +119,13 @@ fn recognize_reduction(var: Symbol, assigns: &[(LValue, AssignOp, Expr)]) -> Opt
         let this = match aop {
             AssignOp::AddAssign | AssignOp::SubAssign => '+',
             AssignOp::MulAssign => '*',
-            AssignOp::Assign => match value {
+            AssignOp::Assign => match &value.kind {
                 // s = s + e  /  s = e + s
-                Expr::Binary(BinOp::Add, a, b)
-                    if **a == Expr::Var(var) || **b == Expr::Var(var) => '+',
-                Expr::Binary(BinOp::Sub, a, _) if **a == Expr::Var(var) => '+',
-                Expr::Binary(BinOp::Mul, a, b)
-                    if **a == Expr::Var(var) || **b == Expr::Var(var) => '*',
+                ExprKind::Binary(BinOp::Add, a, b)
+                    if a.kind == ExprKind::Var(var) || b.kind == ExprKind::Var(var) => '+',
+                ExprKind::Binary(BinOp::Sub, a, _) if a.kind == ExprKind::Var(var) => '+',
+                ExprKind::Binary(BinOp::Mul, a, b)
+                    if a.kind == ExprKind::Var(var) || b.kind == ExprKind::Var(var) => '*',
                 _ => return None,
             },
             _ => return None,
@@ -141,11 +150,11 @@ fn recognize_reduction(var: Symbol, assigns: &[(LValue, AssignOp, Expr)]) -> Opt
 /// ends; any other read (stored to an array, tested in a guard, fed to
 /// another assignment) observes the running value and orders the
 /// iterations — the prefix-sum trap the generative suite fuzzes.
-fn reduction_extra_uses(var: Symbol, body: &[Stmt]) -> usize {
+pub(crate) fn reduction_extra_uses(var: Symbol, body: &[Stmt]) -> usize {
     fn count_in(e: &Expr, var: Symbol) -> usize {
         let mut n = 0;
         e.walk(&mut |e| {
-            if let Expr::Var(v) = e {
+            if let ExprKind::Var(v) = &e.kind {
                 if *v == var {
                     n += 1;
                 }
@@ -190,41 +199,52 @@ fn reduction_extra_uses(var: Symbol, body: &[Stmt]) -> usize {
 }
 
 /// Run the dependence tests for one loop.
+///
+/// Delegates to the subscript dependence engine
+/// ([`crate::analyze::analyze_loop`]) and collapses its verdict onto
+/// the legacy `offloadable` / `reject_reason` contract.
 pub fn analyze(info: &LoopInfo, refs: &LoopRefs) -> DepAnalysis {
+    crate::analyze::analyze_loop(info, refs).to_dep_analysis()
+}
+
+/// The original syntactic gate sequence, kept as the differential
+/// baseline for the engine (see the generative suite) and as the
+/// denominator of the Analyze-stage overhead benchmark.
+pub fn analyze_legacy(info: &LoopInfo, refs: &LoopRefs) -> DepAnalysis {
     let mut out = DepAnalysis::default();
 
-    let reject = |reason: &str| DepAnalysis {
+    let reject = |reason: RejectReason| DepAnalysis {
         offloadable: false,
-        reject_reason: Some(reason.to_string()),
+        reject_reason: Some(reason),
         reductions: Vec::new(),
     };
 
     // (1) canonical counted loop
     let Some(canon) = &info.canonical else {
-        return reject("no canonical counted header");
+        return reject(RejectReason::NoCanonicalHeader);
     };
     // bounds must not depend on anything the body writes (else trip count
     // changes mid-flight)
     for bound in [&canon.lo, &canon.hi] {
         let mut bad = false;
         bound.walk(&mut |e| {
-            if let Expr::Var(n) = e {
+            if let ExprKind::Var(n) = &e.kind {
                 if refs.scalar_writes.contains(n) {
                     bad = true;
                 }
             }
         });
         if bad {
-            return reject("loop bound written inside body");
+            return reject(RejectReason::BoundWritten);
         }
     }
 
     // (2) calls / control flow
     if !refs.non_builtin_calls().is_empty() {
-        return reject("calls non-builtin function");
+        return reject(RejectReason::NonBuiltinCall);
     }
     if body_has_return(&info.body) {
-        return reject("body contains return");
+        return reject(RejectReason::BodyReturn);
     }
 
     let assigns = assignments(&info.body);
@@ -233,18 +253,18 @@ pub fn analyze(info: &LoopInfo, refs: &LoopRefs) -> DepAnalysis {
     for (arr, writes) in &refs.array_writes {
         for w in writes {
             if !expr_contains_var(w, canon.var) {
-                return reject("array written at loop-invariant index");
+                return reject(RejectReason::InvariantWriteIndex);
             }
             // `a[idx[i]]` contains the counter yet the subscript values
             // are data — two iterations may hit the same element
             if expr_contains_index(w) {
-                return reject("array written at data-dependent index");
+                return reject(RejectReason::DataDependentWriteIndex);
             }
         }
         if let Some(reads) = refs.array_reads.get(arr) {
             for r in reads {
                 if !writes.iter().any(|w| w == r) {
-                    return reject("array read/write index mismatch (possible cross-iteration dependence)");
+                    return reject(RejectReason::ReadWriteMismatch);
                 }
             }
         }
@@ -261,12 +281,12 @@ pub fn analyze(info: &LoopInfo, refs: &LoopRefs) -> DepAnalysis {
         match recognize_reduction(var, &assigns) {
             Some(r) => {
                 if reduction_extra_uses(var, &info.body) > 0 {
-                    return reject("reduction value consumed inside the loop");
+                    return reject(RejectReason::ReductionConsumed);
                 }
                 out.reductions.push(r);
             }
             None => {
-                return reject("loop-carried scalar dependence (not a reduction)");
+                return reject(RejectReason::CarriedScalar);
             }
         }
     }
@@ -329,7 +349,7 @@ mod tests {
             0,
         );
         assert!(!d.offloadable);
-        assert!(d.reject_reason.unwrap().contains("index mismatch"));
+        assert!(d.reject_reason.unwrap().to_string().contains("index mismatch"));
     }
 
     #[test]
@@ -346,7 +366,7 @@ mod tests {
             0,
         );
         assert!(!d.offloadable);
-        assert!(d.reject_reason.unwrap().contains("non-builtin"));
+        assert!(d.reject_reason.unwrap().to_string().contains("non-builtin"));
     }
 
     #[test]
@@ -430,7 +450,7 @@ mod tests {
             0,
         );
         assert!(!d.offloadable);
-        assert!(d.reject_reason.unwrap().contains("data-dependent"));
+        assert!(d.reject_reason.unwrap().to_string().contains("data-dependent"));
     }
 
     #[test]
@@ -443,7 +463,7 @@ mod tests {
             0,
         );
         assert!(!d.offloadable);
-        assert!(d.reject_reason.unwrap().contains("consumed"));
+        assert!(d.reject_reason.unwrap().to_string().contains("consumed"));
     }
 
     #[test]
@@ -456,7 +476,7 @@ mod tests {
             0,
         );
         assert!(!d.offloadable);
-        assert!(d.reject_reason.unwrap().contains("consumed"));
+        assert!(d.reject_reason.unwrap().to_string().contains("consumed"));
     }
 
     #[test]
@@ -469,7 +489,7 @@ mod tests {
             0,
         );
         assert!(!d.offloadable);
-        assert!(d.reject_reason.unwrap().contains("consumed"));
+        assert!(d.reject_reason.unwrap().to_string().contains("consumed"));
     }
 
     #[test]
@@ -480,7 +500,7 @@ mod tests {
             0,
         );
         assert!(!d.offloadable);
-        assert!(d.reject_reason.unwrap().contains("consumed"));
+        assert!(d.reject_reason.unwrap().to_string().contains("consumed"));
     }
 
     #[test]

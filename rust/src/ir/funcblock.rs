@@ -155,13 +155,13 @@ pub fn fingerprint(la: &LoopAnalysis) -> Fingerprint {
                 _ => vec![],
             };
             for e in exprs {
-                e.walk(&mut |e| match e {
-                    Expr::Binary(BinOp::Mul, ..) => fp.fmul += 1.0,
-                    Expr::Binary(BinOp::Add | BinOp::Sub, ..) => fp.fadd += 1.0,
-                    Expr::Binary(BinOp::Div, ..) => fp.fdiv += 1.0,
-                    Expr::Call(f, _) if f == "sin" || f == "cos" => fp.trig += 1.0,
-                    Expr::Call(f, _) if f == "sqrt" => fp.sqrt += 1.0,
-                    Expr::Index(_, idx) => {
+                e.walk(&mut |e| match &e.kind {
+                    ExprKind::Binary(BinOp::Mul, ..) => fp.fmul += 1.0,
+                    ExprKind::Binary(BinOp::Add | BinOp::Sub, ..) => fp.fadd += 1.0,
+                    ExprKind::Binary(BinOp::Div, ..) => fp.fdiv += 1.0,
+                    ExprKind::Call(f, _) if f == "sin" || f == "cos" => fp.trig += 1.0,
+                    ExprKind::Call(f, _) if f == "sqrt" => fp.sqrt += 1.0,
+                    ExprKind::Index(_, idx) => {
                         let mut hits = 0usize;
                         for c in &counters {
                             if expr_mentions(idx, *c) {
@@ -221,7 +221,7 @@ fn count_reductions(la: &LoopAnalysis) -> f64 {
 fn expr_mentions(e: &Expr, var: Symbol) -> bool {
     let mut f = false;
     e.walk(&mut |e| {
-        if let Expr::Var(n) = e {
+        if let ExprKind::Var(n) = &e.kind {
             if *n == var {
                 f = true;
             }
@@ -231,7 +231,7 @@ fn expr_mentions(e: &Expr, var: Symbol) -> bool {
 }
 
 fn index_has_offset(e: &Expr) -> bool {
-    matches!(e, Expr::Binary(BinOp::Add | BinOp::Sub, ..))
+    matches!(e.kind, ExprKind::Binary(BinOp::Add | BinOp::Sub, ..))
 }
 
 /// The built-in block library (fingerprints derived from the reference

@@ -77,25 +77,28 @@ fn canonicalize(header: &ForHeader) -> Option<CanonicalLoop> {
         _ => return None,
     };
     // cond: `v < hi` or `v <= hi`
-    let (hi, inclusive) = match &header.cond {
-        Some(Expr::Binary(BinOp::Lt, a, b)) if **a == Expr::Var(var) => {
+    let is_var = |e: &Expr| e.kind == ExprKind::Var(var);
+    let (hi, inclusive) = match header.cond.as_ref().map(|c| &c.kind) {
+        Some(ExprKind::Binary(BinOp::Lt, a, b)) if is_var(a) => {
             ((**b).clone(), false)
         }
-        Some(Expr::Binary(BinOp::Le, a, b)) if **a == Expr::Var(var) => {
+        Some(ExprKind::Binary(BinOp::Le, a, b)) if is_var(a) => {
             ((**b).clone(), true)
         }
         _ => return None,
     };
     // step: `v += k` / `v = v + k`
     let step = match header.step.as_deref() {
-        Some(Stmt::Assign { target: LValue::Var(v), op: AssignOp::AddAssign, value: Expr::IntLit(k), .. })
-            if *v == var => *k,
+        Some(Stmt::Assign {
+            target: LValue::Var(v),
+            op: AssignOp::AddAssign,
+            value: Expr { kind: ExprKind::IntLit(k), .. },
+            ..
+        }) if *v == var => *k,
         Some(Stmt::Assign { target: LValue::Var(v), op: AssignOp::Assign, value, .. }) if *v == var => {
-            match value {
-                Expr::Binary(BinOp::Add, a, b)
-                    if **a == Expr::Var(var) =>
-                {
-                    if let Expr::IntLit(k) = **b { k } else { return None }
+            match &value.kind {
+                ExprKind::Binary(BinOp::Add, a, b) if is_var(a) => {
+                    if let ExprKind::IntLit(k) = b.kind { k } else { return None }
                 }
                 _ => return None,
             }
@@ -252,7 +255,7 @@ mod tests {
         );
         let c0 = l[0].canonical.as_ref().unwrap();
         assert_eq!((c0.step, c0.inclusive), (3, true));
-        assert_eq!(c0.lo, crate::cparse::Expr::IntLit(2));
+        assert_eq!(c0.lo.kind, crate::cparse::ExprKind::IntLit(2));
         let c1 = l[1].canonical.as_ref().unwrap();
         assert_eq!(c1.step, 2);
     }

@@ -75,14 +75,14 @@ impl LoopRefs {
     }
 
     fn read_expr(&mut self, e: &Expr) {
-        e.walk(&mut |e| match e {
-            Expr::Var(n) => {
+        e.walk(&mut |e| match &e.kind {
+            ExprKind::Var(n) => {
                 self.scalar_reads.insert(*n);
             }
-            Expr::Index(n, i) => {
+            ExprKind::Index(n, i) => {
                 self.array_reads.entry(*n).or_default().push((**i).clone());
             }
-            Expr::Call(f, _) => {
+            ExprKind::Call(f, _) => {
                 self.calls.insert(*f);
             }
             _ => {}

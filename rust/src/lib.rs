@@ -22,6 +22,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analyze;
 pub mod apps;
 pub mod backend;
 pub mod baselines;

@@ -4,6 +4,8 @@
 //! flopt apps                       list registered applications
 //! flopt env                        print the Fig-3 testbed table
 //! flopt analyze <app>              Steps 1-2: loops, intensity ranking
+//! flopt explain <app> [--json]     per-loop dependence verdicts with
+//!                                  span-anchored diagnostics (cached)
 //! flopt offload <app> [opts]       full offload search (paper Fig 2)
 //! flopt batch [<app>] [opts]       batched offload service (N requests,
 //!                                  one compile farm, cache + dedupe)
@@ -72,6 +74,7 @@ fn usage() -> ! {
          \x20 apps                      list applications\n\
          \x20 env                       print the Fig-3 testbed table\n\
          \x20 analyze <app>             loop + intensity analysis\n\
+         \x20 explain <app> [--json]    per-loop dependence diagnostics\n\
          \x20 offload [<app>] [opts]    full offload search\n\
          \x20 batch [<app>] [opts]      batched offload service (cache + dedupe)\n\
          \x20 fleet [<app>] [opts]      multi-tenant FPGA fleet placement\n\
@@ -109,6 +112,8 @@ struct Opts {
     target: Target,
     cache_dir: Option<String>,
     no_cache: bool,
+    /// `explain --json`: print the JSON document instead of the text.
+    json: bool,
     pool: usize,
     boards: usize,
     seed: u64,
@@ -150,6 +155,7 @@ fn parse_opts(args: &[String]) -> Opts {
     let mut target = Target::Fpga;
     let mut cache_dir = None;
     let mut no_cache = false;
+    let mut json_out = false;
     let mut pool = 4;
     let mut boards = 2;
     let mut seed: u64 = 42;
@@ -234,6 +240,7 @@ fn parse_opts(args: &[String]) -> Opts {
                 cache_dir = Some(v.clone());
             }
             "--no-cache" => no_cache = true,
+            "--json" => json_out = true,
             "--full-scale" => full_scale = true,
             "--requests" => requests = take(&mut i, "--requests").max(1),
             "--rate" => rate_per_h = take_f64(&mut i, "--rate"),
@@ -271,6 +278,7 @@ fn parse_opts(args: &[String]) -> Opts {
         target,
         cache_dir,
         no_cache,
+        json: json_out,
         pool,
         boards,
         seed,
@@ -493,6 +501,25 @@ fn main() -> flopt::Result<()> {
                 opts.cfg.a_intensity,
                 top.iter().map(|l| l.id.to_string()).collect::<Vec<_>>()
             );
+            export_trace(&opts, &flopt::obs::Recorder::new(true))?;
+        }
+        "explain" => {
+            let app = get_app(&opts);
+            let store = build_cache(&opts);
+            let key = cache::explain_key(app);
+            let artifact = match store.get_explain(key) {
+                Some(a) => a,
+                None => {
+                    let a = flopt::analyze::explain_program(app.name, &app.parse()).artifact();
+                    store.put_explain(key, &a);
+                    a
+                }
+            };
+            if opts.json {
+                println!("{}", artifact.json);
+            } else {
+                print!("{}", artifact.text);
+            }
             export_trace(&opts, &flopt::obs::Recorder::new(true))?;
         }
         "offload" => match opts.target {

@@ -1,14 +1,18 @@
 //! Generative property suite (PR 6): hundreds of seeded MiniC programs
 //! from [`flopt::apps::gen`] are pushed through parse → analyze → search
-//! on both backends, asserting the six search invariants the rest of
-//! the test suite pins only on the hand-written corpus:
+//! on both backends, asserting the seven invariants the rest of the
+//! test suite pins only on the hand-written corpus:
 //!
 //! 1. pretty-print → reparse is the identity (modulo positions);
 //! 2. combined block+loop search never loses to loop-only (per backend);
 //! 3. mixed placement never loses to staying all-CPU;
 //! 4. a warm-cache re-run is byte-identical and burns zero simulated time;
 //! 5. fleet placement's aggregate speedup never drops below 1.0;
-//! 6. two cold runs export byte-identical span logs (trace determinism).
+//! 6. two cold runs export byte-identical span logs (trace determinism);
+//! 7. the static dependence engine is sound against the dynamic oracle:
+//!    a loop it calls `parallel` never shows an observed loop-carried
+//!    conflict, and a `reduction` loop conflicts only on its
+//!    reduction scalars.
 //!
 //! The seed/count are pinned in CI (`FLOPT_GEN_SEED` / `FLOPT_GEN_COUNT`,
 //! defaults 1106/200) so failures reproduce exactly; every failing
@@ -248,6 +252,50 @@ fn trace_export_is_deterministic_across_cold_runs_on_generated_programs() {
         }
         if a != run()? {
             return Err("two cold runs exported different span logs".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- 7
+#[test]
+fn static_parallel_verdicts_hold_under_the_dynamic_oracle() {
+    use flopt::analyze::{explain_program, LoopVerdict};
+    run_invariant("oracle-soundness", |index, src| {
+        let program = parse(src).map_err(|e| format!("parse failed: {e}"))?;
+        let report = explain_program(&format!("gorc-{index}"), &program);
+        let mut it = flopt::interp::Interp::new(&program);
+        it.enable_oracle(&program);
+        if it.run_main().is_err() {
+            // a program that faults at runtime yields no observation
+            return Ok(());
+        }
+        for l in &report.loops {
+            let Some(c) = it.oracle_conflicts(l.id) else { continue };
+            match &l.deps.verdict {
+                LoopVerdict::Parallel => {
+                    if !c.arrays.is_empty() || !c.scalars.is_empty() {
+                        return Err(format!(
+                            "{} claimed parallel but the oracle saw conflicts \
+                             (arrays {:?}, scalars {:?})",
+                            l.id, c.arrays, c.scalars
+                        ));
+                    }
+                }
+                LoopVerdict::Reduction(reds) => {
+                    let rvars: Vec<_> = reds.iter().map(|r| r.var).collect();
+                    let extra: Vec<_> =
+                        c.scalars.iter().filter(|s| !rvars.contains(s)).collect();
+                    if !c.arrays.is_empty() || !extra.is_empty() {
+                        return Err(format!(
+                            "{} claimed reduction on {rvars:?} but the oracle saw \
+                             conflicts (arrays {:?}, extra scalars {extra:?})",
+                            l.id, c.arrays
+                        ));
+                    }
+                }
+                LoopVerdict::Sequential(_) | LoopVerdict::Unknown(_) => {}
+            }
         }
         Ok(())
     });

@@ -124,6 +124,52 @@ fn blocks_tdfir_output_is_locked() {
     check_golden("blocks_tdfir.txt", &flopt(&["blocks", "tdfir"]));
 }
 
+/// Every registered app's `flopt explain` diagnostics (text and JSON)
+/// are locked: the dependence engine's verdicts, the per-pair test that
+/// decided each dependence, the optimistic notes, and the span anchors
+/// may only change deliberately, with a re-bless.
+#[test]
+fn explain_output_is_locked_for_every_app() {
+    for app in flopt::apps::all() {
+        check_golden(
+            &format!("explain_{}.txt", app.name),
+            &flopt(&["explain", app.name]),
+        );
+        check_golden(
+            &format!("explain_{}.json", app.name),
+            &flopt(&["explain", app.name, "--json"]),
+        );
+    }
+}
+
+#[test]
+fn explain_is_byte_identical_warm_and_cold() {
+    let dir = std::env::temp_dir()
+        .join(format!("flopt-golden-explain-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir = dir.to_str().expect("utf-8 temp path");
+    // cold: computes and writes the cache; warm: served from disk
+    let cold = flopt(&["explain", "tdfir", "--cache-dir", dir]);
+    let warm = flopt(&["explain", "tdfir", "--cache-dir", dir]);
+    assert_eq!(cold, warm, "warm explain must be byte-identical to cold");
+    let cold_json = flopt(&["explain", "tdfir", "--json", "--cache-dir", dir]);
+    let warm_json = flopt(&["explain", "tdfir", "--json", "--cache-dir", dir]);
+    assert_eq!(cold_json, warm_json);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn explain_is_invariant_across_pool_widths() {
+    let base = flopt(&["explain", "mriq"]);
+    for pool in ["1", "2", "8"] {
+        assert_eq!(
+            base,
+            flopt(&["explain", "mriq", "--pool", pool]),
+            "--pool {pool} must not perturb explain output"
+        );
+    }
+}
+
 #[test]
 fn blocks_fft_output_is_locked() {
     // locks the PR 6 detector arm: the butterfly nest must keep being

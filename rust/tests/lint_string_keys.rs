@@ -1,6 +1,7 @@
-//! Source lint: the analysis front end (`ir/`), the interpreter
-//! (`interp/`), the simulated clock (`metrics/`), and the observability
-//! layer (`obs/`) are `Symbol`-keyed by design — identifier/metric maps
+//! Source lint: the analysis front end (`ir/`), the dependence engine
+//! (`analyze/`), the interpreter (`interp/`), the simulated clock
+//! (`metrics/`), and the observability layer (`obs/`) are
+//! `Symbol`-keyed by design — identifier/metric maps
 //! on their hot paths hash a `u32`, never string bytes.  This test
 //! greps the sources so a `HashMap<String, _>` (or `&str`-keyed) map
 //! can't creep back in unnoticed; a genuinely cold, deliberate
@@ -11,8 +12,13 @@ use std::fs;
 use std::path::{Path, PathBuf};
 
 /// Directories whose identifier maps must be `Symbol`-keyed.
-const SCANNED_DIRS: &[&str] =
-    &["rust/src/ir", "rust/src/interp", "rust/src/metrics", "rust/src/obs"];
+const SCANNED_DIRS: &[&str] = &[
+    "rust/src/ir",
+    "rust/src/analyze",
+    "rust/src/interp",
+    "rust/src/metrics",
+    "rust/src/obs",
+];
 
 /// Map/set types keyed by owned or borrowed strings (matched with all
 /// whitespace stripped, so spacing variants can't dodge the lint).

@@ -120,7 +120,7 @@ fn spmv_gather_is_parallel_but_the_prefix_sum_is_consumed() {
         .iter()
         .find(|l| l.info.function == "build_rows")
         .expect("prefix-sum build loop");
-    let reason = build.deps.reject_reason.as_deref().unwrap_or_default();
+    let reason = build.deps.reject_reason.map(|r| r.as_str()).unwrap_or_default();
     assert!(!build.deps.offloadable);
     assert!(reason.contains("consumed"), "wrong reject reason: {reason}");
 }

@@ -3,6 +3,14 @@
 //! fixture under `rust/tests/fixtures/` is one shrunk program; the
 //! tests pin both the analysis verdict that was wrong and that the
 //! end-to-end search still completes on the program.
+//!
+//! The `fixtures/deps/` set pins the dependence engine
+//! (`rust/src/analyze/`) instead: one minimized program per verdict
+//! class — flow/anti/output carried dependences, GCD-provable
+//! independence, SIV distance vectors, aliased vs distinct arrays, and
+//! an oracle-confirmed reduction — each checked against both the static
+//! verdict (which test fired, which fact was recorded) and the dynamic
+//! oracle's observed conflicts.
 
 use flopt::apps::gen::leak_app;
 use flopt::backend;
@@ -18,6 +26,14 @@ const SCATTER: &str = include_str!("fixtures/scatter_through_index_array.mc");
 const PREFIX_SUM: &str = include_str!("fixtures/prefix_sum_store.mc");
 const COUNTER_STEP: &str = include_str!("fixtures/counter_step_not_accumulator.mc");
 
+const DEP_FLOW: &str = include_str!("fixtures/deps/flow_carried.mc");
+const DEP_ANTI: &str = include_str!("fixtures/deps/anti_carried.mc");
+const DEP_OUTPUT: &str = include_str!("fixtures/deps/output_carried.mc");
+const DEP_GCD: &str = include_str!("fixtures/deps/gcd_independent.mc");
+const DEP_SIV: &str = include_str!("fixtures/deps/siv_distance.mc");
+const DEP_ALIAS: &str = include_str!("fixtures/deps/alias_distinct.mc");
+const DEP_REDUCTION: &str = include_str!("fixtures/deps/oracle_reduction.mc");
+
 fn reject_reason(src: &str, loop_index: usize) -> String {
     let program = parse(src).expect("fixture parses");
     let loops = ir::analyze(&program);
@@ -27,7 +43,7 @@ fn reject_reason(src: &str, loop_index: usize) -> String {
         "{} must not be offloadable",
         l.info.id
     );
-    l.deps.reject_reason.clone().expect("rejects carry a reason")
+    l.deps.reject_reason.expect("rejects carry a reason").to_string()
 }
 
 #[test]
@@ -76,6 +92,165 @@ fn counter_step_is_not_an_accumulator() {
     let names: Vec<&str> = blocks.iter().map(|b| b.name).collect();
     assert_eq!(names, vec![funcblock::detect::FFT_BUTTERFLY]);
     assert_eq!(blocks[0].signature.accumulations, 0, "{:?}", blocks[0].signature);
+}
+
+// ------------------------------------------------- dependence-engine pins
+
+use flopt::analyze::{DepClass, DepTest, LoopDeps, LoopVerdict, NoteKind, RejectReason};
+use flopt::cparse::ast::LoopId;
+use flopt::interp::LoopConflicts;
+
+/// Engine verdicts for every loop of a fixture, in extraction order.
+fn engine_deps(src: &str) -> Vec<LoopDeps> {
+    let program = parse(src).expect("fixture parses");
+    flopt::analyze::explain_program("fixture", &program)
+        .loops
+        .into_iter()
+        .map(|l| l.deps)
+        .collect()
+}
+
+/// Run a fixture under the instrumented interpreter and return every
+/// loop with an observed carried conflict.
+fn oracle_report(src: &str) -> Vec<(LoopId, LoopConflicts)> {
+    let program = parse(src).expect("fixture parses");
+    let mut it = flopt::interp::Interp::new(&program);
+    it.enable_oracle(&program);
+    it.run_main().expect("fixture runs");
+    it.oracle_report()
+}
+
+#[test]
+fn flow_carried_fixture_is_sequential_by_strong_siv() {
+    let deps = engine_deps(DEP_FLOW);
+    assert_eq!(
+        deps[0].verdict,
+        LoopVerdict::Sequential(RejectReason::ReadWriteMismatch)
+    );
+    assert_eq!(deps[0].deps.len(), 1);
+    assert_eq!(deps[0].deps[0].class, DepClass::FlowAnti);
+    assert_eq!(deps[0].deps[0].test, DepTest::SivStrong);
+}
+
+#[test]
+fn anti_carried_fixture_serializes_only_the_update_loop() {
+    let deps = engine_deps(DEP_ANTI);
+    assert_eq!(deps[0].verdict, LoopVerdict::Parallel, "init sweep");
+    assert_eq!(
+        deps[1].verdict,
+        LoopVerdict::Sequential(RejectReason::ReadWriteMismatch)
+    );
+    assert_eq!(deps[1].deps[0].class, DepClass::FlowAnti);
+    assert_eq!(deps[1].deps[0].test, DepTest::SivStrong);
+}
+
+#[test]
+fn output_overlap_fixture_is_rejected_as_write_write() {
+    let deps = engine_deps(DEP_OUTPUT);
+    assert_eq!(deps[0].verdict, LoopVerdict::Sequential(RejectReason::WwOverlap));
+    assert_eq!(deps[0].deps[0].class, DepClass::Output);
+    assert_eq!(deps[0].deps[0].test, DepTest::SivStrong);
+}
+
+#[test]
+fn gcd_fixture_is_proved_parallel() {
+    let deps = engine_deps(DEP_GCD);
+    assert_eq!(deps[1].verdict, LoopVerdict::Parallel);
+    assert_eq!(deps[1].tests.get(&DepTest::Gcd), Some(&1), "{:?}", deps[1].tests);
+    assert!(deps[1]
+        .notes
+        .iter()
+        .any(|n| n.kind == NoteKind::ReadProvedIndependent));
+}
+
+#[test]
+fn siv_distance_fixture_splits_on_the_distance() {
+    let deps = engine_deps(DEP_SIV);
+    // distance 2 within the trip width: carried
+    assert_eq!(
+        deps[0].verdict,
+        LoopVerdict::Sequential(RejectReason::ReadWriteMismatch)
+    );
+    assert_eq!(deps[0].deps[0].test, DepTest::SivStrong);
+    // distance 100 beyond width 49: provably disjoint
+    assert_eq!(deps[1].verdict, LoopVerdict::Parallel);
+    assert_eq!(deps[1].tests.get(&DepTest::SivStrong), Some(&1));
+}
+
+#[test]
+fn alias_fixture_distinct_arrays_do_not_alias() {
+    let deps = engine_deps(DEP_ALIAS);
+    // same subscript pattern, distinct arrays: no pair to test at all
+    assert_eq!(deps[1].verdict, LoopVerdict::Parallel);
+    assert!(deps[1].tests.is_empty(), "{:?}", deps[1].tests);
+    // ...and the aliased version of the same pattern is carried
+    assert_eq!(
+        deps[2].verdict,
+        LoopVerdict::Sequential(RejectReason::ReadWriteMismatch)
+    );
+}
+
+#[test]
+fn reduction_fixture_is_oracle_confirmed() {
+    let deps = engine_deps(DEP_REDUCTION);
+    assert!(
+        matches!(&deps[1].verdict, LoopVerdict::Reduction(vars) if vars.len() == 1),
+        "{:?}",
+        deps[1].verdict
+    );
+    assert_eq!(deps[1].reductions[0].var, "s");
+    // the oracle sees conflicts on the accumulator and on nothing else
+    let report = oracle_report(DEP_REDUCTION);
+    assert_eq!(report.len(), 1, "{report:?}");
+    assert_eq!(report[0].0, LoopId(1));
+    assert!(report[0].1.arrays.is_empty(), "{report:?}");
+    assert_eq!(report[0].1.scalars.len(), 1);
+}
+
+#[test]
+fn oracle_agrees_with_every_carried_fixture_verdict() {
+    // each statically-sequential loop must show a real observed conflict
+    // on `a` (the oracle is ground truth, not a formality), and each
+    // statically-parallel loop must stay clean
+    for (name, src, carried) in [
+        ("flow", DEP_FLOW, LoopId(0)),
+        ("anti", DEP_ANTI, LoopId(1)),
+        ("output", DEP_OUTPUT, LoopId(0)),
+        ("siv", DEP_SIV, LoopId(0)),
+        ("alias", DEP_ALIAS, LoopId(2)),
+    ] {
+        let report = oracle_report(src);
+        assert_eq!(report.len(), 1, "{name}: {report:?}");
+        assert_eq!(report[0].0, carried, "{name}: {report:?}");
+        assert!(!report[0].1.arrays.is_empty(), "{name}: {report:?}");
+    }
+    for (name, src) in [("gcd", DEP_GCD)] {
+        assert!(oracle_report(src).is_empty(), "{name} must be clean");
+    }
+}
+
+#[test]
+fn pr6_soundness_fixtures_are_rejected_by_the_engine_itself() {
+    // the three PR-6 bugs must now be caught by the dependence engine's
+    // own verdicts (typed RejectReason), not by legacy special-cases
+    let scatter = engine_deps(SCATTER);
+    assert_eq!(
+        scatter[1].verdict,
+        LoopVerdict::Sequential(RejectReason::DataDependentWriteIndex)
+    );
+    let prefix = engine_deps(PREFIX_SUM);
+    assert_eq!(
+        prefix[1].verdict,
+        LoopVerdict::Sequential(RejectReason::ReductionConsumed)
+    );
+    // counter-as-accumulator: no loop of the butterfly nest may report
+    // a spurious reduction on an induction variable
+    let counter = engine_deps(COUNTER_STEP);
+    assert!(
+        counter.iter().all(|d| d.reductions.is_empty()),
+        "{:?}",
+        counter.iter().map(|d| &d.reductions).collect::<Vec<_>>()
+    );
 }
 
 #[test]
